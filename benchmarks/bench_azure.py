@@ -1,0 +1,22 @@
+"""Fig. 4 + Fig. 5: the Azure VM-placement experiment (§6.2).
+
+Azure trace (4,000 VMs, ≤10 min, Fig-3 lifetime distribution), 100-server
+heterogeneous testbed, QPS sweep; metrics: RPC messages, throughput,
+mean/p95 e2e makespan, scheduling latency, utilization mean/variance.
+"""
+from __future__ import annotations
+
+from repro.workloads import azure
+
+from .common import reduction_summary, sweep
+
+
+def main(m: int = 2000, qps_list=(2, 5, 10, 20)):
+    rows = sweep(lambda q: azure.synthesize(m=m, qps=q, seed=0),
+                 qps_list, tag="azure", utilization=True)
+    reduction_summary(rows, tag="azure")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,20 @@
+"""Fig. 6 + Fig. 7: the FunctionBench serverless experiment (§6.3).
+
+Table 3/4 tasks, per-node-type durations (up to 4×), QPS 100–400.
+"""
+from __future__ import annotations
+
+from repro.workloads import functionbench as fb
+
+from .common import reduction_summary, sweep
+
+
+def main(m: int = 5000, qps_list=(100, 200, 300, 400)):
+    rows = sweep(lambda q: fb.synthesize(m=m, qps=q, seed=0),
+                 qps_list, tag="functionbench", utilization=True)
+    reduction_summary(rows, tag="functionbench")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,55 @@
+"""§2.1 theory benchmarks: balls-into-bins gaps vs the published bounds.
+
+The model foundation Dodoor instantiates: single vs power-of-two vs (1+β),
+fresh vs b-batched, uniform vs weighted. Each row reports the empirical gap
+(mean over seeds) next to the theoretical scale.
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from repro.core.balls_bins import (batched_gap_bound, gap,
+                                   one_plus_beta_batched_gap_bound,
+                                   power_of_d_gap_bound,
+                                   run_balls_into_bins,
+                                   single_choice_gap_bound, tuned_beta)
+
+
+def _mean_gap(n, m, seeds=3, **kw):
+    import jax.numpy as jnp
+    gaps = []
+    for s in range(seeds):
+        w = kw.pop("weights", None)
+        if w is None:
+            w = jnp.ones((m,))
+        loads = run_balls_into_bins(jax.random.PRNGKey(s), w, n, **kw)
+        gaps.append(float(gap(loads)))
+        kw["weights"] = None
+        kw.pop("weights")
+    return float(np.mean(gaps))
+
+
+def main(n: int = 100, m: int = 20000):
+    print("bench,process,batch,gap,theory_scale")
+    g1 = _mean_gap(n, m, d=1)
+    print(f"gap,single,1,{g1:.2f},{single_choice_gap_bound(m, n):.2f}")
+    g2 = _mean_gap(n, m, d=2)
+    print(f"gap,two_choice,1,{g2:.2f},{power_of_d_gap_bound(n):.2f}")
+    for b in (n // 2, n, 8 * n):
+        gb = _mean_gap(n, m, d=2, batch=b)
+        print(f"gap,two_choice,{b},{gb:.2f},{batched_gap_bound(b, n):.2f}")
+    b = 4 * n
+    beta = tuned_beta(b, n)
+    gbeta = _mean_gap(n, m, d=2, beta=beta, batch=b)
+    print(f"gap,one_plus_beta(β={beta:.2f}),{b},{gbeta:.2f},"
+          f"{one_plus_beta_batched_gap_bound(b, n):.2f}")
+    # Dodoor's operating point: weighted + b = n/2 two-choice.
+    import jax.numpy as jnp
+    w = jax.random.exponential(jax.random.PRNGKey(9), (m,))
+    loads = run_balls_into_bins(jax.random.PRNGKey(1), w, n, d=2, batch=n // 2)
+    print(f"gap,weighted_two_choice_dodoor,{n // 2},{float(gap(loads)):.2f},-")
+
+
+if __name__ == "__main__":
+    main()

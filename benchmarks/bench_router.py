@@ -1,0 +1,37 @@
+"""Serving-router benchmark (§2.4 scope): Dodoor over heterogeneous model
+replicas. Requests (prompt, gen buckets) for a chosen arch are scheduled
+across a 4-type accelerator fleet; same metrics as the cluster experiments.
+"""
+from __future__ import annotations
+
+from repro.configs import ARCHS
+from repro.serving import make_replica_pool, synthesize_requests
+from repro.sim import EngineConfig, simulate, summarize
+
+from .common import reduction_summary
+
+
+def main(arch: str = "tinyllama-1.1b", m: int = 2000,
+         qps_list=(20, 40, 80)):
+    cfg = ARCHS[arch]
+    pool = make_replica_pool()
+    print("bench,qps,policy,msgs_per_task,throughput_tps,"
+          "makespan_mean_ms,makespan_p95_ms,sched_mean_ms,sched_p95_ms")
+    rows = []
+    for qps in qps_list:
+        trace = synthesize_requests(cfg, m, qps, seed=0)
+        for pol in ("random", "pot", "prequal", "dodoor"):
+            res = simulate(trace, pool, EngineConfig(
+                policy=pol, b=max(1, pool.num_servers // 2)))
+            s = summarize(res)
+            print(f"router,{qps},{pol},{s.msgs_per_task:.3f},"
+                  f"{s.throughput_tps:.2f},{s.makespan_mean_ms:.1f},"
+                  f"{s.makespan_p95_ms:.1f},{s.sched_mean_ms:.3f},"
+                  f"{s.sched_p95_ms:.3f}", flush=True)
+            rows.append((qps, pol, s))
+    reduction_summary(rows, tag="router")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,43 @@
+"""Fig. 8: Dodoor parameter sensitivity at QPS = 100 (§6.4).
+
+Sweeps the cache batch size b (25–150: placement quality vs message volume)
+and the duration weight α (0–1). See DESIGN.md §7 for the honest note on
+the α=1 ordering under a simulator with unbiased duration estimates.
+"""
+from __future__ import annotations
+
+from repro.sim import EngineConfig, make_testbed, simulate, summarize
+from repro.workloads import functionbench as fb
+
+
+def main(m: int = 4000, qps: float = 100.0):
+    cluster = make_testbed()
+    wl = fb.synthesize(m=m, qps=qps, seed=0)
+    print("bench,param,value,msgs_per_task,makespan_mean_ms,"
+          "makespan_p95_ms,sched_max_ms")
+    rows = []
+    for b in (25, 50, 100, 150):
+        res = simulate(wl, cluster, EngineConfig(policy="dodoor", b=b,
+                                                 flush_every=2))
+        s = summarize(res)
+        print(f"sens_b,b,{b},{s.msgs_per_task:.3f},{s.makespan_mean_ms:.1f},"
+              f"{s.makespan_p95_ms:.1f},{res.sched_ms.max():.1f}")
+        rows.append(("b", b, s))
+    for alpha in (0.0, 0.25, 0.5, 0.75, 1.0):
+        res = simulate(wl, cluster, EngineConfig(policy="dodoor",
+                                                 alpha=alpha))
+        s = summarize(res)
+        print(f"sens_alpha,alpha,{alpha},{s.msgs_per_task:.3f},"
+              f"{s.makespan_mean_ms:.1f},{s.makespan_p95_ms:.1f},"
+              f"{res.sched_ms.max():.1f}")
+        rows.append(("alpha", alpha, s))
+    # Fig-8 contract: smaller b → better makespan & more messages.
+    b_rows = [(v, s) for k, v, s in rows if k == "b"]
+    assert b_rows[0][1].msgs_per_task > b_rows[-1][1].msgs_per_task
+    print(f"# b=25 mean gain over b=150: "
+          f"{(1 - b_rows[0][1].makespan_mean_ms / b_rows[-1][1].makespan_mean_ms) * 100:.1f}%")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

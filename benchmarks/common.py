@@ -1,0 +1,66 @@
+"""Shared benchmark plumbing: CSV-style rows, policy sweeps."""
+from __future__ import annotations
+
+import sys
+import time
+
+from repro.sim import EngineConfig, make_testbed, simulate, summarize, utilization_stats
+
+POLICIES = ("random", "pot", "prequal", "dodoor")
+
+
+def sweep(workload_fn, qps_list, policies=POLICIES, *, cluster=None,
+          b=None, tag="", utilization=False, **cfg_kw):
+    """Run policies × QPS; print one CSV row per run; return rows."""
+    cluster = cluster if cluster is not None else make_testbed()
+    b = b or max(1, cluster.num_servers // 2)
+    rows = []
+    header = ("bench,qps,policy,msgs_per_task,throughput_tps,"
+              "makespan_mean_ms,makespan_p95_ms,sched_mean_ms,sched_p95_ms"
+              + (",cpu_var,cpu_mean" if utilization else ""))
+    print(header)
+    for qps in qps_list:
+        wl = workload_fn(qps)
+        for pol in policies:
+            t0 = time.time()
+            res = simulate(wl, cluster, EngineConfig(policy=pol, b=b,
+                                                     **cfg_kw))
+            s = summarize(res)
+            row = (f"{tag},{qps},{pol},{s.msgs_per_task:.3f},"
+                   f"{s.throughput_tps:.2f},{s.makespan_mean_ms:.1f},"
+                   f"{s.makespan_p95_ms:.1f},{s.sched_mean_ms:.3f},"
+                   f"{s.sched_p95_ms:.3f}")
+            if utilization:
+                u = utilization_stats(res, cluster)
+                row += f",{u['cpu_var']:.5f},{u['cpu_mean']:.4f}"
+            print(row, flush=True)
+            rows.append((qps, pol, s))
+    return rows
+
+
+def reduction_summary(rows, tag=""):
+    """The paper's headline deltas at the highest shared QPS."""
+    top = max(q for q, _, _ in rows)
+    at = {p: s for q, p, s in rows if q == top}
+    d = at["dodoor"]
+    out = []
+    for base in ("pot", "prequal"):
+        if base in at:
+            out.append(f"{tag} msgs vs {base}: "
+                       f"-{(1 - d.msgs_per_task / at[base].msgs_per_task) * 100:.1f}%")
+    if "random" in at:
+        out.append(f"{tag} msg overhead vs random: "
+                   f"+{(d.msgs_per_task / at['random'].msgs_per_task - 1) * 100:.1f}%")
+    best_base = min((s for p, s in at.items() if p != "dodoor"),
+                    key=lambda s: s.makespan_mean_ms)
+    out.append(f"{tag} makespan mean vs best baseline: "
+               f"{(1 - d.makespan_mean_ms / best_base.makespan_mean_ms) * 100:+.1f}%")
+    best_p95 = min(s.makespan_p95_ms for p, s in at.items() if p != "dodoor")
+    out.append(f"{tag} makespan p95 vs best baseline: "
+               f"{(1 - d.makespan_p95_ms / best_p95) * 100:+.1f}%")
+    best_tput = max(s.throughput_tps for p, s in at.items() if p != "dodoor")
+    out.append(f"{tag} throughput vs best baseline: "
+               f"{(d.throughput_tps / best_tput - 1) * 100:+.1f}%")
+    for line in out:
+        print("#", line)
+    return out

@@ -1,0 +1,54 @@
+"""Benchmark aggregator: one section per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--quick]
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="smaller task counts (CI-sized)")
+    args = ap.parse_args()
+    q = args.quick
+
+    from . import (bench_azure, bench_functionbench, bench_gap,
+                   bench_kernels, bench_reliability, bench_roofline,
+                   bench_router, bench_sensitivity)
+
+    sections = [
+        ("Fig 3/4/5 — Azure VM placement (§6.2)",
+         lambda: bench_azure.main(m=1000 if q else 2000,
+                                  qps_list=(5, 10) if q else (2, 5, 10, 20))),
+        ("Fig 6/7 — FunctionBench serverless (§6.3)",
+         lambda: bench_functionbench.main(
+             m=2000 if q else 5000,
+             qps_list=(100, 300) if q else (100, 200, 300, 400))),
+        ("Fig 8 — parameter sensitivity (§6.4)",
+         lambda: bench_sensitivity.main(m=1500 if q else 4000)),
+        ("§2.1 — balls-into-bins gaps vs theory",
+         lambda: bench_gap.main(m=8000 if q else 20000)),
+        ("§5 — scheduling hot-path implementations",
+         lambda: bench_kernels.main(T=1024 if q else 2048)),
+        ("§2.4 — Dodoor as LLM-serving router",
+         lambda: bench_router.main(m=1000 if q else 2000,
+                                   qps_list=(40,) if q else (20, 40, 80))),
+        ("§4.2/§4.3 — store outage + hierarchical mini-clusters",
+         lambda: bench_reliability.main(m=2000 if q else 4000)),
+        ("§Roofline — dry-run derived table (if artifacts exist)",
+         bench_roofline.main),
+    ]
+    t_all = time.time()
+    for title, fn in sections:
+        print(f"\n===== {title} =====", flush=True)
+        t0 = time.time()
+        fn()
+        print(f"# section time: {time.time() - t0:.1f}s", flush=True)
+    print(f"\n# total benchmark time: {time.time() - t_all:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

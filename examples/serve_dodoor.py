@@ -1,0 +1,9 @@
+"""Dodoor as an LLM-serving router: heterogeneous replica fleet, request
+trace, all four policies, plus the online gateway API and a real decode.
+
+    PYTHONPATH=src python examples/serve_dodoor.py
+"""
+from repro.launch.serve import main
+
+main(["--arch", "tinyllama-1.1b", "--requests", "1500", "--qps", "50",
+      "--decode-demo"])

@@ -1,0 +1,11 @@
+"""Dodoor (CS.DC 2025) in JAX: the paper's randomized decentralized
+scheduler reproduced end-to-end, plus a multi-pod training/serving framework
+that uses its technique (b-batched cached load views + anti-affinity RL
+scoring) as a first-class systems primitive.
+
+Entry points: repro.sim (reproduction engine), repro.core (Algorithm 1),
+repro.launch.{dryrun,train,serve} (drivers), repro.serving (LLM router).
+See README.md / DESIGN.md / EXPERIMENTS.md.
+"""
+
+__version__ = "1.0.0"

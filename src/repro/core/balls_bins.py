@@ -1,0 +1,104 @@
+"""Balls-into-bins model variants (§2.1) — the theory behind Dodoor.
+
+Implements, as jit-able lax.scan processes over placement sequences:
+
+* single choice                      — gap Θ(√(m·log n / n))
+* power-of-d choices (d=2 default)   — gap Θ(log log n / log d)
+* (1+β) process                      — gap Θ(log n / β) (weighted setting)
+* weighted variants of all the above — ball weights ~ any distribution
+* b-batched variants                 — loads refresh once per batch of b
+  placements (Berenbrink et al.; Los & Sauerwald SPAA'23: gap Θ(b/n) for
+  b = Θ(n log n); (1+β) improves to O(√(b/n · log n)))
+
+These power the property tests (theory bounds hold empirically) and
+``benchmarks/bench_gap.py``. Dodoor itself is the weighted b-batched
+power-of-two process with the RL score as the load measure.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+
+def gap(loads: jnp.ndarray) -> jnp.ndarray:
+    """max load − mean load (the quantity all the §2.1 bounds speak about)."""
+    return jnp.max(loads) - jnp.mean(loads)
+
+
+@partial(jax.jit, static_argnames=("n", "d", "batch"))
+def run_balls_into_bins(
+    key,
+    weights: jnp.ndarray,
+    n: int,
+    d: int = 2,
+    beta: float = 1.0,
+    batch: int = 1,
+) -> jnp.ndarray:
+    """Throw m (possibly weighted) balls into n bins.
+
+    Parameters
+    ----------
+    weights: [m] ball weights (all-ones ⇒ the classic uniform model).
+    d:       choices per ball (1 ⇒ single choice, 2 ⇒ power-of-two).
+    beta:    probability of using d choices vs 1 (β=1 ⇒ always d choices;
+             0<β<1 ⇒ the (1+β) process).
+    batch:   loads visible to the chooser refresh only every ``batch`` balls
+             (b-batched model). batch=1 ⇒ fully fresh information.
+
+    Returns final loads [n].
+    """
+    m = weights.shape[0]
+
+    def step(carry, inp):
+        loads, stale, since = carry
+        w, i = inp
+        k = jax.random.fold_in(key, i)
+        k_choice, k_beta = jax.random.split(k)
+        cand = jax.random.randint(k_choice, (d,), 0, n)
+        # Decide with the *stale* view (batched model).
+        pick_multi = cand[jnp.argmin(stale[cand])]
+        pick_single = cand[0]
+        use_multi = jax.random.uniform(k_beta) < beta
+        j = jnp.where(use_multi, pick_multi, pick_single)
+        loads = loads.at[j].add(w)
+        since = since + 1
+        refresh = since >= batch
+        stale = jnp.where(refresh, loads, stale)
+        since = jnp.where(refresh, 0, since)
+        return (loads, stale, since), j
+
+    init = (jnp.zeros((n,)), jnp.zeros((n,)), jnp.zeros((), jnp.int32))
+    (loads, _, _), _ = jax.lax.scan(step, init,
+                                    (weights, jnp.arange(m)))
+    return loads
+
+
+def single_choice_gap_bound(m: int, n: int) -> float:
+    """Θ(√(m log n / n)) — the single-choice high-probability gap scale."""
+    import math
+    return math.sqrt(m * math.log(max(n, 2)) / n)
+
+
+def power_of_d_gap_bound(n: int, d: int = 2) -> float:
+    """Θ(log log n / log d) — the power-of-d gap scale (m-independent)."""
+    import math
+    return math.log(math.log(max(n, 3))) / math.log(max(d, 2))
+
+
+def batched_gap_bound(b: int, n: int) -> float:
+    """Θ(b/n) for b = Ω(n log n) (Los & Sauerwald 2023)."""
+    return b / n
+
+
+def one_plus_beta_batched_gap_bound(b: int, n: int) -> float:
+    """O(√(b/n · log n)) for the (1+β) process with tuned β."""
+    import math
+    return math.sqrt(b / n * math.log(max(n, 2)))
+
+
+def tuned_beta(b: int, n: int) -> float:
+    """β on the order of √(n/b · log n), clipped into (0, 1]."""
+    import math
+    return float(min(1.0, math.sqrt(n / b * math.log(max(n, 2)))))

@@ -1,0 +1,83 @@
+"""The b-batched load-cache protocol (§3.1, §4.1).
+
+State machine (all pure functional, scan-friendly):
+
+* ``add_new_load(store, j, r, d)``      — scheduler reports a placement delta
+  (the paper batches these into mini-batches ≤ b/num_schedulers·2; the
+  simulator models that lag explicitly).
+* ``override_node_state(store, j, L, D, rif)`` — server publishes its true
+  state (on task completion), *replacing* the stored vector.
+* ``tick(store, b)``                     — count one scheduling decision;
+  when p reaches b, emit ``push=True`` and reset p. On push the engine copies
+  the store's vectors into every scheduler's local view (updateNodeStates).
+
+The store is write-dominated and push-only: schedulers never read it on the
+hot path. Staleness is therefore bounded by one batch of b decisions plus the
+scheduler-delta mini-batch lag.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .types import DataStoreState, SchedulerView, ServerState
+
+
+def add_new_load(store: DataStoreState, j: jnp.ndarray, r: jnp.ndarray,
+                 d_ij: jnp.ndarray) -> DataStoreState:
+    """Scheduler-side delta: task with demand r, duration d_ij placed on j."""
+    return store._replace(
+        L=store.L.at[j].add(r),
+        D=store.D.at[j].add(d_ij),
+        rif=store.rif.at[j].add(1.0),
+    )
+
+
+def override_node_state(store: DataStoreState, j: jnp.ndarray, L_j: jnp.ndarray,
+                        D_j: jnp.ndarray, rif_j: jnp.ndarray) -> DataStoreState:
+    """Server-side override: replace the stored vector with the server's
+    authoritative view (sent when tasks complete)."""
+    return store._replace(
+        L=store.L.at[j].set(L_j),
+        D=store.D.at[j].set(D_j),
+        rif=store.rif.at[j].set(rif_j),
+    )
+
+
+def tick(store: DataStoreState, b: int) -> tuple[DataStoreState, jnp.ndarray]:
+    """Count a scheduling decision; p ≡ (p+1) mod b. Returns (store, push?)."""
+    p = store.p + 1
+    push = p >= b
+    return store._replace(p=jnp.where(push, 0, p)), push
+
+
+def snapshot(store: DataStoreState, C: jnp.ndarray) -> SchedulerView:
+    """The view pushed to schedulers on a batch boundary (updateNodeStates)."""
+    return SchedulerView(L=store.L, D=store.D, rif=store.rif, C=C)
+
+
+def push_if(push: jnp.ndarray, store: DataStoreState,
+            view: SchedulerView) -> SchedulerView:
+    """Conditionally refresh a scheduler's local cache (newCacheAvailable /
+    UpdateLocalCache of Algorithm 1, lines 13-15)."""
+    return SchedulerView(
+        L=jnp.where(push, store.L, view.L),
+        D=jnp.where(push, store.D, view.D),
+        rif=jnp.where(push, store.rif, view.rif),
+        C=view.C,
+    )
+
+
+def store_from_truth(state: ServerState) -> DataStoreState:
+    """A store freshly rebuilt from server overrides (recovery path, §4.3)."""
+    return DataStoreState(L=state.L, D=state.D, rif=state.rif,
+                          p=jnp.zeros((), jnp.int32))
+
+
+def default_batch_size(n_servers: int) -> int:
+    """Paper default: b = n/2 (§3.2)."""
+    return max(1, n_servers // 2)
+
+
+def scheduler_minibatch(b: int, num_schedulers: int) -> int:
+    """addNewLoad mini-batch bound: ≤ b / num_schedulers · 2 (§4.1)."""
+    return max(1, (b // max(num_schedulers, 1)) * 2)

@@ -1,0 +1,213 @@
+"""Scheduling policies: Random, PoT, Dodoor (Algorithm 1), Prequal, (1+β).
+
+Every placement policy is a pure function
+
+    select(key, r, d, view, params) -> server index (int32 scalar)
+
+where ``r`` [K] is the task's demand, ``d`` [n] its per-server estimated
+duration, and ``view`` a :class:`SchedulerView` holding whatever state that
+policy is entitled to (ground truth for probing policies, the stale cache for
+Dodoor). Randomness is seeded by folding the task id into the base key —
+matching the paper's "task ID as the seed" reproducibility device (§5).
+
+Prequal keeps per-scheduler probe-pool state; its functional update is here
+too so the simulator can scan it.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .prefilter import feasible_mask, sample_feasible
+from .rl_score import load_score_batched
+from .types import DodoorParams, PrequalParams, PrequalPool, SchedulerView
+
+# ---------------------------------------------------------------------------
+# Random
+# ---------------------------------------------------------------------------
+
+
+def random_select(key, r, d, view: SchedulerView, params: DodoorParams) -> jnp.ndarray:
+    """Uniform placement over feasible servers (paper's Random baseline)."""
+    mask = feasible_mask(r, view.C)
+    return sample_feasible(key, mask, 1)[0]
+
+
+# ---------------------------------------------------------------------------
+# Standard power-of-two on RIF (the PoT baseline; Nginx/Envoy style)
+# ---------------------------------------------------------------------------
+
+
+def pot_select(key, r, d, view: SchedulerView, params: DodoorParams) -> jnp.ndarray:
+    """Sample two servers, keep the one with fewer requests-in-flight.
+
+    ``view`` must be the ground truth — the engine charges this policy the two
+    synchronous probe round-trips it requires (§2.2).
+    """
+    mask = feasible_mask(r, view.C)
+    cand = sample_feasible(key, mask, 2)
+    rif = view.rif[cand]
+    # Tie-break toward the first candidate (deterministic given the seed).
+    return jnp.where(rif[1] < rif[0], cand[1], cand[0]).astype(jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# Dodoor — Algorithm 1
+# ---------------------------------------------------------------------------
+
+
+def dodoor_select(key, r, d, view: SchedulerView, params: DodoorParams) -> jnp.ndarray:
+    """Algorithm 1: two cached-view candidates scored with loadScore.
+
+    ``view`` is the scheduler's *local cache* (stale by up to one batch).
+    ``d`` [n] supplies d_iA / d_iB for the duration term.
+    """
+    mask = feasible_mask(r, view.C)
+    cand = sample_feasible(key, mask, 2)                       # [2]
+    L_ab = view.L[cand]                                        # [2, K]
+    D_ab = view.D[cand] + d[cand]                              # [2] (D_j + d_ij)
+    C_ab = view.C[cand]                                        # [2, K]
+    scores = load_score_batched(r[None], L_ab[None], D_ab[None], C_ab[None],
+                                params.alpha)[0]               # [2]
+    # Line 11: if score_A > score_B, take B. Ties keep A.
+    return jnp.where(scores[0] > scores[1], cand[1], cand[0]).astype(jnp.int32)
+
+
+def dodoor_select_batch(key, r, d, view: SchedulerView, params: DodoorParams) -> jnp.ndarray:
+    """Vectorized Algorithm 1 over a task batch (r [T,K], d [T,n]) — one cache
+    snapshot for the whole batch (the b-batched model's decision block)."""
+    T = r.shape[0]
+    keys = jax.vmap(lambda i: jax.random.fold_in(key, i))(jnp.arange(T))
+    mask = feasible_mask(r, view.C)                            # [T, N]
+
+    def pick(k, m):
+        return sample_feasible(k, m, 2)
+
+    cand = jax.vmap(pick)(keys, mask)                          # [T, 2]
+    L_ab = view.L[cand]                                        # [T, 2, K]
+    D_ab = view.D[cand] + jnp.take_along_axis(d, cand, axis=1) # [T, 2]
+    C_ab = view.C[cand]
+    scores = load_score_batched(r, L_ab, D_ab, C_ab, params.alpha)
+    take_b = scores[:, 0] > scores[:, 1]
+    return jnp.where(take_b, cand[:, 1], cand[:, 0]).astype(jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# (1+β) process — the theory alternative Dodoor deliberately avoids (§3.2),
+# implemented for the ablation benchmarks.
+# ---------------------------------------------------------------------------
+
+
+def one_plus_beta_select(key, r, d, view: SchedulerView, params: DodoorParams,
+                         beta: float = 0.5) -> jnp.ndarray:
+    k_choice, k_sel = jax.random.split(key)
+    two = dodoor_select(k_sel, r, d, view, params)
+    one = random_select(k_sel, r, d, view, params)
+    use_two = jax.random.uniform(k_choice) < beta
+    return jnp.where(use_two, two, one).astype(jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# Prequal (§5 baseline): async probing + hot-cold lexicographic selection
+# ---------------------------------------------------------------------------
+
+
+def prequal_select(key, r, d, pool: PrequalPool, view: SchedulerView,
+                   params: PrequalParams) -> tuple[jnp.ndarray, PrequalPool]:
+    """HCL rule: among pooled probes, 'cold' = RIF below the Q_rif quantile of
+    pooled RIF estimates; pick the cold entry with the lowest latency; if no
+    entry is cold, pick the lowest-RIF entry. Falls back to uniform random
+    when the pool is empty (the paper's observed cold-start behaviour).
+
+    Returns (server index, pool with the used entry consumed) — b_reuse = 1
+    deletes a probe result after one use.
+    """
+    rifs = jnp.where(pool.valid, pool.rif, jnp.inf)
+    lats = jnp.where(pool.valid, pool.latency, jnp.inf)
+    any_valid = jnp.any(pool.valid)
+
+    # RIF quantile over valid entries (inf-padding keeps it conservative).
+    n_valid = jnp.maximum(jnp.sum(pool.valid), 1)
+    sorted_rif = jnp.sort(jnp.where(pool.valid, pool.rif, jnp.inf))
+    q_idx = jnp.clip((params.q_rif * n_valid.astype(jnp.float32)).astype(jnp.int32),
+                     0, pool.rif.shape[0] - 1)
+    threshold = sorted_rif[q_idx]
+
+    cold = pool.valid & (pool.rif <= threshold)
+    any_cold = jnp.any(cold)
+    cold_lat = jnp.where(cold, lats, jnp.inf)
+    pick_cold = jnp.argmin(cold_lat)
+    pick_hot = jnp.argmin(rifs)            # fallback: lowest RIF overall
+    entry = jnp.where(any_cold, pick_cold, pick_hot)
+
+    rand_server = random_select(key, r, d, view, DodoorParams())
+    server = jnp.where(any_valid, pool.server[entry], rand_server).astype(jnp.int32)
+
+    # b_reuse = 1: consume the entry we used (only if the pool had one).
+    consumed_valid = jnp.where(any_valid, pool.valid.at[entry].set(False), pool.valid)
+    return server, pool._replace(valid=consumed_valid)
+
+
+def prequal_probe_update(key, pool: PrequalPool, truth: SchedulerView,
+                         now: jnp.ndarray, params: PrequalParams) -> PrequalPool:
+    """Post-scheduling async probes: sample r_probe servers, insert their
+    *true* (rif, latency) into the pool, then evict per the maintenance rule
+    (r_remove entries that are oldest or highest-RIF)."""
+    n = truth.rif.shape[0]
+    probes = jax.random.randint(key, (params.r_probe,), 0, n)
+
+    def insert(pool, srv):
+        # Choose slot: first invalid slot, else the oldest entry.
+        slot_scores = jnp.where(pool.valid, pool.age, -jnp.inf)
+        slot = jnp.argmin(slot_scores)
+        return PrequalPool(
+            server=pool.server.at[slot].set(srv.astype(jnp.int32)),
+            rif=pool.rif.at[slot].set(truth.rif[srv]),
+            latency=pool.latency.at[slot].set(truth.D[srv]),
+            age=pool.age.at[slot].set(now),
+            valid=pool.valid.at[slot].set(True),
+        )
+
+    pool = jax.lax.fori_loop(0, params.r_probe,
+                             lambda i, p: insert(p, probes[i]), pool)
+
+    # Maintenance: remove r_remove entries that are oldest OR highest RIF —
+    # only when the pool is full (otherwise keep building it up).
+    full = jnp.sum(pool.valid) >= pool.valid.shape[0]
+
+    def evict(p):
+        worst_rif = jnp.argmax(jnp.where(p.valid, p.rif, -jnp.inf))
+        return p._replace(valid=p.valid.at[worst_rif].set(False))
+
+    pool = jax.lax.cond(full, evict, lambda p: p, pool)
+    return pool
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+POLICIES = {
+    "random": random_select,
+    "pot": pot_select,
+    "dodoor": dodoor_select,
+    "one_plus_beta": one_plus_beta_select,
+    # "prequal" is stateful and handled specially by the engine.
+}
+
+#: Which view each policy reads: "cached" (data-store snapshot) vs "truth"
+#: (synchronous probing at decision time).
+POLICY_VIEW = {
+    "random": "cached",      # ignores the view anyway
+    "pot": "truth",          # probes 2 servers synchronously per decision
+    "dodoor": "cached",      # never probes on the hot path
+    "one_plus_beta": "cached",
+    "prequal": "pool",       # async probe pool
+}
+
+
+def task_key(base_key, task_id) -> jnp.ndarray:
+    """Task-id-seeded key (§5 reproducibility)."""
+    return jax.random.fold_in(base_key, task_id)

@@ -1,0 +1,50 @@
+"""PreFilter (Algorithm 1, line 2) — exclude infeasible server candidates.
+
+Like Kubernetes' pre-filter stage (§3.2): a server is a valid candidate for a
+task iff its *total capacity* can accommodate the task's demand in every
+resource dimension. (Dodoor early-binds and allows oversubscription of the
+queue, so the filter is against capacity, not current free resources.)
+
+The filter also carries an optional custom affinity mask so operators can pin
+task classes to server sets (the paper's "customized affinity configuration").
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def feasible_mask(r: jnp.ndarray, C: jnp.ndarray, affinity: jnp.ndarray | None = None) -> jnp.ndarray:
+    """Boolean mask of feasible servers.
+
+    r: [K] or [T, K] task demand; C: [N, K] capacities;
+    affinity: optional [N] or [T, N] boolean mask to intersect.
+    Returns [N] or [T, N].
+    """
+    if r.ndim == 1:
+        ok = jnp.all(r[None, :] <= C, axis=-1)          # [N]
+    else:
+        ok = jnp.all(r[:, None, :] <= C[None, :, :], axis=-1)  # [T, N]
+    if affinity is not None:
+        ok = ok & affinity
+    return ok
+
+
+def sample_feasible(key, mask: jnp.ndarray, num: int) -> jnp.ndarray:
+    """Sample ``num`` server indices uniformly among feasible ones (with
+    replacement — matching Algorithm 1, which draws two independent
+    RandomInt calls and may pick the same index twice).
+
+    mask: [N] bool. Returns [num] int32. If no server is feasible, falls back
+    to uniform over all servers (the task will queue at an overloaded node —
+    mirrors the real system where submission is never rejected).
+    """
+    import jax
+
+    n = mask.shape[0]
+    any_ok = jnp.any(mask)
+    # Gumbel-top-k over the mask == uniform sample without needing to
+    # materialize filteredIndexes; with replacement we just draw `num`
+    # independent categoricals.
+    logits = jnp.where(mask, 0.0, -jnp.inf)
+    logits = jnp.where(any_ok, logits, jnp.zeros_like(logits))
+    return jax.random.categorical(key, logits, shape=(num,)).astype(jnp.int32)

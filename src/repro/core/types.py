@@ -1,0 +1,165 @@
+"""Core pytree types shared by the scheduler, simulator and serving layers.
+
+Conventions
+-----------
+* ``n``  — number of servers (bins).
+* ``m``  — number of tasks (balls).
+* ``K``  — number of resource dimensions (CPU, memory by default; §3.1).
+* Resource units: CPU in cores, memory in MB (matches Tables 2-4).
+* Durations/latencies in milliseconds, float32 (the paper records
+  millisecond-level integers; we keep float32 for differentiability of the
+  analytic layers).
+
+All containers are ``NamedTuple`` pytrees so they flow through ``jax.jit``,
+``lax.scan`` and ``vmap`` unchanged.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax.numpy as jnp
+
+# Resource dimensions used throughout (paper §3.1: CPU + memory; extensible).
+RESOURCE_DIMS = 2
+CPU, MEM = 0, 1
+
+
+class TaskSpec(NamedTuple):
+    """A batch of tasks (balls). Leading axis is the task axis.
+
+    Attributes
+    ----------
+    r:        [m, K] resource demand vectors (cores, MB).
+    d:        [m, n] per-server estimated durations (ms) — §3.1's duration
+              vector d_i; heterogeneous across node types (Table 4).
+    submit_ms:[m]    submission timestamps (ms since epoch 0).
+    task_id:  [m]    integer ids; doubles as the RNG seed per the paper (§5).
+    """
+
+    r: jnp.ndarray
+    d: jnp.ndarray
+    submit_ms: jnp.ndarray
+    task_id: jnp.ndarray
+
+    @property
+    def num_tasks(self) -> int:
+        return self.r.shape[0]
+
+
+class ServerState(NamedTuple):
+    """Ground-truth server-side state (what the servers themselves know).
+
+    Attributes
+    ----------
+    L:    [n, K] resource-load vectors — sum of r over uncompleted tasks (§3.1).
+    D:    [n]    total estimated duration of uncompleted tasks (ms).
+    rif:  [n]    requests-in-flight counts (the classic PoT/Prequal signal).
+    C:    [n, K] capacity vectors (static; Table 2).
+    """
+
+    L: jnp.ndarray
+    D: jnp.ndarray
+    rif: jnp.ndarray
+    C: jnp.ndarray
+
+    @property
+    def num_servers(self) -> int:
+        return self.C.shape[0]
+
+
+class SchedulerView(NamedTuple):
+    """What a scheduler instance is allowed to see when deciding.
+
+    For Dodoor this is the *cached* (possibly stale) snapshot pushed by the
+    data store once per batch of ``b`` decisions; for the standard PoT policy
+    the engine passes the ground truth (fresh probing); for Random it is
+    ignored.
+    """
+
+    L: jnp.ndarray      # [n, K] cached resource loads
+    D: jnp.ndarray      # [n]    cached total durations
+    rif: jnp.ndarray    # [n]    cached RIF counts
+    C: jnp.ndarray      # [n, K] capacities (static, always fresh)
+
+
+class DataStoreState(NamedTuple):
+    """The central data store (§4.1) — a write-dominated aggregator.
+
+    ``L``/``D``/``rif`` are the store's current best view, built from server
+    ``overrideNodeState`` messages and scheduler ``addNewLoad`` deltas.
+    ``p`` counts scheduling decisions in the current batch; when ``p`` reaches
+    the batch size ``b`` the whole vector is pushed to every scheduler and
+    ``p`` resets (p ≡ (p+1) mod b after each scheduling, §3.1).
+    """
+
+    L: jnp.ndarray
+    D: jnp.ndarray
+    rif: jnp.ndarray
+    p: jnp.ndarray          # scalar int32, decisions in current batch
+
+
+class PrequalPool(NamedTuple):
+    """Per-scheduler probe pool for the Prequal baseline (§5).
+
+    Fixed-size arrays with a validity mask (s_pool entries).
+    """
+
+    server: jnp.ndarray     # [s_pool] int32 probed server index
+    rif: jnp.ndarray        # [s_pool] float32 probed RIF estimate
+    latency: jnp.ndarray    # [s_pool] float32 probed latency estimate (ms)
+    age: jnp.ndarray        # [s_pool] float32 probe timestamp (for oldest-removal)
+    valid: jnp.ndarray      # [s_pool] bool
+
+
+class DodoorParams(NamedTuple):
+    """Tunable cluster parameters (Require line of Algorithm 1)."""
+
+    alpha: float = 0.5      # duration weight in loadScore (§3.2, default 0.5)
+    b: int = 50             # cache batch size (default n/2; §3.2)
+    d_choices: int = 2      # power-of-d; paper fixes d=2
+
+
+class PrequalParams(NamedTuple):
+    """Prequal baseline parameters — the paper's §5 recommended settings."""
+
+    r_probe: int = 3
+    s_pool: int = 16
+    q_rif: float = 0.84
+    b_reuse: int = 1
+    r_remove: int = 1
+
+
+def make_server_state(C: jnp.ndarray) -> ServerState:
+    """Fresh, empty server state for capacity matrix ``C`` [n, K]."""
+    n = C.shape[0]
+    return ServerState(
+        L=jnp.zeros((n, C.shape[1]), jnp.float32),
+        D=jnp.zeros((n,), jnp.float32),
+        rif=jnp.zeros((n,), jnp.float32),
+        C=C.astype(jnp.float32),
+    )
+
+
+def make_datastore(C: jnp.ndarray) -> DataStoreState:
+    n = C.shape[0]
+    return DataStoreState(
+        L=jnp.zeros((n, C.shape[1]), jnp.float32),
+        D=jnp.zeros((n,), jnp.float32),
+        rif=jnp.zeros((n,), jnp.float32),
+        p=jnp.zeros((), jnp.int32),
+    )
+
+
+def make_view(state: ServerState) -> SchedulerView:
+    """A view equal to the ground truth (what fresh probing would return)."""
+    return SchedulerView(L=state.L, D=state.D, rif=state.rif, C=state.C)
+
+
+def make_prequal_pool(s_pool: int) -> PrequalPool:
+    return PrequalPool(
+        server=jnp.zeros((s_pool,), jnp.int32),
+        rif=jnp.full((s_pool,), jnp.inf, jnp.float32),
+        latency=jnp.full((s_pool,), jnp.inf, jnp.float32),
+        age=jnp.full((s_pool,), -jnp.inf, jnp.float32),
+        valid=jnp.zeros((s_pool,), bool),
+    )

@@ -1,0 +1,5 @@
+from .elastic import survivor_mesh, reshard
+from .failures import FailureInjector
+from .stragglers import StragglerMonitor
+
+__all__ = ["survivor_mesh", "reshard", "FailureInjector", "StragglerMonitor"]

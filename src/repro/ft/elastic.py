@@ -1,0 +1,40 @@
+"""Elastic re-meshing: rebuild a smaller mesh after host failures and
+reshard the training state onto it.
+
+Policy: failures remove whole data-parallel slices (the standard TPU-pod
+failure domain — a host owns a contiguous block of one DP slice). The
+survivor mesh keeps the model axis intact and shrinks the data axis to the
+largest power-of-two ≤ survivors; the global batch either shrinks with it
+(throughput degrades, semantics identical) or per-device batch grows
+(configurable). State resharding is a device_put onto the new sharding —
+under real multi-host JAX this is the standard resharding path; the
+checkpoint manifest stores logical shapes so a cold restore onto the
+survivor mesh works identically (repro.checkpoint)."""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from .. import sharding as shd
+
+
+def survivor_mesh(failed_data_slices: int, *, data: int = 16,
+                  model: int = 16, pods: int = 0):
+    """Mesh after losing ``failed_data_slices`` of the data axis."""
+    alive = data - failed_data_slices
+    if alive < 1:
+        raise RuntimeError("no data-parallel slices left")
+    # largest power of two ≤ alive keeps collectives ring-friendly
+    new_data = 1 << (alive.bit_length() - 1)
+    if pods:
+        return jax.make_mesh((pods, new_data, model),
+                             ("pod", "data", "model")), new_data
+    return jax.make_mesh((new_data, model), ("data", "model")), new_data
+
+
+def reshard(tree, new_mesh, spec_fn=None):
+    """Reshard a pytree onto a new mesh (params, opt state or cache)."""
+    spec_fn = spec_fn or shd.param_specs
+    specs = spec_fn(tree, new_mesh)
+    shardings = shd.to_shardings(specs, new_mesh)
+    return jax.device_put(tree, shardings)

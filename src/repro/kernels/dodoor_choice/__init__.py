@@ -1,0 +1,4 @@
+from .ops import dodoor_choice
+from .ref import dodoor_choice_ref
+
+__all__ = ["dodoor_choice", "dodoor_choice_ref"]

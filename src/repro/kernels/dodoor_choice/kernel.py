@@ -1,0 +1,98 @@
+"""Pallas kernel: fused Algorithm-1 two-choice selection.
+
+TPU adaptation. The GPU/CPU-natural implementation gathers L[cand], D[cand],
+C[cand] with a scatter/gather unit; the TPU has none worth feeding from
+VMEM, so the gathers are recast as **one-hot matmuls** on the MXU:
+
+    onehot[t, j] = (cand[t] == j)              (VPU compare against an iota)
+    L_cand       = onehot @ L                  (MXU, [block_t,N]×[N,K])
+    D_cand       = onehot @ D                  (same pass)
+
+The whole (L | D | invC) table for a fleet tile lives in VMEM (an 8192-node
+fleet at K=2 is ~160 KB — well under the ~16 MB/core budget), so the kernel
+streams only the decision batch. loadScore and the argmin select fuse into
+the same pass: one HBM read per operand, one [T] write.
+
+Grid: 1-D over decision-batch tiles of ``block_t``. The server table is
+broadcast to every grid step (index_map pins it to block 0).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+_EPS = 1e-9
+
+
+def _kernel(alpha, r_ref, cand_ref, d_ref, tbl_ref, out_choice_ref,
+            out_scores_ref):
+    # r_ref:    [block_t, K]   task demands
+    # cand_ref: [block_t, 2]   candidate ids (int32)
+    # d_ref:    [block_t, 2]   per-candidate task durations
+    # tbl_ref:  [N, K+2]       server table: [L (K) | D | 1/ΣC²]
+    # outputs:  [block_t] int32, [block_t, 2] f32
+    tbl = tbl_ref[...]
+    n = tbl.shape[0]
+    k = r_ref.shape[1]
+    cand = cand_ref[...]                                   # [bt, 2]
+    ids = jax.lax.broadcasted_iota(jnp.int32, (1, n), 1)   # [1, N]
+
+    def gather(which):
+        onehot = (cand[:, which][:, None] == ids).astype(jnp.float32)
+        return jnp.dot(onehot, tbl, preferred_element_type=jnp.float32)
+
+    row_a = gather(0)                                      # [bt, K+2]
+    row_b = gather(1)
+    r = r_ref[...]
+    rl_a = jnp.sum(r * row_a[:, :k], axis=-1) * row_a[:, k + 1]
+    rl_b = jnp.sum(r * row_b[:, :k], axis=-1) * row_b[:, k + 1]
+    D_a = row_a[:, k] + d_ref[:, 0]
+    D_b = row_b[:, k] + d_ref[:, 1]
+
+    rl_sum = rl_a + rl_b
+    d_sum = D_a + D_b
+    rl_fa = jnp.where(rl_sum > _EPS, rl_a / (rl_sum + _EPS), 0.5)
+    rl_fb = jnp.where(rl_sum > _EPS, rl_b / (rl_sum + _EPS), 0.5)
+    d_fa = jnp.where(d_sum > _EPS, D_a / (d_sum + _EPS), 0.5)
+    d_fb = jnp.where(d_sum > _EPS, D_b / (d_sum + _EPS), 0.5)
+    score_a = rl_fa * (1.0 - alpha) + d_fa * alpha
+    score_b = rl_fb * (1.0 - alpha) + d_fb * alpha
+
+    out_scores_ref[:, 0] = score_a
+    out_scores_ref[:, 1] = score_b
+    out_choice_ref[...] = jnp.where(score_a > score_b, cand[:, 1],
+                                    cand[:, 0]).astype(jnp.int32)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("alpha", "block_t", "interpret"))
+def dodoor_choice_pallas(r, cand, d_cand, tbl, *, alpha: float,
+                         block_t: int = 256, interpret: bool = True):
+    """r [T,K], cand [T,2] int32, d_cand [T,2], tbl [N, K+2] → (choice [T],
+    scores [T,2]). T must be a multiple of block_t (ops.py pads)."""
+    T, K = r.shape
+    N = tbl.shape[0]
+    grid = (T // block_t,)
+    kern = functools.partial(_kernel, alpha)
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_t, K), lambda i: (i, 0)),
+            pl.BlockSpec((block_t, 2), lambda i: (i, 0)),
+            pl.BlockSpec((block_t, 2), lambda i: (i, 0)),
+            pl.BlockSpec((N, K + 2), lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_t,), lambda i: (i,)),
+            pl.BlockSpec((block_t, 2), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((T,), jnp.int32),
+            jax.ShapeDtypeStruct((T, 2), jnp.float32),
+        ],
+        interpret=interpret,
+    )(r, cand, d_cand, tbl)

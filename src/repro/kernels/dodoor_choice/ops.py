@@ -1,0 +1,29 @@
+"""Public wrapper for the fused Dodoor two-choice kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .kernel import dodoor_choice_pallas
+
+
+def dodoor_choice(r: jnp.ndarray, cand: jnp.ndarray, d_cand: jnp.ndarray,
+                  L: jnp.ndarray, D: jnp.ndarray, C: jnp.ndarray,
+                  alpha: float = 0.5, *, block_t: int = 256,
+                  interpret: bool = True):
+    """Fused Algorithm-1 selection for a decision batch (see ref.py for the
+    oracle semantics). Builds the packed server table [L | D | 1/ΣC²] once
+    per cache refresh and pads the batch to the tile size."""
+    T, K = r.shape
+    inv = 1.0 / jnp.sum(C.astype(jnp.float32) ** 2, axis=-1, keepdims=True)
+    tbl = jnp.concatenate([L.astype(jnp.float32),
+                           D.astype(jnp.float32)[:, None], inv], axis=-1)
+    pad = (-T) % block_t
+    if pad:
+        r = jnp.pad(r, ((0, pad), (0, 0)))
+        cand = jnp.pad(cand, ((0, pad), (0, 0)))
+        d_cand = jnp.pad(d_cand, ((0, pad), (0, 0)))
+    choice, scores = dodoor_choice_pallas(
+        r.astype(jnp.float32), cand.astype(jnp.int32),
+        d_cand.astype(jnp.float32), tbl, alpha=alpha, block_t=block_t,
+        interpret=interpret)
+    return choice[:T], scores[:T]

@@ -1,0 +1,27 @@
+"""Pure-jnp oracle for the fused two-choice select (Algorithm 1 lines 4-11)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from ...core.rl_score import load_score_batched
+
+
+def dodoor_choice_ref(r: jnp.ndarray, cand: jnp.ndarray, d_cand: jnp.ndarray,
+                      L: jnp.ndarray, D: jnp.ndarray, C: jnp.ndarray,
+                      alpha: float):
+    """Vectorized Algorithm 1 selection for a decision batch.
+
+    r      [T, K]  task demands
+    cand   [T, 2]  int32 candidate server ids (pre-sampled, task-id-seeded)
+    d_cand [T, 2]  the task's estimated duration on each candidate
+    L      [N, K]  cached load vectors;  D [N] cached durations;  C [N, K]
+
+    Returns (choice [T] int32, scores [T, 2] f32).
+    """
+    L_ab = L[cand]                              # [T, 2, K]
+    D_ab = D[cand] + d_cand                     # [T, 2]
+    C_ab = C[cand]                              # [T, 2, K]
+    scores = load_score_batched(r, L_ab, D_ab, C_ab, alpha)
+    take_b = scores[:, 0] > scores[:, 1]        # line 11: ties keep A
+    choice = jnp.where(take_b, cand[:, 1], cand[:, 0]).astype(jnp.int32)
+    return choice, scores

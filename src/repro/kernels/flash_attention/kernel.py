@@ -1,0 +1,114 @@
+"""Pallas kernel: blockwise-softmax (flash) attention for TPU.
+
+Memory-hierarchy rethink vs. the CUDA original: instead of shared-memory
+tiles sized to an SM, blocks are sized so a (block_q × d) query tile, a
+(block_k × d) K/V tile, and the (block_q × block_k) logits tile co-reside in
+VMEM with the f32 accumulators; the q·kᵀ and p·v contractions hit the MXU,
+the running max/sum rescale runs on the VPU. The KV loop is the innermost
+grid dimension so the Q tile and accumulators stay resident across it
+(sequential-grid semantics on TPU), giving O(L) HBM traffic for O(L²) work.
+
+Masking supports causal and local-window (RG-LRU hybrid) without
+materializing the mask: block-level iota comparisons only. Fully-masked
+blocks are *skipped* via the grid index map where possible (causal upper
+triangle) and neutralized numerically otherwise.
+
+GQA is handled by the wrapper (ops.py) mapping query-head groups onto the
+same K/V tile — no K/V duplication in HBM.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_NEG_INF = -1e30
+
+
+def _kernel(causal, window, scale, kv_start, block_q, block_k, q_ref, k_ref,
+            v_ref, o_ref, m_scr, l_scr, acc_scr):
+    # Grid: (bh, q_blocks, k_blocks); k is the innermost (sequential) dim.
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, _NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0]                                    # [block_q, d]
+    k = k_ref[0]                                    # [block_k, d]
+    v = v_ref[0]                                    # [block_k, d]
+    logits = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32) * scale  # [block_q, block_k]
+
+    # Right-aligned absolute positions (supports Lq < Lk decode).
+    lq = pl.num_programs(1) * block_q
+    lk = pl.num_programs(2) * block_k
+    q_pos = qi * block_q + jax.lax.broadcasted_iota(
+        jnp.int32, (block_q, block_k), 0) + (lk - lq)
+    k_pos = ki * block_k + jax.lax.broadcasted_iota(
+        jnp.int32, (block_q, block_k), 1)
+    mask = k_pos >= kv_start          # left-padded keys are invalid
+    if causal:
+        mask &= k_pos <= q_pos
+    if window is not None:
+        mask &= k_pos > q_pos - window
+    logits = jnp.where(mask, logits, _NEG_INF)
+
+    m_prev = m_scr[...]                             # [block_q, 1]
+    m_cur = jnp.max(logits, axis=-1, keepdims=True)
+    m_new = jnp.maximum(m_prev, m_cur)
+    p = jnp.exp(logits - m_new)                     # [block_q, block_k]
+    correction = jnp.exp(m_prev - m_new)            # [block_q, 1]
+    l_new = l_scr[...] * correction + jnp.sum(p, axis=-1, keepdims=True)
+    acc = acc_scr[...] * correction + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+
+    m_scr[...] = m_new
+    l_scr[...] = l_new
+    acc_scr[...] = acc
+
+    @pl.when(ki == pl.num_programs(2) - 1)
+    def _finish():
+        o_ref[0] = (acc_scr[...] / jnp.maximum(l_scr[...], 1e-30)
+                    ).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "scale", "kv_start", "block_q",
+                     "block_k", "interpret"))
+def flash_attention_pallas(q, k, v, *, causal: bool, window, scale: float,
+                           kv_start: int = 0, block_q: int = 128,
+                           block_k: int = 128, interpret: bool = True):
+    """q [BH, Lq, D]; k, v [BH, Lk, D] (heads pre-flattened, GQA pre-mapped).
+    Lq, Lk must be multiples of the block sizes (ops.py left-pads and passes
+    ``kv_start`` = number of invalid leading key positions)."""
+    BH, Lq, D = q.shape
+    Lk = k.shape[1]
+    grid = (BH, Lq // block_q, Lk // block_k)
+    kern = functools.partial(_kernel, causal, window, scale, kv_start,
+                             block_q, block_k)
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q, D), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, block_k, D), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, block_k, D), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, D), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, Lq, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),    # running max m
+            pltpu.VMEM((block_q, 1), jnp.float32),    # running sum l
+            pltpu.VMEM((block_q, D), jnp.float32),    # output accumulator
+        ],
+        interpret=interpret,
+    )(q, k, v)

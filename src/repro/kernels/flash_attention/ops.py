@@ -1,0 +1,51 @@
+"""Public wrapper: GQA head mapping, padding, and shape plumbing."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .kernel import flash_attention_pallas
+
+
+def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                    *, causal: bool = True, window: int | None = None,
+                    scale: float | None = None, block_q: int = 128,
+                    block_k: int = 128, interpret: bool = True) -> jnp.ndarray:
+    """Flash attention with the oracle's signature: q [B,H,Lq,D],
+    k/v [B,Hkv,Lk,D] (H divisible by Hkv). Returns [B,H,Lq,D].
+
+    Padding scheme: queries and keys are **left-padded** to block multiples.
+    Left-padded keys occupy the oldest positions and are masked inside the
+    kernel via ``kv_start``; left-padded query rows produce garbage that is
+    sliced off. Right-alignment of q against k is preserved exactly, so the
+    same wrapper serves prefill (Lq=Lk) and decode (Lq=1, long cache).
+
+    GQA: each query-head group is mapped onto its KV head's tiles — K/V are
+    never materialized ``rep`` times in HBM.
+    """
+    B, H, Lq, D = q.shape
+    Hkv, Lk = k.shape[1], k.shape[2]
+    rep = H // Hkv
+    scale = scale if scale is not None else D ** -0.5
+
+    pad_q = (-Lq) % block_q
+    pad_k = (-Lk) % block_k
+    if pad_q:
+        q = jnp.pad(q, ((0, 0), (0, 0), (pad_q, 0), (0, 0)))
+    if pad_k:
+        k = jnp.pad(k, ((0, 0), (0, 0), (pad_k, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (pad_k, 0), (0, 0)))
+    Lq_p, Lk_p = Lq + pad_q, Lk + pad_k
+
+    qg = q.reshape(B, Hkv, rep, Lq_p, D)
+    kk = k.reshape(B * Hkv, Lk_p, D)
+    vv = v.reshape(B * Hkv, Lk_p, D)
+    out = []
+    for g in range(rep):       # static tiny loop (query-group size ≤ 8)
+        qq = qg[:, :, g].reshape(B * Hkv, Lq_p, D)
+        o = flash_attention_pallas(qq, kk, vv, causal=causal, window=window,
+                                   scale=scale, kv_start=pad_k,
+                                   block_q=block_q, block_k=block_k,
+                                   interpret=interpret)
+        out.append(o.reshape(B, Hkv, Lq_p, D))
+    o = jnp.stack(out, axis=2).reshape(B, H, Lq_p, D)
+    return o[:, :, pad_q:] if pad_q else o

@@ -1,0 +1,37 @@
+"""Pure-jnp oracle: dense softmax attention with causal / local-window masks
+and grouped-query head sharing."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                  *, causal: bool = True, window: int | None = None,
+                  scale: float | None = None) -> jnp.ndarray:
+    """q [B, H, Lq, D]; k, v [B, Hkv, Lk, D] with H a multiple of Hkv (GQA).
+
+    ``window``: if set, position i attends to j ∈ (i−window, i] (local
+    attention, RG-LRU hybrid style). Query positions are right-aligned with
+    the keys (q position i corresponds to key position Lk − Lq + i), so the
+    same oracle covers decode (Lq=1 against a long cache).
+    """
+    B, H, Lq, D = q.shape
+    Hkv = k.shape[1]
+    rep = H // Hkv
+    k = jnp.repeat(k, rep, axis=1)
+    v = jnp.repeat(v, rep, axis=1)
+    scale = scale if scale is not None else D ** -0.5
+    logits = jnp.einsum("bhqd,bhkd->bhqk", q, k) * scale
+
+    Lk = k.shape[2]
+    q_pos = jnp.arange(Lq)[:, None] + (Lk - Lq)
+    k_pos = jnp.arange(Lk)[None, :]
+    mask = jnp.ones((Lq, Lk), bool)
+    if causal:
+        mask &= k_pos <= q_pos
+    if window is not None:
+        mask &= k_pos > q_pos - window
+    logits = jnp.where(mask[None, None], logits, -jnp.inf)
+    probs = jnp.exp(logits - logits.max(axis=-1, keepdims=True))
+    probs = probs / probs.sum(axis=-1, keepdims=True)
+    return jnp.einsum("bhqk,bhkd->bhqd", probs, v)

@@ -1,0 +1,4 @@
+from .ops import rl_score_matrix
+from .ref import rl_score_matrix_ref
+
+__all__ = ["rl_score_matrix", "rl_score_matrix_ref"]

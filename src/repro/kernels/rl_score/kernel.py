@@ -1,0 +1,61 @@
+"""Pallas kernel: batched Eq.-1 RL scores as a tiled MXU contraction.
+
+TPU adaptation of the paper's hot path. The Java prototype computes one RL
+score per RPC-handler thread; here a *batch* of T pending decisions is scored
+against all N servers in one pass:
+
+    score[t, j] = (r[t] · L[j]) / Σ_k C[j,k]²
+
+which is a [T,K]×[K,N] matmul (K = resource dims, zero-padded to the 128-lane
+register width) with a per-column scale. The inverse capacity norms are
+precomputed once per cache refresh (they only change when the fleet changes)
+and fused into the epilogue, so the kernel reads each (L, C) tile exactly
+once from HBM into VMEM.
+
+Tiling: (block_t × K) ⊗ (K × block_n) → (block_t × block_n) accumulated in
+f32. block_t = block_n = 128 matches the MXU systolic dimensions.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(r_ref, lt_ref, inv_ref, out_ref):
+    # r_ref:   [block_t, K]       task demand tile
+    # lt_ref:  [K, block_n]       server load tile (pre-transposed)
+    # inv_ref: [1, block_n]       1 / ||C_j||² for the tile's servers
+    # out_ref: [block_t, block_n]
+    scores = jnp.dot(r_ref[...], lt_ref[...],
+                     preferred_element_type=jnp.float32)
+    out_ref[...] = scores * inv_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("block_t", "block_n", "interpret"))
+def rl_score_pallas(r: jnp.ndarray, L_t: jnp.ndarray, inv_cap: jnp.ndarray,
+                    *, block_t: int = 128, block_n: int = 128,
+                    interpret: bool = True) -> jnp.ndarray:
+    """r [T, K], L_t [K, N] (transposed loads), inv_cap [1, N] → scores [T, N].
+
+    T and N must already be padded to multiples of the block sizes (ops.py
+    handles padding); K is kept whole per tile (K ≤ 128 always: the paper
+    uses K=2, extensible to disk/GPU dims).
+    """
+    T, K = r.shape
+    _, N = L_t.shape
+    grid = (T // block_t, N // block_n)
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_t, K), lambda i, j: (i, 0)),
+            pl.BlockSpec((K, block_n), lambda i, j: (0, j)),
+            pl.BlockSpec((1, block_n), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((block_t, block_n), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((T, N), jnp.float32),
+        interpret=interpret,
+    )(r, L_t, inv_cap)

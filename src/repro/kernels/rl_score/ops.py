@@ -1,0 +1,37 @@
+"""Public wrapper: padding, layout, and the jit boundary for rl_score."""
+from __future__ import annotations
+
+import functools
+
+import jax.numpy as jnp
+
+from .kernel import rl_score_pallas
+
+
+def _pad_to(x: jnp.ndarray, axis: int, mult: int) -> jnp.ndarray:
+    size = x.shape[axis]
+    pad = (-size) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+def rl_score_matrix(r: jnp.ndarray, L: jnp.ndarray, C: jnp.ndarray,
+                    *, block_t: int = 128, block_n: int = 128,
+                    interpret: bool = True) -> jnp.ndarray:
+    """Batched Eq. 1 via the Pallas kernel. r [T,K], L [N,K], C [N,K] → [T,N].
+
+    Pads T/N up to block multiples, transposes L once (the kernel wants the
+    contraction dim leading for the MXU), and slices the result back.
+    """
+    T, K = r.shape
+    N = L.shape[0]
+    inv_cap = (1.0 / jnp.sum(C.astype(jnp.float32) ** 2, axis=-1))[None, :]
+    r_p = _pad_to(r.astype(jnp.float32), 0, block_t)
+    L_tp = _pad_to(L.astype(jnp.float32).T, 1, block_n)
+    inv_p = _pad_to(inv_cap, 1, block_n)
+    out = rl_score_pallas(r_p, L_tp, inv_p, block_t=block_t, block_n=block_n,
+                          interpret=interpret)
+    return out[:T, :N]

@@ -1,0 +1,10 @@
+"""Pure-jnp oracle for the batched RL score (delegates to the paper core)."""
+import jax.numpy as jnp
+
+from ...core.rl_score import rl_score_matrix as _core
+
+
+def rl_score_matrix_ref(r: jnp.ndarray, L: jnp.ndarray,
+                        C: jnp.ndarray) -> jnp.ndarray:
+    """score[t, j] = (r_t · L_j) / ||C_j||²  — Eq. 1 batched. [T,K]×[N,K]→[T,N]."""
+    return _core(r, L, C)

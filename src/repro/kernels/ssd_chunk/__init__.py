@@ -1,0 +1,4 @@
+from .ops import ssd
+from .ref import ssd_ref
+
+__all__ = ["ssd", "ssd_ref"]

@@ -1,0 +1,73 @@
+"""Public SSD wrapper: chunking, the inter-chunk state scan, h_in correction."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import ssd_chunk_pallas
+
+
+def ssd(x: jnp.ndarray, dt: jnp.ndarray, A: jnp.ndarray, B: jnp.ndarray,
+        C: jnp.ndarray, h0: jnp.ndarray | None = None, *,
+        chunk: int = 64, interpret: bool = True):
+    """Chunked SSD with the oracle's signature (see ref.py): x [B,L,H,P],
+    dt [B,L,H], A [H], B/C [B,L,G,S]. L must be a multiple of ``chunk``
+    (the model layer pads sequences). Returns (y [B,L,H,P], h [B,H,S,P])."""
+    Bb, L, H, P = x.shape
+    G, S = B.shape[2], B.shape[3]
+    NC = L // chunk
+    hpg = H // G
+
+    # Layouts for the kernel: heads into the batch dim, chunked time.
+    xk = x.transpose(0, 2, 1, 3).reshape(Bb * H, NC, chunk, P)
+    dtk = dt.transpose(0, 2, 1).reshape(Bb * H, NC, chunk)
+    delta = dtk * jnp.tile(A, Bb)[:, None, None]     # A·dt per (b·H+h)
+    Bk = B.transpose(0, 2, 1, 3).reshape(Bb, G, NC, chunk, S)
+    Ck = C.transpose(0, 2, 1, 3).reshape(Bb, G, NC, chunk, S)
+
+    y_intra, H_out, exp_s = ssd_chunk_pallas(
+        xk.astype(jnp.float32), delta.astype(jnp.float32),
+        dtk.astype(jnp.float32), Bk.astype(jnp.float32),
+        Ck.astype(jnp.float32), heads_per_group=hpg, interpret=interpret)
+
+    # Inter-chunk state recurrence: h_c = decay_c · h_{c-1} + H_out_c, with
+    # decay_c = exp(Σ chunk deltas) = exp_s[..., -1].
+    if h0 is None:
+        h0 = jnp.zeros((Bb * H, S, P), jnp.float32)
+    else:
+        h0 = h0.reshape(Bb * H, S, P).astype(jnp.float32)
+
+    def scan_fn(h, inp):
+        Hc, decay = inp                      # [BH,S,P], [BH]
+        h_next = decay[:, None, None] * h + Hc
+        return h_next, h                     # emit the *incoming* state
+
+    decays = exp_s[:, :, -1]                 # [BH, NC]
+    h_final, h_in = jax.lax.scan(
+        scan_fn, h0, (H_out.transpose(1, 0, 2, 3), decays.T))
+    h_in = h_in.transpose(1, 0, 2, 3)        # [BH, NC, S, P]
+
+    # h_in correction: y_state[t] = exp(s_t) · C_t · h_in(chunk).
+    # C is per-group: fold heads as [B, G, hpg, ...] to avoid repeating.
+    Ck_g = Ck.reshape(Bb, G, NC, chunk, S)
+    h_in_g = h_in.reshape(Bb, G, hpg, NC, S, P)
+    y_state = jnp.einsum("bgnqs,bghnsp->bghnqp", Ck_g, h_in_g)
+    y_state = y_state.reshape(Bb * H, NC, chunk, P) * exp_s[..., None]
+
+    y = (y_intra + y_state).reshape(Bb, H, L, P).transpose(0, 2, 1, 3)
+    return y.astype(x.dtype), h_final.reshape(Bb, H, S, P)
+
+
+def ssd_decode_step(x_t, dt_t, A, B_t, C_t, h):
+    """Single-token SSD update (serving): x_t [B,H,P], dt_t [B,H], A [H],
+    B_t/C_t [B,G,S], h [B,H,S,P] → (y_t [B,H,P], h')."""
+    Bb, H, P = x_t.shape
+    G, S = B_t.shape[1], B_t.shape[2]
+    rep = H // G
+    Bh = jnp.repeat(B_t, rep, axis=1)        # [B,H,S]
+    Ch = jnp.repeat(C_t, rep, axis=1)
+    decay = jnp.exp(A[None, :] * dt_t)       # [B,H]
+    h = (decay[..., None, None] * h
+         + dt_t[..., None, None] * Bh[..., None] * x_t[:, :, None, :])
+    y = jnp.einsum("bhs,bhsp->bhp", Ch, h)
+    return y, h

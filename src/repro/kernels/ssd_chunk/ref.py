@@ -1,0 +1,47 @@
+"""Pure-jnp oracle for Mamba-2's SSD layer: the literal linear recurrence.
+
+State h [S, P] per (batch, head); per step t:
+
+    h_t = exp(A·dt_t) · h_{t-1} + dt_t · B_t xᵀ_t        (outer product)
+    y_t = C_t · h_t
+
+A is a per-head negative scalar; B, C are shared across head groups (G
+groups, like GQA for state space models). This O(L·S·P) scan is the ground
+truth the chunked (quadratic-within-chunk) kernel must match.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssd_ref(x: jnp.ndarray, dt: jnp.ndarray, A: jnp.ndarray, B: jnp.ndarray,
+            C: jnp.ndarray, h0: jnp.ndarray | None = None):
+    """x [B,L,H,P]; dt [B,L,H] (>0, post-softplus); A [H] (<0);
+    B, C [B,L,G,S] with H divisible by G.
+
+    Returns (y [B,L,H,P], h_final [B,H,S,P]).
+    """
+    Bb, L, H, P = x.shape
+    G, S = B.shape[2], B.shape[3]
+    rep = H // G
+    Bh = jnp.repeat(B, rep, axis=2)         # [B,L,H,S]
+    Ch = jnp.repeat(C, rep, axis=2)
+
+    def per_bh(xs, dts, Bs, Cs, a, h_init):
+        # xs [L,P], dts [L], Bs/Cs [L,S], a scalar, h_init [S,P]
+        def step(h, inp):
+            xt, dtt, Bt, Ct = inp
+            h = jnp.exp(a * dtt) * h + dtt * (Bt[:, None] * xt[None, :])
+            return h, Ct @ h
+        h, ys = jax.lax.scan(step, h_init, (xs, dts, Bs, Cs))
+        return ys, h
+
+    if h0 is None:
+        h0 = jnp.zeros((Bb, H, S, P), x.dtype)
+    f = jax.vmap(jax.vmap(per_bh, in_axes=(1, 1, 1, 1, 0, 0),
+                          out_axes=(1, 0)),
+                 in_axes=(0, 0, 0, 0, None, 0), out_axes=(0, 0))
+    # inner vmap over heads: x [L,H,P] → axis 1; outer over batch.
+    y, h = f(x, dt, Bh, Ch, A, h0)
+    return y, h

@@ -1,0 +1,1 @@
+"""repro.launch — mesh construction, multi-pod dry-run, roofline, drivers."""

@@ -1,0 +1,308 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+The two lines above MUST precede any other import (jax locks the device
+count at first init). Each cell:
+
+    with mesh:
+        lowered = jax.jit(step, in_shardings=..., out_shardings=...)\
+            .lower(**input_specs(arch))
+        compiled = lowered.compile()
+        print(compiled.memory_analysis())
+        print(compiled.cost_analysis())
+
+plus the HLO collective-bytes parse for §Roofline. Artifacts land in
+``experiments/dryrun/<arch>__<shape>__<mesh>.json``.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch smollm-135m \
+        --shape train_4k [--multi-pod] [--all] [--out experiments/dryrun]
+"""
+import argparse
+import json
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+
+from .. import sharding as shd
+from ..configs import ARCHS, SHAPES, applicable
+from ..models import registry
+from ..train.steps import (abstract_train_state, make_prefill_step,
+                           make_serve_step, make_train_step)
+from .hlo_analysis import collective_bytes, roofline_terms
+from .mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16, make_production_mesh
+
+
+def model_flops(cfg, shape) -> float:
+    """Analytic MODEL_FLOPS: 6·N·D train / 2·N_active·D forward."""
+    n_active = cfg.active_param_count()
+    if shape.kind == "train":
+        return 6.0 * n_active * shape.seq_len * shape.global_batch
+    if shape.kind == "prefill":
+        return 2.0 * n_active * shape.seq_len * shape.global_batch
+    return 2.0 * n_active * shape.global_batch       # decode: 1 tok/seq
+
+
+def _analysis_twins(cfg):
+    """Two reduced-depth twins + the unit count for cost extrapolation.
+
+    XLA's cost_analysis counts a while-loop body once regardless of trip
+    count (verified on the CPU backend), so scan-based models under-report
+    flops/bytes/collectives. We re-lower each cell at depth 1 and depth 2
+    with every inner scan UNROLLED (models.analysis), then reconstruct
+
+        cost(full) = cost(d1) + (cost(d2) − cost(d1)) · (units − 1)
+
+    which is exact for layer-homogeneous stacks (all 10 archs are)."""
+    from dataclasses import replace
+    if cfg.family == "hybrid":
+        pat = len(cfg.block_pattern)
+        rem = cfg.n_layers % pat
+        units = (cfg.n_layers - rem) // pat
+        return (replace(cfg, n_layers=pat + rem),
+                replace(cfg, n_layers=2 * pat + rem), units)
+    if cfg.family == "audio":
+        return (replace(cfg, n_layers=1, encoder_layers=1),
+                replace(cfg, n_layers=2, encoder_layers=2), cfg.n_layers)
+    return (replace(cfg, n_layers=1), replace(cfg, n_layers=2),
+            cfg.n_layers)
+
+
+def build_cell(cfg, shape_name: str, mesh, layout: str = "fsdp",
+               kv_int8: bool = False, remat: bool = True):
+    """Returns (jitted fn, kwargs of ShapeDtypeStructs)."""
+    shape = SHAPES[shape_name]
+    if shape.kind == "train":
+        from jax.sharding import PartitionSpec as P
+        params, opt = abstract_train_state(cfg)
+        batch = registry.make_inputs(cfg, shape)
+        pspecs = shd.param_specs(params, mesh, layout)
+        opt_specs = type(opt)(step=P(),
+                              m=shd.param_specs(opt.m, mesh, layout),
+                              v=shd.param_specs(opt.v, mesh, layout))
+        in_shardings = (shd.to_shardings(pspecs, mesh),
+                        shd.to_shardings(opt_specs, mesh),
+                        shd.to_shardings(
+                            shd.batch_specs(batch, mesh, layout), mesh))
+        step = make_train_step(cfg, remat=remat)
+        fn = jax.jit(step, in_shardings=in_shardings)
+        args = (params, opt, batch)
+    elif shape.kind == "prefill":
+        params = registry.abstract_params(cfg)
+        batch = registry.make_inputs(cfg, shape)
+        in_shardings = (
+            shd.to_shardings(shd.param_specs(params, mesh, layout), mesh),
+            shd.to_shardings(shd.batch_specs(batch, mesh, layout), mesh))
+        fn = jax.jit(make_prefill_step(cfg), in_shardings=in_shardings)
+        args = (params, batch)
+    else:
+        params = registry.abstract_params(cfg)
+        specs = registry.make_inputs(
+            cfg, shape, cache_dtype=jnp.int8 if kv_int8 else None)
+        cache, token = specs["cache"], specs["token"]
+        in_shardings = (
+            shd.to_shardings(shd.param_specs(params, mesh, layout), mesh),
+            shd.to_shardings(shd.cache_specs(cache, mesh), mesh),
+            shd.to_shardings(shd.batch_specs({"t": token}, mesh)["t"], mesh))
+        fn = jax.jit(make_serve_step(cfg), in_shardings=in_shardings)
+        args = (params, cache, token)
+    return fn, args
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
+             out_dir: Path, layout: str = "fsdp", bf16: bool = False,
+             sp: bool = False, tag: str = "",
+             moe_dodoor_cf: float | None = None, kv_int8: bool = False,
+             remat: bool = True) -> dict:
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    chips = 512 if multi_pod else 256
+    cfg = ARCHS[arch]
+    if moe_dodoor_cf is not None and cfg.is_moe:
+        from dataclasses import replace
+        cfg = replace(cfg, router="dodoor", capacity_factor=moe_dodoor_cf)
+    shape = SHAPES[shape_name]
+    rec = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+           "chips": chips, "layout": layout, "bf16": bf16, "sp": sp}
+    ok, why = applicable(cfg, shape)
+    if not ok:
+        rec.update(status="skipped", reason=why)
+        out_dir.mkdir(parents=True, exist_ok=True)
+        suffix = f"__{tag}" if tag else ""
+        (out_dir / f"{arch}__{shape_name}__{mesh_name}{suffix}.json"
+         ).write_text(json.dumps(rec, indent=1))
+        return rec
+    t0 = time.time()
+    try:
+        from jax.sharding import PartitionSpec as P
+        from ..models import precision
+        res_spec = None
+        if sp and shape.kind in ("train", "prefill"):
+            daxes = ("pod", "data") if multi_pod else "data"
+            res_spec = P(daxes, "model", None)
+        # 1) Production compile at full depth: proves lower+compile+fit, and
+        #    yields the collective-op census of the real SPMD schedule.
+        with mesh, precision.options(
+                dtype=jnp.bfloat16 if bf16 else None,
+                residual_spec=res_spec):
+            fn, args = build_cell(cfg, shape_name, mesh, layout,
+                                  kv_int8=kv_int8, remat=remat)
+            lowered = fn.lower(*args)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+            mem = compiled.memory_analysis()
+            raw_cost = compiled.cost_analysis()
+            census = collective_bytes(compiled.as_text())
+
+        # 2) Analytic cost model (primary): XLA-CPU cost_analysis counts
+        #    while-loop bodies once (see costmodel.py docstring), so the
+        #    roofline terms come from the analytic model; raw HLO numbers
+        #    are recorded for transparency.
+        from . import costmodel as cm
+        mdims = cm.MeshDims(data=chips // 16, model=16, chips=chips)
+        opts = cm.PerfOpts(bf16=bf16, sp=sp, layout=layout,
+                           kv_int8=kv_int8, remat=remat)
+        flops_dev = cm.flops_per_device(cfg, shape, mdims, opts)
+        bytes_dev = cm.bytes_per_device(cfg, shape, mdims, opts)
+        coll_dev = cm.collective_bytes_per_device(cfg, shape, mdims, opts)
+
+        terms = roofline_terms(flops_dev, bytes_dev, coll_dev,
+                               peak_flops=PEAK_FLOPS_BF16 * opts.peak_scale,
+                               hbm_bw=HBM_BW, link_bw=ICI_BW)
+        mf = model_flops(cfg, shape)
+        rec.update(
+            status="ok",
+            lower_s=round(t_lower, 1), compile_s=round(t_compile, 1),
+            flops_per_device=flops_dev,
+            bytes_per_device=bytes_dev,
+            collective_bytes_per_device=coll_dev,
+            hlo_raw_flops_per_device=float(raw_cost.get("flops", 0.0)),
+            hlo_raw_bytes_per_device=float(raw_cost.get("bytes accessed",
+                                                        0.0)),
+            hlo_collective_census={k: v for k, v in census.items()
+                                   if k != "total"},
+            hlo_collective_bytes_in_text=census["total"],
+            memory_analysis=_mem_dict(mem),
+            model_flops_global=mf,
+            hlo_flops_global=flops_dev * chips,
+            useful_flops_ratio=(mf / (flops_dev * chips)
+                                if flops_dev else 0.0),
+            **terms,
+        )
+    except Exception as e:                                # noqa: BLE001
+        rec.update(status="error", error=f"{type(e).__name__}: {e}",
+                   traceback=traceback.format_exc()[-2000:])
+    out_dir.mkdir(parents=True, exist_ok=True)
+    suffix = f"__{tag}" if tag else ""
+    path = out_dir / f"{arch}__{shape_name}__{mesh_name}{suffix}.json"
+    path.write_text(json.dumps(rec, indent=1, default=str))
+    return rec
+
+
+def _mem_dict(mem) -> dict:
+    if mem is None:
+        return {}
+    out = {}
+    for k in ("generated_code_size_in_bytes", "argument_size_in_bytes",
+              "output_size_in_bytes", "temp_size_in_bytes",
+              "alias_size_in_bytes", "peak_memory_in_bytes"):
+        v = getattr(mem, k, None)
+        if v is not None:
+            out[k] = int(v)
+    return out
+
+
+def _auto_optimized(arch: str, shape_name: str) -> dict:
+    """The per-cell layout policy distilled from the §Perf hillclimbs."""
+    cfg = ARCHS[arch]
+    shape = SHAPES[shape_name]
+    kw = dict(bf16=True)
+    if shape.kind == "decode":
+        kw.update(layout="inference", kv_int8=True)
+        return kw
+    small = cfg.param_count() < 500e6
+    if small:
+        kw.update(layout="dp", remat=False)
+    else:
+        kw.update(layout="fsdp", sp=True)
+        if cfg.is_moe:
+            kw.update(moe_dodoor_cf=1.0)
+    return kw
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, help="arch id or 'all'")
+    ap.add_argument("--shape", default=None, help="shape name or 'all'")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--all", action="store_true",
+                    help="every (arch × shape) cell")
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--layout", default="fsdp",
+                    choices=["fsdp", "inference", "dp"])
+    ap.add_argument("--bf16", action="store_true")
+    ap.add_argument("--sp", action="store_true")
+    ap.add_argument("--tag", default="",
+                    help="artifact filename suffix for perf iterations")
+    ap.add_argument("--moe-dodoor-cf", type=float, default=None,
+                    help="switch MoE router to dodoor and set the capacity "
+                         "factor (balanced routing tolerates lower cf)")
+    ap.add_argument("--kv-int8", action="store_true",
+                    help="int8 KV cache (decode cells)")
+    ap.add_argument("--no-remat", action="store_true")
+    ap.add_argument("--optimized", action="store_true",
+                    help="apply the per-cell auto-layout heuristic learned "
+                         "in §Perf (bf16 everywhere; dp for <500M models; "
+                         "inference layout + int8 KV for decode; SP + "
+                         "dodoor-cf1.0 for large/MoE training)")
+    args = ap.parse_args()
+
+    archs = list(ARCHS) if (args.all or args.arch in (None, "all")) \
+        else [args.arch]
+    shapes = list(SHAPES) if (args.all or args.shape in (None, "all")) \
+        else [args.shape]
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+
+    out_dir = Path(args.out)
+    n_ok = n_skip = n_err = 0
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                kw = dict(layout=args.layout, bf16=args.bf16, sp=args.sp,
+                          tag=args.tag, moe_dodoor_cf=args.moe_dodoor_cf,
+                          kv_int8=args.kv_int8, remat=not args.no_remat)
+                if args.optimized:
+                    kw.update(_auto_optimized(arch, shape))
+                    kw["tag"] = args.tag or "opt"
+                rec = run_cell(arch, shape, multi_pod=mp, out_dir=out_dir,
+                               **kw)
+                tag = rec["status"]
+                n_ok += tag == "ok"
+                n_skip += tag == "skipped"
+                n_err += tag == "error"
+                if tag == "ok":
+                    print(f"[ok]   {arch:22s} {shape:12s} {rec['mesh']:10s} "
+                          f"compile={rec['compile_s']:6.1f}s "
+                          f"dom={rec['dominant']:10s} "
+                          f"roofline={rec['roofline_fraction']:.3f} "
+                          f"coll={rec['collective_bytes_per_device']/1e6:.1f}MB",
+                          flush=True)
+                elif tag == "skipped":
+                    print(f"[skip] {arch:22s} {shape:12s} {rec['mesh']:10s} "
+                          f"{rec['reason'][:60]}", flush=True)
+                else:
+                    print(f"[ERR]  {arch:22s} {shape:12s} {rec['mesh']:10s} "
+                          f"{rec['error'][:120]}", flush=True)
+    print(f"\ndry-run complete: {n_ok} ok, {n_skip} skipped, {n_err} errors")
+    raise SystemExit(1 if n_err else 0)
+
+
+if __name__ == "__main__":
+    main()

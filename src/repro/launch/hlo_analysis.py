@@ -1,0 +1,77 @@
+"""Post-SPMD HLO analysis: collective bytes, per-op breakdown, roofline terms.
+
+``compiled.cost_analysis()`` gives FLOPs and bytes-accessed but NOT the
+collective traffic, so we parse the partitioned HLO text and sum the result
+shapes of every all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute instruction. Post-SPMD shapes are *per-device*, so the
+sums here are per-device collective bytes; the roofline collective term
+divides by per-chip link bandwidth (equivalent to global-bytes over
+chips × link_bw).
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# e.g.  %all-gather.3 = bf16[16,4096]{1,0} all-gather(...)
+#       ROOT %tuple ... f32[] ...
+_INSTR_RE = re.compile(
+    r"=\s*(?:\(([^)]*)\)|([a-z0-9]+)\[([0-9,]*)\][^ ]*)\s+([a-z\-]+)")
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Per-collective-kind result bytes summed over the module (per device)."""
+    out = {k: 0 for k in _COLLECTIVES}
+    out["count"] = 0
+    for line in hlo_text.splitlines():
+        m = _INSTR_RE.search(line)
+        if not m:
+            continue
+        op = m.group(4)
+        # `all-gather-start`/`-done` async pairs: count starts only.
+        base = op.replace("-start", "")
+        if base not in _COLLECTIVES or op.endswith("-done"):
+            continue
+        if m.group(1) is not None:           # tuple shape: sum elements
+            size = sum(_shape_bytes(d, s)
+                       for d, s in _SHAPE_RE.findall(m.group(1)))
+        else:
+            size = _shape_bytes(m.group(2), m.group(3))
+        out[base] += size
+        out["count"] += 1
+    out["total"] = sum(out[k] for k in _COLLECTIVES)
+    return out
+
+
+def roofline_terms(flops_per_dev: float, bytes_per_dev: float,
+                   coll_bytes_per_dev: float, *, peak_flops: float,
+                   hbm_bw: float, link_bw: float) -> Dict[str, float]:
+    """The three §Roofline terms, in seconds (per step, per device)."""
+    compute = flops_per_dev / peak_flops
+    memory = bytes_per_dev / hbm_bw
+    collective = coll_bytes_per_dev / link_bw
+    terms = {"compute_s": compute, "memory_s": memory,
+             "collective_s": collective}
+    dom = max(terms, key=terms.get)
+    terms["dominant"] = dom.replace("_s", "")
+    bound = max(compute, memory, collective)
+    terms["roofline_fraction"] = compute / bound if bound > 0 else 0.0
+    return terms

@@ -1,0 +1,25 @@
+"""Production mesh definitions.
+
+A FUNCTION, not a module-level constant, so importing this module never
+touches jax device state (smoke tests must keep seeing 1 CPU device)."""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16×16 = 256 chips per pod; 2 pods = 512 chips multi-pod."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_mesh(shape, axes):
+    """Arbitrary meshes for elastic re-sharding (fault tolerance)."""
+    return jax.make_mesh(tuple(shape), tuple(axes))
+
+
+# TPU v5e hardware constants (roofline targets; see EXPERIMENTS.md §Roofline).
+PEAK_FLOPS_BF16 = 197e12      # per chip
+HBM_BW = 819e9                # bytes/s per chip
+ICI_BW = 50e9                 # bytes/s per link

@@ -1,0 +1,8 @@
+"""repro.models — the 10 assigned architectures as functional JAX models."""
+from . import common, mamba2, registry, rglru, transformer, whisper
+from .registry import (abstract_cache, abstract_params, decode_step, forward,
+                       init_cache, init_params, make_inputs, module)
+
+__all__ = ["common", "mamba2", "registry", "rglru", "transformer", "whisper",
+           "abstract_cache", "abstract_params", "decode_step", "forward",
+           "init_cache", "init_params", "make_inputs", "module"]

@@ -1,0 +1,44 @@
+"""Analysis-mode switch for cost-exact lowering.
+
+XLA's ``cost_analysis()`` counts a while-loop body ONCE regardless of trip
+count (verified empirically on the CPU backend), so scan-heavy models report
+flops/bytes/collectives that are off by the product of trip counts. The
+dry-run therefore lowers *analysis twins* of each cell — same math, inner
+scans unrolled, at n_layers ∈ {1, 2} — and reconstructs exact per-step costs
+as ``overhead + per_layer_delta × n_layers`` (see launch/dryrun.py).
+
+``scan()`` is the project-wide lax.scan wrapper that obeys the flag; the
+production path (flag off) lowers compact scans exactly as before.
+"""
+from __future__ import annotations
+
+import contextlib
+
+import jax
+
+_UNROLL = False
+
+
+def set_unroll(value: bool) -> None:
+    global _UNROLL
+    _UNROLL = bool(value)
+
+
+def unrolling() -> bool:
+    return _UNROLL
+
+
+@contextlib.contextmanager
+def unrolled():
+    old = _UNROLL
+    set_unroll(True)
+    try:
+        yield
+    finally:
+        set_unroll(old)
+
+
+def scan(f, init, xs, **kw):
+    if _UNROLL:
+        kw["unroll"] = True
+    return jax.lax.scan(f, init, xs, **kw)

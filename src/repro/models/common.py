@@ -1,0 +1,223 @@
+"""Shared model building blocks: norms, RoPE/M-RoPE, chunked attention, MLPs.
+
+Everything is functional (params are nested dicts of arrays) so models flow
+through ``jax.eval_shape`` for the allocation-free dry-run, ``lax.scan`` over
+stacked layer params, and pjit sharding unchanged.
+
+Attention is **chunked** (flash-style running softmax in plain jnp): the
+[L, L] logits tensor is never materialized — at the 32k-prefill cells a dense
+mask would be a ~200 GB temporary. Q-chunks are a static Python loop, each
+scanning exactly the KV extent causality/windowing allows (no wasted FLOPs in
+the compiled HLO); KV-chunks are an inner ``lax.scan`` with running
+(max, sum, acc) state, bounding the live temporary to [B, H, q_chunk,
+k_chunk]. The Pallas kernel (repro.kernels.flash_attention) is the TPU hot
+path with identical semantics; this jnp version is what the dry-run lowers,
+so cost/memory analysis reflects the chunked schedule.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import analysis
+
+Params = Dict[str, Any]
+
+_NEG = -1e30
+
+
+# ---------------------------------------------------------------------------
+# init helpers
+# ---------------------------------------------------------------------------
+
+def dense_init(key, d_in: int, d_out: int, *, scale: float | None = None,
+               dtype=jnp.float32) -> jnp.ndarray:
+    scale = scale if scale is not None else 1.0 / math.sqrt(d_in)
+    return jax.random.normal(key, (d_in, d_out), dtype) * scale
+
+
+def stack_init(key, n: int, init_fn):
+    """Stack ``n`` independently-initialized pytrees along axis 0 (for
+    scan-over-layers)."""
+    keys = jax.random.split(key, n)
+    return jax.vmap(init_fn)(keys)
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+def rms_norm(x: jnp.ndarray, w: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    return (x * jax.lax.rsqrt(var + eps).astype(x.dtype)) * w
+
+
+# ---------------------------------------------------------------------------
+# RoPE (+ M-RoPE)
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                            / head_dim))
+
+
+def _rotate(x: jnp.ndarray, cos: jnp.ndarray, sin: jnp.ndarray) -> jnp.ndarray:
+    x1, x2 = x[..., ::2], x[..., 1::2]
+    out = jnp.stack([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.reshape(x.shape).astype(x.dtype)
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray,
+               theta: float) -> jnp.ndarray:
+    """x [B, H, L, D]; positions [B, L] (absolute token positions)."""
+    freqs = rope_freqs(x.shape[-1], theta)                       # [D/2]
+    angles = positions[:, None, :, None].astype(jnp.float32) * freqs
+    return _rotate(x, jnp.cos(angles), jnp.sin(angles))
+
+
+def apply_mrope(x: jnp.ndarray, positions3: jnp.ndarray, theta: float,
+                sections=(2, 3, 3)) -> jnp.ndarray:
+    """Qwen2-VL multimodal RoPE: rotary channels split into (temporal,
+    height, width) sections, each rotated by its own position stream.
+    positions3 [B, 3, L]; equal streams recover standard RoPE exactly.
+    ``sections`` are relative weights over the D/2 channels (2:3:3)."""
+    half = x.shape[-1] // 2
+    total = sum(sections)
+    bounds, acc = [], 0
+    for s in sections[:-1]:
+        acc += round(half * s / total)
+        bounds.append(acc)
+    chan = jnp.arange(half)
+    sec = jnp.zeros((half,), jnp.int32)
+    for b in bounds:
+        sec = sec + (chan >= b).astype(jnp.int32)                # [half]∈{0,1,2}
+    freqs = rope_freqs(x.shape[-1], theta)                       # [half]
+    pos_per_chan = jnp.transpose(positions3, (0, 2, 1)).astype(
+        jnp.float32)[..., sec]                                   # [B, L, half]
+    angles = pos_per_chan[:, None] * freqs                       # [B,1,L,half]
+    return _rotate(x, jnp.cos(angles), jnp.sin(angles))
+
+
+def text_positions3(positions: jnp.ndarray) -> jnp.ndarray:
+    """[B, L] → [B, 3, L]: the degenerate M-RoPE streams for pure text."""
+    return jnp.broadcast_to(positions[:, None],
+                            (positions.shape[0], 3, positions.shape[1]))
+
+
+# ---------------------------------------------------------------------------
+# chunked (flash-style) attention — jnp, compiled-memory bounded
+# ---------------------------------------------------------------------------
+
+def _attn_block(q, k, v, m, l, acc, q0, k0, *, causal: bool,
+                window: Optional[int], kv_offset: int, kv_len: int,
+                scale: float):
+    """One (q-chunk × kv-chunk) update of the running softmax.
+
+    q [B,H,Qc,D]; k, v [B,H,Kc,D]; (m, l) [B,H,Qc,1]; acc [B,H,Qc,D].
+    ``q0``/``k0``: absolute chunk-start positions (k0 may be traced);
+    ``kv_offset`` = Lk − Lq aligns query positions; rows ≥ ``kv_len`` are
+    padding and always masked.
+    """
+    logits = jnp.einsum("bhqd,bhkd->bhqk", q, k,
+                        preferred_element_type=jnp.float32) * scale
+    Qc, Kc = q.shape[2], k.shape[2]
+    q_pos = q0 + kv_offset + jax.lax.broadcasted_iota(jnp.int32, (Qc, Kc), 0)
+    k_pos = k0 + jax.lax.broadcasted_iota(jnp.int32, (Qc, Kc), 1)
+    mask = k_pos < kv_len
+    if causal:
+        mask &= k_pos <= q_pos
+    if window is not None:
+        mask &= k_pos > q_pos - window
+    logits = jnp.where(mask[None, None] if mask.ndim == 2 else mask,
+                       logits, _NEG)
+    m_cur = jnp.max(logits, axis=-1, keepdims=True)
+    m_new = jnp.maximum(m, m_cur)
+    p = jnp.exp(logits - m_new)
+    corr = jnp.exp(m - m_new)
+    l_new = l * corr + jnp.sum(p, axis=-1, keepdims=True)
+    acc_new = acc * corr + jnp.einsum("bhqk,bhkd->bhqd", p, v,
+                                      preferred_element_type=jnp.float32)
+    return m_new, l_new, acc_new
+
+
+def attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+              causal: bool = True, window: Optional[int] = None,
+              q_chunk: int = 1024, k_chunk: int = 1024) -> jnp.ndarray:
+    """Chunked attention. q [B,H,Lq,D]; k, v [B,Hkv,Lk,D] (H divisible by
+    Hkv; queries are right-aligned against keys). Returns [B,H,Lq,D]."""
+    B, H, Lq, D = q.shape
+    Hkv, Lk = k.shape[1], k.shape[2]
+    rep = H // Hkv
+    scale = D ** -0.5
+    kv_offset = Lk - Lq
+
+    # GQA: materialize grouped K/V views once (XLA keeps these as broadcasts
+    # under sharding; HBM reads stay at Hkv granularity on TPU).
+    kf = jnp.broadcast_to(k[:, :, None], (B, Hkv, rep, Lk, D)
+                          ).reshape(B, H, Lk, D)
+    vf = jnp.broadcast_to(v[:, :, None], (B, Hkv, rep, Lk, D)
+                          ).reshape(B, H, Lk, D)
+
+    q_chunk = min(q_chunk, Lq)
+    k_chunk = min(k_chunk, Lk)
+    outs = []
+    for q0 in range(0, Lq, q_chunk):            # static loop: exact KV extent
+        qc = min(q_chunk, Lq - q0)
+        q_blk = q[:, :, q0:q0 + qc]
+        hi = Lk if not causal else min(Lk, q0 + qc + kv_offset)
+        lo = 0 if window is None else max(0, q0 + kv_offset - window + 1)
+        lo = (lo // k_chunk) * k_chunk
+        n_k = max(1, -(-(hi - lo) // k_chunk))
+
+        pad_hi = lo + n_k * k_chunk
+        if pad_hi > Lk:
+            kf_p = jnp.pad(kf, ((0, 0), (0, 0), (0, pad_hi - Lk), (0, 0)))
+            vf_p = jnp.pad(vf, ((0, 0), (0, 0), (0, pad_hi - Lk), (0, 0)))
+        else:
+            kf_p, vf_p = kf, vf
+
+        def body(carry, ki, kf_p=kf_p, vf_p=vf_p, q_blk=q_blk, q0=q0, lo=lo):
+            m, l, acc = carry
+            k0 = lo + ki * k_chunk
+            k_blk = jax.lax.dynamic_slice_in_dim(kf_p, k0, k_chunk, axis=2)
+            v_blk = jax.lax.dynamic_slice_in_dim(vf_p, k0, k_chunk, axis=2)
+            out = _attn_block(q_blk, k_blk, v_blk, m, l, acc, q0, k0,
+                              causal=causal, window=window,
+                              kv_offset=kv_offset, kv_len=Lk, scale=scale)
+            return out, None
+
+        m0 = jnp.full((B, H, qc, 1), _NEG, jnp.float32)
+        l0 = jnp.zeros((B, H, qc, 1), jnp.float32)
+        a0 = jnp.zeros((B, H, qc, D), jnp.float32)
+        if n_k == 1:                             # decode fast path: no scan
+            (m, l, acc), _ = body((m0, l0, a0), 0)
+        else:
+            (m, l, acc), _ = analysis.scan(body, (m0, l0, a0),
+                                           jnp.arange(n_k))
+        outs.append((acc / jnp.maximum(l, 1e-30)).astype(q.dtype))
+    return outs[0] if len(outs) == 1 else jnp.concatenate(outs, axis=2)
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+def mlp_init(key, d: int, d_ff: int, act: str):
+    ks = jax.random.split(key, 3)
+    p = {"up": dense_init(ks[0], d, d_ff),
+         "down": dense_init(ks[1], d_ff, d)}
+    if act == "silu":                          # gated (SwiGLU)
+        p["gate"] = dense_init(ks[2], d, d_ff)
+    return p
+
+
+def mlp_apply(p: Params, x: jnp.ndarray, act: str) -> jnp.ndarray:
+    up = x @ p["up"]
+    if act == "silu":
+        up = jax.nn.silu(x @ p["gate"]) * up
+    else:
+        up = jax.nn.gelu(up)
+    return up @ p["down"]

@@ -1,0 +1,251 @@
+"""Mamba-2 (SSD — state-space duality), attention-free LM.
+
+The mixer follows arXiv:2405.21060: fused in-projection → short causal
+depthwise conv → SSD recurrence (chunked; see repro.kernels.ssd_chunk for
+the Pallas TPU version of the intra-chunk block) → skip (D), gate (z·silu),
+grouped RMSNorm → out-projection.
+
+The jnp SSD here scans over chunks (one [B,H,Q,Q] decay-masked matmul per
+step, an [B,H,S,P] state carried) — compiled memory stays flat in sequence
+length, which is what makes the ``long_500k`` decode/prefill cells lowerable.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from .common import dense_init, rms_norm, stack_init
+from . import analysis
+
+Params = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# chunked SSD (jnp; validated against kernels.ssd_chunk's oracle in tests)
+# ---------------------------------------------------------------------------
+
+def ssd_scan(x, dt, A, Bm, Cm, h0=None, *, chunk: int = 64):
+    """x [B,L,H,P]; dt [B,L,H] (>0); A [H] (<0); Bm/Cm [B,L,G,S].
+    Returns (y [B,L,H,P], h_final [B,H,S,P])."""
+    B, L, H, P = x.shape
+    G, S = Bm.shape[2], Bm.shape[3]
+    hpg = H // G
+    Q = min(chunk, L)
+    pad = (-L) % Q
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    Lp = L + pad
+    NC = Lp // Q
+
+    xc = x.reshape(B, NC, Q, H, P).transpose(1, 0, 2, 3, 4)     # [NC,B,Q,H,P]
+    dtc = dt.reshape(B, NC, Q, H).transpose(1, 0, 2, 3)
+    Bc = Bm.reshape(B, NC, Q, G, S).transpose(1, 0, 2, 3, 4)
+    Cc = Cm.reshape(B, NC, Q, G, S).transpose(1, 0, 2, 3, 4)
+
+    tri = jnp.tril(jnp.ones((Q, Q), bool))                       # u ≤ t
+
+    if h0 is None:
+        h0 = jnp.zeros((B, H, S, P), jnp.float32)
+
+    def step(h, inp):
+        xq, dtq, Bq, Cq = inp            # [B,Q,H,P], [B,Q,H], [B,Q,G,S] ×2
+        delta = dtq * A[None, None, :]                  # [B,Q,H] (negative)
+        s = jnp.cumsum(delta, axis=1)                   # inclusive
+        # intra-chunk: G_mat[b,h,t,u] = (C_t·B_u)·exp(s_t−s_u)·dt_u, u ≤ t
+        CB = jnp.einsum("btgs,bugs->bgtu", Cq, Bq)      # [B,G,Q,Q]
+        CBh = jnp.repeat(CB, hpg, axis=1)               # [B,H,Q,Q]
+        # diff ≤ 0 on the valid (u ≤ t) triangle; clamp the masked region so
+        # exp never overflows (0·inf = NaN in the where-gradient otherwise).
+        diff = jnp.minimum(s[:, :, None] - s[:, None], 0.0)  # [B,Q,Q,H]
+        M = jnp.where(tri[None, :, :, None], jnp.exp(diff), 0.0)
+        Gm = CBh * M.transpose(0, 3, 1, 2) * dtq.transpose(0, 2, 1)[:, :, None]
+        y = jnp.einsum("bhtu,buhp->bthp", Gm, xq)
+        # h_in correction + chunk state update
+        es = jnp.exp(s)                                 # [B,Q,H]
+        Ch = jnp.repeat(Cq, hpg, axis=2)                # [B,Q,H,S]
+        y = y + jnp.einsum("bths,bhsp->bthp", Ch, h) * es[..., None]
+        w = jnp.exp(s[:, -1:, :] - s) * dtq             # [B,Q,H]
+        Bh = jnp.repeat(Bq, hpg, axis=2)                # [B,Q,H,S]
+        decay = jnp.exp(jnp.sum(delta, axis=1))         # [B,H]
+        h = decay[:, :, None, None] * h + jnp.einsum(
+            "buhs,buh,buhp->bhsp", Bh, w, xq)
+        return h, y
+
+    h, ys = analysis.scan(step, h0, (xc, dtc, Bc, Cc))
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(B, Lp, H, P)[:, :L]
+    return y, h
+
+
+def ssd_step(x_t, dt_t, A, B_t, C_t, h):
+    """Single-token SSD update: x_t [B,H,P], dt_t [B,H], B_t/C_t [B,G,S],
+    h [B,H,S,P] → (y_t [B,H,P], h')."""
+    H = x_t.shape[1]
+    G = B_t.shape[1]
+    rep = H // G
+    Bh = jnp.repeat(B_t, rep, axis=1)
+    Ch = jnp.repeat(C_t, rep, axis=1)
+    decay = jnp.exp(A[None, :] * dt_t)
+    h = (decay[..., None, None] * h
+         + dt_t[..., None, None] * Bh[..., None] * x_t[:, :, None, :])
+    return jnp.einsum("bhs,bhsp->bhp", Ch, h), h
+
+
+# ---------------------------------------------------------------------------
+# the mixer layer
+# ---------------------------------------------------------------------------
+
+def _dims(cfg: ModelConfig):
+    d_in = cfg.ssm_expand * cfg.d_model
+    H = d_in // cfg.ssm_headdim
+    conv_dim = d_in + 2 * cfg.ssm_groups * cfg.ssm_state
+    return d_in, H, conv_dim
+
+
+def mixer_init(key, cfg: ModelConfig):
+    d = cfg.d_model
+    d_in, H, conv_dim = _dims(cfg)
+    ks = jax.random.split(key, 5)
+    return {
+        "in_proj": dense_init(ks[0], d, 2 * d_in + 2 * cfg.ssm_groups
+                              * cfg.ssm_state + H),
+        "conv_w": jax.random.normal(ks[1], (cfg.conv_kernel, conv_dim)) * 0.1,
+        "conv_b": jnp.zeros((conv_dim,)),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, H)),
+        "D": jnp.ones((H,)),
+        "dt_bias": jnp.zeros((H,)) - 1.0,
+        "norm": jnp.ones((d_in,)),
+        "out_proj": dense_init(ks[2], d_in, d),
+    }
+
+
+def _split_proj(cfg, zxbcdt):
+    d_in, H, _ = _dims(cfg)
+    gs = cfg.ssm_groups * cfg.ssm_state
+    z = zxbcdt[..., :d_in]
+    xBC = zxbcdt[..., d_in:d_in + d_in + 2 * gs]
+    dt = zxbcdt[..., -H:]
+    return z, xBC, dt
+
+
+def _causal_conv(xBC, w, b):
+    """Depthwise causal conv over time. xBC [B,L,C]; w [K,C]."""
+    K = w.shape[0]
+    pad = jnp.pad(xBC, ((0, 0), (K - 1, 0), (0, 0)))
+    out = sum(pad[:, i:i + xBC.shape[1]] * w[i] for i in range(K))
+    return jax.nn.silu(out + b)
+
+
+def mixer_apply(p, x, cfg: ModelConfig, *, chunk: int = 64):
+    """Full-sequence mixer. x [B,L,d] → [B,L,d]."""
+    B, L, _ = x.shape
+    d_in, H, _ = _dims(cfg)
+    G, S, P = cfg.ssm_groups, cfg.ssm_state, cfg.ssm_headdim
+    z, xBC, dt = _split_proj(cfg, x @ p["in_proj"])
+    xBC = _causal_conv(xBC, p["conv_w"], p["conv_b"])
+    xs = xBC[..., :d_in].reshape(B, L, H, P)
+    Bm = xBC[..., d_in:d_in + G * S].reshape(B, L, G, S)
+    Cm = xBC[..., d_in + G * S:].reshape(B, L, G, S)
+    dt = jax.nn.softplus(dt + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    y, _ = ssd_scan(xs.astype(jnp.float32), dt.astype(jnp.float32), A,
+                    Bm.astype(jnp.float32), Cm.astype(jnp.float32),
+                    chunk=chunk)
+    y = y.astype(x.dtype) + p["D"][None, None, :, None] * xs
+    y = y.reshape(B, L, d_in) * jax.nn.silu(z)
+    y = rms_norm(y, p["norm"], cfg.norm_eps)
+    return y @ p["out_proj"]
+
+
+def mixer_decode(p, x_t, cfg: ModelConfig, conv_state, ssm_state):
+    """One-token mixer. x_t [B,1,d]; conv_state [B,K−1,conv_dim];
+    ssm_state [B,H,S,P]."""
+    B = x_t.shape[0]
+    d_in, H, conv_dim = _dims(cfg)
+    G, S, P = cfg.ssm_groups, cfg.ssm_state, cfg.ssm_headdim
+    z, xBC, dt = _split_proj(cfg, x_t @ p["in_proj"])
+    xBC = xBC[:, 0]                                     # [B, conv_dim]
+    window = jnp.concatenate([conv_state, xBC[:, None]], axis=1)  # [B,K,C]
+    conv_state = window[:, 1:]
+    out = jnp.einsum("bkc,kc->bc", window, p["conv_w"]) + p["conv_b"]
+    xBC = jax.nn.silu(out)
+    xs = xBC[..., :d_in].reshape(B, H, P)
+    Bm = xBC[..., d_in:d_in + G * S].reshape(B, G, S)
+    Cm = xBC[..., d_in + G * S:].reshape(B, G, S)
+    dtv = jax.nn.softplus(dt[:, 0] + p["dt_bias"])      # [B, H]
+    A = -jnp.exp(p["A_log"])
+    y, ssm_state = ssd_step(xs.astype(jnp.float32), dtv.astype(jnp.float32),
+                            A, Bm.astype(jnp.float32), Cm.astype(jnp.float32),
+                            ssm_state)
+    y = y.astype(x_t.dtype) + p["D"][None, :, None] * xs
+    y = y.reshape(B, 1, d_in) * jax.nn.silu(z)
+    y = rms_norm(y, p["norm"], cfg.norm_eps)
+    return y @ p["out_proj"], conv_state, ssm_state
+
+
+# ---------------------------------------------------------------------------
+# the LM
+# ---------------------------------------------------------------------------
+
+def layer_init(key, cfg: ModelConfig):
+    return {"ln": jnp.ones((cfg.d_model,)), "mixer": mixer_init(key, cfg)}
+
+
+def init_params(cfg: ModelConfig, key) -> Params:
+    ks = jax.random.split(key, 2)
+    return {
+        "embed": jax.random.normal(ks[0], (cfg.vocab, cfg.d_model)) * 0.02,
+        "layers": stack_init(ks[1], cfg.n_layers,
+                             lambda k: layer_init(k, cfg)),
+        "ln_f": jnp.ones((cfg.d_model,)),
+    }
+
+
+def forward(cfg: ModelConfig, p: Params, batch, *, remat: bool = True,
+            unembed: bool = True):
+    x = p["embed"][batch["tokens"]]
+
+    def layer_fn(h, lp):
+        return h + mixer_apply(lp["mixer"], rms_norm(h, lp["ln"],
+                                                     cfg.norm_eps), cfg), None
+
+    fn = jax.checkpoint(layer_fn) if remat else layer_fn
+    x, _ = analysis.scan(fn, x, p["layers"])
+    x = rms_norm(x, p["ln_f"], cfg.norm_eps)
+    return (x @ p["embed"].T if unembed else x), {}
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int,
+               dtype=jnp.float32) -> Params:
+    d_in, H, conv_dim = _dims(cfg)
+    return {
+        "conv": jnp.zeros((cfg.n_layers, batch, cfg.conv_kernel - 1,
+                           conv_dim), dtype),
+        "ssm": jnp.zeros((cfg.n_layers, batch, H, cfg.ssm_state,
+                          cfg.ssm_headdim), dtype),
+        "idx": jnp.zeros((), jnp.int32),
+    }
+
+
+def decode_step(cfg: ModelConfig, p: Params, cache: Params, token):
+    x = p["embed"][token]
+
+    def layer_fn(h, inp):
+        lp, cs, ss = inp
+        y, cs, ss = mixer_decode(lp["mixer"],
+                                 rms_norm(h, lp["ln"], cfg.norm_eps), cfg,
+                                 cs.astype(jnp.float32),
+                                 ss.astype(jnp.float32))
+        return h + y, (cs.astype(cache["conv"].dtype),
+                       ss.astype(cache["ssm"].dtype))
+
+    x, (conv, ssm) = analysis.scan(layer_fn, x,
+                                   (p["layers"], cache["conv"], cache["ssm"]))
+    x = rms_norm(x, p["ln_f"], cfg.norm_eps)
+    return x @ p["embed"].T, {"conv": conv, "ssm": ssm,
+                              "idx": cache["idx"] + 1}

@@ -1,0 +1,64 @@
+"""Perf knobs threaded through the models (the §Perf hillclimb levers).
+
+* ``compute_dtype`` — cast layer weights + residual stream to bf16 at use
+  (f32 master params stay in the optimizer). Halves every activation
+  collective and weight gather on the wire.
+* ``residual_spec`` — a PartitionSpec applied to the residual stream between
+  sublayers (Megatron-style sequence parallelism when set to
+  P(data_axes, 'model', None)): XLA converts the TP all-reduce pairs into
+  reduce-scatter + all-gather, halving wire bytes per pair.
+
+Both are trace-time globals (like models.analysis): the launcher sets them
+per cell; defaults preserve the paper-faithful baseline exactly.
+"""
+from __future__ import annotations
+
+import contextlib
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+_DTYPE: Optional[jnp.dtype] = None
+_RESIDUAL_SPEC = None
+
+
+def set_compute_dtype(dtype) -> None:
+    global _DTYPE
+    _DTYPE = dtype
+
+
+def set_residual_spec(spec) -> None:
+    global _RESIDUAL_SPEC
+    _RESIDUAL_SPEC = spec
+
+
+@contextlib.contextmanager
+def options(dtype=None, residual_spec=None):
+    global _DTYPE, _RESIDUAL_SPEC
+    old = (_DTYPE, _RESIDUAL_SPEC)
+    _DTYPE, _RESIDUAL_SPEC = dtype, residual_spec
+    try:
+        yield
+    finally:
+        _DTYPE, _RESIDUAL_SPEC = old
+
+
+def cast_params(tree):
+    """Cast float leaves of a layer-param pytree to the compute dtype."""
+    if _DTYPE is None:
+        return tree
+    return jax.tree.map(
+        lambda a: a.astype(_DTYPE)
+        if hasattr(a, "dtype") and jnp.issubdtype(a.dtype, jnp.floating)
+        else a, tree)
+
+
+def cast_act(x):
+    return x if _DTYPE is None else x.astype(_DTYPE)
+
+
+def constrain(x):
+    if _RESIDUAL_SPEC is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, _RESIDUAL_SPEC)

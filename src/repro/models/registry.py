@@ -1,0 +1,121 @@
+"""Family dispatch + input specs — the single entry point the launcher,
+dry-run, trainer, and server use to talk to any of the 10 architectures.
+
+``input_specs(cfg, shape, abstract=True)`` returns ShapeDtypeStruct stand-ins
+(weak-type-correct, shardable, no device allocation) for every model input of
+the given shape cell — train batches for ``train_*``, a one-token decode
+batch plus the full cache pytree for ``decode_*`` / ``long_*``.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.base import ModelConfig
+from ..configs.shapes import ShapeSpec
+from . import mamba2, rglru, transformer, whisper
+
+Params = Dict[str, Any]
+
+_FAMILY = {
+    "dense": transformer,
+    "moe": transformer,
+    "vlm": transformer,
+    "ssm": mamba2,
+    "hybrid": rglru,
+    "audio": whisper,
+}
+
+
+def module(cfg: ModelConfig):
+    return _FAMILY[cfg.family]
+
+
+def init_params(cfg: ModelConfig, key) -> Params:
+    return module(cfg).init_params(cfg, key)
+
+
+def abstract_params(cfg: ModelConfig) -> Params:
+    """Parameter ShapeDtypeStructs without allocating (dry-run path)."""
+    return jax.eval_shape(lambda k: init_params(cfg, k),
+                          jax.ShapeDtypeStruct((2,), jnp.uint32))
+
+
+def forward(cfg: ModelConfig, params, batch, **kw):
+    return module(cfg).forward(cfg, params, batch, **kw)
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, **kw):
+    return module(cfg).init_cache(cfg, batch, max_len, **kw)
+
+
+def abstract_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=None):
+    kw = {"dtype": dtype} if dtype is not None else {}
+    return jax.eval_shape(lambda: init_cache(cfg, batch, max_len, **kw))
+
+
+def decode_step(cfg: ModelConfig, params, cache, token):
+    return module(cfg).decode_step(cfg, params, cache, token)
+
+
+# ---------------------------------------------------------------------------
+# per-cell input specs
+# ---------------------------------------------------------------------------
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def train_batch_specs(cfg: ModelConfig, B: int, L: int) -> Dict[str, Any]:
+    """Inputs for train_step/prefill: tokens + labels (+ modality stubs)."""
+    specs: Dict[str, Any] = {}
+    if cfg.family == "vlm":
+        n_p = min(cfg.vision_patches, max(1, L // 4))
+        specs["patches"] = _sds((B, n_p, cfg.d_model), jnp.bfloat16)
+        specs["tokens"] = _sds((B, L - n_p), jnp.int32)
+        specs["positions3"] = _sds((B, 3, L), jnp.int32)
+        specs["labels"] = _sds((B, L - n_p), jnp.int32)
+    elif cfg.family == "audio":
+        specs["frames"] = _sds((B, cfg.encoder_frames, cfg.d_model),
+                               jnp.bfloat16)
+        specs["tokens"] = _sds((B, L), jnp.int32)
+        specs["labels"] = _sds((B, L), jnp.int32)
+    else:
+        specs["tokens"] = _sds((B, L), jnp.int32)
+        specs["labels"] = _sds((B, L), jnp.int32)
+    return specs
+
+
+def decode_specs(cfg: ModelConfig, B: int, L: int, cache_dtype=None):
+    """(cache specs, token spec) for one serve_step against an L-token
+    context."""
+    cache = abstract_cache(cfg, B, L, dtype=cache_dtype)
+    token = _sds((B, 1), jnp.int32)
+    return cache, token
+
+
+def make_inputs(cfg: ModelConfig, shape: ShapeSpec, *, concrete: bool = False,
+                seed: int = 0, cache_dtype=None):
+    """Inputs for a shape cell. abstract (default) → ShapeDtypeStructs;
+    concrete → small real arrays (smoke tests only — full shapes would
+    allocate)."""
+    B, L = shape.global_batch, shape.seq_len
+    if shape.kind in ("train", "prefill"):
+        specs = train_batch_specs(cfg, B, L)
+    else:
+        cache, token = decode_specs(cfg, B, L, cache_dtype=cache_dtype)
+        specs = {"cache": cache, "token": token}
+    if not concrete:
+        return specs
+    rng = np.random.RandomState(seed)
+
+    def realize(s):
+        if jnp.issubdtype(s.dtype, jnp.integer):
+            return jnp.asarray(rng.randint(0, max(2, cfg.vocab // 2),
+                                           size=s.shape), s.dtype)
+        return jnp.asarray(rng.randn(*s.shape), s.dtype) * 0.02
+
+    return jax.tree.map(realize, specs)

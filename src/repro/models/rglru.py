@@ -1,0 +1,280 @@
+"""RecurrentGemma (Griffin-style hybrid): RG-LRU recurrent blocks + local
+sliding-window attention in a repeating (R, R, A) pattern.
+
+Each residual layer is a temporal-mixing block (RG-LRU *or* local attention)
+followed by a gated MLP. The RG-LRU recurrence (arXiv:2402.19427):
+
+    r_t = σ(W_a x_t + b_a)            recurrence gate
+    i_t = σ(W_x x_t + b_x)            input gate
+    a_t = exp(−c · softplus(Λ) · r_t) per-channel decay (c = 8)
+    h_t = a_t ⊙ h_{t-1} + √(1 − a_t²) ⊙ (i_t ⊙ x_t)
+
+computed with ``lax.associative_scan`` (O(log L) depth) for train/prefill and
+one multiply-add per token for decode — the constant-size state is what makes
+the ``long_500k`` cells runnable for this arch.
+
+Scan-over-layers with a heterogeneous pattern: parameters are stacked per
+*pattern block* (one (R, R, A) triple), scanned over blocks; the pattern
+remainder (26 = 8·3 + 2 → two extra R layers) is unrolled.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from .common import dense_init, mlp_apply, mlp_init, rms_norm, stack_init
+from .transformer import attn_decode, attn_init, attn_apply
+from . import analysis
+
+Params = Dict[str, Any]
+
+_C = 8.0
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU
+# ---------------------------------------------------------------------------
+
+def rglru_init(key, width: int):
+    ks = jax.random.split(key, 2)
+    return {
+        "w_a": dense_init(ks[0], width, width, scale=width ** -0.5),
+        "b_a": jnp.zeros((width,)),
+        "w_x": dense_init(ks[1], width, width, scale=width ** -0.5),
+        "b_x": jnp.zeros((width,)),
+        # Λ initialized so a ∈ (0.9, 0.999) at r = 1 (Griffin's range).
+        "lam": jnp.linspace(0.2, 2.0, width),
+    }
+
+
+def _gates(p, x):
+    r = jax.nn.sigmoid(x @ p["w_a"] + p["b_a"])
+    i = jax.nn.sigmoid(x @ p["w_x"] + p["b_x"])
+    log_a = -_C * jax.nn.softplus(p["lam"]) * r          # [B,L,W]
+    a = jnp.exp(log_a)
+    gated = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * (i * x)
+    return a, gated
+
+
+def rglru_apply(p, x, h0=None):
+    """x [B, L, W] → (y [B, L, W], h_last [B, W])."""
+    a, b = _gates(p, x.astype(jnp.float32))
+
+    def combine(lhs, rhs):
+        a1, b1 = lhs
+        a2, b2 = rhs
+        return a1 * a2, a2 * b1 + b2
+
+    A, Bv = jax.lax.associative_scan(combine, (a, b), axis=1)
+    if h0 is not None:
+        Bv = Bv + A * h0[:, None]
+    return Bv.astype(x.dtype), Bv[:, -1]
+
+
+def rglru_step(p, x_t, h):
+    """x_t [B, 1, W]; h [B, W]."""
+    a, b = _gates(p, x_t.astype(jnp.float32))
+    h = a[:, 0] * h + b[:, 0]
+    return h.astype(x_t.dtype)[:, None], h
+
+
+# ---------------------------------------------------------------------------
+# recurrent block: y = W_o[ gelu(W_y x) ⊙ conv→rglru(W_x x) ]
+# ---------------------------------------------------------------------------
+
+def rec_block_init(key, cfg: ModelConfig):
+    w = cfg.lru_width or cfg.d_model
+    ks = jax.random.split(key, 5)
+    return {
+        "w_y": dense_init(ks[0], cfg.d_model, w),
+        "w_in": dense_init(ks[1], cfg.d_model, w),
+        "conv_w": jax.random.normal(ks[2], (cfg.conv_kernel, w)) * 0.1,
+        "conv_b": jnp.zeros((w,)),
+        "lru": rglru_init(ks[3], w),
+        "w_out": dense_init(ks[4], w, cfg.d_model),
+    }
+
+
+def _causal_conv(x, w, b):
+    K = w.shape[0]
+    pad = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    return sum(pad[:, i:i + x.shape[1]] * w[i] for i in range(K)) + b
+
+
+def rec_block_apply(p, x):
+    y = jax.nn.gelu(x @ p["w_y"])
+    u = _causal_conv(x @ p["w_in"], p["conv_w"], p["conv_b"])
+    u, _ = rglru_apply(p["lru"], u)
+    return (y * u) @ p["w_out"]
+
+
+def rec_block_decode(p, x_t, conv_state, h):
+    """conv_state [B, K−1, W]; h [B, W]."""
+    y = jax.nn.gelu(x_t @ p["w_y"])
+    u_t = (x_t @ p["w_in"])[:, 0]                        # [B, W]
+    window = jnp.concatenate([conv_state, u_t[:, None]], axis=1)
+    conv_state = window[:, 1:]
+    u = jnp.einsum("bkw,kw->bw", window, p["conv_w"]) + p["conv_b"]
+    u, h = rglru_step(p["lru"], u[:, None], h)
+    return (y * u) @ p["w_out"], conv_state, h
+
+
+# ---------------------------------------------------------------------------
+# hybrid stack
+# ---------------------------------------------------------------------------
+
+def _block_init(key, cfg: ModelConfig):
+    """One pattern block: len(pattern) sublayers, each mixer + MLP."""
+    subs = []
+    ks = jax.random.split(key, len(cfg.block_pattern))
+    for kind, k in zip(cfg.block_pattern, ks):
+        k1, k2 = jax.random.split(k)
+        mix = attn_init(k1, cfg) if kind == "attn" else rec_block_init(k1, cfg)
+        subs.append({
+            "ln1": jnp.ones((cfg.d_model,)),
+            "ln2": jnp.ones((cfg.d_model,)),
+            "mix": mix,
+            "mlp": mlp_init(k2, cfg.d_model, cfg.d_ff, cfg.act),
+        })
+    return tuple(subs)
+
+
+def init_params(cfg: ModelConfig, key) -> Params:
+    pat = len(cfg.block_pattern)
+    n_blocks = cfg.n_layers // pat
+    n_rem = cfg.n_layers - n_blocks * pat
+    ks = jax.random.split(key, 3)
+    p = {
+        "embed": jax.random.normal(ks[0], (cfg.vocab, cfg.d_model)) * 0.02,
+        "blocks": stack_init(ks[1], n_blocks, lambda k: _block_init(k, cfg)),
+        "ln_f": jnp.ones((cfg.d_model,)),
+    }
+    if n_rem:
+        rem_cfg_pat = cfg.block_pattern[:n_rem]
+        rk = jax.random.split(ks[2], n_rem)
+        rem = []
+        for kind, k in zip(rem_cfg_pat, rk):
+            k1, k2 = jax.random.split(k)
+            mix = (attn_init(k1, cfg) if kind == "attn"
+                   else rec_block_init(k1, cfg))
+            rem.append({"ln1": jnp.ones((cfg.d_model,)),
+                        "ln2": jnp.ones((cfg.d_model,)),
+                        "mix": mix,
+                        "mlp": mlp_init(k2, cfg.d_model, cfg.d_ff, cfg.act)})
+        p["rem"] = tuple(rem)
+    return p
+
+
+def _sublayer(cfg, kind, sp, x, positions):
+    h = rms_norm(x, sp["ln1"], cfg.norm_eps)
+    if kind == "attn":
+        a, _ = attn_apply(sp["mix"], h, cfg, positions, window=cfg.window)
+    else:
+        a = rec_block_apply(sp["mix"], h)
+    x = x + a
+    x = x + mlp_apply(sp["mlp"], rms_norm(x, sp["ln2"], cfg.norm_eps),
+                      cfg.act)
+    return x
+
+
+def forward(cfg: ModelConfig, p: Params, batch, *, remat: bool = True,
+            unembed: bool = True):
+    x = p["embed"][batch["tokens"]]
+    B, L = batch["tokens"].shape
+    positions = jnp.broadcast_to(jnp.arange(L)[None], (B, L))
+
+    def block_fn(h, bp):
+        for kind, sp in zip(cfg.block_pattern, bp):
+            h = _sublayer(cfg, kind, sp, h, positions)
+        return h, None
+
+    fn = jax.checkpoint(block_fn) if remat else block_fn
+    x, _ = analysis.scan(fn, x, p["blocks"])
+    for kind, sp in zip(cfg.block_pattern, p.get("rem", ())):
+        x = _sublayer(cfg, kind, sp, x, positions)
+    x = rms_norm(x, p["ln_f"], cfg.norm_eps)
+    return (x @ p["embed"].T if unembed else x), {}
+
+
+# ---------------------------------------------------------------------------
+# decode — attention layers cache only the local window (bounded memory)
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int,
+               dtype=jnp.bfloat16) -> Params:
+    pat = cfg.block_pattern
+    n_blocks = cfg.n_layers // len(pat)
+    n_rem = cfg.n_layers - n_blocks * len(pat)
+    w = cfg.lru_width or cfg.d_model
+    win = min(cfg.window or max_len, max_len)
+    per_block = {}
+    for i, kind in enumerate(pat):
+        if kind == "attn":
+            per_block[f"k{i}"] = jnp.zeros(
+                (n_blocks, batch, cfg.n_kv, win, cfg.head_dim), dtype)
+            per_block[f"v{i}"] = jnp.zeros(
+                (n_blocks, batch, cfg.n_kv, win, cfg.head_dim), dtype)
+        else:
+            per_block[f"conv{i}"] = jnp.zeros(
+                (n_blocks, batch, cfg.conv_kernel - 1, w), dtype)
+            per_block[f"h{i}"] = jnp.zeros((n_blocks, batch, w), jnp.float32)
+    rem = {}
+    for i, kind in enumerate(pat[:n_rem]):
+        rem[f"conv{i}"] = jnp.zeros((batch, cfg.conv_kernel - 1, w), dtype)
+        rem[f"h{i}"] = jnp.zeros((batch, w), jnp.float32)
+    return {"blocks": per_block, "rem": rem, "idx": jnp.zeros((), jnp.int32)}
+
+
+def decode_step(cfg: ModelConfig, p: Params, cache: Params, token):
+    """Local-window attention caches are rings of length ``window``; the
+    write index wraps and the decode mask follows absolute positions."""
+    x = p["embed"][token]
+    idx = cache["idx"]
+    win = min(cfg.window or 1, 10 ** 9)
+    ring = idx % win
+
+    def block_fn(h, inp):
+        bp, bc = inp
+        new_c = dict(bc)
+        for i, kind in enumerate(cfg.block_pattern):
+            sp = bp[i]
+            hn = rms_norm(h, sp["ln1"], cfg.norm_eps)
+            if kind == "attn":
+                a, kc, vc = attn_decode(
+                    sp["mix"], hn, cfg, bc[f"k{i}"].astype(h.dtype),
+                    bc[f"v{i}"].astype(h.dtype), ring, window=None)
+                # ring buffer: every cached slot is within the window; the
+                # decode mask over a full ring is all-valid.
+                new_c[f"k{i}"] = kc.astype(bc[f"k{i}"].dtype)
+                new_c[f"v{i}"] = vc.astype(bc[f"v{i}"].dtype)
+            else:
+                a, cs, hs = rec_block_decode(
+                    sp["mix"], hn, bc[f"conv{i}"].astype(h.dtype),
+                    bc[f"h{i}"])
+                new_c[f"conv{i}"] = cs.astype(bc[f"conv{i}"].dtype)
+                new_c[f"h{i}"] = hs
+            h = h + a
+            h = h + mlp_apply(sp["mlp"], rms_norm(h, sp["ln2"], cfg.norm_eps),
+                              cfg.act)
+        return h, new_c
+
+    x, new_blocks = analysis.scan(block_fn, x, (p["blocks"], cache["blocks"]))
+    new_rem = dict(cache["rem"])
+    pat = cfg.block_pattern
+    for i, sp in enumerate(p.get("rem", ())):
+        kind = pat[i]
+        hn = rms_norm(x, sp["ln1"], cfg.norm_eps)
+        a, cs, hs = rec_block_decode(sp["mix"], hn,
+                                     cache["rem"][f"conv{i}"].astype(x.dtype),
+                                     cache["rem"][f"h{i}"])
+        new_rem[f"conv{i}"] = cs.astype(cache["rem"][f"conv{i}"].dtype)
+        new_rem[f"h{i}"] = hs
+        x = x + a
+        x = x + mlp_apply(sp["mlp"], rms_norm(x, sp["ln2"], cfg.norm_eps),
+                          cfg.act)
+    x = rms_norm(x, p["ln_f"], cfg.norm_eps)
+    return x @ p["embed"].T, {"blocks": new_blocks, "rem": new_rem,
+                              "idx": idx + 1}

@@ -1,0 +1,341 @@
+"""Decoder-only transformer family: dense GQA, MoE, and the VLM backbone.
+
+One implementation covers qwen2-7b, granite-3-8b, smollm-135m, tinyllama-1.1b
+(dense), dbrx-132b, qwen3-moe-235b-a22b (MoE), and qwen2-vl-2b (VLM backbone;
+the vision frontend is a stub that supplies pre-computed patch embeddings and
+M-RoPE position streams).
+
+MoE uses capacity-based dispatch (GShard-style, top-k with token dropping)
+grouped into fixed-size token blocks so the [g, E, cap] dispatch tensor stays
+VMEM-friendly and the expert dim shards cleanly (EP). Two routers:
+
+* ``topk``   — softmax top-k with renormalized gates + aux load-balance loss
+               (the published configs' router; the faithful baseline);
+* ``dodoor`` — the paper's technique applied to expert routing: candidates
+               are drawn from the top-2k gate probabilities, paired, and the
+               member with the lower *cached* expert load wins (power-of-two
+               on a stale view). The load cache refreshes once per token
+               group — exactly the b-batched model with b = group size.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from .common import (apply_mrope, apply_rope, attention, dense_init,
+                     mlp_apply, mlp_init, rms_norm, stack_init,
+                     text_positions3)
+from . import analysis
+from . import precision
+
+Params = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# attention sublayer
+# ---------------------------------------------------------------------------
+
+def attn_init(key, cfg: ModelConfig):
+    d, hd = cfg.d_model, cfg.head_dim
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], d, cfg.n_heads * hd),
+        "wk": dense_init(ks[1], d, cfg.n_kv * hd),
+        "wv": dense_init(ks[2], d, cfg.n_kv * hd),
+        "wo": dense_init(ks[3], cfg.n_heads * hd, d),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((cfg.n_heads * hd,))
+        p["bk"] = jnp.zeros((cfg.n_kv * hd,))
+        p["bv"] = jnp.zeros((cfg.n_kv * hd,))
+    return p
+
+
+def _qkv(p, x, cfg: ModelConfig):
+    B, L, _ = x.shape
+    hd = cfg.head_dim
+    q = x @ p["wq"] + (p["bq"] if cfg.qkv_bias else 0.0)
+    k = x @ p["wk"] + (p["bk"] if cfg.qkv_bias else 0.0)
+    v = x @ p["wv"] + (p["bv"] if cfg.qkv_bias else 0.0)
+    q = q.reshape(B, L, cfg.n_heads, hd).transpose(0, 2, 1, 3)
+    k = k.reshape(B, L, cfg.n_kv, hd).transpose(0, 2, 1, 3)
+    v = v.reshape(B, L, cfg.n_kv, hd).transpose(0, 2, 1, 3)
+    return q, k, v
+
+
+def attn_apply(p, x, cfg: ModelConfig, positions, *, causal=True,
+               window=None, positions3=None):
+    """Full-sequence (train/prefill) attention sublayer."""
+    B, L, _ = x.shape
+    q, k, v = _qkv(p, x, cfg)
+    if cfg.mrope and positions3 is not None:
+        q = apply_mrope(q, positions3, cfg.rope_theta)
+        k = apply_mrope(k, positions3, cfg.rope_theta)
+    else:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    o = attention(q, k, v, causal=causal, window=window)
+    return o.transpose(0, 2, 1, 3).reshape(B, L, -1) @ p["wo"], (k, v)
+
+
+def attn_decode(p, x_t, cfg: ModelConfig, k_cache, v_cache, idx, *,
+                window=None, positions3_t=None):
+    """One-token decode: x_t [B, 1, d]; caches [B, n_kv, L, hd]; ``idx`` is
+    the write position (traced). Returns (out [B,1,d], k_cache, v_cache)."""
+    B = x_t.shape[0]
+    hd = cfg.head_dim
+    q, k_t, v_t = _qkv(p, x_t, cfg)
+    pos = jnp.full((B, 1), idx, jnp.int32)
+    if cfg.mrope and positions3_t is not None:
+        q = apply_mrope(q, positions3_t, cfg.rope_theta)
+        k_t = apply_mrope(k_t, positions3_t, cfg.rope_theta)
+    else:
+        q = apply_rope(q, pos, cfg.rope_theta)
+        k_t = apply_rope(k_t, pos, cfg.rope_theta)
+    k_cache = jax.lax.dynamic_update_slice_in_dim(k_cache, k_t, idx, axis=2)
+    v_cache = jax.lax.dynamic_update_slice_in_dim(v_cache, v_t, idx, axis=2)
+
+    # One einsum over the cache; mask invalid (future) slots and the window.
+    L = k_cache.shape[2]
+    rep = cfg.n_heads // cfg.n_kv
+    qg = q.reshape(B, cfg.n_kv, rep, hd)
+    logits = jnp.einsum("bgrd,bgld->bgrl", qg, k_cache,
+                        preferred_element_type=jnp.float32) * hd ** -0.5
+    k_pos = jnp.arange(L)
+    valid = k_pos <= idx
+    if window is not None:
+        valid &= k_pos > idx - window
+    logits = jnp.where(valid[None, None, None], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1).astype(v_cache.dtype)
+    o = jnp.einsum("bgrl,bgld->bgrd", probs, v_cache)
+    o = o.reshape(B, 1, cfg.n_heads * hd)
+    return o @ p["wo"], k_cache, v_cache
+
+
+# ---------------------------------------------------------------------------
+# MoE sublayer
+# ---------------------------------------------------------------------------
+
+def moe_init(key, cfg: ModelConfig):
+    d, ff, E = cfg.d_model, cfg.moe_d_ff, cfg.n_experts
+    ks = jax.random.split(key, 4)
+    scale = d ** -0.5
+    return {
+        "router": dense_init(ks[0], d, E, scale=0.02),
+        "w_gate": jax.random.normal(ks[1], (E, d, ff)) * scale,
+        "w_up": jax.random.normal(ks[2], (E, d, ff)) * scale,
+        "w_down": jax.random.normal(ks[3], (E, ff, d)) * (ff ** -0.5),
+    }
+
+
+def _capacity(g: int, cfg: ModelConfig) -> int:
+    return max(1, int(g * cfg.top_k * cfg.capacity_factor) // cfg.n_experts)
+
+
+def _route_topk(probs, k):
+    vals, idx = jax.lax.top_k(probs, k)
+    vals = vals / jnp.maximum(vals.sum(-1, keepdims=True), 1e-9)
+    return idx, vals
+
+
+def _route_dodoor(probs, load, k):
+    """Power-of-two expert choice on a cached load view (the paper's
+    Algorithm 1 adapted to routing): prefilter = top-2k gate probs; pair
+    (2i, 2i+1); the pair member with lower cached load wins (RL score with a
+    single resource dim and α=0 — expert 'duration' is uniform)."""
+    _, cand = jax.lax.top_k(probs, 2 * k)                 # [g, 2k]
+    ca, cb = cand[:, 0::2], cand[:, 1::2]                 # [g, k] each
+    la, lb = load[ca], load[cb]
+    idx = jnp.where(lb < la, cb, ca)                      # ties → A (higher p)
+    vals = jnp.take_along_axis(probs, idx, axis=-1)
+    vals = vals / jnp.maximum(vals.sum(-1, keepdims=True), 1e-9)
+    return idx, vals
+
+
+def moe_group_apply(p, x, cfg: ModelConfig, load):
+    """One token group. x [g, d]; load [E] cached expert loads (dodoor).
+    Returns (y [g, d], aux scalar, new_load [E])."""
+    E, k = cfg.n_experts, cfg.top_k
+    g = x.shape[0]
+    cap = _capacity(g, cfg)
+    logits = (x @ p["router"]).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)               # [g, E]
+    if cfg.router == "dodoor":
+        idx, vals = _route_dodoor(probs, load, k)
+    else:
+        idx, vals = _route_topk(probs, k)
+
+    eoh = jax.nn.one_hot(idx, E, dtype=jnp.float32)       # [g, k, E]
+    # Position of each (token, choice) in its expert's queue; token-major,
+    # choice-minor priority.
+    flat = eoh.reshape(g * k, E)
+    pos = jnp.cumsum(flat, axis=0) - flat                 # [g·k, E]
+    pos = jnp.sum(pos * flat, axis=-1).reshape(g, k).astype(jnp.int32)
+    keep = pos < cap
+    poh = jax.nn.one_hot(pos, cap, dtype=jnp.float32) * keep[..., None]
+    dispatch = jnp.einsum("gke,gkc->gec", eoh, poh)       # [g, E, cap]
+    combine = jnp.einsum("gke,gkc,gk->gec", eoh, poh,
+                         vals.astype(jnp.float32))
+
+    xe = jnp.einsum("gec,gd->ecd", dispatch.astype(x.dtype), x)
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", xe, p["w_gate"])) \
+        * jnp.einsum("ecd,edf->ecf", xe, p["w_up"])
+    ye = jnp.einsum("ecf,efd->ecd", h, p["w_down"])
+    y = jnp.einsum("gec,ecd->gd", combine.astype(x.dtype), ye)
+
+    # Aux load-balance loss (Switch): E · Σ_e f_e · P_e.
+    f = jnp.mean(eoh.sum(1), axis=0)                      # fraction per expert
+    P = jnp.mean(probs, axis=0)
+    aux = E * jnp.sum(f * P)
+    new_load = eoh.sum((0, 1))                            # tokens per expert
+    return y, aux, new_load
+
+
+def moe_apply(p, x, cfg: ModelConfig, group: int = 2048):
+    """x [B, L, d] → (y, aux). Token groups are scanned sequentially; the
+    dodoor router's load cache refreshes once per group (b-batched)."""
+    B, L, d = x.shape
+    T = B * L
+    xt = x.reshape(T, d)
+    g = min(group, T)
+    pad = (-T) % g
+    if pad:
+        xt = jnp.pad(xt, ((0, pad), (0, 0)))
+    xg = xt.reshape(-1, g, d)
+
+    def body(load, xg_i):
+        y, aux, new_load = moe_group_apply(p, xg_i, cfg, load)
+        return new_load, (y, aux)
+
+    load0 = jnp.zeros((cfg.n_experts,), jnp.float32)
+    _, (yg, auxs) = analysis.scan(body, load0, xg)
+    y = yg.reshape(-1, d)[:T].reshape(B, L, d)
+    return y, jnp.mean(auxs)
+
+
+# ---------------------------------------------------------------------------
+# the decoder stack
+# ---------------------------------------------------------------------------
+
+def layer_init(key, cfg: ModelConfig):
+    ks = jax.random.split(key, 4)
+    p = {
+        "ln1": jnp.ones((cfg.d_model,)),
+        "ln2": jnp.ones((cfg.d_model,)),
+        "attn": attn_init(ks[0], cfg),
+    }
+    if cfg.is_moe:
+        p["moe"] = moe_init(ks[1], cfg)
+    else:
+        p["mlp"] = mlp_init(ks[1], cfg.d_model, cfg.d_ff, cfg.act)
+    return p
+
+
+def init_params(cfg: ModelConfig, key) -> Params:
+    ks = jax.random.split(key, 3)
+    p = {
+        "embed": jax.random.normal(ks[0], (cfg.vocab, cfg.d_model)) * 0.02,
+        "layers": stack_init(ks[1], cfg.n_layers,
+                             lambda k: layer_init(k, cfg)),
+        "ln_f": jnp.ones((cfg.d_model,)),
+    }
+    if not cfg.tie_embeddings:
+        p["lm_head"] = dense_init(ks[2], cfg.d_model, cfg.vocab, scale=0.02)
+    if cfg.family == "vlm":
+        # Stub patch-projection so vision tokens are a first-class input.
+        p["patch_proj"] = dense_init(ks[2], cfg.d_model, cfg.d_model)
+    return p
+
+
+def _unembed(cfg, p, x):
+    if cfg.tie_embeddings:
+        return x @ p["embed"].T
+    return x @ p["lm_head"]
+
+
+def forward(cfg: ModelConfig, p: Params, batch: Dict[str, jnp.ndarray],
+            *, remat: bool = True, unembed: bool = True):
+    """Training/prefill forward → (logits [B, L, V], aux dict).
+
+    batch: tokens [B, L] (for vlm: patches [B, n_patches, d] + positions3
+    [B, 3, L_total]; tokens then cover L_total − n_patches positions).
+    """
+    p = precision.cast_params(p)       # bf16-at-use: gathers move bf16
+    tokens = batch["tokens"]
+    x = precision.cast_act(p["embed"][tokens])
+    B = x.shape[0]
+    positions3 = None
+    if cfg.family == "vlm":
+        patches = batch["patches"] @ p["patch_proj"]
+        x = jnp.concatenate([patches.astype(x.dtype), x], axis=1)
+        positions3 = batch.get("positions3")
+    L = x.shape[1]
+    positions = jnp.broadcast_to(jnp.arange(L)[None], (B, L))
+    if cfg.mrope and positions3 is None:
+        positions3 = text_positions3(positions)
+
+    def layer_fn(carry, lp):
+        h, aux = carry
+        h = precision.constrain(h)              # SP residual sharding
+        a, _ = attn_apply(lp["attn"], rms_norm(h, lp["ln1"], cfg.norm_eps),
+                          cfg, positions, window=cfg.window,
+                          positions3=positions3)
+        h = precision.constrain(h + a)
+        if cfg.is_moe:
+            f, aux_i = moe_apply(lp["moe"],
+                                 rms_norm(h, lp["ln2"], cfg.norm_eps), cfg)
+            aux = aux + aux_i
+        else:
+            f = mlp_apply(lp["mlp"], rms_norm(h, lp["ln2"], cfg.norm_eps),
+                          cfg.act)
+        return (precision.constrain(h + f), aux), None
+
+    fn = jax.checkpoint(layer_fn) if remat else layer_fn
+    (x, aux), _ = analysis.scan(fn, (x, jnp.float32(0.0)), p["layers"])
+    x = rms_norm(x, p["ln_f"], cfg.norm_eps)
+    out = _unembed(cfg, p, x) if unembed else x
+    return out, {"moe_aux": aux / max(cfg.n_layers, 1)}
+
+
+# ---------------------------------------------------------------------------
+# decode (serving)
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int,
+               dtype=jnp.bfloat16) -> Params:
+    shape = (cfg.n_layers, batch, cfg.n_kv, max_len, cfg.head_dim)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype),
+            "idx": jnp.zeros((), jnp.int32)}
+
+
+def decode_step(cfg: ModelConfig, p: Params, cache: Params,
+                token: jnp.ndarray):
+    """token [B, 1] int32 → (logits [B, 1, V], cache')."""
+    x = p["embed"][token]
+    idx = cache["idx"]
+
+    def layer_fn(h, inp):
+        lp, kc, vc = inp
+        a, kc, vc = attn_decode(lp["attn"],
+                                rms_norm(h, lp["ln1"], cfg.norm_eps), cfg,
+                                kc.astype(h.dtype), vc.astype(h.dtype), idx,
+                                window=cfg.window)
+        h = h + a
+        if cfg.is_moe:
+            f, _ = moe_apply(lp["moe"], rms_norm(h, lp["ln2"], cfg.norm_eps),
+                             cfg)
+        else:
+            f = mlp_apply(lp["mlp"], rms_norm(h, lp["ln2"], cfg.norm_eps),
+                          cfg.act)
+        return h + f, (kc.astype(cache["k"].dtype),
+                       vc.astype(cache["v"].dtype))
+
+    x, (k_new, v_new) = analysis.scan(layer_fn, x,
+                                      (p["layers"], cache["k"], cache["v"]))
+    x = rms_norm(x, p["ln_f"], cfg.norm_eps)
+    logits = _unembed(cfg, p, x)
+    return logits, {"k": k_new, "v": v_new, "idx": idx + 1}

@@ -1,0 +1,194 @@
+"""Whisper-base: encoder-decoder with a stubbed conv frontend.
+
+Per the brief, the modality frontend is a STUB — ``input_specs()`` supplies
+precomputed frame embeddings [B, frames, d_model] (what the two conv layers
+would produce). The transformer backbone is real: a bidirectional encoder
+and a causal decoder with cross-attention, learned positional embeddings,
+pre-LN, GELU MLPs (the Whisper architecture, arXiv:2212.04356).
+
+Decode caches: per-layer self-attention K/V (grows with generated tokens)
+plus the cross-attention K/V computed once from the encoder output.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from .common import attention, dense_init, mlp_apply, mlp_init, rms_norm, stack_init
+from . import analysis
+
+Params = Dict[str, Any]
+
+
+def _mha_init(key, cfg: ModelConfig):
+    d = cfg.d_model
+    ks = jax.random.split(key, 4)
+    return {"wq": dense_init(ks[0], d, d), "wk": dense_init(ks[1], d, d),
+            "wv": dense_init(ks[2], d, d), "wo": dense_init(ks[3], d, d)}
+
+
+def _heads(cfg, x):
+    B, L, _ = x.shape
+    return x.reshape(B, L, cfg.n_heads, cfg.head_dim).transpose(0, 2, 1, 3)
+
+
+def _mha(p, cfg, x, kv, *, causal):
+    """x attends to kv (self-attention when kv is x)."""
+    q = _heads(cfg, x @ p["wq"])
+    k = _heads(cfg, kv @ p["wk"])
+    v = _heads(cfg, kv @ p["wv"])
+    o = attention(q, k, v, causal=causal)
+    B, L = x.shape[:2]
+    return o.transpose(0, 2, 1, 3).reshape(B, L, -1) @ p["wo"]
+
+
+def _enc_layer_init(key, cfg):
+    k1, k2 = jax.random.split(key)
+    return {"ln1": jnp.ones((cfg.d_model,)), "ln2": jnp.ones((cfg.d_model,)),
+            "attn": _mha_init(k1, cfg),
+            "mlp": mlp_init(k2, cfg.d_model, cfg.d_ff, "gelu")}
+
+
+def _dec_layer_init(key, cfg):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {"ln1": jnp.ones((cfg.d_model,)), "ln2": jnp.ones((cfg.d_model,)),
+            "ln3": jnp.ones((cfg.d_model,)),
+            "self": _mha_init(k1, cfg), "cross": _mha_init(k2, cfg),
+            "mlp": mlp_init(k3, cfg.d_model, cfg.d_ff, "gelu")}
+
+
+def init_params(cfg: ModelConfig, key) -> Params:
+    ks = jax.random.split(key, 5)
+    # Position table sized to the assigned shape grid (decode_32k /
+    # prefill_32k); the real whisper-base caps at 448 decoder positions —
+    # we scale the learned table, everything else is the published config.
+    return {
+        "embed": jax.random.normal(ks[0], (cfg.vocab, cfg.d_model)) * 0.02,
+        "pos_dec": jax.random.normal(ks[1], (40960, cfg.d_model)) * 0.01,
+        "pos_enc": jax.random.normal(ks[2], (cfg.encoder_frames,
+                                             cfg.d_model)) * 0.01,
+        "enc_layers": stack_init(ks[3], cfg.encoder_layers,
+                                 lambda k: _enc_layer_init(k, cfg)),
+        "dec_layers": stack_init(ks[4], cfg.n_layers,
+                                 lambda k: _dec_layer_init(k, cfg)),
+        "ln_enc": jnp.ones((cfg.d_model,)),
+        "ln_f": jnp.ones((cfg.d_model,)),
+    }
+
+
+def encode(cfg: ModelConfig, p: Params, frames: jnp.ndarray):
+    """frames [B, F, d] (stub conv output) → encoder states [B, F, d]."""
+    x = frames + p["pos_enc"][None, : frames.shape[1]]
+
+    def layer(h, lp):
+        h = h + _mha(lp["attn"], cfg, rms_norm(h, lp["ln1"], cfg.norm_eps),
+                     rms_norm(h, lp["ln1"], cfg.norm_eps), causal=False)
+        h = h + mlp_apply(lp["mlp"], rms_norm(h, lp["ln2"], cfg.norm_eps),
+                          "gelu")
+        return h, None
+
+    x, _ = analysis.scan(layer, x, p["enc_layers"])
+    return rms_norm(x, p["ln_enc"], cfg.norm_eps)
+
+
+def forward(cfg: ModelConfig, p: Params, batch, *, remat: bool = True,
+            unembed: bool = True):
+    """batch: frames [B, F, d] + tokens [B, L]. → (logits, {})."""
+    enc = encode(cfg, p, batch["frames"])
+    tokens = batch["tokens"]
+    L = tokens.shape[1]
+    x = p["embed"][tokens] + p["pos_dec"][None, :L]
+
+    def layer(h, lp):
+        h = h + _mha(lp["self"], cfg, rms_norm(h, lp["ln1"], cfg.norm_eps),
+                     rms_norm(h, lp["ln1"], cfg.norm_eps), causal=True)
+        h = h + _mha(lp["cross"], cfg, rms_norm(h, lp["ln2"], cfg.norm_eps),
+                     enc, causal=False)
+        h = h + mlp_apply(lp["mlp"], rms_norm(h, lp["ln3"], cfg.norm_eps),
+                          "gelu")
+        return h, None
+
+    fn = jax.checkpoint(layer) if remat else layer
+    x, _ = analysis.scan(fn, x, p["dec_layers"])
+    x = rms_norm(x, p["ln_f"], cfg.norm_eps)
+    return (x @ p["embed"].T if unembed else x), {}
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int,
+               dtype=jnp.bfloat16) -> Params:
+    return {
+        "k": jnp.zeros((cfg.n_layers, batch, cfg.n_heads, max_len,
+                        cfg.head_dim), dtype),
+        "v": jnp.zeros((cfg.n_layers, batch, cfg.n_heads, max_len,
+                        cfg.head_dim), dtype),
+        # cross K/V are computed once per request from the encoder output.
+        "xk": jnp.zeros((cfg.n_layers, batch, cfg.n_heads,
+                         cfg.encoder_frames, cfg.head_dim), dtype),
+        "xv": jnp.zeros((cfg.n_layers, batch, cfg.n_heads,
+                         cfg.encoder_frames, cfg.head_dim), dtype),
+        "idx": jnp.zeros((), jnp.int32),
+    }
+
+
+def prime_cache(cfg: ModelConfig, p: Params, cache: Params,
+                frames: jnp.ndarray) -> Params:
+    """Fill the cross-attention K/V from the encoder (once per request)."""
+    enc = encode(cfg, p, frames)
+
+    def per_layer(lp):
+        return (_heads(cfg, enc @ lp["cross"]["wk"]),
+                _heads(cfg, enc @ lp["cross"]["wv"]))
+
+    xk, xv = jax.vmap(per_layer)(p["dec_layers"])
+    return {**cache, "xk": xk.astype(cache["xk"].dtype),
+            "xv": xv.astype(cache["xv"].dtype)}
+
+
+def decode_step(cfg: ModelConfig, p: Params, cache: Params, token):
+    idx = cache["idx"]
+    pos = jax.lax.dynamic_slice_in_dim(p["pos_dec"], idx, 1, axis=0)  # [1,d]
+    x = p["embed"][token] + pos[None]
+
+    def layer(h, inp):
+        lp, kc, vc, xk, xv = inp
+        hn = rms_norm(h, lp["ln1"], cfg.norm_eps)
+        q = _heads(cfg, hn @ lp["self"]["wq"])
+        k_t = _heads(cfg, hn @ lp["self"]["wk"])
+        v_t = _heads(cfg, hn @ lp["self"]["wv"])
+        kc = jax.lax.dynamic_update_slice_in_dim(kc, k_t.astype(kc.dtype),
+                                                 idx, axis=2)
+        vc = jax.lax.dynamic_update_slice_in_dim(vc, v_t.astype(vc.dtype),
+                                                 idx, axis=2)
+        Lc = kc.shape[2]
+        logits = jnp.einsum("bhqd,bhld->bhql", q, kc.astype(q.dtype),
+                            preferred_element_type=jnp.float32) \
+            * cfg.head_dim ** -0.5
+        valid = jnp.arange(Lc) <= idx
+        logits = jnp.where(valid[None, None, None], logits, -1e30)
+        o = jnp.einsum("bhql,bhld->bhqd",
+                       jax.nn.softmax(logits, -1).astype(h.dtype),
+                       vc.astype(h.dtype))
+        B = h.shape[0]
+        h = h + o.transpose(0, 2, 1, 3).reshape(B, 1, -1) @ lp["self"]["wo"]
+
+        hn = rms_norm(h, lp["ln2"], cfg.norm_eps)
+        q = _heads(cfg, hn @ lp["cross"]["wq"])
+        logits = jnp.einsum("bhqd,bhld->bhql", q, xk.astype(q.dtype),
+                            preferred_element_type=jnp.float32) \
+            * cfg.head_dim ** -0.5
+        o = jnp.einsum("bhql,bhld->bhqd",
+                       jax.nn.softmax(logits, -1).astype(h.dtype),
+                       xv.astype(h.dtype))
+        h = h + o.transpose(0, 2, 1, 3).reshape(B, 1, -1) @ lp["cross"]["wo"]
+        h = h + mlp_apply(lp["mlp"], rms_norm(h, lp["ln3"], cfg.norm_eps),
+                          "gelu")
+        return h, (kc, vc)
+
+    x, (k_new, v_new) = analysis.scan(
+        layer, x, (p["dec_layers"], cache["k"], cache["v"], cache["xk"],
+                   cache["xv"]))
+    x = rms_norm(x, p["ln_f"], cfg.norm_eps)
+    return x @ p["embed"].T, {**cache, "k": k_new, "v": v_new, "idx": idx + 1}

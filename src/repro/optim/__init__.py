@@ -1,0 +1,6 @@
+from .adamw import AdamWState, adamw_init, adamw_update
+from .schedule import cosine_schedule
+from .compression import compress_grads, decompress_grads, CompressionState
+
+__all__ = ["AdamWState", "adamw_init", "adamw_update", "cosine_schedule",
+           "compress_grads", "decompress_grads", "CompressionState"]

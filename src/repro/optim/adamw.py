@@ -1,0 +1,56 @@
+"""AdamW with global-norm clipping — dependency-free (no optax offline).
+
+State (m, v) mirrors the parameter pytree, so whatever sharding the params
+carry, the optimizer state shards identically (FSDP for free under pjit).
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jnp.ndarray
+    m: Any
+    v: Any
+
+
+def adamw_init(params) -> AdamWState:
+    zeros = jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params)
+    return AdamWState(step=jnp.zeros((), jnp.int32), m=zeros,
+                      v=jax.tree.map(jnp.copy, zeros))
+
+
+def global_norm(tree) -> jnp.ndarray:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def adamw_update(grads, state: AdamWState, params, *, lr,
+                 b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+                 weight_decay: float = 0.1, clip_norm: float = 1.0):
+    """Returns (new_params, new_state). ``lr`` may be a scalar or a
+    step-indexed callable (schedule)."""
+    step = state.step + 1
+    if callable(lr):
+        lr = lr(step)
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, clip_norm / jnp.maximum(gnorm, 1e-9))
+    grads = jax.tree.map(lambda g: g.astype(jnp.float32) * scale, grads)
+
+    m = jax.tree.map(lambda m_, g: b1 * m_ + (1 - b1) * g, state.m, grads)
+    v = jax.tree.map(lambda v_, g: b2 * v_ + (1 - b2) * g * g, state.v, grads)
+    t = step.astype(jnp.float32)
+    mhat_scale = 1.0 / (1 - b1 ** t)
+    vhat_scale = 1.0 / (1 - b2 ** t)
+
+    def upd(p, m_, v_):
+        u = (m_ * mhat_scale) / (jnp.sqrt(v_ * vhat_scale) + eps)
+        return (p.astype(jnp.float32)
+                - lr * (u + weight_decay * p.astype(jnp.float32))
+                ).astype(p.dtype)
+
+    new_params = jax.tree.map(upd, params, m, v)
+    return new_params, AdamWState(step=step, m=m, v=v)

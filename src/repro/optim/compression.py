@@ -1,0 +1,52 @@
+"""int8 gradient compression with error feedback — the distributed-
+optimization trick for bandwidth-bound gradient reduction.
+
+Per-tensor symmetric int8 quantization before the data-parallel all-reduce
+cuts gradient collective bytes 4× (f32) / 2× (bf16); the quantization
+residual is carried in an error-feedback buffer so the *accumulated* update
+is unbiased (Seide et al.; 1-bit SGD lineage). Under pjit this composes with
+the sharded gradient reduction: the quantized tensor is what crosses the
+data/pod axes.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class CompressionState(NamedTuple):
+    error: Any               # residual pytree (same structure as grads)
+
+
+def compression_init(grads_like) -> CompressionState:
+    return CompressionState(error=jax.tree.map(
+        lambda g: jnp.zeros_like(g, jnp.float32), grads_like))
+
+
+def _quantize(g: jnp.ndarray):
+    scale = jnp.maximum(jnp.max(jnp.abs(g)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def compress_grads(grads, state: CompressionState):
+    """grads (+carried error) → (int8 pytree, scales pytree, new state)."""
+    def one(g, e):
+        g32 = g.astype(jnp.float32) + e
+        q, scale = _quantize(g32)
+        deq = q.astype(jnp.float32) * scale
+        return q, scale, g32 - deq
+
+    flat, treedef = jax.tree.flatten(grads)
+    errs = jax.tree.leaves(state.error)
+    qs, scales, new_errs = zip(*[one(g, e) for g, e in zip(flat, errs)])
+    return (jax.tree.unflatten(treedef, qs),
+            jax.tree.unflatten(treedef, scales),
+            CompressionState(error=jax.tree.unflatten(treedef, new_errs)))
+
+
+def decompress_grads(q_tree, scales):
+    return jax.tree.map(lambda q, s: q.astype(jnp.float32) * s,
+                        q_tree, scales)

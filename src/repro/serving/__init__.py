@@ -1,0 +1,6 @@
+from .costs import ReplicaType, REPLICA_TYPES, request_cost
+from .pool import make_replica_pool, synthesize_requests
+from .router import DodoorRouter
+
+__all__ = ["ReplicaType", "REPLICA_TYPES", "request_cost",
+           "make_replica_pool", "synthesize_requests", "DodoorRouter"]

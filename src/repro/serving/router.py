@@ -1,0 +1,79 @@
+"""Online Dodoor request router — the gateway-side API.
+
+Stateful wrapper around the core Algorithm-1 policy for a live serving
+gateway: keeps the scheduler-local cached view, accumulates addNewLoad
+deltas, and applies data-store pushes. The fleet-wide simulation
+(pool.py + sim.engine) validates the policy; this class is what a real
+frontend calls per request.
+
+Failure behaviour inherits the paper's §4.3 soft-pin-out: a dead replica
+stops sending overrides, its cached load only rises with new placements,
+and the two-choice rule routes around it without any health-check protocol.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core import DodoorParams, SchedulerView, dodoor_select, task_key
+from ..sim.cluster import ClusterSpec
+from .costs import request_cost
+
+
+@dataclass
+class DodoorRouter:
+    pool: ClusterSpec
+    alpha: float = 0.5
+    b: Optional[int] = None            # default n/2 (§3.2)
+    seed: int = 0
+
+    def __post_init__(self):
+        n = self.pool.num_servers
+        self.b = self.b or max(1, n // 2)
+        self._params = DodoorParams(alpha=self.alpha, b=self.b)
+        self._key = jax.random.PRNGKey(self.seed)
+        self._C = jnp.asarray(self.pool.C)
+        # scheduler-local cached view (stale by ≤ b decisions)
+        self._view_L = np.zeros((n, 2), np.float32)
+        self._view_D = np.zeros((n,), np.float32)
+        # data-store accumulators
+        self._store_L = np.zeros((n, 2), np.float32)
+        self._store_D = np.zeros((n,), np.float32)
+        self._p = 0
+        self._req = 0
+
+    # -- scheduling hot path (no store read, §4.1) -------------------------
+    def place(self, cfg, prompt_len: int, gen_len: int) -> int:
+        r, d = request_cost(cfg, prompt_len, gen_len,
+                            types=self._types())
+        d_full = d[self.pool.node_type]
+        view = SchedulerView(L=jnp.asarray(self._view_L),
+                             D=jnp.asarray(self._view_D),
+                             rif=jnp.zeros((self.pool.num_servers,)),
+                             C=self._C)
+        j = int(dodoor_select(task_key(self._key, self._req),
+                              jnp.asarray(r), jnp.asarray(d_full), view,
+                              self._params))
+        self._req += 1
+        # addNewLoad delta (scheduler-side, §4.1)
+        self._store_L[j] += r
+        self._store_D[j] += d_full[j]
+        self._p += 1
+        if self._p >= self.b:                    # batch boundary → push
+            self._view_L = self._store_L.copy()
+            self._view_D = self._store_D.copy()
+            self._p = 0
+        return j
+
+    # -- server-side override (on request completion) ----------------------
+    def complete(self, j: int, r: np.ndarray, d_ms: float):
+        self._store_L[j] = np.maximum(0.0, self._store_L[j] - r)
+        self._store_D[j] = max(0.0, self._store_D[j] - d_ms)
+
+    def _types(self):
+        from .costs import REPLICA_TYPES
+        return REPLICA_TYPES

@@ -1,0 +1,223 @@
+"""Sharding policy: FSDP (data) × TP (model) × EP (experts) × pod-DP.
+
+The mesh is (pod, data, model) multi-pod or (data, model) single-pod. Rules:
+
+* **Named rules** for the tensors whose parallelism we care about:
+  column-parallel in-projections ([d, X] → X on 'model', d on 'data'),
+  row-parallel out-projections ([X, d] → X on 'model', d on 'data'),
+  expert-parallel MoE banks ([E, ...] → E on 'model', d on 'data'),
+  vocab-parallel embeddings when the vocab divides the axis.
+* **Generic fallback** for everything else: shard the largest divisible dim
+  on 'model', then the largest remaining divisible dim on 'data'. Division
+  must be exact — otherwise the dim is replicated (heterogeneous head/vocab
+  counts across the 10 archs make a greedy-but-safe default essential).
+
+Optimizer state (Adam m/v) mirrors parameter specs; activations shard batch
+on ('pod', 'data'); batch-1 decode shards the longest divisible dim of each
+cache tensor on 'data' instead (sequence/state sharding).
+"""
+from __future__ import annotations
+
+import re
+from typing import Any, Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# ---------------------------------------------------------------------------
+# helpers
+# ---------------------------------------------------------------------------
+
+
+def axis_size(mesh: Mesh, name: str) -> int:
+    return mesh.shape.get(name, 1)
+
+
+def _divides(dim: int, size: int) -> bool:
+    return size > 1 and dim % size == 0 and dim >= size
+
+
+def _data_axes(mesh: Mesh):
+    """The data-parallel axes, largest composite first: ('pod','data') when a
+    pod axis exists."""
+    return ("pod", "data") if "pod" in mesh.shape else ("data",)
+
+
+def _data_size(mesh: Mesh) -> int:
+    return int(np.prod([axis_size(mesh, a) for a in _data_axes(mesh)]))
+
+
+# ---------------------------------------------------------------------------
+# parameter rules
+# ---------------------------------------------------------------------------
+
+_COL_PAR = ("wq", "wk", "wv", "gate", "up", "w_y", "w_in", "in_proj")
+_ROW_PAR = ("wo", "down", "w_out", "out_proj")
+
+#: Layouts (the §Perf levers):
+#: * "fsdp"      — baseline: TP on model + FSDP on data (training default).
+#: * "inference" — no contracting-dim sharding: weights shard on 'model'
+#:                 (+ the non-contracting ff dim of expert banks on 'data'),
+#:                 so decode never all-gathers weights; tiny activation
+#:                 partial-sum all-reduces instead.
+#: * "dp"        — pure data parallel: no model-axis sharding; batch spreads
+#:                 over BOTH axes (small models where TP=16 is pure loss).
+LAYOUTS = ("fsdp", "inference", "dp")
+
+
+def _param_spec(path: str, shape, mesh: Mesh, layout: str = "fsdp") -> P:
+    model = axis_size(mesh, "model")
+    dsize = _data_size(mesh)
+    daxes = _data_axes(mesh)
+    leaf = path.split("/")[-1]
+    nd = len(shape)
+    spec = [None] * nd
+
+    def try_set(dim, axis, size):
+        if spec[dim] is None and _divides(shape[dim], size):
+            spec[dim] = axis
+            return True
+        return False
+
+    if nd == 0:
+        return P()
+    if layout == "dp":
+        return P(*spec)                    # replicate everything
+    # Expert banks: [E, d, ff] / [E, ff, d] → EP on model.
+    if leaf in ("w_gate", "w_up", "w_down") and nd == 3:
+        try_set(0, "model", model)
+        if layout == "inference":
+            # shard the NON-contracting ff dim on data: no weight gather.
+            ff_dim = 2 if leaf in ("w_gate", "w_up") else 1
+            try_set(ff_dim, daxes, dsize)
+        else:
+            try_set(1, daxes, dsize)
+        return P(*spec)
+    if leaf == "embed" and nd == 2:
+        try_set(0, "model", model)         # vocab-parallel when divisible
+        if layout != "inference":
+            try_set(1, daxes, dsize)
+        return P(*spec)
+    if (leaf in _COL_PAR or leaf == "lm_head") and nd == 2:
+        try_set(1, "model", model)
+        if layout != "inference":
+            try_set(0, daxes, dsize)
+        return P(*spec)
+    if leaf in _ROW_PAR and nd == 2:
+        try_set(0, "model", model)
+        if layout != "inference":
+            try_set(1, daxes, dsize)
+        return P(*spec)
+    # Generic fallback: biggest divisible dim → model; next → data.
+    order = sorted(range(nd), key=lambda i: -shape[i])
+    for i in order:
+        if try_set(i, "model", model):
+            break
+    if layout != "inference":
+        for i in order:
+            if spec[i] is None and try_set(i, daxes, dsize):
+                break
+    return P(*spec)
+
+
+def param_specs(params: Any, mesh: Mesh, layout: str = "fsdp") -> Any:
+    """PartitionSpec pytree for a parameter (or Adam-state) pytree.
+
+    Stacked-layer leading axes (scan) are detected by path ('layers' /
+    'blocks') and kept unsharded (the scan dim)."""
+
+    def one(path_parts, leaf):
+        path = "/".join(str(p) for p in path_parts)
+        shape = leaf.shape
+        stacked = any(k in path for k in ("layers", "blocks", "enc_layers",
+                                          "dec_layers", "rem"))
+        if stacked and len(shape) >= 1:
+            inner = _param_spec(path, shape[1:], mesh, layout)
+            return P(None, *inner)
+        return _param_spec(path, shape, mesh, layout)
+
+    return _path_tree_map(one, params)
+
+
+def _path_tree_map(fn, tree):
+    out = {}
+
+    def rec(node, parts):
+        if isinstance(node, dict):
+            return {k: rec(v, parts + (k,)) for k, v in node.items()}
+        if isinstance(node, (tuple, list)):
+            seq = [rec(v, parts + (str(i),)) for i, v in enumerate(node)]
+            return type(node)(seq)
+        if hasattr(node, "_fields"):      # NamedTuple
+            return type(node)(*[rec(getattr(node, f), parts + (f,))
+                                for f in node._fields])
+        return fn(parts, node)
+
+    return rec(tree, ())
+
+
+# ---------------------------------------------------------------------------
+# activation / batch rules
+# ---------------------------------------------------------------------------
+
+def batch_specs(batch: Any, mesh: Mesh, layout: str = "fsdp") -> Any:
+    """Training/prefill inputs: batch dim on ('pod','data'); under the "dp"
+    layout the batch spreads over BOTH axes (model becomes extra DP)."""
+    daxes = _data_axes(mesh)
+    dsize = _data_size(mesh)
+    model = axis_size(mesh, "model")
+    if layout == "dp":
+        daxes = tuple(daxes) + ("model",)
+        dsize = dsize * model
+
+    def one(parts, leaf):
+        shape = leaf.shape
+        spec = [None] * len(shape)
+        if len(shape) >= 1 and _divides(shape[0], dsize):
+            spec[0] = daxes
+        return P(*spec)
+
+    return _path_tree_map(one, batch)
+
+
+def cache_specs(cache: Any, mesh: Mesh, batch_dim: int = 1) -> Any:
+    """Decode caches [layers, B, ...]: B on ('pod','data') when divisible;
+    otherwise the longest divisible trailing dim goes on 'data' (sequence /
+    state sharding for batch-1 long-context). One more dim → 'model'."""
+    daxes = _data_axes(mesh)
+    dsize = _data_size(mesh)
+    model = axis_size(mesh, "model")
+
+    def one(parts, leaf):
+        shape = leaf.shape
+        nd = len(shape)
+        spec = [None] * nd
+        if nd == 0:
+            return P()
+        used_data = False
+        if nd > batch_dim and _divides(shape[batch_dim], dsize):
+            spec[batch_dim] = daxes
+            used_data = True
+        rest = sorted(range(batch_dim + 1 if used_data else batch_dim, nd),
+                      key=lambda i: -shape[i])
+        rest = [i for i in rest if spec[i] is None]
+        if not used_data:
+            for i in rest:
+                if _divides(shape[i], dsize):
+                    spec[i] = daxes
+                    rest = [j for j in rest if j != i]
+                    used_data = True
+                    break
+        for i in rest:
+            if spec[i] is None and _divides(shape[i], model):
+                spec[i] = "model"
+                break
+        return P(*spec)
+
+    return _path_tree_map(one, cache)
+
+
+def to_shardings(specs: Any, mesh: Mesh) -> Any:
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+                        is_leaf=lambda x: isinstance(x, P))

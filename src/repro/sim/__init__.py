@@ -1,0 +1,15 @@
+"""repro.sim — the 101-node testbed (Table 2), FCFS discrete-event engine,
+message accounting, and metric aggregation."""
+from .cluster import NODE_TYPES, TESTBED_TYPES, ClusterSpec, make_homogeneous, make_testbed
+from .engine import EngineConfig, SimResult, simulate
+from .hierarchy import simulate_hierarchical, split_cluster
+from .messages import RpcModel, per_decision_messages
+from .metrics import Summary, resource_violations, summarize, utilization_stats, utilization_timeline
+
+__all__ = [
+    "NODE_TYPES", "TESTBED_TYPES", "ClusterSpec", "make_homogeneous",
+    "make_testbed", "EngineConfig", "SimResult", "simulate",
+    "simulate_hierarchical", "split_cluster", "RpcModel",
+    "per_decision_messages", "Summary", "resource_violations", "summarize",
+    "utilization_stats", "utilization_timeline",
+]

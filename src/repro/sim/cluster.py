@@ -1,0 +1,93 @@
+"""Cluster specifications — the paper's 101-node CloudLab testbed (Table 2).
+
+100 server nodes across four heterogeneous types (the 101st node hosts the
+schedulers + data store and is not a placement target). Capacities are
+[CPU cores, memory MB] per §6.1 (disk ignored).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+# Node-type order used everywhere a per-type array appears.
+NODE_TYPES = ("m510", "xl170", "c6525-25g", "c6620")
+
+
+@dataclass(frozen=True)
+class NodeType:
+    name: str
+    cores: int
+    mem_mb: int
+    ghz: float
+    count: int
+
+
+# Table 2, server rows.
+TESTBED_TYPES = (
+    NodeType("m510", cores=8, mem_mb=64_000, ghz=2.0, count=40),
+    NodeType("xl170", cores=10, mem_mb=64_000, ghz=2.4, count=25),
+    NodeType("c6525-25g", cores=16, mem_mb=128_000, ghz=3.0, count=18),
+    NodeType("c6620", cores=28, mem_mb=128_000, ghz=2.1, count=17),
+)
+
+
+@dataclass(frozen=True)
+class ClusterSpec:
+    """A concrete server fleet.
+
+    C:         [n, 2] float32 capacities (cores, MB).
+    node_type: [n]    int32 index into ``type_names``.
+    type_names: tuple of node-type names (len T).
+    """
+
+    C: np.ndarray
+    node_type: np.ndarray
+    type_names: tuple
+
+    @property
+    def num_servers(self) -> int:
+        return self.C.shape[0]
+
+    @property
+    def num_types(self) -> int:
+        return len(self.type_names)
+
+    def type_capacity(self) -> np.ndarray:
+        """[T, 2] capacity per node type (first instance of each)."""
+        out = np.zeros((self.num_types, self.C.shape[1]), np.float32)
+        for t in range(self.num_types):
+            idx = np.argmax(self.node_type == t)
+            out[t] = self.C[idx]
+        return out
+
+
+def make_testbed(scale: float = 1.0, interleave: bool = True) -> ClusterSpec:
+    """The paper's 100-server fleet; ``scale`` shrinks/grows each type count
+    proportionally (≥1 node per type) for smoke tests and scale studies.
+
+    ``interleave`` shuffles node ordering deterministically so that uniform
+    random candidate sampling is not correlated with node type blocks.
+    """
+    C_rows, types = [], []
+    for t_idx, nt in enumerate(TESTBED_TYPES):
+        cnt = max(1, round(nt.count * scale))
+        for _ in range(cnt):
+            C_rows.append((nt.cores, nt.mem_mb))
+            types.append(t_idx)
+    C = np.asarray(C_rows, np.float32)
+    node_type = np.asarray(types, np.int32)
+    if interleave:
+        rng = np.random.RandomState(0)
+        perm = rng.permutation(len(types))
+        C, node_type = C[perm], node_type[perm]
+    return ClusterSpec(C=C, node_type=node_type,
+                       type_names=tuple(nt.name for nt in TESTBED_TYPES))
+
+
+def make_homogeneous(n: int, cores: int = 16, mem_mb: int = 64_000) -> ClusterSpec:
+    """A homogeneous fleet (the classic balls-into-bins assumption) for
+    ablations isolating the heterogeneity effect."""
+    C = np.tile(np.array([[cores, mem_mb]], np.float32), (n, 1))
+    return ClusterSpec(C=C, node_type=np.zeros(n, np.int32),
+                       type_names=("uniform",))

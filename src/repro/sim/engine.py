@@ -1,0 +1,452 @@
+"""Discrete-event cluster simulation engine — reproduces the §6 testbed.
+
+A single ``lax.scan`` over task arrivals (sorted by submit time) drives the
+whole system: five round-robin schedulers, the central data store with its
+b-batched push protocol (§4.1), FCFS resource-constrained server execution
+(§4.2), per-policy RPC message accounting, and the scheduling-latency model.
+
+Server execution model
+----------------------
+Each server's CPU cores and memory are modelled as *unit resources* with a
+"free-at" timestamp:
+
+* ``core_free[n, CMAX]`` — per-core next-free time (unused core slots padded
+  with +inf so heterogeneous core counts never get selected);
+* ``mem_free[n, MU]``    — memory discretized into MU equal units per server
+  (unit size = capacity/MU; 2 GB on a 128 GB node at MU=64).
+
+FCFS with concurrent execution (§4.2: "multiple tasks can run concurrently
+... up to the number of CPU cores") is exact under this model: a task that
+is last in the queue starts at
+
+    start = max(enqueue, prev_start[j], c-th earliest core-free,
+                u-th earliest mem-unit-free)
+
+(`prev_start` enforces FCFS start ordering; taking the earliest-free units is
+work-conserving). The chosen units' free-at times advance to ``start + dur``.
+
+Ground truth for probing policies and data-store pushes comes from a
+per-server in-flight ring buffer ``rb_*[n, R]`` holding (release time, cores,
+MB, est-duration) of every uncompleted task; a task is *uncompleted* while
+``release > now`` (queued tasks have future release, so L/D/RIF include the
+queue — §3.1's definition).
+
+Data-store staleness model
+--------------------------
+The store's view at a push equals truth(now) minus the deltas schedulers have
+not yet flushed via ``addNewLoad`` (per-scheduler ``pending`` accumulators,
+flushed every ``flush_every`` of that scheduler's own decisions — the paper
+only upper-bounds the mini-batch at 2b/num_schedulers; we default to a faster
+cadence within that bound, calibrated to the paper's reported 33% message
+overhead). Server ``overrideNodeState`` messages are folded in implicitly:
+truth(now) already excludes completed tasks, exactly what a completion-time
+override reports.
+
+Message accounting (Fig. 4/6 "RPC counts processed by all schedulers"):
+
+* every decision: 2 (task recv + placement send);
+* PoT: +4 (two synchronous probe round-trips);
+* Prequal: +2·r_probe (async probe sends + replies);
+* Dodoor: +num_schedulers per batch push, +1 per addNewLoad flush.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.prefilter import feasible_mask, sample_feasible
+from ..core.rl_score import load_score_batched
+from ..core.types import DodoorParams, PrequalParams
+from .cluster import ClusterSpec
+from .messages import RpcModel
+
+CMAX = 28        # max cores of any node type (c6620, Table 2)
+
+
+class EngineConfig(NamedTuple):
+    """Cluster-level knobs (Require line of Algorithm 1 + §6.1 RPC setup)."""
+
+    policy: str = "dodoor"          # random | pot | dodoor | prequal | one_plus_beta
+    num_schedulers: int = 5         # §6.1: 5 scheduler services
+    b: int = 50                     # cache batch size (default n/2, §3.2)
+    flush_every: int = 2            # addNewLoad cadence (per-scheduler
+                                    # decisions); must be ≤ 2b/num_schedulers
+    alpha: float = 0.5              # duration weight (§3.2 default)
+    beta: float = 0.5               # (1+β) ablation only
+    rbuf_slots: int = 256           # in-flight ring buffer per server
+    mem_units: int = 64             # memory discretization per server
+    interference: float = 0.3       # co-location slowdown: a task starting
+                                    # while a fraction f of the node's cores
+                                    # are busy runs (1 + interference·f)×
+                                    # longer than its profile (cache/memory-
+                                    # bandwidth contention — why α=1 packing
+                                    # "creates long queues", §6.4)
+    outage_ms: tuple = ()           # (start, end): data-store outage window
+                                    # (§4.3 graceful degradation) — pushes
+                                    # stop, schedulers run on the last-known
+                                    # cached view; recovery is automatic at
+                                    # the first batch boundary after the end
+    rpc: RpcModel = RpcModel()
+    prequal: PrequalParams = PrequalParams()
+
+
+class SimResult(NamedTuple):
+    """Per-task outcomes (numpy, ms) + aggregate message ledger."""
+
+    server: np.ndarray        # [m] int32 chosen server
+    submit_ms: np.ndarray     # [m]
+    enqueue_ms: np.ndarray    # [m] submit + scheduling latency
+    start_ms: np.ndarray      # [m] execution start on the server
+    finish_ms: np.ndarray     # [m] start + actual duration
+    sched_ms: np.ndarray      # [m] scheduling latency (enqueue − submit)
+    cores: np.ndarray         # [m] cores actually consumed (per node type)
+    mem_mb: np.ndarray        # [m]
+    msgs_base: int
+    msgs_probe: int
+    msgs_push: int
+    msgs_flush: int
+    policy: str
+
+    @property
+    def makespan_ms(self) -> np.ndarray:
+        return self.finish_ms - self.submit_ms
+
+    @property
+    def wait_ms(self) -> np.ndarray:
+        return self.start_ms - self.enqueue_ms
+
+    @property
+    def msgs_total(self) -> int:
+        return int(self.msgs_base + self.msgs_probe + self.msgs_push
+                   + self.msgs_flush)
+
+    @property
+    def msgs_per_task(self) -> float:
+        return self.msgs_total / max(1, self.server.shape[0])
+
+
+class _Carry(NamedTuple):
+    core_free: jnp.ndarray    # [n, CMAX]
+    mem_free: jnp.ndarray     # [n, MU]
+    prev_start: jnp.ndarray   # [n]
+    rb_release: jnp.ndarray   # [n, R]
+    rb_cpu: jnp.ndarray       # [n, R]
+    rb_mem: jnp.ndarray       # [n, R]
+    rb_dur: jnp.ndarray       # [n, R]
+    view_L: jnp.ndarray       # [n, 2] scheduler cached load vectors
+    view_D: jnp.ndarray       # [n]
+    view_rif: jnp.ndarray     # [n]
+    pending: jnp.ndarray      # [S, n, 4] unflushed scheduler deltas
+    chan_free: jnp.ndarray    # [n] per-server RPC channel next-free
+    push_end: jnp.ndarray     # [] wall time the in-progress push finishes
+    pool_server: jnp.ndarray  # [S, s_pool] Prequal probe pools
+    pool_rif: jnp.ndarray
+    pool_lat: jnp.ndarray
+    pool_age: jnp.ndarray
+    pool_valid: jnp.ndarray
+    msgs: jnp.ndarray         # [4] int32: base, probe, push, flush
+
+
+def _truth_rows(carry: _Carry, rows: jnp.ndarray, now: jnp.ndarray):
+    """Ground-truth (L, D, rif) for a set of servers, from the ring buffer."""
+    rel = carry.rb_release[rows]                       # [k, R]
+    act = (rel > now).astype(jnp.float32)
+    L = jnp.stack([jnp.sum(carry.rb_cpu[rows] * act, -1),
+                   jnp.sum(carry.rb_mem[rows] * act, -1)], axis=-1)
+    D = jnp.sum(carry.rb_dur[rows] * act, -1)
+    rif = jnp.sum(act, -1)
+    return L, D, rif
+
+
+def _truth_all(carry: _Carry, now: jnp.ndarray):
+    act = (carry.rb_release > now).astype(jnp.float32)
+    L = jnp.stack([jnp.sum(carry.rb_cpu * act, -1),
+                   jnp.sum(carry.rb_mem * act, -1)], axis=-1)
+    D = jnp.sum(carry.rb_dur * act, -1)
+    rif = jnp.sum(act, -1)
+    return L, D, rif
+
+
+def _select(policy: str, key, carry: _Carry, r_sub, d_est_srv, now, sched,
+            C, cfg: EngineConfig):
+    """Dispatch the placement policy. Returns (server j, carry, extra_msgs,
+    extra latency ms)."""
+    mask = feasible_mask(r_sub, C)
+    zero = jnp.zeros((), jnp.float32)
+
+    if policy == "random":
+        j = sample_feasible(key, mask, 1)[0]
+        return j, carry, 0, zero
+
+    if policy == "pot":
+        cand = sample_feasible(key, mask, 2)
+        _, _, rif = _truth_rows(carry, cand, now)       # synchronous probes
+        j = jnp.where(rif[1] < rif[0], cand[1], cand[0]).astype(jnp.int32)
+        # 2 probe sends + 2 replies; probes fly in parallel → +1 RTT latency.
+        return j, carry, 4, jnp.float32(2.0 * cfg.rpc.hop_ms)
+
+    if policy in ("dodoor", "one_plus_beta"):
+        k_cand, k_beta = jax.random.split(key)
+        cand = sample_feasible(k_cand, mask, 2)
+        L_ab = carry.view_L[cand]                       # stale cached view
+        D_ab = carry.view_D[cand] + d_est_srv[cand]     # D_j + d_ij
+        C_ab = C[cand]
+        scores = load_score_batched(r_sub[None], L_ab[None], D_ab[None],
+                                    C_ab[None], cfg.alpha)[0]
+        two = jnp.where(scores[0] > scores[1], cand[1], cand[0])
+        if policy == "one_plus_beta":
+            use_two = jax.random.uniform(k_beta) < cfg.beta
+            j = jnp.where(use_two, two, cand[0]).astype(jnp.int32)
+        else:
+            j = two.astype(jnp.int32)
+        # Cache-update blocking: a decision landing inside the push transfer
+        # window waits for it to complete (§6.2's "blocking during cache
+        # updates"; amortizes to ~push_block/b per decision).
+        block = jnp.maximum(0.0, carry.push_end - now)
+        return j, carry, 0, block
+
+    if policy == "prequal":
+        k_sel, k_rand, k_probe = jax.random.split(key, 3)
+        s = sched
+        valid = carry.pool_valid[s]
+        rifs = jnp.where(valid, carry.pool_rif[s], jnp.inf)
+        lats = jnp.where(valid, carry.pool_lat[s], jnp.inf)
+        any_valid = jnp.any(valid)
+        n_valid = jnp.maximum(jnp.sum(valid), 1)
+        sorted_rif = jnp.sort(rifs)
+        q_idx = jnp.clip(
+            (cfg.prequal.q_rif * n_valid.astype(jnp.float32)).astype(jnp.int32),
+            0, rifs.shape[0] - 1)
+        threshold = sorted_rif[q_idx]
+        cold = valid & (carry.pool_rif[s] <= threshold)
+        cold_lat = jnp.where(cold, lats, jnp.inf)
+        entry = jnp.where(jnp.any(cold), jnp.argmin(cold_lat), jnp.argmin(rifs))
+        rand_j = sample_feasible(k_rand, mask, 1)[0]
+        j = jnp.where(any_valid, carry.pool_server[s, entry], rand_j)
+        j = j.astype(jnp.int32)
+        # b_reuse = 1: consume the used entry.
+        new_valid = jnp.where(any_valid,
+                              carry.pool_valid[s].at[entry].set(False),
+                              carry.pool_valid[s])
+        carry = carry._replace(pool_valid=carry.pool_valid.at[s].set(new_valid))
+
+        # Post-scheduling async probes (r_probe servers, true state).
+        n = C.shape[0]
+        probes = jax.random.randint(k_probe, (cfg.prequal.r_probe,), 0, n)
+        pL, pD, prif = _truth_rows(carry, probes, now)
+        ps, pr, plat, page, pv = (carry.pool_server[s], carry.pool_rif[s],
+                                  carry.pool_lat[s], carry.pool_age[s],
+                                  carry.pool_valid[s])
+        for i in range(cfg.prequal.r_probe):
+            slot_scores = jnp.where(pv, page, -jnp.inf)
+            slot = jnp.argmin(slot_scores)       # first invalid, else oldest
+            ps = ps.at[slot].set(probes[i])
+            pr = pr.at[slot].set(prif[i])
+            plat = plat.at[slot].set(pD[i])
+            page = page.at[slot].set(now + jnp.float32(i) * 1e-3)
+            pv = pv.at[slot].set(True)
+        # Maintenance (r_remove=1): evict worst-RIF entry when pool is full.
+        full = jnp.sum(pv) >= pv.shape[0]
+        worst = jnp.argmax(jnp.where(pv, pr, -jnp.inf))
+        pv = jnp.where(full, pv.at[worst].set(False), pv)
+        carry = carry._replace(
+            pool_server=carry.pool_server.at[s].set(ps),
+            pool_rif=carry.pool_rif.at[s].set(pr),
+            pool_lat=carry.pool_lat.at[s].set(plat),
+            pool_age=carry.pool_age.at[s].set(page),
+            pool_valid=carry.pool_valid.at[s].set(pv),
+        )
+        return j, carry, 2 * cfg.prequal.r_probe, zero
+
+    raise ValueError(f"unknown policy {policy!r}")
+
+
+@partial(jax.jit, static_argnames=("cfg", "n", "num_types"))
+def _simulate_jax(xs, C, node_type, mem_unit, cores_per, cfg: EngineConfig,
+                  n: int, num_types: int, seed: int):
+    """The scan. xs = (r_sub [m,2], r_exec [m,T,2], d_est [m,T], d_act [m,T],
+    submit [m], task_id [m])."""
+    S = cfg.num_schedulers
+    R = cfg.rbuf_slots
+    MU = cfg.mem_units
+    base_key = jax.random.PRNGKey(seed)
+
+    # Pad unavailable cores with +inf (never free).
+    core_init = jnp.where(jnp.arange(CMAX)[None, :] < cores_per[:, None],
+                          0.0, jnp.inf)
+
+    carry0 = _Carry(
+        core_free=core_init.astype(jnp.float32),
+        mem_free=jnp.zeros((n, MU), jnp.float32),
+        prev_start=jnp.zeros((n,), jnp.float32),
+        rb_release=jnp.zeros((n, R), jnp.float32),
+        rb_cpu=jnp.zeros((n, R), jnp.float32),
+        rb_mem=jnp.zeros((n, R), jnp.float32),
+        rb_dur=jnp.zeros((n, R), jnp.float32),
+        view_L=jnp.zeros((n, 2), jnp.float32),
+        view_D=jnp.zeros((n,), jnp.float32),
+        view_rif=jnp.zeros((n,), jnp.float32),
+        pending=jnp.zeros((S, n, 4), jnp.float32),
+        chan_free=jnp.zeros((n,), jnp.float32),
+        push_end=jnp.zeros((), jnp.float32),
+        pool_server=jnp.zeros((S, cfg.prequal.s_pool), jnp.int32),
+        pool_rif=jnp.full((S, cfg.prequal.s_pool), jnp.inf, jnp.float32),
+        pool_lat=jnp.full((S, cfg.prequal.s_pool), jnp.inf, jnp.float32),
+        pool_age=jnp.full((S, cfg.prequal.s_pool), -jnp.inf, jnp.float32),
+        pool_valid=jnp.zeros((S, cfg.prequal.s_pool), bool),
+        msgs=jnp.zeros((4,), jnp.int32),
+    )
+
+    def step(carry: _Carry, inp):
+        i, r_sub, r_exec_t, d_est_t, d_act_t, submit, task_id = inp
+        now = submit
+        sched = (i % S).astype(jnp.int32)
+        key = jax.random.fold_in(base_key, task_id)    # §5: task-id seeding
+
+        # Per-server demand/duration for this task's node types.
+        r_srv = r_exec_t[node_type]                    # [n, 2]
+        d_est_srv = d_est_t[node_type]                 # [n]
+
+        j, carry, extra_msgs, extra_lat = _select(
+            cfg.policy, key, carry, r_sub, d_est_srv, now, sched, C, cfg)
+
+        # --- scheduling latency: compute + channel contention + placement hop.
+        # The enqueue RPC's service time grows with the target's load (a busy
+        # server answers its RPC port slower) — this is what makes imbalanced
+        # placement (Random) pay extra scheduling latency, §6.2/§6.3.
+        _, _, rif_j = _truth_rows(carry, j[None], now)
+        occupancy = cfg.rpc.chan_ms * (1.0 + rif_j[0] / cores_per[j])
+        chan_wait = jnp.maximum(0.0, carry.chan_free[j] - now)
+        sched_ms = (cfg.rpc.compute_ms + extra_lat + chan_wait
+                    + occupancy + cfg.rpc.hop_ms)
+        carry = carry._replace(chan_free=carry.chan_free.at[j].set(
+            jnp.maximum(carry.chan_free[j], now) + occupancy))
+        enqueue_t = now + sched_ms
+
+        # --- FCFS start time on server j
+        cores = r_srv[j, 0]
+        mem_mb = r_srv[j, 1]
+        dur = d_act_t[node_type[j]]
+        c_eff = jnp.clip(cores, 1, cores_per[j]).astype(jnp.int32)
+        mu_need = jnp.clip(jnp.ceil(mem_mb / mem_unit[j]), 1, MU).astype(jnp.int32)
+
+        cf = carry.core_free[j]
+        mf = carry.mem_free[j]
+        cf_sorted = jnp.sort(cf)
+        mf_sorted = jnp.sort(mf)
+        start = jnp.maximum(
+            jnp.maximum(enqueue_t, carry.prev_start[j]),
+            jnp.maximum(cf_sorted[c_eff - 1], mf_sorted[mu_need - 1]))
+        # Co-location interference: cores still busy when we start stretch the
+        # actual runtime (profiles are measured at low occupancy, §6.3).
+        pad = CMAX - cores_per[j]
+        busy = jnp.sum(cf > start) - pad          # running tasks' cores
+        frac = busy.astype(jnp.float32) / cores_per[j].astype(jnp.float32)
+        dur = dur * (1.0 + cfg.interference * jnp.clip(frac, 0.0, 1.0))
+        finish = start + dur
+
+        c_ranks = jnp.argsort(jnp.argsort(cf))
+        m_ranks = jnp.argsort(jnp.argsort(mf))
+        cf_new = jnp.where(c_ranks < c_eff, finish, cf)
+        mf_new = jnp.where(m_ranks < mu_need, finish, mf)
+        carry = carry._replace(
+            core_free=carry.core_free.at[j].set(cf_new),
+            mem_free=carry.mem_free.at[j].set(mf_new),
+            prev_start=carry.prev_start.at[j].set(start),
+        )
+
+        # --- in-flight ring buffer insert (slot with min release time)
+        slot = jnp.argmin(carry.rb_release[j])
+        carry = carry._replace(
+            rb_release=carry.rb_release.at[j, slot].set(finish),
+            rb_cpu=carry.rb_cpu.at[j, slot].set(cores),
+            rb_mem=carry.rb_mem.at[j, slot].set(mem_mb),
+            rb_dur=carry.rb_dur.at[j, slot].set(d_est_srv[j]),
+        )
+
+        msgs = carry.msgs.at[0].add(2).at[1].add(extra_msgs)
+
+        # The data store (and its push/flush traffic) only exists for the
+        # cached-view policies; probing policies carry no store at all.
+        if cfg.policy in ("dodoor", "one_plus_beta"):
+            # --- scheduler delta accumulation (addNewLoad payload)
+            delta = jnp.stack([cores, mem_mb, d_est_srv[j], 1.0])
+            carry = carry._replace(pending=carry.pending.at[sched, j].add(delta))
+
+            # --- addNewLoad flush (per-scheduler cadence)
+            do_flush = ((i // S) + 1) % cfg.flush_every == 0
+            carry = carry._replace(pending=jnp.where(
+                do_flush, carry.pending.at[sched].set(0.0), carry.pending))
+            msgs = jnp.where(do_flush, msgs.at[3].add(1), msgs)
+
+            # --- data-store batch push (every b decisions cluster-wide);
+            #     suppressed during a §4.3 store outage (stale views persist,
+            #     scheduling continues — graceful degradation by design).
+            do_push = (i + 1) % cfg.b == 0
+            if cfg.outage_ms:
+                o0, o1 = cfg.outage_ms
+                do_push = do_push & ~((now >= o0) & (now < o1))
+
+            def apply_push(carry):
+                L, D, rif = _truth_all(carry, now)
+                unflushed = jnp.sum(carry.pending, axis=0)     # [n, 4]
+                store_L = jnp.maximum(0.0, L - unflushed[:, :2])
+                store_D = jnp.maximum(0.0, D - unflushed[:, 2])
+                store_rif = jnp.maximum(0.0, rif - unflushed[:, 3])
+                return carry._replace(view_L=store_L, view_D=store_D,
+                                      view_rif=store_rif,
+                                      push_end=now + cfg.rpc.push_block_ms)
+
+            carry = jax.lax.cond(do_push, apply_push, lambda c: c, carry)
+            msgs = jnp.where(do_push, msgs.at[2].add(S), msgs)
+        carry = carry._replace(msgs=msgs)
+
+        out = (j, start, finish, enqueue_t, sched_ms, cores, mem_mb)
+        return carry, out
+
+    carry, outs = jax.lax.scan(step, carry0, xs)
+    return carry.msgs, outs
+
+
+def simulate(workload, cluster: ClusterSpec, cfg: EngineConfig,
+             seed: int = 0) -> SimResult:
+    """Run a full experiment: one workload trace through one policy."""
+    if cfg.policy == "dodoor":
+        bound = max(1, 2 * cfg.b // max(1, cfg.num_schedulers))
+        if cfg.flush_every > bound:
+            raise ValueError(
+                f"flush_every={cfg.flush_every} violates the §4.1 mini-batch "
+                f"bound 2b/num_schedulers = {bound}")
+    n = cluster.num_servers
+    C = jnp.asarray(cluster.C)
+    node_type = jnp.asarray(cluster.node_type)
+    cores_per = jnp.asarray(cluster.C[:, 0], jnp.int32)
+    mem_unit = jnp.asarray(cluster.C[:, 1] / cfg.mem_units, jnp.float32)
+
+    m = workload.r_submit.shape[0]
+    xs = (
+        jnp.arange(m, dtype=jnp.int32),
+        jnp.asarray(workload.r_submit),
+        jnp.asarray(workload.r_exec),
+        jnp.asarray(workload.d_est),
+        jnp.asarray(workload.d_act),
+        jnp.asarray(workload.submit_ms),
+        jnp.arange(m, dtype=jnp.int32),     # task ids
+    )
+    msgs, outs = _simulate_jax(xs, C, node_type, mem_unit, cores_per, cfg,
+                               n, cluster.num_types, seed)
+    msgs = np.asarray(msgs)
+    j, start, finish, enq, sched_ms, cores, mem_mb = (np.asarray(o) for o in outs)
+    return SimResult(
+        server=j.astype(np.int32),
+        submit_ms=np.asarray(workload.submit_ms),
+        enqueue_ms=enq, start_ms=start, finish_ms=finish, sched_ms=sched_ms,
+        cores=cores, mem_mb=mem_mb,
+        msgs_base=int(msgs[0]), msgs_probe=int(msgs[1]),
+        msgs_push=int(msgs[2]), msgs_flush=int(msgs[3]),
+        policy=cfg.policy,
+    )

@@ -1,0 +1,74 @@
+"""Hierarchical mini-clusters (§4.2).
+
+"Dodoor is designed to natively support hierarchical mini-clusters ...
+each server can be mapped to different schedulers and data stores within
+its own mini-cluster." Operators split the fleet into k independent
+mini-clusters — each with its own scheduler set, data store, and batch
+counter — and route submissions round-robin across them. No cross-cluster
+state exists, so mini-clusters fail, scale, and recover independently
+(the reliability argument of §4.2/§4.3).
+
+Implementation: partition the fleet round-robin by node index (preserving
+the type mix per mini-cluster), split the task trace round-robin, run the
+engine per mini-cluster, and merge results in submission order.
+"""
+from __future__ import annotations
+
+from dataclasses import replace as dc_replace
+
+import numpy as np
+
+from .cluster import ClusterSpec
+from .engine import EngineConfig, SimResult, simulate
+
+
+def split_cluster(cluster: ClusterSpec, k: int):
+    """k mini-clusters with interleaved membership (type mix preserved).
+    Returns list of (spec, global_server_indices)."""
+    out = []
+    for c in range(k):
+        idx = np.arange(c, cluster.num_servers, k)
+        out.append((ClusterSpec(C=cluster.C[idx],
+                                node_type=cluster.node_type[idx],
+                                type_names=cluster.type_names), idx))
+    return out
+
+
+def simulate_hierarchical(workload, cluster: ClusterSpec, cfg: EngineConfig,
+                          k: int, seed: int = 0) -> SimResult:
+    """Run k independent mini-clusters; tasks round-robin across them."""
+    m = workload.r_submit.shape[0]
+    parts = split_cluster(cluster, k)
+    assign = np.arange(m) % k
+
+    results = []
+    for c, (spec, idx) in enumerate(parts):
+        sel = np.where(assign == c)[0]
+        sub = dc_replace(
+            workload,
+            r_submit=workload.r_submit[sel],
+            r_exec=workload.r_exec[sel],
+            d_est=workload.d_est[sel],
+            d_act=workload.d_act[sel],
+            task_type=workload.task_type[sel],
+            submit_ms=workload.submit_ms[sel],
+        )
+        sub_cfg = cfg._replace(b=max(1, spec.num_servers // 2))
+        res = simulate(sub, spec, sub_cfg, seed=seed + c)
+        results.append((res, sel, idx))
+
+    # merge back into submission order with global server ids
+    server = np.zeros(m, np.int32)
+    arrays = {f: np.zeros(m, np.float32) for f in
+              ("submit_ms", "enqueue_ms", "start_ms", "finish_ms",
+               "sched_ms", "cores", "mem_mb")}
+    msgs = np.zeros(4, np.int64)
+    for res, sel, idx in results:
+        server[sel] = idx[res.server]
+        for f in arrays:
+            arrays[f][sel] = getattr(res, f)
+        msgs += [res.msgs_base, res.msgs_probe, res.msgs_push,
+                 res.msgs_flush]
+    return SimResult(server=server, msgs_base=int(msgs[0]),
+                     msgs_probe=int(msgs[1]), msgs_push=int(msgs[2]),
+                     msgs_flush=int(msgs[3]), policy=cfg.policy, **arrays)

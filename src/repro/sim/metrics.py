@@ -1,0 +1,110 @@
+"""Metric aggregation for simulation results — the paper's §6.2 metric list.
+
+1) RPC counts processed by all schedulers;
+2) cluster throughput = processed requests / experiment wall time;
+3) mean and p95 end-to-end task makespan;
+4) mean and p95 scheduling latency (scheduler-added overhead);
+5) per-server resource utilization sampled every 10 s → cluster-wide mean
+   and variance over time (Figs. 5/7).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import numpy as np
+
+from .cluster import ClusterSpec
+from .engine import SimResult
+
+
+class Summary(NamedTuple):
+    policy: str
+    num_tasks: int
+    msgs_total: int
+    msgs_per_task: float
+    throughput_tps: float        # tasks per second of wall time
+    makespan_mean_ms: float
+    makespan_p95_ms: float
+    sched_mean_ms: float
+    sched_p95_ms: float
+    wait_mean_ms: float
+    wall_time_s: float
+
+    def row(self) -> str:
+        return (f"{self.policy:>14s}  msgs/task={self.msgs_per_task:6.2f}  "
+                f"tput={self.throughput_tps:8.2f}/s  "
+                f"mk_mean={self.makespan_mean_ms:9.1f}ms  "
+                f"mk_p95={self.makespan_p95_ms:9.1f}ms  "
+                f"sched_mean={self.sched_mean_ms:6.2f}ms  "
+                f"sched_p95={self.sched_p95_ms:6.2f}ms")
+
+
+def summarize(res: SimResult) -> Summary:
+    mk = res.makespan_ms
+    wall_s = float(res.finish_ms.max() - res.submit_ms.min()) / 1e3
+    return Summary(
+        policy=res.policy,
+        num_tasks=int(res.server.shape[0]),
+        msgs_total=res.msgs_total,
+        msgs_per_task=res.msgs_per_task,
+        throughput_tps=res.server.shape[0] / max(wall_s, 1e-9),
+        makespan_mean_ms=float(mk.mean()),
+        makespan_p95_ms=float(np.percentile(mk, 95)),
+        sched_mean_ms=float(res.sched_ms.mean()),
+        sched_p95_ms=float(np.percentile(res.sched_ms, 95)),
+        wait_mean_ms=float(res.wait_ms.mean()),
+        wall_time_s=wall_s,
+    )
+
+
+def utilization_timeline(res: SimResult, cluster: ClusterSpec,
+                         dt_ms: float = 10_000.0):
+    """Per-server CPU/memory utilization sampled every ``dt_ms`` (paper: 10 s).
+
+    Returns (times_s [T], cpu_util [T, n], mem_util [T, n]) where util is the
+    fraction of the server's capacity in use by *running* tasks.
+    """
+    t0 = float(res.submit_ms.min())
+    t1 = float(res.finish_ms.max())
+    times = np.arange(t0, t1 + dt_ms, dt_ms)
+    n = cluster.num_servers
+    cpu = np.zeros((times.shape[0], n), np.float64)
+    mem = np.zeros((times.shape[0], n), np.float64)
+    # Chunk over samples to bound memory (m × T can be 100k × 200).
+    for ti, t in enumerate(times):
+        running = (res.start_ms <= t) & (t < res.finish_ms)
+        if not running.any():
+            continue
+        srv = res.server[running]
+        cpu[ti] = np.bincount(srv, weights=res.cores[running], minlength=n)
+        mem[ti] = np.bincount(srv, weights=res.mem_mb[running], minlength=n)
+    cpu /= cluster.C[None, :, 0]
+    mem /= cluster.C[None, :, 1]
+    return times / 1e3, cpu, mem
+
+
+def utilization_stats(res: SimResult, cluster: ClusterSpec,
+                      dt_ms: float = 10_000.0):
+    """The Fig. 5/7 quantities: cluster-wide mean and variance of per-server
+    utilization at each sample, averaged over the busy portion of the run."""
+    times, cpu, mem = utilization_timeline(res, cluster, dt_ms)
+    busy = cpu.mean(axis=1) > 1e-6
+    if not busy.any():
+        return dict(cpu_mean=0.0, cpu_var=0.0, mem_mean=0.0, mem_var=0.0)
+    return dict(
+        cpu_mean=float(cpu[busy].mean()),
+        cpu_var=float(cpu[busy].var(axis=1).mean()),
+        mem_mean=float(mem[busy].mean()),
+        mem_var=float(mem[busy].var(axis=1).mean()),
+    )
+
+
+def resource_violations(res: SimResult, cluster: ClusterSpec,
+                        dt_ms: float = 1_000.0) -> int:
+    """Sanity invariant: running tasks never exceed server capacity.
+
+    Returns the number of (sample, server) cells violating capacity — must be
+    0 for a correct FCFS engine (tolerance for float rounding).
+    """
+    _, cpu, mem = utilization_timeline(res, cluster, dt_ms)
+    return int(((cpu > 1.0 + 1e-6) | (mem > 1.0 + 1e-6)).sum())

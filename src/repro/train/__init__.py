@@ -1,0 +1,4 @@
+from .steps import chunked_ce_loss, make_serve_step, make_train_step, make_prefill_step
+
+__all__ = ["chunked_ce_loss", "make_serve_step", "make_train_step",
+           "make_prefill_step"]

@@ -1,0 +1,114 @@
+"""Step functions shared by the trainer, the server, and the dry-run.
+
+The cross-entropy is **chunked over the sequence**: at dbrx scale the full
+[B, L, V] logits tensor is ~26 GB per device — the unembed matmul and the
+log-softmax run per sequence-chunk inside a scan, so only [B, chunk, V]
+(vocab-sharded on 'model') is ever live. This is the standard large-vocab
+memory fix and the dry-run's memory analysis reflects it.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Callable, Dict
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from ..models import registry
+from ..optim import adamw_init, adamw_update
+from ..models import analysis
+
+
+def chunked_ce_loss(cfg: ModelConfig, params, hidden: jnp.ndarray,
+                    labels: jnp.ndarray, chunk: int = 512) -> jnp.ndarray:
+    """hidden [B, L, d] (pre-unembed), labels [B, L] → mean CE.
+
+    The unembed weight is the tied embedding or lm_head; logits for each
+    chunk are formed, reduced, and discarded inside the scan."""
+    if cfg.tie_embeddings or "lm_head" not in params:
+        w = params["embed"].T                      # [d, V]
+    else:
+        w = params["lm_head"]
+    B, L, d = hidden.shape
+    chunk = min(chunk, L)
+    pad = (-L) % chunk
+    if pad:
+        hidden = jnp.pad(hidden, ((0, 0), (0, pad), (0, 0)))
+        labels = jnp.pad(labels, ((0, 0), (0, pad)), constant_values=-1)
+    n = (L + pad) // chunk
+    hc = hidden.reshape(B, n, chunk, d).transpose(1, 0, 2, 3)
+    lc = labels.reshape(B, n, chunk).transpose(1, 0, 2)
+
+    def body(acc, inp):
+        h, y = inp
+        logits = (h @ w).astype(jnp.float32)       # [B, chunk, V]
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        tgt = jnp.take_along_axis(logits, jnp.maximum(y, 0)[..., None],
+                                  axis=-1)[..., 0]
+        valid = (y >= 0).astype(jnp.float32)
+        nll = (lse - tgt) * valid
+        return (acc[0] + nll.sum(), acc[1] + valid.sum()), None
+
+    (tot, cnt), _ = analysis.scan(body,
+                                  (jnp.float32(0.0), jnp.float32(0.0)),
+                                  (hc, lc))
+    return tot / jnp.maximum(cnt, 1.0)
+
+
+def make_train_step(cfg: ModelConfig, lr=3e-4, *, aux_weight: float = 0.01,
+                    remat: bool = True) -> Callable:
+    """(params, opt_state, batch) → (params', opt_state', metrics)."""
+
+    def train_step(params, opt_state, batch):
+        labels = batch["labels"]
+
+        def loss_fn(p):
+            hidden, aux = registry.forward(cfg, p, batch, remat=remat,
+                                           unembed=False)
+            hidden = hidden[:, -labels.shape[1]:]      # vlm: text tail only
+            loss = chunked_ce_loss(cfg, p, hidden, labels)
+            return loss + aux_weight * aux.get("moe_aux", 0.0), loss
+
+        (total, ce), grads = jax.value_and_grad(loss_fn, has_aux=True)(params)
+        params, opt_state = adamw_update(grads, opt_state, params, lr=lr)
+        return params, opt_state, {"loss": ce, "total": total}
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig) -> Callable:
+    """(params, batch) → logits of the last position (inference prefill)."""
+
+    def prefill_step(params, batch):
+        hidden, _ = registry.forward(cfg, params, batch, remat=False,
+                                     unembed=False)
+        last = hidden[:, -1:]
+        if cfg.tie_embeddings or "lm_head" not in params:
+            return last @ params["embed"].T
+        return last @ params["lm_head"]
+
+    return prefill_step
+
+
+def make_serve_step(cfg: ModelConfig, *, greedy: bool = True) -> Callable:
+    """(params, cache, token) → (next_token, cache') — one decode step."""
+
+    def serve_step(params, cache, token):
+        logits, cache = registry.decode_step(cfg, params, cache, token)
+        nxt = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
+        return nxt, cache
+
+    return serve_step
+
+
+def init_train_state(cfg: ModelConfig, key):
+    params = registry.init_params(cfg, key)
+    return params, adamw_init(params)
+
+
+def abstract_train_state(cfg: ModelConfig):
+    """(params, opt_state) ShapeDtypeStructs — no allocation (dry-run)."""
+    params = registry.abstract_params(cfg)
+    opt = jax.eval_shape(adamw_init, params)
+    return params, opt

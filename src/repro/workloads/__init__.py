@@ -1,0 +1,6 @@
+"""repro.workloads — Azure VM trace synthesis (§6.2), FunctionBench (§6.3,
+Tables 3-4 embedded), Poisson arrivals."""
+from . import azure, functionbench
+from .arrivals import poisson_arrivals, round_robin_scheduler
+
+__all__ = ["azure", "functionbench", "poisson_arrivals", "round_robin_scheduler"]

@@ -1,0 +1,15 @@
+"""Arrival-process helpers (§5: Poisson arrivals with varying QPS)."""
+from __future__ import annotations
+
+import numpy as np
+
+
+def poisson_arrivals(m: int, qps: float, seed: int = 0) -> np.ndarray:
+    """[m] float32 arrival timestamps (ms) of a Poisson process at ``qps``."""
+    rng = np.random.RandomState(seed)
+    return np.cumsum(rng.exponential(1000.0 / qps, size=m)).astype(np.float32)
+
+
+def round_robin_scheduler(m: int, num_schedulers: int) -> np.ndarray:
+    """[m] int32: which scheduler instance handles task i (§6.2: round-robin)."""
+    return (np.arange(m) % num_schedulers).astype(np.int32)

@@ -1,0 +1,78 @@
+"""Azure VM trace workload (§6.2) — synthesized to match the paper's stats.
+
+The paper uses the first 4,000 VM requests from the Azure 2020 dataset that
+are (a) shorter than 10 minutes and (b) smaller than the minimum host
+capacity. Fig. 3 shows the resulting lifetime distribution: most VMs < 2 min,
+mean lifetime 4.13 min, hard cut at 10 min. The raw trace is not shippable
+offline, so we synthesize a trace that matches those moments:
+
+* lifetime ~ a two-component mixture. A single truncated lognormal cannot
+  reach mean 4.13 min with median < 2 min on [5 s, 600 s] (the truncation
+  caps the tail; max reachable mean is ~2.9 min) — Fig. 3's shape is
+  *bimodal*: a large mass of short-lived VMs plus a cluster of long-lived
+  VMs compressed against the paper's 10-minute filter cap. (Azure trace
+  analyses, e.g. Resource Central [18], report exactly this bimodality.)
+  We use 60% LogNormal(ln 50 s, 0.8) + 40% Uniform[433 s, 600 s], clipped
+  to [5, 600]: mean ≈ 248 s (4.13 min ✓), median ≈ 105 s (< 2 min ✓);
+* VM sizes as fractions of a Standard_E96as_v6 host (96 vCPU / 672 GB —
+  7 GB per vCPU), restricted below the smallest server (8 cores / 64 GB), so
+  cores ∈ {1, 2, 4, 8} (skewed small, as in Azure) and memory = 7 GB/core;
+* durations are server-independent (stress-ng runs the VM for its lifetime
+  regardless of node type — §6.2 "ignoring differences in CPU/memory types").
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+_SHORT_FRAC = 0.6                 # mass of the short-lived component
+_MU = float(np.log(50.0))         # short component: LogNormal(ln 50 s, 0.8)
+_SIGMA = 0.8
+_LONG_LO, _LONG_HI = 433.0, 600.0  # long component: Uniform against the cap
+_MIN_S, _MAX_S = 5.0, 600.0
+
+_CORE_CHOICES = np.array([1, 2, 4, 8], np.float32)
+_CORE_WEIGHTS = np.array([0.40, 0.30, 0.20, 0.10])
+_GB_PER_CORE = 7.0  # Standard_E96as_v6: 672 GB / 96 vCPU
+
+
+@dataclass(frozen=True)
+class AzureWorkload:
+    r_submit: np.ndarray    # [m, 2] (cores, MB)
+    r_exec: np.ndarray      # [m, T, 2] — identical across types
+    d_est: np.ndarray       # [m, T] lifetime ms — identical across types
+    d_act: np.ndarray       # [m, T] — equals d_est (stress-ng runs the VM
+                            #          for exactly its trace lifetime, §6.2)
+    task_type: np.ndarray   # [m] VM size-class index (for reporting)
+    submit_ms: np.ndarray   # [m]
+
+
+def synthesize(m: int = 4000, qps: float = 5.0, seed: int = 0,
+               num_node_types: int = 4) -> AzureWorkload:
+    rng = np.random.RandomState(seed)
+
+    short = np.exp(rng.normal(_MU, _SIGMA, size=m))
+    long_ = rng.uniform(_LONG_LO, _LONG_HI, size=m)
+    is_short = rng.rand(m) < _SHORT_FRAC
+    life_s = np.clip(np.where(is_short, short, long_), _MIN_S, _MAX_S)
+    d_ms = (life_s * 1000.0).astype(np.float32)
+
+    size_idx = rng.choice(len(_CORE_CHOICES), size=m, p=_CORE_WEIGHTS)
+    cores = _CORE_CHOICES[size_idx]
+    mem_mb = cores * _GB_PER_CORE * 1000.0
+    r = np.stack([cores, mem_mb], axis=1).astype(np.float32)
+
+    inter = rng.exponential(1000.0 / qps, size=m)
+    submit = np.cumsum(inter).astype(np.float32)
+
+    T = num_node_types
+    d = np.repeat(d_ms[:, None], T, axis=1)
+    return AzureWorkload(
+        r_submit=r,
+        r_exec=np.repeat(r[:, None, :], T, axis=1),
+        d_est=d,
+        d_act=d.copy(),
+        task_type=size_idx.astype(np.int32),
+        submit_ms=submit,
+    )

@@ -1,0 +1,29 @@
+"""Shared fixtures. NOTE: no XLA_FLAGS here — smoke tests and benches must
+see the single real CPU device; only launch/dryrun.py forces 512 devices."""
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def testbed():
+    from repro.sim import make_testbed
+    return make_testbed()
+
+
+@pytest.fixture(scope="session")
+def small_testbed():
+    """A 20-node heterogeneous fleet (scale=0.2) for fast engine tests."""
+    from repro.sim import make_testbed
+    return make_testbed(scale=0.2)
+
+
+@pytest.fixture(scope="session")
+def fb_small():
+    from repro.workloads import functionbench as fb
+    return fb.synthesize(m=600, qps=60.0, seed=0)
+
+
+@pytest.fixture(scope="session")
+def azure_small():
+    from repro.workloads import azure
+    return azure.synthesize(m=400, qps=4.0, seed=0)

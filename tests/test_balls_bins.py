@@ -1,0 +1,94 @@
+"""Empirical checks of the §2.1 balls-into-bins theory the paper builds on.
+
+These are statistical, not exact: we verify the *orderings* and scalings the
+bounds predict, with comfortable margins, at sizes that run in seconds.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.balls_bins import (batched_gap_bound, gap,
+                                   one_plus_beta_batched_gap_bound,
+                                   power_of_d_gap_bound, run_balls_into_bins,
+                                   single_choice_gap_bound, tuned_beta)
+
+N = 64
+M = 64 * 64      # m >> n regime
+
+
+def _gap(key, d=2, beta=1.0, batch=1, weights=None, m=M):
+    w = weights if weights is not None else jnp.ones((m,))
+    loads = run_balls_into_bins(key, w, N, d=d, beta=beta, batch=batch)
+    return float(gap(loads))
+
+
+def _mean_gap(seeds, **kw):
+    return np.mean([_gap(jax.random.PRNGKey(s), **kw) for s in seeds])
+
+
+class TestClassicBounds:
+    def test_two_choices_beats_single(self):
+        """Θ(√(m log n/n)) vs Θ(log log n): orders of magnitude at m>>n."""
+        g1 = _mean_gap(range(3), d=1)
+        g2 = _mean_gap(range(3), d=2)
+        assert g2 < g1 / 3
+        assert g2 <= 4 * power_of_d_gap_bound(N) + 2
+        assert g1 <= 4 * single_choice_gap_bound(M, N)
+
+    def test_three_choices_beats_two_slightly(self):
+        g2 = _mean_gap(range(4), d=2)
+        g3 = _mean_gap(range(4), d=3)
+        assert g3 <= g2 + 1.0      # log d in the denominator: small gain
+
+    def test_conservation(self):
+        loads = run_balls_into_bins(jax.random.PRNGKey(0), jnp.ones((M,)), N)
+        assert float(jnp.sum(loads)) == M
+
+
+class TestBatchedModel:
+    """The b-batched setting [11, 42] that Dodoor instantiates."""
+
+    def test_gap_grows_with_batch(self):
+        gaps = [_mean_gap(range(3), batch=b) for b in (1, N, 8 * N)]
+        assert gaps[0] <= gaps[1] + 0.5
+        assert gaps[1] < gaps[2]
+
+    def test_batched_two_choice_still_beats_single_fresh(self):
+        """The paper's core bet: stale-but-two-choice ≪ fresh-single-choice."""
+        g_batched_two = _mean_gap(range(3), d=2, batch=N // 2)   # b = n/2
+        g_fresh_single = _mean_gap(range(3), d=1, batch=1)
+        assert g_batched_two < g_fresh_single / 2
+
+    def test_large_batch_scale(self):
+        b = 8 * N
+        g = _mean_gap(range(3), d=2, batch=b)
+        assert g <= 4 * batched_gap_bound(b, N) + 4   # Θ(b/n)
+
+    def test_one_plus_beta_improves_large_batches(self):
+        """[42]: for b ∈ [2n log n, n³], tuned (1+β) beats always-two."""
+        b = int(2 * N * np.log(N)) * 2
+        beta = tuned_beta(b, N)
+        g_two = _mean_gap(range(4), d=2, batch=b)
+        g_beta = _mean_gap(range(4), d=2, beta=beta, batch=b)
+        bound = one_plus_beta_batched_gap_bound(b, N)
+        assert g_beta <= max(g_two * 1.15, 4 * bound)  # no worse + in scale
+
+
+class TestWeighted:
+    def test_weighted_two_choice_balances(self):
+        key = jax.random.PRNGKey(5)
+        w = jax.random.exponential(key, (M,))
+        g2 = np.mean([_gap(jax.random.PRNGKey(s), d=2,
+                           weights=w) for s in range(3)])
+        g1 = np.mean([_gap(jax.random.PRNGKey(s), d=1,
+                           weights=w) for s in range(3)])
+        assert g2 < g1 / 2
+
+    def test_weighted_batched_preserves_bound(self):
+        """[42]: power-of-two directly in the weighted b-batched model."""
+        key = jax.random.PRNGKey(6)
+        w = jax.random.exponential(key, (M,))
+        g = np.mean([_gap(jax.random.PRNGKey(s), d=2, batch=N,
+                          weights=w) for s in range(3)])
+        assert g <= 6 * np.log(N) / np.log(np.log(N))  # Θ(log n/log log n)·c

@@ -1,0 +1,71 @@
+"""b-batched data-store cache protocol tests (§3.1 / §4.1)."""
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import cache, make_datastore, make_server_state
+from repro.core.types import SchedulerView
+
+
+def _C(n=4):
+    return jnp.tile(jnp.array([[8.0, 64000.0]]), (n, 1))
+
+
+class TestStoreOps:
+    def test_add_new_load_accumulates(self):
+        store = make_datastore(_C())
+        store = cache.add_new_load(store, jnp.int32(2), jnp.array([2.0, 100.0]),
+                                   jnp.float32(500.0))
+        store = cache.add_new_load(store, jnp.int32(2), jnp.array([1.0, 50.0]),
+                                   jnp.float32(300.0))
+        assert np.allclose(store.L[2], [3.0, 150.0])
+        assert float(store.D[2]) == 800.0
+        assert float(store.rif[2]) == 2.0
+
+    def test_override_replaces(self):
+        store = make_datastore(_C())
+        store = cache.add_new_load(store, jnp.int32(1), jnp.array([4.0, 10.0]),
+                                   jnp.float32(100.0))
+        store = cache.override_node_state(store, jnp.int32(1),
+                                          jnp.array([1.0, 2.0]),
+                                          jnp.float32(7.0), jnp.float32(1.0))
+        assert np.allclose(store.L[1], [1.0, 2.0])
+        assert float(store.D[1]) == 7.0
+
+    def test_tick_pushes_every_b(self):
+        """p ≡ (p+1) mod b (§3.1): push fires exactly every b decisions."""
+        store = make_datastore(_C())
+        pushes = []
+        for _ in range(10):
+            store, push = cache.tick(store, b=4)
+            pushes.append(bool(push))
+        assert pushes == [False, False, False, True] * 2 + [False, False]
+
+    def test_push_if_refreshes_view(self):
+        C = _C()
+        store = make_datastore(C)
+        store = cache.add_new_load(store, jnp.int32(0), jnp.array([5.0, 5.0]),
+                                   jnp.float32(50.0))
+        stale = SchedulerView(L=jnp.zeros((4, 2)), D=jnp.zeros(4),
+                              rif=jnp.zeros(4), C=C)
+        same = cache.push_if(jnp.bool_(False), store, stale)
+        assert float(same.L[0, 0]) == 0.0
+        fresh = cache.push_if(jnp.bool_(True), store, stale)
+        assert float(fresh.L[0, 0]) == 5.0
+
+    def test_recovery_rebuild_from_truth(self):
+        """§4.3: a restarted store rebuilds from server overrides."""
+        state = make_server_state(_C())
+        state = state._replace(L=state.L.at[3].set(jnp.array([2.0, 9.0])))
+        store = cache.store_from_truth(state)
+        assert np.allclose(store.L[3], [2.0, 9.0])
+        assert int(store.p) == 0
+
+
+class TestDefaults:
+    def test_batch_default_half_nodes(self):
+        assert cache.default_batch_size(100) == 50    # §3.2: b = n/2
+        assert cache.default_batch_size(1) == 1
+
+    def test_minibatch_bound(self):
+        # §4.1: mini-batch ≤ b / num_schedulers · 2
+        assert cache.scheduler_minibatch(50, 5) == 20

@@ -1,0 +1,140 @@
+"""Discrete-event engine invariants + exact message accounting."""
+import numpy as np
+import pytest
+
+from repro.sim import (EngineConfig, make_testbed, resource_violations,
+                       simulate, summarize)
+from repro.workloads import functionbench as fb
+
+POLICIES = ("random", "pot", "dodoor", "prequal", "one_plus_beta")
+
+
+@pytest.fixture(scope="module", params=POLICIES)
+def result(request, small_testbed, fb_small):
+    cfg = EngineConfig(policy=request.param,
+                       b=max(1, small_testbed.num_servers // 2))
+    return simulate(fb_small, small_testbed, cfg), small_testbed, fb_small
+
+
+class TestInvariants:
+    def test_all_tasks_placed(self, result):
+        res, cluster, wl = result
+        assert res.server.shape[0] == wl.r_submit.shape[0]
+        assert (res.server >= 0).all() and (res.server < cluster.num_servers).all()
+
+    def test_causality(self, result):
+        res, _, _ = result
+        assert (res.enqueue_ms >= res.submit_ms - 1e-3).all()
+        assert (res.start_ms >= res.enqueue_ms - 1e-3).all()
+        assert (res.finish_ms > res.start_ms).all()
+
+    def test_fcfs_start_order_per_server(self, result):
+        """§4.2: tasks start in enqueue (FCFS) order on each server."""
+        res, cluster, _ = result
+        for j in range(cluster.num_servers):
+            on_j = np.where(res.server == j)[0]
+            starts = res.start_ms[on_j]          # placement order == queue order
+            assert (np.diff(starts) >= -1e-3).all()
+
+    def test_capacity_never_violated(self, result):
+        res, cluster, _ = result
+        assert resource_violations(res, cluster, dt_ms=500.0) == 0
+
+    def test_durations_respected(self, result):
+        """Runtime = profiled actual × (1 + interference·busy_frac)."""
+        res, cluster, wl = result
+        ntype = cluster.node_type[res.server]
+        expect = wl.d_act[np.arange(len(ntype)), ntype]
+        ran = res.finish_ms - res.start_ms
+        assert (ran >= expect - 1e-3).all()
+        assert (ran <= expect * 1.3 + 1e-3).all()   # default interference=0.3
+
+    def test_deterministic_across_runs(self, result):
+        res, cluster, wl = result
+        cfg = EngineConfig(policy=res.policy,
+                           b=max(1, cluster.num_servers // 2))
+        res2 = simulate(wl, cluster, cfg)
+        assert (res.server == res2.server).all()
+        assert np.allclose(res.finish_ms, res2.finish_ms)
+
+
+class TestMessageAccounting:
+    """Exact per-protocol counts (Fig. 1, §4.1, §5)."""
+
+    def _run(self, policy, cluster, wl, **kw):
+        cfg = EngineConfig(policy=policy, b=10, num_schedulers=5,
+                           flush_every=2, **kw)
+        return simulate(wl, cluster, cfg)
+
+    def test_random_base_only(self, small_testbed, fb_small):
+        m = fb_small.r_submit.shape[0]
+        res = self._run("random", small_testbed, fb_small)
+        assert res.msgs_total == 2 * m
+        assert res.msgs_probe == res.msgs_push == res.msgs_flush == 0
+
+    def test_pot_two_probe_roundtrips(self, small_testbed, fb_small):
+        m = fb_small.r_submit.shape[0]
+        res = self._run("pot", small_testbed, fb_small)
+        assert res.msgs_base == 2 * m
+        assert res.msgs_probe == 4 * m
+        assert res.msgs_push == res.msgs_flush == 0
+
+    def test_prequal_r_probe_roundtrips(self, small_testbed, fb_small):
+        m = fb_small.r_submit.shape[0]
+        res = self._run("prequal", small_testbed, fb_small)
+        assert res.msgs_probe == 2 * 3 * m       # r_probe = 3
+
+    def test_dodoor_push_and_flush_counts(self, small_testbed, fb_small):
+        m = fb_small.r_submit.shape[0]
+        S, b, fe = 5, 10, 2
+        res = self._run("dodoor", small_testbed, fb_small)
+        assert res.msgs_base == 2 * m
+        assert res.msgs_probe == 0
+        assert res.msgs_push == S * (m // b)     # one push per scheduler/batch
+        # Each scheduler flushes every flush_every of its own decisions.
+        per_sched = [m // S + (1 if s < m % S else 0) for s in range(S)]
+        assert res.msgs_flush == sum(c // fe for c in per_sched)
+
+    def test_flush_bound_enforced(self, small_testbed, fb_small):
+        with pytest.raises(ValueError):
+            simulate(fb_small, small_testbed,
+                     EngineConfig(policy="dodoor", b=10, num_schedulers=5,
+                                  flush_every=100))
+
+
+class TestStaleness:
+    def test_smaller_b_fresher_better_placement(self, small_testbed):
+        """Fig. 8 trade-off: smaller b ⇒ better makespan, more messages."""
+        wl = fb.synthesize(m=1500, qps=80.0, seed=1)
+        small = summarize(simulate(wl, small_testbed,
+                                   EngineConfig(policy="dodoor", b=5)))
+        big = summarize(simulate(wl, small_testbed,
+                                 EngineConfig(policy="dodoor", b=160,
+                                              flush_every=32)))
+        assert small.msgs_per_task > big.msgs_per_task
+        assert small.makespan_mean_ms <= big.makespan_mean_ms * 1.10
+
+
+class TestMessageFormulaProperty:
+    """Hypothesis: the Dodoor message ledger matches the closed-form protocol
+    count for ANY (b, flush_every, num_schedulers, m) — the §4.1 accounting
+    is exact, not tuned to the defaults."""
+
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+
+    @given(b=st.integers(2, 60), s=st.integers(1, 8),
+           fe=st.integers(1, 8), m=st.integers(20, 150))
+    @settings(max_examples=12, deadline=None)
+    def test_ledger_closed_form(self, b, s, fe, m, small_testbed):
+        from hypothesis import assume
+        from repro.workloads import functionbench as fb
+        assume(fe <= max(1, 2 * b // s))
+        wl = fb.synthesize(m=m, qps=80.0, seed=0)
+        res = simulate(wl, small_testbed,
+                       EngineConfig(policy="dodoor", b=b, num_schedulers=s,
+                                    flush_every=fe))
+        assert res.msgs_base == 2 * m
+        assert res.msgs_push == s * (m // b)
+        per_sched = [m // s + (1 if i < m % s else 0) for i in range(s)]
+        assert res.msgs_flush == sum(c // fe for c in per_sched)

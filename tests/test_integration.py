@@ -1,0 +1,113 @@
+"""Cross-layer integration + property tests."""
+import json
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+class TestCacheProtocolProperties:
+    """Hypothesis over random op sequences on the data store (§4.1)."""
+
+    @given(ops=st.lists(
+        st.tuples(st.sampled_from(["add", "override", "tick"]),
+                  st.integers(0, 3),                    # server
+                  st.floats(0, 8, width=32),            # cores
+                  st.floats(0, 1e3, width=32)),         # duration
+        min_size=1, max_size=40))
+    @settings(max_examples=30, deadline=None)
+    def test_store_invariants(self, ops):
+        from repro.core import cache, make_datastore
+        C = jnp.tile(jnp.array([[8.0, 64000.0]]), (4, 1))
+        store = make_datastore(C)
+        pushes = 0
+        ticks = 0
+        for op, j, cores, dur in ops:
+            if op == "add":
+                store = cache.add_new_load(
+                    store, jnp.int32(j), jnp.array([cores, cores * 7e3]),
+                    jnp.float32(dur))
+            elif op == "override":
+                store = cache.override_node_state(
+                    store, jnp.int32(j), jnp.array([cores, cores * 7e3]),
+                    jnp.float32(dur), jnp.float32(1.0))
+            else:
+                store, push = cache.tick(store, b=5)
+                ticks += 1
+                pushes += bool(push)
+        # loads never negative; p stays within the batch; push cadence exact
+        assert (np.asarray(store.L) >= 0).all()
+        assert 0 <= int(store.p) < 5
+        assert pushes == ticks // 5
+
+    @given(data=st.data())
+    @settings(max_examples=20, deadline=None)
+    def test_checkpoint_roundtrip_random_pytrees(self, data, tmp_path_factory):
+        from repro.checkpoint import Checkpointer
+        tmp = tmp_path_factory.mktemp("ck")
+        shape = data.draw(st.tuples(st.integers(1, 4), st.integers(1, 5)))
+        dtype = data.draw(st.sampled_from([np.float32, np.int32,
+                                           jnp.bfloat16]))
+        arr = jnp.asarray(np.random.RandomState(0).randn(*shape), dtype)
+        tree = {"x": arr, "nest": {"y": jnp.arange(3)}}
+        ck = Checkpointer(tmp)
+        ck.save(1, tree)
+        restored, step = ck.restore(tree)
+        assert step == 1
+        np.testing.assert_array_equal(
+            np.asarray(restored["x"], np.float32),
+            np.asarray(tree["x"], np.float32))
+        assert restored["x"].dtype == np.asarray(arr).dtype
+
+
+class TestEngineSchedulesSaneUnderStress:
+    """The engine under pathological inputs (heavy tails, bursts)."""
+
+    def test_burst_arrivals(self, small_testbed):
+        from dataclasses import replace
+        from repro.sim import EngineConfig, simulate
+        from repro.workloads import functionbench as fb
+        wl = fb.synthesize(m=400, qps=50.0, seed=3)
+        burst = replace(wl, submit_ms=np.zeros_like(wl.submit_ms))
+        res = simulate(burst, small_testbed,
+                       EngineConfig(policy="dodoor", b=10))
+        assert np.isfinite(res.finish_ms).all()
+        assert (res.finish_ms > 0).all()
+
+    def test_single_server_cluster(self):
+        from repro.sim import EngineConfig, make_homogeneous, simulate
+        from repro.workloads import functionbench as fb
+        cluster = make_homogeneous(1, cores=28, mem_mb=128_000)
+        wl = fb.synthesize(m=100, qps=20.0, seed=0)
+        res = simulate(wl, cluster, EngineConfig(policy="dodoor", b=1,
+                                                 flush_every=1))
+        assert (res.server == 0).all()
+
+
+@pytest.mark.slow
+class TestDryRunSubprocess:
+    """One real dry-run cell end-to-end in a fresh interpreter (the 512-
+    device XLA flag must precede jax init, so it cannot run in-process)."""
+
+    def test_decode_cell_compiles(self, tmp_path):
+        out = subprocess.run(
+            [sys.executable, "-m", "repro.launch.dryrun",
+             "--arch", "smollm-135m", "--shape", "decode_32k",
+             "--out", str(tmp_path)],
+            env={**os.environ, "PYTHONPATH": os.path.join(REPO, "src")},
+            capture_output=True, text=True, timeout=420)
+        assert out.returncode == 0, out.stdout + out.stderr
+        rec = json.loads(
+            (tmp_path / "smollm-135m__decode_32k__pod16x16.json")
+            .read_text())
+        assert rec["status"] == "ok"
+        assert rec["chips"] == 256
+        assert rec["compute_s"] > 0

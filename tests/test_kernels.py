@@ -1,0 +1,171 @@
+"""Per-kernel allclose tests against pure-jnp oracles (interpret mode),
+sweeping shapes and dtypes per the deliverable contract."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.dodoor_choice import dodoor_choice, dodoor_choice_ref
+from repro.kernels.flash_attention import attention_ref, flash_attention
+from repro.kernels.rl_score import rl_score_matrix, rl_score_matrix_ref
+from repro.kernels.ssd_chunk import ssd, ssd_ref
+from repro.kernels.ssd_chunk.ops import ssd_decode_step
+
+
+class TestRLScoreKernel:
+    @pytest.mark.parametrize("T,N,K", [(8, 10, 2), (128, 128, 2), (200, 100, 2),
+                                       (130, 300, 4), (1, 1, 2), (384, 257, 8)])
+    def test_matches_ref(self, T, N, K):
+        rng = np.random.RandomState(T + N)
+        r = jnp.asarray(rng.rand(T, K).astype(np.float32) * 8)
+        L = jnp.asarray(rng.rand(N, K).astype(np.float32) * 100)
+        C = jnp.asarray(1.0 + rng.rand(N, K).astype(np.float32) * 100)
+        out = rl_score_matrix(r, L, C)
+        ref = rl_score_matrix_ref(r, L, C)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   rtol=2e-5, atol=1e-7)
+
+    def test_small_blocks(self):
+        rng = np.random.RandomState(0)
+        r = jnp.asarray(rng.rand(40, 2).astype(np.float32))
+        L = jnp.asarray(rng.rand(70, 2).astype(np.float32))
+        C = jnp.asarray(1.0 + rng.rand(70, 2).astype(np.float32))
+        out = rl_score_matrix(r, L, C, block_t=16, block_n=32)
+        np.testing.assert_allclose(np.asarray(out),
+                                   np.asarray(rl_score_matrix_ref(r, L, C)),
+                                   rtol=2e-5)
+
+
+class TestDodoorChoiceKernel:
+    @pytest.mark.parametrize("T,N,alpha", [(16, 20, 0.5), (300, 100, 0.5),
+                                           (257, 64, 0.0), (64, 500, 1.0)])
+    def test_matches_ref(self, T, N, alpha):
+        rng = np.random.RandomState(T)
+        r = jnp.asarray(rng.rand(T, 2).astype(np.float32) * 8)
+        cand = jnp.asarray(rng.randint(0, N, size=(T, 2)).astype(np.int32))
+        d_cand = jnp.asarray(rng.rand(T, 2).astype(np.float32) * 1000)
+        L = jnp.asarray(rng.rand(N, 2).astype(np.float32) * 50)
+        D = jnp.asarray(rng.rand(N).astype(np.float32) * 5000)
+        C = jnp.asarray(8.0 + rng.rand(N, 2).astype(np.float32) * 100)
+        choice, scores = dodoor_choice(r, cand, d_cand, L, D, C, alpha,
+                                       block_t=64)
+        rchoice, rscores = dodoor_choice_ref(r, cand, d_cand, L, D, C, alpha)
+        np.testing.assert_allclose(np.asarray(scores), np.asarray(rscores),
+                                   rtol=2e-5, atol=1e-6)
+        # Score ties can flip the pick under float reassociation; require
+        # agreement wherever the margin is meaningful.
+        margin = np.abs(np.asarray(rscores[:, 0] - rscores[:, 1]))
+        firm = margin > 1e-5
+        assert (np.asarray(choice)[firm] == np.asarray(rchoice)[firm]).all()
+
+    def test_identical_candidates(self):
+        """cand A == cand B (Algorithm 1 samples with replacement)."""
+        N = 10
+        rng = np.random.RandomState(1)
+        cand = jnp.full((8, 2), 3, jnp.int32)
+        r = jnp.asarray(rng.rand(8, 2).astype(np.float32))
+        d = jnp.ones((8, 2))
+        L = jnp.asarray(rng.rand(N, 2).astype(np.float32))
+        D = jnp.ones(N)
+        C = jnp.ones((N, 2)) * 10
+        choice, scores = dodoor_choice(r, cand, d, L, D, C, 0.5, block_t=8)
+        assert (np.asarray(choice) == 3).all()
+        np.testing.assert_allclose(np.asarray(scores[:, 0]),
+                                   np.asarray(scores[:, 1]), rtol=1e-6)
+
+
+class TestFlashAttention:
+    @pytest.mark.parametrize("B,H,Hkv,Lq,Lk,D,causal,window", [
+        (1, 2, 2, 128, 128, 64, True, None),      # square causal
+        (2, 4, 2, 128, 128, 64, True, None),      # GQA 2:1
+        (1, 8, 2, 64, 256, 64, True, None),       # Lq < Lk (chunked prefill)
+        (1, 2, 1, 1, 384, 64, True, None),        # decode: 1 query vs cache
+        (1, 2, 2, 128, 256, 64, True, 64),        # local window
+        (1, 2, 2, 100, 200, 32, True, None),      # ragged (padding path)
+        (1, 2, 2, 64, 64, 128, False, None),      # non-causal (cross-attn)
+    ])
+    def test_matches_ref(self, B, H, Hkv, Lq, Lk, D, causal, window):
+        rng = np.random.RandomState(Lq + Lk)
+        q = jnp.asarray(rng.randn(B, H, Lq, D).astype(np.float32)) * 0.5
+        k = jnp.asarray(rng.randn(B, Hkv, Lk, D).astype(np.float32)) * 0.5
+        v = jnp.asarray(rng.randn(B, Hkv, Lk, D).astype(np.float32))
+        out = flash_attention(q, k, v, causal=causal, window=window,
+                              block_q=64, block_k=64)
+        ref = attention_ref(q, k, v, causal=causal, window=window)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   rtol=2e-4, atol=2e-5)
+
+    def test_bf16_inputs(self):
+        rng = np.random.RandomState(0)
+        q = jnp.asarray(rng.randn(1, 2, 128, 64), jnp.bfloat16)
+        k = jnp.asarray(rng.randn(1, 2, 128, 64), jnp.bfloat16)
+        v = jnp.asarray(rng.randn(1, 2, 128, 64), jnp.bfloat16)
+        out = flash_attention(q, k, v, block_q=64, block_k=64)
+        ref = attention_ref(q.astype(jnp.float32), k.astype(jnp.float32),
+                            v.astype(jnp.float32))
+        assert out.dtype == jnp.bfloat16
+        np.testing.assert_allclose(np.asarray(out, np.float32),
+                                   np.asarray(ref), rtol=0.05, atol=0.05)
+
+
+class TestSSDChunk:
+    @pytest.mark.parametrize("B,L,H,P,G,S,chunk", [
+        (1, 64, 2, 16, 1, 32, 32),
+        (2, 128, 4, 32, 2, 64, 64),
+        (1, 256, 2, 64, 1, 128, 64),    # mamba2-1.3b head geometry
+        (1, 64, 4, 16, 4, 16, 16),      # G == H (ungrouped)
+    ])
+    def test_matches_recurrence(self, B, L, H, P, G, S, chunk):
+        rng = np.random.RandomState(L + S)
+        x = jnp.asarray(rng.randn(B, L, H, P).astype(np.float32)) * 0.5
+        dt = jnp.asarray(0.01 + rng.rand(B, L, H).astype(np.float32))
+        A = jnp.asarray(-(0.1 + rng.rand(H).astype(np.float32)))
+        Bm = jnp.asarray(rng.randn(B, L, G, S).astype(np.float32)) * 0.3
+        Cm = jnp.asarray(rng.randn(B, L, G, S).astype(np.float32)) * 0.3
+        y, h = ssd(x, dt, A, Bm, Cm, chunk=chunk)
+        y_ref, h_ref = ssd_ref(x, dt, A, Bm, Cm)
+        np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                                   rtol=2e-4, atol=2e-4)
+        np.testing.assert_allclose(np.asarray(h), np.asarray(h_ref),
+                                   rtol=2e-4, atol=2e-4)
+
+    def test_initial_state_threading(self):
+        """Splitting a sequence across two ssd() calls must equal one call —
+        the property serving (stateful decode) depends on."""
+        rng = np.random.RandomState(7)
+        B, L, H, P, G, S = 1, 128, 2, 16, 1, 32
+        x = jnp.asarray(rng.randn(B, L, H, P).astype(np.float32)) * 0.5
+        dt = jnp.asarray(0.01 + rng.rand(B, L, H).astype(np.float32))
+        A = jnp.asarray(-(0.1 + rng.rand(H).astype(np.float32)))
+        Bm = jnp.asarray(rng.randn(B, L, G, S).astype(np.float32)) * 0.3
+        Cm = jnp.asarray(rng.randn(B, L, G, S).astype(np.float32)) * 0.3
+        y_full, h_full = ssd(x, dt, A, Bm, Cm, chunk=32)
+        y1, h1 = ssd(x[:, :64], dt[:, :64], A, Bm[:, :64], Cm[:, :64],
+                     chunk=32)
+        y2, h2 = ssd(x[:, 64:], dt[:, 64:], A, Bm[:, 64:], Cm[:, 64:],
+                     h0=h1, chunk=32)
+        np.testing.assert_allclose(np.asarray(jnp.concatenate([y1, y2], 1)),
+                                   np.asarray(y_full), rtol=2e-4, atol=2e-4)
+        np.testing.assert_allclose(np.asarray(h2), np.asarray(h_full),
+                                   rtol=2e-4, atol=2e-4)
+
+    def test_decode_step_matches_scan(self):
+        rng = np.random.RandomState(9)
+        B, H, P, G, S = 2, 2, 16, 1, 32
+        A = jnp.asarray(-(0.1 + rng.rand(H).astype(np.float32)))
+        h = jnp.zeros((B, H, S, P))
+        ys = []
+        xs = jnp.asarray(rng.randn(B, 8, H, P).astype(np.float32))
+        dts = jnp.asarray(0.01 + rng.rand(B, 8, H).astype(np.float32))
+        Bms = jnp.asarray(rng.randn(B, 8, G, S).astype(np.float32)) * 0.3
+        Cms = jnp.asarray(rng.randn(B, 8, G, S).astype(np.float32)) * 0.3
+        for t in range(8):
+            y, h = ssd_decode_step(xs[:, t], dts[:, t], A, Bms[:, t],
+                                   Cms[:, t], h)
+            ys.append(y)
+        y_seq = jnp.stack(ys, axis=1)
+        y_ref, h_ref = ssd_ref(xs, dts, A, Bms, Cms)
+        np.testing.assert_allclose(np.asarray(y_seq), np.asarray(y_ref),
+                                   rtol=1e-4, atol=1e-5)
+        np.testing.assert_allclose(np.asarray(h), np.asarray(h_ref),
+                                   rtol=1e-4, atol=1e-5)

@@ -1,0 +1,89 @@
+"""§4.2/§4.3 reliability features: store outage graceful degradation,
+automatic recovery, hierarchical mini-clusters."""
+import numpy as np
+import pytest
+
+from repro.sim import EngineConfig, make_testbed, simulate, summarize
+from repro.sim.hierarchy import simulate_hierarchical, split_cluster
+from repro.workloads import functionbench as fb
+
+
+@pytest.fixture(scope="module")
+def cluster():
+    return make_testbed()
+
+
+class TestStoreOutage:
+    """§4.3: 'If the data store becomes temporarily unavailable, schedulers
+    continue to operate using their last-known cached view ... the system
+    remains fully operational' and recovery is automatic at the next batch."""
+
+    @pytest.fixture(scope="class")
+    def runs(self, cluster):
+        wl = fb.synthesize(m=5000, qps=100.0, seed=4)   # ~50 s of arrivals
+        healthy = simulate(wl, cluster, EngineConfig(policy="dodoor"))
+        # store dies for 15 s early in the run
+        out = simulate(wl, cluster, EngineConfig(
+            policy="dodoor", outage_ms=(5_000.0, 20_000.0)))
+        return wl, healthy, out
+
+    def test_fully_operational_during_outage(self, runs):
+        wl, healthy, out = runs
+        assert np.isfinite(out.finish_ms).all()
+        assert out.server.shape == healthy.server.shape
+
+    def test_graceful_degradation_bounded(self, runs):
+        """Stale views degrade placement quality, but boundedly (no crash,
+        no starvation): mean makespan within 2× of healthy."""
+        _, healthy, out = runs
+        s_h, s_o = summarize(healthy), summarize(out)
+        assert s_o.makespan_mean_ms < 2.0 * s_h.makespan_mean_ms
+
+    def test_automatic_recovery(self, runs):
+        """Tasks submitted well after the outage behave like healthy ones
+        (§4.3: the next push 'immediately restores the quality')."""
+        wl, healthy, out = runs
+        late = wl.submit_ms > 30_000.0   # 10 s past recovery
+        if late.sum() < 200:
+            pytest.skip("trace too short to isolate the recovery window")
+        mk_h = (healthy.finish_ms - healthy.submit_ms)[late].mean()
+        mk_o = (out.finish_ms - out.submit_ms)[late].mean()
+        assert mk_o < 1.3 * mk_h
+
+    def test_fewer_push_messages_during_outage(self, runs):
+        _, healthy, out = runs
+        assert out.msgs_push < healthy.msgs_push
+        assert out.msgs_base == healthy.msgs_base
+
+
+class TestMiniClusters:
+    def test_split_preserves_fleet(self, cluster):
+        parts = split_cluster(cluster, 4)
+        total = sum(spec.num_servers for spec, _ in parts)
+        assert total == cluster.num_servers
+        all_idx = np.concatenate([idx for _, idx in parts])
+        assert sorted(all_idx.tolist()) == list(range(cluster.num_servers))
+
+    def test_type_mix_preserved(self, cluster):
+        for spec, _ in split_cluster(cluster, 4):
+            types = set(spec.node_type.tolist())
+            assert len(types) == 4          # every mini-cluster sees all 4
+
+    def test_hierarchical_schedules_everything(self, cluster):
+        wl = fb.synthesize(m=2000, qps=150.0, seed=5)
+        res = simulate_hierarchical(wl, cluster,
+                                    EngineConfig(policy="dodoor"), k=4)
+        assert res.server.shape[0] == 2000
+        assert np.isfinite(res.finish_ms).all()
+        assert (res.finish_ms > res.start_ms - 1e-6).all()
+
+    def test_quality_comparable_to_flat(self, cluster):
+        """§4.2: mini-clusters trade a little placement quality (smaller
+        candidate pools) for independence; the loss must be modest."""
+        wl = fb.synthesize(m=3000, qps=200.0, seed=6)
+        flat = summarize(simulate(wl, cluster, EngineConfig(policy="dodoor")))
+        hier = summarize(simulate_hierarchical(
+            wl, cluster, EngineConfig(policy="dodoor"), k=4))
+        assert hier.makespan_mean_ms < 1.5 * flat.makespan_mean_ms
+        # per-mini-cluster stores push to fewer schedulers → no msg blow-up
+        assert hier.msgs_per_task < flat.msgs_per_task * 1.5

@@ -1,0 +1,118 @@
+"""Unit + property tests for the paper's Eq. 1 RL score and loadScore."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.rl_score import (load_score_batched, load_score_pair, rl,
+                                 rl_score_matrix)
+
+finite = st.floats(min_value=0.0, max_value=1e4, allow_nan=False,
+                   allow_infinity=False, width=32)
+positive = st.floats(min_value=0.5, max_value=1e4, allow_nan=False,
+                     allow_infinity=False, width=32)
+
+
+def vec(elements, k=2):
+    return st.lists(elements, min_size=k, max_size=k).map(
+        lambda v: jnp.asarray(v, jnp.float32))
+
+
+class TestRL:
+    def test_eq1_exact(self):
+        # Hand-computed Eq. 1: r=[2,4], L=[10,20], C=[8,64000].
+        r = jnp.array([2.0, 4.0])
+        L = jnp.array([10.0, 20.0])
+        C = jnp.array([8.0, 64000.0])
+        expect = (2 * 10 + 4 * 20) / (8**2 + 64000.0**2)
+        assert np.isclose(float(rl(r, L, C)), expect, rtol=1e-6)
+
+    def test_idle_server_scores_zero(self):
+        r = jnp.array([4.0, 100.0])
+        assert float(rl(r, jnp.zeros(2), jnp.array([8.0, 64.0]))) == 0.0
+
+    @given(r=vec(finite), L=vec(finite), C=vec(positive))
+    @settings(max_examples=50, deadline=None)
+    def test_nonnegative(self, r, L, C):
+        assert float(rl(r, L, C)) >= 0.0
+
+    @given(r=vec(finite), L=vec(finite), C=vec(positive))
+    @settings(max_examples=50, deadline=None)
+    def test_monotone_in_load(self, r, L, C):
+        """Anti-affinity: adding load to a server never lowers its RL score."""
+        bumped = rl(r, L + r, C)
+        assert float(bumped) >= float(rl(r, L, C)) - 1e-6
+
+    @given(r=vec(positive), L=vec(positive), C=vec(positive))
+    @settings(max_examples=50, deadline=None)
+    def test_larger_capacity_lower_score(self, r, L, C):
+        """Bigger servers absorb the same load with lower anti-affinity."""
+        assert float(rl(r, L, 2.0 * C)) <= float(rl(r, L, C)) + 1e-9
+
+    def test_matrix_matches_scalar(self):
+        rng = np.random.RandomState(0)
+        R = jnp.asarray(rng.rand(5, 2).astype(np.float32) * 10)
+        L = jnp.asarray(rng.rand(7, 2).astype(np.float32) * 100)
+        C = jnp.asarray(1.0 + rng.rand(7, 2).astype(np.float32) * 50)
+        M = rl_score_matrix(R, L, C)
+        for t in range(5):
+            for j in range(7):
+                assert np.isclose(float(M[t, j]), float(rl(R[t], L[j], C[j])),
+                                  rtol=1e-5)
+
+
+class TestLoadScore:
+    @given(r=vec(positive), La=vec(finite), Lb=vec(finite),
+           Da=positive, Db=positive, Ca=vec(positive), Cb=vec(positive),
+           alpha=st.floats(0.0, 1.0, width=32))
+    @settings(max_examples=50, deadline=None)
+    def test_scores_sum_to_one(self, r, La, Lb, Da, Db, Ca, Cb, alpha):
+        """The two normalized scores partition 1 (up to the ε guard)."""
+        sa, sb = load_score_pair(r, La, Lb, jnp.float32(Da), jnp.float32(Db),
+                                 Ca, Cb, alpha)
+        assert np.isclose(float(sa) + float(sb), 1.0, atol=1e-3)
+
+    def test_alpha0_pure_resource(self):
+        """α=0: only the RL term matters — loaded candidate loses."""
+        r = jnp.array([2.0, 8.0])
+        C = jnp.array([8.0, 64.0])
+        sa, sb = load_score_pair(r, jnp.array([6.0, 48.0]), jnp.zeros(2),
+                                 jnp.float32(100.0), jnp.float32(1.0), C, C, 0.0)
+        assert float(sa) > float(sb)        # A is loaded → higher anti-affinity
+
+    def test_alpha1_pure_duration(self):
+        """α=1: only durations matter — slower candidate loses."""
+        r = jnp.array([2.0, 8.0])
+        C = jnp.array([8.0, 64.0])
+        sa, sb = load_score_pair(r, jnp.array([6.0, 48.0]), jnp.zeros(2),
+                                 jnp.float32(1.0), jnp.float32(100.0), C, C, 1.0)
+        assert float(sa) < float(sb)        # B has the longer total duration
+
+    def test_batched_matches_pair(self):
+        rng = np.random.RandomState(1)
+        T = 9
+        r = jnp.asarray(rng.rand(T, 2).astype(np.float32) * 8)
+        L = jnp.asarray(rng.rand(T, 2, 2).astype(np.float32) * 50)
+        D = jnp.asarray(rng.rand(T, 2).astype(np.float32) * 1000)
+        C = jnp.asarray(1.0 + rng.rand(T, 2, 2).astype(np.float32) * 30)
+        out = load_score_batched(r, L, D, C, 0.5)
+        for t in range(T):
+            sa, sb = load_score_pair(r[t], L[t, 0], L[t, 1], D[t, 0], D[t, 1],
+                                     C[t, 0], C[t, 1], 0.5)
+            assert np.isclose(float(out[t, 0]), float(sa), rtol=1e-5)
+            assert np.isclose(float(out[t, 1]), float(sb), rtol=1e-5)
+
+    def test_duration_heterogeneity_shifts_choice(self):
+        """Same resource picture, but candidate A is a 4× slower node type for
+        this task (the Table-4 m510 vs c6620 case) — duration term flips the
+        decision as α grows."""
+        r = jnp.array([4.0, 200.0])
+        L = jnp.array([[4.0, 200.0], [4.0, 200.0]])
+        C = jnp.array([[8.0, 64000.0], [28.0, 128000.0]])
+        # B is the bigger node → lower RL. A faster in duration.
+        D_fast_a = jnp.array([1000.0 + 500.0, 1000.0 + 2000.0])
+        out = load_score_batched(r[None], L[None], D_fast_a[None], C[None], 1.0)[0]
+        assert float(out[0]) < float(out[1])       # α=1: A (faster) wins
+        out0 = load_score_batched(r[None], L[None], D_fast_a[None], C[None], 0.0)[0]
+        assert float(out0[1]) < float(out0[0])     # α=0: B (bigger) wins

@@ -1,0 +1,261 @@
+"""Substrate tests: data, optimizer, compression, checkpoint, ft, sharding,
+serving router, and the end-to-end train driver."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+
+class TestData:
+    def test_deterministic_and_resumable(self):
+        from repro.data import SyntheticLM
+        src = SyntheticLM(vocab=512, seq_len=32, global_batch=4, seed=1)
+        a = src.batch(7)
+        b = src.batch(7)
+        assert (np.asarray(a["tokens"]) == np.asarray(b["tokens"])).all()
+        c = src.batch(8)
+        assert not (np.asarray(a["tokens"]) == np.asarray(c["tokens"])).all()
+
+    def test_host_sharding_disjoint(self):
+        from repro.data import SyntheticLM
+        src = SyntheticLM(vocab=512, seq_len=16, global_batch=8, seed=0)
+        h0 = src.batch(3, host_index=0, num_hosts=2)
+        h1 = src.batch(3, host_index=1, num_hosts=2)
+        assert h0["tokens"].shape == (4, 16)
+        assert not (np.asarray(h0["tokens"]) == np.asarray(h1["tokens"])).all()
+
+    def test_labels_shifted(self):
+        from repro.data import SyntheticLM
+        b = SyntheticLM(64, 16, 2, seed=0).batch(0)
+        assert (np.asarray(b["labels"][:, :-1])
+                == np.asarray(b["tokens"][:, 1:])).all()
+
+    def test_markov_structure_learnable(self):
+        """Bigram entropy must be well below unigram (structure exists)."""
+        from repro.data import SyntheticLM
+        src = SyntheticLM(vocab=256, seq_len=512, global_batch=8, seed=0)
+        toks = np.asarray(src.batch(0)["tokens"]).ravel()
+        uni, cnt = np.unique(toks, return_counts=True)
+        p = cnt / cnt.sum()
+        h_uni = -(p * np.log(p)).sum()
+        pairs = toks[:-1].astype(np.int64) * 256 + toks[1:]
+        up, uc = np.unique(pairs, return_counts=True)
+        q = uc / uc.sum()
+        h_joint = -(q * np.log(q)).sum()
+        assert h_joint - h_uni < 0.8 * h_uni     # conditional < unigram
+
+
+class TestOptim:
+    def test_adamw_minimizes_quadratic(self):
+        from repro.optim import adamw_init, adamw_update
+        params = {"w": jnp.array([4.0, -3.0])}
+        st = adamw_init(params)
+        for _ in range(200):
+            g = {"w": 2 * params["w"]}
+            params, st = adamw_update(g, st, params, lr=0.1,
+                                      weight_decay=0.0)
+        assert float(jnp.abs(params["w"]).max()) < 0.1
+
+    def test_clipping(self):
+        from repro.optim.adamw import global_norm
+        g = {"a": jnp.ones((10,)) * 100}
+        assert float(global_norm(g)) == pytest.approx(100 * np.sqrt(10))
+
+    def test_cosine_schedule(self):
+        from repro.optim import cosine_schedule
+        lr = cosine_schedule(1e-3, warmup=10, total=100)
+        assert float(lr(jnp.int32(5))) < 1e-3
+        assert float(lr(jnp.int32(10))) == pytest.approx(1e-3, rel=1e-3)
+        assert float(lr(jnp.int32(100))) == pytest.approx(1e-4, rel=1e-2)
+
+    def test_compression_error_feedback(self):
+        """Accumulated dequantized grads ≈ accumulated true grads."""
+        from repro.optim.compression import (compress_grads,
+                                             compression_init,
+                                             decompress_grads)
+        rng = np.random.RandomState(0)
+        gs = [{"w": jnp.asarray(rng.randn(64).astype(np.float32))}
+              for _ in range(20)]
+        st = compression_init(gs[0])
+        total_true = np.zeros(64)
+        total_deq = np.zeros(64)
+        for g in gs:
+            q, scales, st = compress_grads(g, st)
+            deq = decompress_grads(q, scales)
+            total_true += np.asarray(g["w"])
+            total_deq += np.asarray(deq["w"])
+        # error feedback keeps the *sum* nearly unbiased
+        assert np.abs(total_true - total_deq).max() < 0.05
+        # and a single step is 4x smaller on the wire
+        assert q["w"].dtype == jnp.int8
+
+
+class TestCheckpoint:
+    def test_roundtrip_and_atomicity(self, tmp_path):
+        from repro.checkpoint import Checkpointer, latest_step
+        ck = Checkpointer(tmp_path, keep=2)
+        tree = {"a": jnp.arange(6).reshape(2, 3),
+                "n": {"b": jnp.ones((4,), jnp.bfloat16)}}
+        ck.save(10, tree)
+        ck.save(20, tree)
+        ck.save(30, tree)
+        assert latest_step(tmp_path) == 30
+        # keep=2 garbage-collects step 10
+        assert not (tmp_path / "step_000010").exists()
+        restored, step = ck.restore(tree)
+        assert step == 30
+        assert (np.asarray(restored["a"]) == np.asarray(tree["a"])).all()
+        assert restored["n"]["b"].dtype == np.asarray(tree["n"]["b"]).dtype
+
+    def test_incomplete_dir_ignored(self, tmp_path):
+        from repro.checkpoint import Checkpointer, latest_step
+        ck = Checkpointer(tmp_path)
+        ck.save(5, {"x": jnp.zeros(3)})
+        # a torn write: directory without manifest
+        (tmp_path / "step_000099").mkdir()
+        assert latest_step(tmp_path) == 5
+
+
+class TestFT:
+    def test_survivor_mesh_shrinks_data_axis(self):
+        from repro.ft import survivor_mesh
+        mesh, new_data = survivor_mesh(0, data=1, model=1)
+        assert new_data == 1
+        with pytest.raises(RuntimeError):
+            survivor_mesh(1, data=1, model=1)
+
+    def test_straggler_detection(self):
+        from repro.ft import StragglerMonitor
+        mon = StragglerMonitor(num_hosts=4, b=2, threshold=1.5)
+        for step in range(4):
+            mon.report(step, np.array([1.0, 1.0, 1.0, 3.0]))
+        assert list(mon.stragglers()) == [3]
+        w = mon.weights()
+        assert w[3] == w.min()
+
+    def test_failure_injector_fires_once(self):
+        from repro.ft import FailureInjector
+        inj = FailureInjector(fail_at=[(5, 2)])
+        assert inj.should_fail(4) == 0
+        assert inj.should_fail(5) == 2
+        assert inj.should_fail(5) == 0
+
+
+class TestShardingRules:
+    def _mesh(self):
+        return jax.make_mesh((1, 1), ("data", "model"))
+
+    def test_specs_cover_tree_and_divide(self):
+        from repro.configs import ARCHS
+        from repro.models import registry
+        from repro import sharding as shd
+        mesh = jax.make_mesh((1, 1), ("data", "model"))
+        for name in ("smollm-135m", "dbrx-132b", "mamba2-1.3b",
+                     "recurrentgemma-2b", "whisper-base"):
+            cfg = ARCHS[name]
+            params = registry.abstract_params(cfg)
+            specs = shd.param_specs(params, mesh)
+            flat_p = jax.tree.leaves(params)
+            flat_s = jax.tree.leaves(
+                specs, is_leaf=lambda x: isinstance(
+                    x, jax.sharding.PartitionSpec))
+            assert len(flat_p) == len(flat_s)
+
+    def test_divisibility_respected_at_16(self):
+        """Every sharded dim divides the axis size on the real mesh shape
+        (validated abstractly — no 256 devices needed for the math)."""
+        from repro.configs import ARCHS
+        from repro.models import registry
+        from repro import sharding as shd
+
+        class FakeMesh:
+            shape = {"data": 16, "model": 16}
+
+        for name, cfg in ARCHS.items():
+            params = registry.abstract_params(cfg)
+            specs = shd.param_specs(params, FakeMesh())
+
+            def check(path, leaf, spec):
+                for dim, ax in enumerate(spec):
+                    if ax is None:
+                        continue
+                    size = 16 if not isinstance(ax, tuple) else 16
+                    assert leaf.shape[dim] % size == 0, (name, path)
+
+            flat_p, treedef = jax.tree.flatten(params)
+            flat_s = treedef.flatten_up_to(specs)
+            for p, s in zip(flat_p, flat_s):
+                check("", p, s)
+
+
+class TestServing:
+    def test_request_cost_monotone(self):
+        from repro.configs import ARCHS
+        from repro.serving import request_cost
+        cfg = ARCHS["tinyllama-1.1b"]
+        r1, d1 = request_cost(cfg, 256, 64)
+        r2, d2 = request_cost(cfg, 4096, 256)
+        assert (d2 > d1).all()           # bigger request slower everywhere
+        assert r2[1] > r1[1]             # more KV
+        # heterogeneity: durations differ across replica types
+        assert d1.max() / d1.min() > 1.5
+
+    def test_ssm_kv_constant(self):
+        from repro.configs import ARCHS
+        from repro.serving import request_cost
+        cfg = ARCHS["mamba2-1.3b"]
+        r1, _ = request_cost(cfg, 256, 64)
+        r2, _ = request_cost(cfg, 8192, 64)
+        assert r1[1] == pytest.approx(r2[1])   # constant state bytes
+
+    def test_router_soft_pins_out_loaded_replica(self):
+        from repro.configs import ARCHS
+        from repro.serving import DodoorRouter, make_replica_pool
+        pool = make_replica_pool()
+        router = DodoorRouter(pool, b=4, seed=0)
+        cfg = ARCHS["tinyllama-1.1b"]
+        # Saturate replica 0 via the store: huge load, never completed.
+        router._store_L[0] = [1e6, 1e9]
+        router._store_D[0] = 1e9
+        router._view_L = router._store_L.copy()
+        router._view_D = router._store_D.copy()
+        picks = [router.place(cfg, 512, 64) for _ in range(100)]
+        assert picks.count(0) <= 3       # §4.3 soft-pin-out
+
+    def test_router_fleet_beats_random(self):
+        from repro.configs import ARCHS
+        from repro.serving import make_replica_pool, synthesize_requests
+        from repro.sim import EngineConfig, simulate, summarize
+        pool = make_replica_pool()
+        trace = synthesize_requests(ARCHS["tinyllama-1.1b"], 800, 40.0)
+        res_d = summarize(simulate(trace, pool, EngineConfig(
+            policy="dodoor", b=16)))
+        res_r = summarize(simulate(trace, pool, EngineConfig(
+            policy="random", b=16)))
+        assert res_d.makespan_mean_ms < res_r.makespan_mean_ms
+
+
+class TestTrainDriver:
+    def test_loss_decreases_and_resumes(self, tmp_path):
+        from repro.launch.train import main as train_main
+        losses = train_main([
+            "--arch", "smollm-135m", "--smoke", "--steps", "30",
+            "--batch", "4", "--seq", "64", "--lr", "3e-3",
+            "--ckpt-dir", str(tmp_path), "--ckpt-every", "10",
+            "--log-every", "100"])
+        assert np.mean(losses[-5:]) < np.mean(losses[:5])
+        # resume from checkpoint and run a few more steps
+        losses2 = train_main([
+            "--arch", "smollm-135m", "--smoke", "--steps", "35",
+            "--batch", "4", "--seq", "64", "--resume",
+            "--ckpt-dir", str(tmp_path), "--log-every", "100"])
+        assert len(losses2) >= 1
+
+    def test_failure_recovery_path(self, tmp_path):
+        from repro.launch.train import main as train_main
+        losses = train_main([
+            "--arch", "smollm-135m", "--smoke", "--steps", "25",
+            "--batch", "2", "--seq", "32", "--ckpt-dir", str(tmp_path),
+            "--ckpt-every", "10", "--fail-at", "15:4",
+            "--log-every", "100"])
+        assert len(losses) > 20      # re-ran steps after restore

@@ -1,0 +1,85 @@
+"""Workload synthesis fidelity: Fig. 3 distribution + Table 3/4 embedding."""
+import numpy as np
+
+from repro.sim.cluster import NODE_TYPES, TESTBED_TYPES, make_testbed
+from repro.workloads import azure
+from repro.workloads import functionbench as fb
+
+
+class TestAzure:
+    def test_fig3_lifetime_distribution(self):
+        wl = azure.synthesize(m=4000, qps=5.0, seed=0)
+        life_min = wl.d_act[:, 0] / 60_000.0
+        assert abs(life_min.mean() - 4.13) < 0.5        # mean 4.13 min
+        assert np.median(life_min) < 2.0                # most < 2 min
+        assert life_min.max() <= 10.0 + 1e-6            # cut at 10 min
+        assert life_min.min() >= 5.0 / 60 - 1e-6
+
+    def test_vm_sizes_fit_min_host(self):
+        """Paper filter: requests smaller than the minimum host capacity."""
+        wl = azure.synthesize(m=2000, qps=5.0, seed=1)
+        min_cores = min(t.cores for t in TESTBED_TYPES)
+        min_mem = min(t.mem_mb for t in TESTBED_TYPES)
+        assert (wl.r_submit[:, 0] <= min_cores).all()
+        assert (wl.r_submit[:, 1] <= min_mem).all()
+
+    def test_duration_type_independent(self):
+        wl = azure.synthesize(m=100, qps=5.0, seed=2)
+        assert (wl.d_est == wl.d_est[:, :1]).all()
+        assert (wl.d_est == wl.d_act).all()
+
+    def test_poisson_arrival_rate(self):
+        wl = azure.synthesize(m=4000, qps=20.0, seed=3)
+        rate = 1000.0 * len(wl.submit_ms) / wl.submit_ms[-1]
+        assert abs(rate - 20.0) < 2.0
+
+
+class TestFunctionBench:
+    def test_table4_exact_values(self):
+        res, dur = fb.profiles()
+        i = fb.TASK_NAMES.index("lr_train")
+        j = NODE_TYPES.index("m510")
+        assert dur[i, j] == 16201.0                     # Table 4
+        assert tuple(res[i, j]) == (4.0, 212.0)
+        i = fb.TASK_NAMES.index("float_op")
+        j = NODE_TYPES.index("c6525-25g")
+        assert dur[i, j] == 219.0
+        assert tuple(res[i, j]) == (1.0, 8.0)
+
+    def test_duration_heterogeneity_4x(self):
+        """§6.3: durations vary by up to 4X across nodes (lr_train)."""
+        _, dur = fb.profiles()
+        ratios = dur.max(axis=1) / dur.min(axis=1)
+        assert ratios.max() > 4.0
+        assert ratios.min() > 1.0
+
+    def test_noise_perturbs_actuals_only(self):
+        wl = fb.synthesize(m=500, qps=100.0, seed=0, duration_noise=0.1)
+        assert not np.allclose(wl.d_est, wl.d_act)
+        _, dur = fb.profiles()
+        assert np.allclose(wl.d_est, dur[wl.task_type])
+        # Noise is per-task, shared across node types (same container).
+        ratio = wl.d_act / wl.d_est
+        assert np.allclose(ratio, ratio[:, :1], rtol=1e-5)
+
+    def test_types_uniform(self):
+        wl = fb.synthesize(m=8000, qps=100.0, seed=0)
+        counts = np.bincount(wl.task_type, minlength=8)
+        assert counts.min() > 8000 / 8 * 0.8
+
+
+class TestTestbed:
+    def test_table2_counts(self):
+        cluster = make_testbed()
+        assert cluster.num_servers == 100               # 101 minus sched node
+        names, counts = np.unique(cluster.node_type, return_counts=True)
+        by_name = dict(zip([cluster.type_names[i] for i in names], counts))
+        assert by_name == {"m510": 40, "xl170": 25, "c6525-25g": 18,
+                           "c6620": 17}
+
+    def test_capacities(self):
+        cluster = make_testbed()
+        c6620 = cluster.C[cluster.node_type ==
+                          cluster.type_names.index("c6620")]
+        assert (c6620[:, 0] == 28).all()
+        assert (c6620[:, 1] == 128_000).all()
