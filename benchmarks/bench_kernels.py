@@ -3,7 +3,10 @@
 Decision throughput of the scheduling hot path at three implementation
 levels: per-request Python (≈ one RPC-handler thread), vectorized jnp
 (VPU), and the fused Pallas kernel (interpret mode here — TPU-targeted).
-Also sanity-checks kernel-vs-oracle agreement at benchmark shapes.
+Also sanity-checks kernel-vs-oracle agreement at benchmark shapes, and
+measures the end-to-end simulation speedup of the batched decision-block
+engine over the sequential oracle on the fb_small trace (ISSUE 1
+acceptance: ≥ 5× for the dodoor policy).
 """
 from __future__ import annotations
 
@@ -16,6 +19,48 @@ import numpy as np
 from repro.core import DodoorParams, SchedulerView, dodoor_select, task_key
 from repro.kernels.dodoor_choice import dodoor_choice, dodoor_choice_ref
 from repro.kernels.rl_score import rl_score_matrix, rl_score_matrix_ref
+
+
+def _best_of(fn, reps: int = 7) -> float:
+    """Min-of-reps wall clock (ms) after a warmup call."""
+    fn()
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best * 1e3
+
+
+def bench_engine(policy: str = "dodoor", reps: int = 7):
+    """Sequential oracle vs batched decision-block engine on the fb_small
+    trace (m=600, qps=60, the tier-1 parity fixture) over the 20-node
+    small testbed. Parity is asserted before timing — the speedup rows
+    only count if the engines agree exactly."""
+    from repro.sim import EngineConfig, make_testbed, simulate
+    from repro.workloads import functionbench as fb
+
+    cluster = make_testbed(scale=0.2)
+    wl = fb.synthesize(m=600, qps=60.0, seed=0)          # fb_small
+
+    print("bench,policy,b,sequential_ms,batched_ms,speedup")
+    best = 0.0
+    for b in (10, 50, 100):
+        cfg = EngineConfig(policy=policy, b=b)
+        seq = simulate(wl, cluster, cfg)
+        bat = simulate(wl, cluster, cfg, mode="batched")
+        assert (seq.server == bat.server).all(), "parity violated"
+        assert seq.msgs_total == bat.msgs_total, "ledger violated"
+        t_seq = _best_of(lambda: simulate(wl, cluster, cfg), reps)
+        t_bat = _best_of(
+            lambda: simulate(wl, cluster, cfg, mode="batched"), reps)
+        speedup = t_seq / t_bat
+        best = max(best, speedup)
+        print(f"engine,{policy},{b},{t_seq:.1f},{t_bat:.1f},"
+              f"{speedup:.1f}", flush=True)
+    print(f"# {policy} fb_small batched-engine speedup (best over b): "
+          f"{best:.1f}x")
+    return best
 
 
 def main(T: int = 2048, N: int = 100):
@@ -66,6 +111,10 @@ def main(T: int = 2048, N: int = 100):
     ref = rl_score_matrix_ref(r, L, C)
     np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=2e-5)
     print(f"# rl_score kernel allclose at ({T}×{N}): ok")
+
+    # end-to-end engine: batched decision blocks vs the sequential oracle
+    bench_engine("dodoor")
+    bench_engine("random", reps=3)
 
 
 if __name__ == "__main__":

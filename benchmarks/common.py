@@ -10,8 +10,15 @@ POLICIES = ("random", "pot", "prequal", "dodoor")
 
 
 def sweep(workload_fn, qps_list, policies=POLICIES, *, cluster=None,
-          b=None, tag="", utilization=False, **cfg_kw):
-    """Run policies × QPS; print one CSV row per run; return rows."""
+          b=None, tag="", utilization=False, mode="batched",
+          use_kernel=False, **cfg_kw):
+    """Run policies × QPS; print one CSV row per run; return rows.
+
+    ``mode``/``use_kernel`` select the engine driver (see
+    ``repro.sim.simulate``); the batched decision-block driver is the
+    default — it is placement-exact vs the sequential oracle and several
+    times faster, which is what makes the large sweeps tractable.
+    """
     cluster = cluster if cluster is not None else make_testbed()
     b = b or max(1, cluster.num_servers // 2)
     rows = []
@@ -24,7 +31,8 @@ def sweep(workload_fn, qps_list, policies=POLICIES, *, cluster=None,
         for pol in policies:
             t0 = time.time()
             res = simulate(wl, cluster, EngineConfig(policy=pol, b=b,
-                                                     **cfg_kw))
+                                                     **cfg_kw),
+                           mode=mode, use_kernel=use_kernel)
             s = summarize(res)
             row = (f"{tag},{qps},{pol},{s.msgs_per_task:.3f},"
                    f"{s.throughput_tps:.2f},{s.makespan_mean_ms:.1f},"

@@ -18,10 +18,11 @@ from .types import (
     make_view,
 )
 from .rl_score import load_score_batched, load_score_pair, rl, rl_score_matrix
-from .prefilter import feasible_mask, sample_feasible
+from .prefilter import feasible_mask, sample_feasible, sample_feasible_batch
 from .policies import (
     POLICIES,
     POLICY_VIEW,
+    dodoor_choice_batch,
     dodoor_select,
     dodoor_select_batch,
     one_plus_beta_select,
@@ -39,9 +40,10 @@ __all__ = [
     "SchedulerView", "ServerState", "TaskSpec",
     "make_datastore", "make_prequal_pool", "make_server_state", "make_view",
     "load_score_batched", "load_score_pair", "rl", "rl_score_matrix",
-    "feasible_mask", "sample_feasible",
+    "feasible_mask", "sample_feasible", "sample_feasible_batch",
     "POLICIES", "POLICY_VIEW",
-    "dodoor_select", "dodoor_select_batch", "one_plus_beta_select",
+    "dodoor_choice_batch", "dodoor_select", "dodoor_select_batch",
+    "one_plus_beta_select",
     "pot_select", "prequal_probe_update", "prequal_select", "random_select",
     "task_key", "balls_bins", "cache",
 ]

@@ -20,7 +20,7 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
-from .prefilter import feasible_mask, sample_feasible
+from .prefilter import feasible_mask, sample_feasible, sample_feasible_batch
 from .rl_score import load_score_batched
 from .types import DodoorParams, PrequalParams, PrequalPool, SchedulerView
 
@@ -75,23 +75,51 @@ def dodoor_select(key, r, d, view: SchedulerView, params: DodoorParams) -> jnp.n
     return jnp.where(scores[0] > scores[1], cand[1], cand[0]).astype(jnp.int32)
 
 
-def dodoor_select_batch(key, r, d, view: SchedulerView, params: DodoorParams) -> jnp.ndarray:
-    """Vectorized Algorithm 1 over a task batch (r [T,K], d [T,n]) — one cache
-    snapshot for the whole batch (the b-batched model's decision block)."""
-    T = r.shape[0]
-    keys = jax.vmap(lambda i: jax.random.fold_in(key, i))(jnp.arange(T))
-    mask = feasible_mask(r, view.C)                            # [T, N]
+def dodoor_choice_batch(r, cand, d_cand, view: SchedulerView, alpha,
+                        *, use_kernel: bool = False,
+                        interpret: bool = True,
+                        block_t: int = 256) -> jnp.ndarray:
+    """Score a decision block's pre-sampled candidate pairs and pick winners.
 
-    def pick(k, m):
-        return sample_feasible(k, m, 2)
-
-    cand = jax.vmap(pick)(keys, mask)                          # [T, 2]
+    r [T,K], cand [T,2] int32, d_cand [T,2] (the task's estimated duration on
+    each candidate). One cache snapshot (``view``) for the whole block — the
+    paper's b-batch boundary. ``use_kernel`` routes the fused selection
+    through the Pallas kernel (``repro.kernels.dodoor_choice``); the default
+    is the pure-jnp path, bit-identical to :func:`dodoor_select` per task.
+    ``alpha`` must be a static Python float when ``use_kernel`` is set (the
+    kernel bakes it into the grid program).
+    """
+    if use_kernel:
+        from ..kernels.dodoor_choice import dodoor_choice  # lazy: avoid cycle
+        choice, _ = dodoor_choice(r, cand, d_cand, view.L, view.D, view.C,
+                                  float(alpha), block_t=block_t,
+                                  interpret=interpret)
+        return choice
     L_ab = view.L[cand]                                        # [T, 2, K]
-    D_ab = view.D[cand] + jnp.take_along_axis(d, cand, axis=1) # [T, 2]
+    D_ab = view.D[cand] + d_cand                               # [T, 2]
     C_ab = view.C[cand]
-    scores = load_score_batched(r, L_ab, D_ab, C_ab, params.alpha)
-    take_b = scores[:, 0] > scores[:, 1]
+    scores = load_score_batched(r, L_ab, D_ab, C_ab, alpha)
+    take_b = scores[:, 0] > scores[:, 1]                       # ties keep A
     return jnp.where(take_b, cand[:, 1], cand[:, 0]).astype(jnp.int32)
+
+
+def dodoor_select_batch(key, r, d, view: SchedulerView, params: DodoorParams,
+                        *, keys=None, use_kernel: bool = False,
+                        interpret: bool = True) -> jnp.ndarray:
+    """Vectorized Algorithm 1 over a task batch (r [T,K], d [T,n]) — one cache
+    snapshot for the whole batch (the b-batched model's decision block).
+
+    ``keys`` [T, 2] overrides the default per-index key folding with caller-
+    supplied per-task keys (the engine passes task-id-seeded keys so the
+    batched path reproduces the sequential engine's candidate draws exactly).
+    """
+    if keys is None:
+        keys = jax.vmap(lambda i: jax.random.fold_in(key, i))(jnp.arange(r.shape[0]))
+    mask = feasible_mask(r, view.C)                            # [T, N]
+    cand = sample_feasible_batch(keys, mask, 2)                # [T, 2]
+    d_cand = jnp.take_along_axis(d, cand, axis=1)              # [T, 2]
+    return dodoor_choice_batch(r, cand, d_cand, view, params.alpha,
+                               use_kernel=use_kernel, interpret=interpret)
 
 
 # ---------------------------------------------------------------------------

@@ -37,14 +37,39 @@ def sample_feasible(key, mask: jnp.ndarray, num: int) -> jnp.ndarray:
     mask: [N] bool. Returns [num] int32. If no server is feasible, falls back
     to uniform over all servers (the task will queue at an overloaded node —
     mirrors the real system where submission is never rejected).
+
+    Implementation: ``num`` independent RandomInt draws (exactly Algorithm
+    1's two ``RandomInt`` calls) realized as inverse-CDF over the mask's
+    prefix sums — one uniform per draw instead of the N gumbels a masked
+    categorical would burn, which keeps the simulation engines' RNG cost off
+    the critical path.
     """
     import jax
 
     n = mask.shape[0]
-    any_ok = jnp.any(mask)
-    # Gumbel-top-k over the mask == uniform sample without needing to
-    # materialize filteredIndexes; with replacement we just draw `num`
-    # independent categoricals.
-    logits = jnp.where(mask, 0.0, -jnp.inf)
-    logits = jnp.where(any_ok, logits, jnp.zeros_like(logits))
-    return jax.random.categorical(key, logits, shape=(num,)).astype(jnp.int32)
+    cnt = jnp.cumsum(mask.astype(jnp.int32))               # [N] inclusive
+    k = cnt[-1]
+    any_ok = k > 0
+    eff_cnt = jnp.where(any_ok, cnt,
+                        jnp.arange(1, n + 1, dtype=jnp.int32))
+    kk = jnp.where(any_ok, k, n)
+    u = jax.random.uniform(key, (num,))
+    # 1-indexed rank among the kk admissible servers, then the rank-th
+    # admissible index = #positions whose prefix count is still below it.
+    tgt = jnp.minimum((u * kk.astype(jnp.float32)).astype(jnp.int32),
+                      kk - 1) + 1
+    idx = jnp.sum((eff_cnt[None, :] < tgt[:, None]).astype(jnp.int32), axis=1)
+    return idx.astype(jnp.int32)
+
+
+def sample_feasible_batch(keys, mask: jnp.ndarray, num: int) -> jnp.ndarray:
+    """Batched :func:`sample_feasible` for a decision block.
+
+    keys: [T, 2] one PRNG key per task; mask: [T, N] per-task feasibility.
+    Returns [T, num] int32. vmap preserves per-key randomness, so row ``t``
+    is bit-identical to ``sample_feasible(keys[t], mask[t], num)`` — the
+    batched engine relies on this for exact parity with the sequential one.
+    """
+    import jax
+
+    return jax.vmap(lambda k, m: sample_feasible(k, m, num))(keys, mask)

@@ -12,8 +12,12 @@ def dodoor_choice(r: jnp.ndarray, cand: jnp.ndarray, d_cand: jnp.ndarray,
                   interpret: bool = True):
     """Fused Algorithm-1 selection for a decision batch (see ref.py for the
     oracle semantics). Builds the packed server table [L | D | 1/ΣC²] once
-    per cache refresh and pads the batch to the tile size."""
+    per cache refresh and pads the batch to the tile size. ``block_t`` is
+    clamped to the smallest multiple of 8 covering the batch so that small
+    decision blocks (the engine's partial tail, or b ≪ 256) do not pay for a
+    full tile of padding in interpret mode."""
     T, K = r.shape
+    block_t = max(8, min(block_t, -(-T // 8) * 8))
     inv = 1.0 / jnp.sum(C.astype(jnp.float32) ** 2, axis=-1, keepdims=True)
     tbl = jnp.concatenate([L.astype(jnp.float32),
                            D.astype(jnp.float32)[:, None], inv], axis=-1)

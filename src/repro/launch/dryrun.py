@@ -158,6 +158,10 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
             t_compile = time.time() - t0 - t_lower
             mem = compiled.memory_analysis()
             raw_cost = compiled.cost_analysis()
+            # jax returns one properties dict; some versions wrap it in a
+            # per-device list.
+            if isinstance(raw_cost, (list, tuple)):
+                raw_cost = raw_cost[0] if raw_cost else {}
             census = collective_bytes(compiled.as_text())
 
         # 2) Analytic cost model (primary): XLA-CPU cost_analysis counts

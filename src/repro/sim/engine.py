@@ -1,9 +1,25 @@
 """Discrete-event cluster simulation engine — reproduces the §6 testbed.
 
-A single ``lax.scan`` over task arrivals (sorted by submit time) drives the
-whole system: five round-robin schedulers, the central data store with its
-b-batched push protocol (§4.1), FCFS resource-constrained server execution
-(§4.2), per-policy RPC message accounting, and the scheduling-latency model.
+Two interchangeable drivers cover the same model:
+
+* ``mode="sequential"`` — the original oracle: one ``lax.scan`` step per task
+  arrival, every policy decision made against the live carry.
+* ``mode="batched"``   — the paper-shaped driver: an outer ``lax.scan`` over
+  *decision blocks* of ``b`` tasks (one cache snapshot per block — exactly
+  the §3.2/§4.1 b-batched push boundary).  Within a block, candidate
+  sampling and Algorithm-1 scoring are vectorized over all ``b`` tasks at
+  once (``dodoor_select_batch`` / the fused ``dodoor_choice`` Pallas kernel
+  when ``use_kernel=True``), and the commit — FCFS start times, ring-buffer
+  inserts, interference, channel contention — runs as *server-parallel
+  rounds*: each server's FCFS chain is independent of every other server's,
+  so round ``k`` commits the k-th task of every server simultaneously.
+  Only PoT, whose probes read other servers' live state mid-block, commits
+  through a per-task inner scan; Prequal (per-decision probe-pool state)
+  delegates to the sequential driver.
+
+The batched driver is *exact*: placements, timestamps, and the message
+ledger are bit-identical to the sequential oracle for random/dodoor/
+(1+β) (and for PoT via the inner scan) — see ``tests/test_engine_batched.py``.
 
 Server execution model
 ----------------------
@@ -40,7 +56,9 @@ only upper-bounds the mini-batch at 2b/num_schedulers; we default to a faster
 cadence within that bound, calibrated to the paper's reported 33% message
 overhead). Server ``overrideNodeState`` messages are folded in implicitly:
 truth(now) already excludes completed tasks, exactly what a completion-time
-override reports.
+override reports.  In batched mode the push happens once per full block,
+after the block's commit — the same protocol instant as the sequential
+per-task trigger ``(i+1) % b == 0``.
 
 Message accounting (Fig. 4/6 "RPC counts processed by all schedulers"):
 
@@ -48,6 +66,11 @@ Message accounting (Fig. 4/6 "RPC counts processed by all schedulers"):
 * PoT: +4 (two synchronous probe round-trips);
 * Prequal: +2·r_probe (async probe sends + replies);
 * Dodoor: +num_schedulers per batch push, +1 per addNewLoad flush.
+
+Compilation note: scalar model parameters (α, β, interference, the RPC
+timing model, the outage window, Prequal's q_rif) are traced operands, not
+compile-time constants — sweeping them reuses one compiled program per
+(policy, shapes) pair instead of recompiling per configuration.
 """
 from __future__ import annotations
 
@@ -58,9 +81,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..core.prefilter import feasible_mask, sample_feasible
+from ..core.policies import dodoor_choice_batch
+from ..core.prefilter import feasible_mask, sample_feasible, sample_feasible_batch
 from ..core.rl_score import load_score_batched
-from ..core.types import DodoorParams, PrequalParams
+from ..core.types import PrequalParams, SchedulerView
 from .cluster import ClusterSpec
 from .messages import RpcModel
 
@@ -92,6 +116,22 @@ class EngineConfig(NamedTuple):
                                     # the first batch boundary after the end
     rpc: RpcModel = RpcModel()
     prequal: PrequalParams = PrequalParams()
+
+
+class _Dyn(NamedTuple):
+    """Traced scalar parameters (see the compilation note in the module
+    docstring). One compiled program serves every value of these."""
+
+    alpha: jnp.ndarray
+    beta: jnp.ndarray
+    interference: jnp.ndarray
+    hop_ms: jnp.ndarray
+    chan_ms: jnp.ndarray
+    push_block_ms: jnp.ndarray
+    compute_ms: jnp.ndarray
+    outage0: jnp.ndarray      # +inf when no outage is configured
+    outage1: jnp.ndarray
+    q_rif: jnp.ndarray
 
 
 class SimResult(NamedTuple):
@@ -151,7 +191,27 @@ class _Carry(NamedTuple):
     msgs: jnp.ndarray         # [4] int32: base, probe, push, flush
 
 
-def _truth_rows(carry: _Carry, rows: jnp.ndarray, now: jnp.ndarray):
+class _BlockCarry(NamedTuple):
+    """Batched-driver carry — the sequential carry minus the Prequal pools
+    (Prequal never runs batched)."""
+
+    core_free: jnp.ndarray
+    mem_free: jnp.ndarray
+    prev_start: jnp.ndarray
+    rb_release: jnp.ndarray
+    rb_cpu: jnp.ndarray
+    rb_mem: jnp.ndarray
+    rb_dur: jnp.ndarray
+    view_L: jnp.ndarray
+    view_D: jnp.ndarray
+    view_rif: jnp.ndarray
+    pending: jnp.ndarray
+    chan_free: jnp.ndarray
+    push_end: jnp.ndarray
+    msgs: jnp.ndarray
+
+
+def _truth_rows(carry, rows: jnp.ndarray, now: jnp.ndarray):
     """Ground-truth (L, D, rif) for a set of servers, from the ring buffer."""
     rel = carry.rb_release[rows]                       # [k, R]
     act = (rel > now).astype(jnp.float32)
@@ -162,7 +222,7 @@ def _truth_rows(carry: _Carry, rows: jnp.ndarray, now: jnp.ndarray):
     return L, D, rif
 
 
-def _truth_all(carry: _Carry, now: jnp.ndarray):
+def _truth_all(carry, now: jnp.ndarray):
     act = (carry.rb_release > now).astype(jnp.float32)
     L = jnp.stack([jnp.sum(carry.rb_cpu * act, -1),
                    jnp.sum(carry.rb_mem * act, -1)], axis=-1)
@@ -172,7 +232,7 @@ def _truth_all(carry: _Carry, now: jnp.ndarray):
 
 
 def _select(policy: str, key, carry: _Carry, r_sub, d_est_srv, now, sched,
-            C, cfg: EngineConfig):
+            C, cfg: EngineConfig, dyn: _Dyn):
     """Dispatch the placement policy. Returns (server j, carry, extra_msgs,
     extra latency ms)."""
     mask = feasible_mask(r_sub, C)
@@ -187,7 +247,7 @@ def _select(policy: str, key, carry: _Carry, r_sub, d_est_srv, now, sched,
         _, _, rif = _truth_rows(carry, cand, now)       # synchronous probes
         j = jnp.where(rif[1] < rif[0], cand[1], cand[0]).astype(jnp.int32)
         # 2 probe sends + 2 replies; probes fly in parallel → +1 RTT latency.
-        return j, carry, 4, jnp.float32(2.0 * cfg.rpc.hop_ms)
+        return j, carry, 4, 2.0 * dyn.hop_ms
 
     if policy in ("dodoor", "one_plus_beta"):
         k_cand, k_beta = jax.random.split(key)
@@ -196,10 +256,10 @@ def _select(policy: str, key, carry: _Carry, r_sub, d_est_srv, now, sched,
         D_ab = carry.view_D[cand] + d_est_srv[cand]     # D_j + d_ij
         C_ab = C[cand]
         scores = load_score_batched(r_sub[None], L_ab[None], D_ab[None],
-                                    C_ab[None], cfg.alpha)[0]
+                                    C_ab[None], dyn.alpha)[0]
         two = jnp.where(scores[0] > scores[1], cand[1], cand[0])
         if policy == "one_plus_beta":
-            use_two = jax.random.uniform(k_beta) < cfg.beta
+            use_two = jax.random.uniform(k_beta) < dyn.beta
             j = jnp.where(use_two, two, cand[0]).astype(jnp.int32)
         else:
             j = two.astype(jnp.int32)
@@ -219,7 +279,7 @@ def _select(policy: str, key, carry: _Carry, r_sub, d_est_srv, now, sched,
         n_valid = jnp.maximum(jnp.sum(valid), 1)
         sorted_rif = jnp.sort(rifs)
         q_idx = jnp.clip(
-            (cfg.prequal.q_rif * n_valid.astype(jnp.float32)).astype(jnp.int32),
+            (dyn.q_rif * n_valid.astype(jnp.float32)).astype(jnp.int32),
             0, rifs.shape[0] - 1)
         threshold = sorted_rif[q_idx]
         cold = valid & (carry.pool_rif[s] <= threshold)
@@ -265,11 +325,77 @@ def _select(policy: str, key, carry: _Carry, r_sub, d_est_srv, now, sched,
     raise ValueError(f"unknown policy {policy!r}")
 
 
+def _commit_one(carry, valid, now, j, cores, mem_mb, dur_raw, d_est_j,
+                extra_lat, dyn: _Dyn, cores_per, mem_unit, MU: int):
+    """Commit one placed task to server ``j``: channel contention, FCFS start,
+    interference-stretched runtime, unit allocation, ring-buffer insert.
+    Shared verbatim by the sequential driver and the batched PoT inner scan
+    so the two are arithmetically identical. ``valid=False`` makes every
+    state write a no-op (padded block tails)."""
+    _, _, rif_j = _truth_rows(carry, j[None], now)
+    occupancy = dyn.chan_ms * (1.0 + rif_j[0] / cores_per[j])
+    chan_wait = jnp.maximum(0.0, carry.chan_free[j] - now)
+    sched_ms = (dyn.compute_ms + extra_lat + chan_wait
+                + occupancy + dyn.hop_ms)
+    new_chan = jnp.maximum(carry.chan_free[j], now) + occupancy
+    carry = carry._replace(chan_free=carry.chan_free.at[j].set(
+        jnp.where(valid, new_chan, carry.chan_free[j])))
+    enqueue_t = now + sched_ms
+
+    c_eff = jnp.clip(cores, 1, cores_per[j]).astype(jnp.int32)
+    mu_need = jnp.clip(jnp.ceil(mem_mb / mem_unit[j]), 1, MU).astype(jnp.int32)
+
+    cf = carry.core_free[j]
+    mf = carry.mem_free[j]
+    cf_sorted = jnp.sort(cf)
+    mf_sorted = jnp.sort(mf)
+    start = jnp.maximum(
+        jnp.maximum(enqueue_t, carry.prev_start[j]),
+        jnp.maximum(cf_sorted[c_eff - 1], mf_sorted[mu_need - 1]))
+    # Co-location interference: cores still busy when we start stretch the
+    # actual runtime (profiles are measured at low occupancy, §6.3).
+    pad = CMAX - cores_per[j]
+    busy = jnp.sum(cf > start) - pad          # running tasks' cores
+    frac = busy.astype(jnp.float32) / cores_per[j].astype(jnp.float32)
+    dur = dur_raw * (1.0 + dyn.interference * jnp.clip(frac, 0.0, 1.0))
+    finish = start + dur
+
+    c_ranks = jnp.argsort(jnp.argsort(cf))
+    m_ranks = jnp.argsort(jnp.argsort(mf))
+    cf_new = jnp.where(c_ranks < c_eff, finish, cf)
+    mf_new = jnp.where(m_ranks < mu_need, finish, mf)
+    carry = carry._replace(
+        core_free=carry.core_free.at[j].set(jnp.where(valid, cf_new, cf)),
+        mem_free=carry.mem_free.at[j].set(jnp.where(valid, mf_new, mf)),
+        prev_start=carry.prev_start.at[j].set(
+            jnp.where(valid, start, carry.prev_start[j])),
+    )
+
+    # In-flight ring buffer insert (slot with min release time).
+    slot = jnp.argmin(carry.rb_release[j])
+    carry = carry._replace(
+        rb_release=carry.rb_release.at[j, slot].set(
+            jnp.where(valid, finish, carry.rb_release[j, slot])),
+        rb_cpu=carry.rb_cpu.at[j, slot].set(
+            jnp.where(valid, cores, carry.rb_cpu[j, slot])),
+        rb_mem=carry.rb_mem.at[j, slot].set(
+            jnp.where(valid, mem_mb, carry.rb_mem[j, slot])),
+        rb_dur=carry.rb_dur.at[j, slot].set(
+            jnp.where(valid, d_est_j, carry.rb_dur[j, slot])),
+    )
+    return carry, (start, finish, enqueue_t, sched_ms)
+
+
 @partial(jax.jit, static_argnames=("cfg", "n", "num_types"))
-def _simulate_jax(xs, C, node_type, mem_unit, cores_per, cfg: EngineConfig,
-                  n: int, num_types: int, seed: int):
-    """The scan. xs = (r_sub [m,2], r_exec [m,T,2], d_est [m,T], d_act [m,T],
-    submit [m], task_id [m])."""
+def _simulate_jax(xs, C, node_type, mem_unit, cores_per, dyn_vec, dyn_ints,
+                  cfg: EngineConfig, n: int, num_types: int, seed: int):
+    """The sequential scan. xs = (i [m], r_sub [m,2], r_exec [m,T,2],
+    d_est [m,T], d_act [m,T], submit [m], task_id [m]).
+
+    ``dyn_ints = [b, flush_every]`` are traced: neither shapes the scan
+    here, so b/flush sweeps share one compiled program."""
+    dyn = _Dyn(*dyn_vec)
+    b_dyn, fe_dyn = dyn_ints[0], dyn_ints[1]
     S = cfg.num_schedulers
     R = cfg.rbuf_slots
     MU = cfg.mem_units
@@ -312,61 +438,19 @@ def _simulate_jax(xs, C, node_type, mem_unit, cores_per, cfg: EngineConfig,
         d_est_srv = d_est_t[node_type]                 # [n]
 
         j, carry, extra_msgs, extra_lat = _select(
-            cfg.policy, key, carry, r_sub, d_est_srv, now, sched, C, cfg)
+            cfg.policy, key, carry, r_sub, d_est_srv, now, sched, C, cfg, dyn)
 
-        # --- scheduling latency: compute + channel contention + placement hop.
-        # The enqueue RPC's service time grows with the target's load (a busy
-        # server answers its RPC port slower) — this is what makes imbalanced
-        # placement (Random) pay extra scheduling latency, §6.2/§6.3.
-        _, _, rif_j = _truth_rows(carry, j[None], now)
-        occupancy = cfg.rpc.chan_ms * (1.0 + rif_j[0] / cores_per[j])
-        chan_wait = jnp.maximum(0.0, carry.chan_free[j] - now)
-        sched_ms = (cfg.rpc.compute_ms + extra_lat + chan_wait
-                    + occupancy + cfg.rpc.hop_ms)
-        carry = carry._replace(chan_free=carry.chan_free.at[j].set(
-            jnp.maximum(carry.chan_free[j], now) + occupancy))
-        enqueue_t = now + sched_ms
-
-        # --- FCFS start time on server j
+        # --- commit: scheduling latency (compute + channel contention +
+        # placement hop; the enqueue RPC's service time grows with the
+        # target's load — a busy server answers its RPC port slower, which is
+        # what makes imbalanced placement pay extra latency, §6.2/§6.3),
+        # FCFS start, interference stretch, unit allocation, ring insert.
         cores = r_srv[j, 0]
         mem_mb = r_srv[j, 1]
-        dur = d_act_t[node_type[j]]
-        c_eff = jnp.clip(cores, 1, cores_per[j]).astype(jnp.int32)
-        mu_need = jnp.clip(jnp.ceil(mem_mb / mem_unit[j]), 1, MU).astype(jnp.int32)
-
-        cf = carry.core_free[j]
-        mf = carry.mem_free[j]
-        cf_sorted = jnp.sort(cf)
-        mf_sorted = jnp.sort(mf)
-        start = jnp.maximum(
-            jnp.maximum(enqueue_t, carry.prev_start[j]),
-            jnp.maximum(cf_sorted[c_eff - 1], mf_sorted[mu_need - 1]))
-        # Co-location interference: cores still busy when we start stretch the
-        # actual runtime (profiles are measured at low occupancy, §6.3).
-        pad = CMAX - cores_per[j]
-        busy = jnp.sum(cf > start) - pad          # running tasks' cores
-        frac = busy.astype(jnp.float32) / cores_per[j].astype(jnp.float32)
-        dur = dur * (1.0 + cfg.interference * jnp.clip(frac, 0.0, 1.0))
-        finish = start + dur
-
-        c_ranks = jnp.argsort(jnp.argsort(cf))
-        m_ranks = jnp.argsort(jnp.argsort(mf))
-        cf_new = jnp.where(c_ranks < c_eff, finish, cf)
-        mf_new = jnp.where(m_ranks < mu_need, finish, mf)
-        carry = carry._replace(
-            core_free=carry.core_free.at[j].set(cf_new),
-            mem_free=carry.mem_free.at[j].set(mf_new),
-            prev_start=carry.prev_start.at[j].set(start),
-        )
-
-        # --- in-flight ring buffer insert (slot with min release time)
-        slot = jnp.argmin(carry.rb_release[j])
-        carry = carry._replace(
-            rb_release=carry.rb_release.at[j, slot].set(finish),
-            rb_cpu=carry.rb_cpu.at[j, slot].set(cores),
-            rb_mem=carry.rb_mem.at[j, slot].set(mem_mb),
-            rb_dur=carry.rb_dur.at[j, slot].set(d_est_srv[j]),
-        )
+        dur_raw = d_act_t[node_type[j]]
+        carry, (start, finish, enqueue_t, sched_ms) = _commit_one(
+            carry, jnp.bool_(True), now, j, cores, mem_mb, dur_raw,
+            d_est_srv[j], extra_lat, dyn, cores_per, mem_unit, MU)
 
         msgs = carry.msgs.at[0].add(2).at[1].add(extra_msgs)
 
@@ -378,7 +462,7 @@ def _simulate_jax(xs, C, node_type, mem_unit, cores_per, cfg: EngineConfig,
             carry = carry._replace(pending=carry.pending.at[sched, j].add(delta))
 
             # --- addNewLoad flush (per-scheduler cadence)
-            do_flush = ((i // S) + 1) % cfg.flush_every == 0
+            do_flush = ((i // S) + 1) % fe_dyn == 0
             carry = carry._replace(pending=jnp.where(
                 do_flush, carry.pending.at[sched].set(0.0), carry.pending))
             msgs = jnp.where(do_flush, msgs.at[3].add(1), msgs)
@@ -386,10 +470,8 @@ def _simulate_jax(xs, C, node_type, mem_unit, cores_per, cfg: EngineConfig,
             # --- data-store batch push (every b decisions cluster-wide);
             #     suppressed during a §4.3 store outage (stale views persist,
             #     scheduling continues — graceful degradation by design).
-            do_push = (i + 1) % cfg.b == 0
-            if cfg.outage_ms:
-                o0, o1 = cfg.outage_ms
-                do_push = do_push & ~((now >= o0) & (now < o1))
+            do_push = (i + 1) % b_dyn == 0
+            do_push = do_push & ~((now >= dyn.outage0) & (now < dyn.outage1))
 
             def apply_push(carry):
                 L, D, rif = _truth_all(carry, now)
@@ -399,7 +481,7 @@ def _simulate_jax(xs, C, node_type, mem_unit, cores_per, cfg: EngineConfig,
                 store_rif = jnp.maximum(0.0, rif - unflushed[:, 3])
                 return carry._replace(view_L=store_L, view_D=store_D,
                                       view_rif=store_rif,
-                                      push_end=now + cfg.rpc.push_block_ms)
+                                      push_end=now + dyn.push_block_ms)
 
             carry = jax.lax.cond(do_push, apply_push, lambda c: c, carry)
             msgs = jnp.where(do_push, msgs.at[2].add(S), msgs)
@@ -412,9 +494,398 @@ def _simulate_jax(xs, C, node_type, mem_unit, cores_per, cfg: EngineConfig,
     return carry.msgs, outs
 
 
+def _sorted_fill(arr, k, value):
+    """Replace the ``k`` smallest entries of each sorted-ascending row of
+    ``arr`` [n, W] with ``value`` [n] (``value`` ≥ the k-th smallest entry),
+    keeping the row sorted — an O(W) shift-merge: drop the first ``k``
+    entries, then splice the ``k`` copies of ``value`` at their rank."""
+    n, W = arr.shape
+    iota = jnp.arange(W, dtype=jnp.int32)[None, :]
+    kk = k[:, None]
+    # Rank of `value` among the surviving entries arr[k:].
+    idx = jnp.sum((iota >= kk) & (arr < value[:, None]), axis=1)[:, None]
+    src = jnp.where(iota < idx, iota + kk, iota)
+    gathered = jnp.take_along_axis(arr, jnp.minimum(src, W - 1), axis=1)
+    in_win = (iota >= idx) & (iota < idx + kk)
+    return jnp.where(in_win, value[:, None], gathered)
+
+
+def _commit_rounds(carry: _BlockCarry, valid, now, j, cores, mem_mb, dur_raw,
+                   d_est_j, extra_lat, dyn: _Dyn, cores_per, mem_unit,
+                   n: int, MU: int):
+    """Server-parallel block commit for policies whose placements are known
+    before the commit (random/dodoor/(1+β)).
+
+    Every state row a task's commit reads or writes — ``chan_free[j]``,
+    ``core_free[j]``, ``mem_free[j]``, ``prev_start[j]``, ``rb_*[j]`` —
+    belongs to its own server, so the per-server FCFS chains are mutually
+    independent.  Round ``k`` therefore commits the k-th task of *every*
+    server at once (vectorized over the fleet), and a block finishes in
+    max-tasks-per-server rounds instead of ``b`` sequential steps.
+
+    The commit reads core/mem unit state only as a *multiset* (c-th earliest
+    free time, count busy past ``start``) and replaces the ``c_eff`` earliest
+    units with ``finish``; this driver keeps each row sorted ascending and
+    performs that update as an O(width) shift-merge — no sorts in the loop —
+    which yields bit-identical results to :func:`_commit_one`'s rank-based
+    form (the oracle's per-unit identities never reach any output).
+    """
+    bsz = j.shape[0]
+    tt = jnp.arange(bsz, dtype=jnp.int32)
+    # Rank of each task within its server's block queue (FCFS order).
+    same_before = ((j[None, :] == j[:, None]) & valid[None, :]
+                   & (tt[None, :] < tt[:, None]))
+    occ = jnp.sum(same_before, axis=1).astype(jnp.int32)        # [b]
+    rounds = jnp.max(jnp.where(valid, occ, -1)) + 1
+
+    rows = jnp.arange(n, dtype=jnp.int32)
+
+    def cond(state):
+        k = state[0]
+        return k < rounds
+
+    def body(state):
+        k, carry, outs_prev = state
+        # This round's task per server (or none).
+        tgt = jnp.where(valid & (occ == k), j, n)               # [b]
+        sel = jnp.full((n,), -1, jnp.int32).at[tgt].set(tt, mode="drop")
+        has = sel >= 0                                          # [n]
+        t = jnp.clip(sel, 0, bsz - 1)
+
+        now_s = now[t]
+        cores_s = cores[t]
+        mem_s = mem_mb[t]
+        dur_s = dur_raw[t]
+        dest_s = d_est_j[t]
+        xlat_s = extra_lat[t]
+
+        act = (carry.rb_release > now_s[:, None]).astype(jnp.float32)
+        rif = jnp.sum(act, axis=-1)                             # [n]
+        occupancy = dyn.chan_ms * (1.0 + rif / cores_per)
+        chan_wait = jnp.maximum(0.0, carry.chan_free - now_s)
+        sched_ms = (dyn.compute_ms + xlat_s + chan_wait
+                    + occupancy + dyn.hop_ms)
+        new_chan = jnp.maximum(carry.chan_free, now_s) + occupancy
+        chan_free = jnp.where(has, new_chan, carry.chan_free)
+        enqueue_t = now_s + sched_ms
+
+        c_eff = jnp.clip(cores_s, 1, cores_per).astype(jnp.int32)
+        mu_need = jnp.clip(jnp.ceil(mem_s / mem_unit), 1, MU).astype(jnp.int32)
+
+        cf = carry.core_free                                    # [n, CMAX]
+        mf = carry.mem_free                                     # [n, MU]
+        # Rows are sorted ascending: the c-th earliest free time is a gather.
+        core_gate = jnp.take_along_axis(cf, (c_eff - 1)[:, None], axis=1)[:, 0]
+        mem_gate = jnp.take_along_axis(mf, (mu_need - 1)[:, None], axis=1)[:, 0]
+        start = jnp.maximum(jnp.maximum(enqueue_t, carry.prev_start),
+                            jnp.maximum(core_gate, mem_gate))
+        pad = CMAX - cores_per
+        busy = jnp.sum(cf > start[:, None], axis=-1) - pad
+        frac = busy.astype(jnp.float32) / cores_per.astype(jnp.float32)
+        dur = dur_s * (1.0 + dyn.interference * jnp.clip(frac, 0.0, 1.0))
+        finish = start + dur
+
+        cf_new = _sorted_fill(cf, c_eff, finish)
+        mf_new = _sorted_fill(mf, mu_need, finish)
+        has_c = has[:, None]
+        carry = carry._replace(
+            core_free=jnp.where(has_c, cf_new, cf),
+            mem_free=jnp.where(has_c, mf_new, mf),
+            prev_start=jnp.where(has, start, carry.prev_start),
+            chan_free=chan_free,
+        )
+
+        # First index of the row minimum — two monoid reduces (min, then
+        # min-of-matching-iota) instead of argmin, whose variadic reduce is
+        # an order of magnitude slower on the XLA CPU backend.
+        rb_min = jnp.min(carry.rb_release, axis=-1, keepdims=True)
+        slot = jnp.min(jnp.where(carry.rb_release == rb_min,
+                                 jnp.arange(carry.rb_release.shape[1],
+                                            dtype=jnp.int32),
+                                 carry.rb_release.shape[1]), axis=-1)
+        rows_h = jnp.where(has, rows, n)                        # drop no-task
+        carry = carry._replace(
+            rb_release=carry.rb_release.at[rows_h, slot].set(
+                finish, mode="drop"),
+            rb_cpu=carry.rb_cpu.at[rows_h, slot].set(cores_s, mode="drop"),
+            rb_mem=carry.rb_mem.at[rows_h, slot].set(mem_s, mode="drop"),
+            rb_dur=carry.rb_dur.at[rows_h, slot].set(dest_s, mode="drop"),
+        )
+
+        t_out = jnp.where(has, t, bsz)                          # drop pads
+        outs = outs_prev.at[:, t_out].set(
+            jnp.stack([start, finish, enqueue_t, sched_ms]), mode="drop")
+        return (k + 1, carry, outs)
+
+    state = (jnp.int32(0), carry, jnp.zeros((4, bsz), jnp.float32))
+    _, carry, outs = jax.lax.while_loop(cond, body, state)
+    return carry, (outs[0], outs[1], outs[2], outs[3])
+
+
+@partial(jax.jit, static_argnames=("cfg", "n", "num_types", "use_kernel"))
+def _simulate_batched_jax(xs, C, node_type, mem_unit, cores_per, dyn_vec,
+                          dyn_ints, cfg: EngineConfig, n: int,
+                          num_types: int, seed: int, use_kernel: bool):
+    """The block scan. xs fields are [nb, b, ...]: global index, r_sub,
+    r_exec, d_est, d_act, submit, task_id, valid."""
+    dyn = _Dyn(*dyn_vec)
+    fe_dyn = dyn_ints[1]                 # flush cadence is traced; b shapes
+    S = cfg.num_schedulers               # the blocks and stays static
+    R = cfg.rbuf_slots
+    MU = cfg.mem_units
+    policy = cfg.policy
+    base_key = jax.random.PRNGKey(seed)
+
+    core_init = jnp.where(jnp.arange(CMAX)[None, :] < cores_per[:, None],
+                          0.0, jnp.inf)
+    carry0 = _BlockCarry(
+        core_free=core_init.astype(jnp.float32),
+        mem_free=jnp.zeros((n, MU), jnp.float32),
+        prev_start=jnp.zeros((n,), jnp.float32),
+        rb_release=jnp.zeros((n, R), jnp.float32),
+        rb_cpu=jnp.zeros((n, R), jnp.float32),
+        rb_mem=jnp.zeros((n, R), jnp.float32),
+        rb_dur=jnp.zeros((n, R), jnp.float32),
+        view_L=jnp.zeros((n, 2), jnp.float32),
+        view_D=jnp.zeros((n,), jnp.float32),
+        view_rif=jnp.zeros((n,), jnp.float32),
+        pending=jnp.zeros((S, n, 4), jnp.float32),
+        chan_free=jnp.zeros((n,), jnp.float32),
+        push_end=jnp.zeros((), jnp.float32),
+        msgs=jnp.zeros((4,), jnp.int32),
+    )
+
+    def block_step(carry: _BlockCarry, blk):
+        idx, r_sub, r_exec_t, d_est_t, d_act_t, submit, task_id, valid = blk
+        bsz = idx.shape[0]
+        tt = jnp.arange(bsz, dtype=jnp.int32)
+        now = submit                                            # [b]
+        sched = (idx % S).astype(jnp.int32)
+        keys = jax.vmap(lambda t: jax.random.fold_in(base_key, t))(task_id)
+        d_est_srv = d_est_t[:, node_type]                       # [b, n]
+        mask = feasible_mask(r_sub, C)                          # [b, n]
+
+        # ---- vectorized selection against the block's one cache snapshot
+        extra_lat = jnp.zeros((bsz,), jnp.float32)
+        probe_msgs = 0
+        cand = None
+        if policy == "random":
+            j = sample_feasible_batch(keys, mask, 1)[:, 0]
+        elif policy in ("dodoor", "one_plus_beta"):
+            kk = jax.vmap(jax.random.split)(keys)               # [b, 2, key]
+            k_cand, k_beta = kk[:, 0], kk[:, 1]
+            cand2 = sample_feasible_batch(k_cand, mask, 2)      # [b, 2]
+            d_cand = jnp.take_along_axis(d_est_srv, cand2, axis=1)
+            view = SchedulerView(L=carry.view_L, D=carry.view_D,
+                                 rif=carry.view_rif, C=C)
+            # The kernel bakes α into its grid program (static); the jnp
+            # reference path takes the traced scalar.
+            alpha = cfg.alpha if use_kernel else dyn.alpha
+            two = dodoor_choice_batch(r_sub, cand2, d_cand, view, alpha,
+                                      use_kernel=use_kernel)
+            if policy == "one_plus_beta":
+                u = jax.vmap(jax.random.uniform)(k_beta)
+                j = jnp.where(u < dyn.beta, two, cand2[:, 0]).astype(jnp.int32)
+            else:
+                j = two.astype(jnp.int32)
+            extra_lat = jnp.maximum(0.0, carry.push_end - now)
+        elif policy == "pot":
+            cand = sample_feasible_batch(keys, mask, 2)         # [b, 2]
+            probe_msgs = 4
+            j = None
+        else:
+            raise ValueError(f"policy {policy!r} has no batched driver")
+
+        # ---- commit
+        if j is not None:
+            nt_j = node_type[j]                                 # [b]
+            cores_t = r_exec_t[tt, nt_j, 0]
+            mem_t = r_exec_t[tt, nt_j, 1]
+            dur_t = d_act_t[tt, nt_j]
+            dest_t = d_est_srv[tt, j]
+            carry, (o_start, o_finish, o_enq, o_sched) = _commit_rounds(
+                carry, valid, now, j, cores_t, mem_t, dur_t, dest_t,
+                extra_lat, dyn, cores_per, mem_unit, n, MU)
+        else:
+            # PoT probes other servers' live ring buffers mid-block, so its
+            # decisions stay on a per-task inner scan (still vectorized
+            # sampling + no per-task RNG/conds — just the probe + commit).
+            nt_c = node_type[cand]                              # [b, 2]
+            cores_c = r_exec_t[tt[:, None], nt_c, 0]
+            mem_c = r_exec_t[tt[:, None], nt_c, 1]
+            dur_c = d_act_t[tt[:, None], nt_c]
+            dest_c = jnp.take_along_axis(d_est_srv, cand, axis=1)
+            pot_lat = 2.0 * dyn.hop_ms
+
+            def pot_step(c, inp):
+                valid_t, now_t, cand_t, cores_2, mem_2, dur_2, dest_2 = inp
+                _, _, rif = _truth_rows(c, cand_t, now_t)
+                pick_b = rif[1] < rif[0]
+                jt = jnp.where(pick_b, cand_t[1], cand_t[0]).astype(jnp.int32)
+                which = pick_b.astype(jnp.int32)
+                c, (st, fin, enq, sms) = _commit_one(
+                    c, valid_t, now_t, jt, cores_2[which], mem_2[which],
+                    dur_2[which], dest_2[which], pot_lat, dyn, cores_per,
+                    mem_unit, MU)
+                return c, (jt, st, fin, enq, sms)
+
+            carry, (j, o_start, o_finish, o_enq, o_sched) = jax.lax.scan(
+                pot_step, carry,
+                (valid, now, cand, cores_c, mem_c, dur_c, dest_c))
+            nt_j = node_type[j]
+            cores_t = r_exec_t[tt, nt_j, 0]
+            mem_t = r_exec_t[tt, nt_j, 1]
+            dest_t = d_est_srv[tt, j]
+
+        n_valid = jnp.sum(valid).astype(jnp.int32)
+        msgs = carry.msgs.at[0].add(2 * n_valid)
+        if probe_msgs:
+            msgs = msgs.at[1].add(probe_msgs * n_valid)
+
+        # ---- data-store protocol, once per block (cached-view policies)
+        if policy in ("dodoor", "one_plus_beta"):
+            delta = jnp.stack(
+                [cores_t, mem_t, dest_t, jnp.ones_like(cores_t)], axis=1)
+            do_flush = (((idx // S) + 1) % fe_dyn == 0) & valid
+            # A delta survives into the carried accumulator iff its scheduler
+            # does not flush at or after it within this block (the flush at a
+            # task's own step clears the delta it just added).
+            flushed_after = jnp.any(
+                (sched[None, :] == sched[:, None])
+                & (tt[None, :] >= tt[:, None]) & do_flush[None, :], axis=1)
+            survives = valid & ~flushed_after
+            add = jnp.zeros_like(carry.pending).at[
+                sched, jnp.clip(j, 0, n - 1)].add(
+                    delta * survives[:, None].astype(delta.dtype))
+            sched_flushed = jnp.zeros((S,), bool).at[
+                jnp.where(do_flush, sched, S)].set(True, mode="drop")
+            pending = jnp.where(
+                sched_flushed[:, None, None], 0.0, carry.pending) + add
+            carry = carry._replace(pending=pending)
+            msgs = msgs.at[3].add(jnp.sum(do_flush).astype(jnp.int32))
+
+            # Push fires at the block boundary — only a full block reaches
+            # the b-th decision (the padded tail never pushes), matching the
+            # sequential trigger (i+1) % b == 0 exactly.
+            now_push = now[-1]
+            do_push = valid[-1]
+            do_push = do_push & ~((now_push >= dyn.outage0)
+                                  & (now_push < dyn.outage1))
+
+            def apply_push(c):
+                L, D, rif = _truth_all(c, now_push)
+                unflushed = jnp.sum(c.pending, axis=0)          # [n, 4]
+                return c._replace(
+                    view_L=jnp.maximum(0.0, L - unflushed[:, :2]),
+                    view_D=jnp.maximum(0.0, D - unflushed[:, 2]),
+                    view_rif=jnp.maximum(0.0, rif - unflushed[:, 3]),
+                    push_end=now_push + dyn.push_block_ms)
+
+            carry = jax.lax.cond(do_push, apply_push, lambda c: c, carry)
+            msgs = jnp.where(do_push, msgs.at[2].add(S), msgs)
+        carry = carry._replace(msgs=msgs)
+
+        out = (j, o_start, o_finish, o_enq, o_sched, cores_t, mem_t)
+        return carry, out
+
+    carry, outs = jax.lax.scan(block_step, carry0, xs)
+    return carry.msgs, outs
+
+
+#: Device-conversion cache: repeated simulate() calls over the same
+#: workload/cluster (sweeps, benchmarks, parity tests) skip re-uploading
+#: inputs.  Keys use object ids; the keyed objects are pinned in the value
+#: so an id is never recycled while its entry lives.  Consequence: workload
+#: and cluster objects are treated as IMMUTABLE after their first simulate()
+#: call — mutating their numpy arrays in place afterwards would be silently
+#: ignored (both are frozen dataclasses, so this matches their contract;
+#: build a new object via dataclasses.replace instead).
+_CONV_CACHE: dict = {}
+_CONV_CACHE_MAX = 64
+
+
+def _conv_cached(key, pins, builder):
+    hit = _CONV_CACHE.get(key)
+    if hit is not None:
+        return hit[1]
+    if len(_CONV_CACHE) >= _CONV_CACHE_MAX:
+        _CONV_CACHE.clear()
+    val = builder()
+    _CONV_CACHE[key] = (pins, val)
+    return val
+
+
+def _make_dyn(cfg: EngineConfig) -> jnp.ndarray:
+    """The traced-scalar parameters, packed as one [10] device array (a
+    single transfer; unpacked into :class:`_Dyn` inside the jit)."""
+    def build():
+        o0, o1 = cfg.outage_ms if cfg.outage_ms else (np.inf, np.inf)
+        return jnp.asarray(np.array(
+            [cfg.alpha, cfg.beta, cfg.interference, cfg.rpc.hop_ms,
+             cfg.rpc.chan_ms, cfg.rpc.push_block_ms, cfg.rpc.compute_ms,
+             o0, o1, cfg.prequal.q_rif], np.float32))
+
+    return _conv_cached(("dyn", cfg), (), build)
+
+
+def _cluster_arrays(cluster: ClusterSpec, mem_units: int):
+    def build():
+        return (jnp.asarray(cluster.C),
+                jnp.asarray(cluster.node_type),
+                jnp.asarray(cluster.C[:, 0], jnp.int32),
+                jnp.asarray(cluster.C[:, 1] / mem_units, jnp.float32))
+
+    return _conv_cached(("cluster", id(cluster), mem_units), cluster, build)
+
+
+def _make_dyn_ints(cfg: EngineConfig) -> jnp.ndarray:
+    """[b, flush_every] as traced int32 operands."""
+    return _conv_cached(
+        ("dyn_ints", cfg.b, cfg.flush_every), (),
+        lambda: jnp.asarray(np.array([cfg.b, cfg.flush_every], np.int32)))
+
+
+def _static_cfg(cfg: EngineConfig, keep_alpha: bool = False,
+                keep_b: bool = False) -> EngineConfig:
+    """Collapse traced-scalar fields to canonical values so one compiled
+    program serves every (α, β, interference, RPC, outage, q_rif, b,
+    flush_every) setting.  ``keep_b`` retains ``b`` — the batched driver's
+    block shape depends on it."""
+    return cfg._replace(
+        alpha=cfg.alpha if keep_alpha else 0.5,
+        beta=0.5,
+        interference=0.3,
+        b=cfg.b if keep_b else 50,
+        flush_every=2,
+        outage_ms=(),
+        rpc=RpcModel(),
+        prequal=cfg.prequal._replace(q_rif=0.84),
+    )
+
+
 def simulate(workload, cluster: ClusterSpec, cfg: EngineConfig,
-             seed: int = 0) -> SimResult:
-    """Run a full experiment: one workload trace through one policy."""
+             seed: int = 0, *, mode: str = "sequential",
+             use_kernel: bool = False) -> SimResult:
+    """Run a full experiment: one workload trace through one policy.
+
+    mode:
+        ``"sequential"`` — one scan step per task (the oracle).
+        ``"batched"``    — decision-block driver (see module docstring);
+        exact-parity with the oracle, much faster.  Prequal has per-decision
+        probe-pool state and silently runs on the sequential driver.
+    use_kernel:
+        batched mode only — route Algorithm-1 selection through the fused
+        ``dodoor_choice`` Pallas kernel instead of the jnp reference.
+
+    ``workload`` and ``cluster`` are cached on device by object identity
+    (they are frozen dataclasses): do not mutate their arrays in place
+    between calls — derive a new object with ``dataclasses.replace``.
+    """
+    if mode not in ("sequential", "batched"):
+        raise ValueError(f"unknown mode {mode!r}")
+    if cfg.b < 1 or cfg.flush_every < 1:
+        raise ValueError(
+            f"b={cfg.b} and flush_every={cfg.flush_every} must be ≥ 1")
     if cfg.policy == "dodoor":
         bound = max(1, 2 * cfg.b // max(1, cfg.num_schedulers))
         if cfg.flush_every > bound:
@@ -422,25 +893,68 @@ def simulate(workload, cluster: ClusterSpec, cfg: EngineConfig,
                 f"flush_every={cfg.flush_every} violates the §4.1 mini-batch "
                 f"bound 2b/num_schedulers = {bound}")
     n = cluster.num_servers
-    C = jnp.asarray(cluster.C)
-    node_type = jnp.asarray(cluster.node_type)
-    cores_per = jnp.asarray(cluster.C[:, 0], jnp.int32)
-    mem_unit = jnp.asarray(cluster.C[:, 1] / cfg.mem_units, jnp.float32)
+    C, node_type, cores_per, mem_unit = _cluster_arrays(cluster,
+                                                        cfg.mem_units)
+    dyn = _make_dyn(cfg)
 
     m = workload.r_submit.shape[0]
-    xs = (
-        jnp.arange(m, dtype=jnp.int32),
-        jnp.asarray(workload.r_submit),
-        jnp.asarray(workload.r_exec),
-        jnp.asarray(workload.d_est),
-        jnp.asarray(workload.d_act),
-        jnp.asarray(workload.submit_ms),
-        jnp.arange(m, dtype=jnp.int32),     # task ids
-    )
-    msgs, outs = _simulate_jax(xs, C, node_type, mem_unit, cores_per, cfg,
-                               n, cluster.num_types, seed)
+    batched = mode == "batched" and cfg.policy != "prequal"
+    if batched:
+        b = cfg.b
+        nb = -(-m // b)
+
+        def build_blocks():
+            pad = nb * b - m
+
+            def prep(a):
+                a = np.asarray(a)
+                if pad:
+                    a = np.pad(a, ((0, pad),) + ((0, 0),) * (a.ndim - 1),
+                               mode="edge")
+                return jnp.asarray(a.reshape((nb, b) + a.shape[1:]))
+
+            ids = np.arange(nb * b, dtype=np.int32)
+            ids_dev = jnp.asarray(ids.reshape(nb, b))
+            return (
+                ids_dev,
+                prep(workload.r_submit),
+                prep(workload.r_exec),
+                prep(workload.d_est),
+                prep(workload.d_act),
+                prep(workload.submit_ms),
+                ids_dev,                                   # task ids
+                jnp.asarray((ids < m).reshape(nb, b)),
+            )
+
+        xs = _conv_cached(("blocks", id(workload), b), workload,
+                          build_blocks)
+        msgs, outs = _simulate_batched_jax(
+            xs, C, node_type, mem_unit, cores_per, dyn, _make_dyn_ints(cfg),
+            _static_cfg(cfg, keep_alpha=use_kernel, keep_b=True), n,
+            cluster.num_types, seed, use_kernel)
+        outs = tuple(np.asarray(o).reshape(nb * b, *o.shape[2:])[:m]
+                     for o in outs)
+    else:
+        def build_seq():
+            ids = jnp.arange(m, dtype=jnp.int32)
+            return (
+                ids,
+                jnp.asarray(workload.r_submit),
+                jnp.asarray(workload.r_exec),
+                jnp.asarray(workload.d_est),
+                jnp.asarray(workload.d_act),
+                jnp.asarray(workload.submit_ms),
+                ids,                                       # task ids
+            )
+
+        xs = _conv_cached(("seq", id(workload)), workload, build_seq)
+        msgs, outs = _simulate_jax(xs, C, node_type, mem_unit, cores_per,
+                                   dyn, _make_dyn_ints(cfg),
+                                   _static_cfg(cfg), n,
+                                   cluster.num_types, seed)
+        outs = tuple(np.asarray(o) for o in outs)
     msgs = np.asarray(msgs)
-    j, start, finish, enq, sched_ms, cores, mem_mb = (np.asarray(o) for o in outs)
+    j, start, finish, enq, sched_ms, cores, mem_mb = outs
     return SimResult(
         server=j.astype(np.int32),
         submit_ms=np.asarray(workload.submit_ms),

@@ -35,8 +35,11 @@ def split_cluster(cluster: ClusterSpec, k: int):
 
 
 def simulate_hierarchical(workload, cluster: ClusterSpec, cfg: EngineConfig,
-                          k: int, seed: int = 0) -> SimResult:
-    """Run k independent mini-clusters; tasks round-robin across them."""
+                          k: int, seed: int = 0,
+                          mode: str = "sequential") -> SimResult:
+    """Run k independent mini-clusters; tasks round-robin across them.
+    ``mode`` selects the engine driver per mini-cluster (see
+    :func:`repro.sim.simulate`)."""
     m = workload.r_submit.shape[0]
     parts = split_cluster(cluster, k)
     assign = np.arange(m) % k
@@ -54,7 +57,7 @@ def simulate_hierarchical(workload, cluster: ClusterSpec, cfg: EngineConfig,
             submit_ms=workload.submit_ms[sel],
         )
         sub_cfg = cfg._replace(b=max(1, spec.num_servers // 2))
-        res = simulate(sub, spec, sub_cfg, seed=seed + c)
+        res = simulate(sub, spec, sub_cfg, seed=seed + c, mode=mode)
         results.append((res, sel, idx))
 
     # merge back into submission order with global server ids

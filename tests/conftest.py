@@ -1,7 +1,23 @@
 """Shared fixtures. NOTE: no XLA_FLAGS here — smoke tests and benches must
-see the single real CPU device; only launch/dryrun.py forces 512 devices."""
+see the single real CPU device; only launch/dryrun.py forces 512 devices.
+
+Suite-speed plumbing (ISSUE 1):
+* a persistent XLA compilation cache under ``.jax_cache/`` (compiles
+  dominate the wall clock; re-runs skip them) — set via env *before* the
+  first ``import jax`` anywhere in the session;
+* ``sim_cache`` — session-scope memoization of ``simulate()`` results so
+  modules sharing a (workload, cluster, config) triple simulate once.
+"""
+import os
+
 import numpy as np
 import pytest
+
+os.environ.setdefault(
+    "JAX_COMPILATION_CACHE_DIR",
+    os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+                 ".jax_cache"))
+os.environ.setdefault("JAX_PERSISTENT_CACHE_MIN_COMPILE_TIME_SECS", "1")
 
 
 @pytest.fixture(scope="session")
@@ -27,3 +43,29 @@ def fb_small():
 def azure_small():
     from repro.workloads import azure
     return azure.synthesize(m=400, qps=4.0, seed=0)
+
+
+@pytest.fixture(scope="session")
+def sim_cache():
+    """Memoized ``simulate``: ``sim_cache(wl, cluster, cfg, seed=0,
+    mode=..., use_kernel=..., key=...)``.
+
+    ``key`` names the workload/cluster pair (defaults to their ``id``s —
+    stable within a session for session-scope fixtures); everything else in
+    the cache key is the hashable ``EngineConfig`` itself.
+    """
+    from repro.sim import simulate
+
+    cache = {}
+
+    def run(wl, cluster, cfg, seed=0, *, mode="sequential",
+            use_kernel=False, key=None):
+        k = (key, id(wl), id(cluster), cfg, seed, mode, use_kernel)
+        if k not in cache:
+            # Pin wl/cluster so their ids stay unique for the session.
+            cache[k] = (wl, cluster,
+                        simulate(wl, cluster, cfg, seed, mode=mode,
+                                 use_kernel=use_kernel))
+        return cache[k][2]
+
+    return run

@@ -2,7 +2,9 @@
 
 Each test pins one headline claim, with bands wide enough to tolerate the
 synthetic-trace substitution but tight enough that a broken scheduler fails.
-Runs on the full 100-server testbed with reduced task counts.
+Runs on the full 100-server testbed with reduced task counts, on the batched
+decision-block engine (placement-exact vs the sequential oracle — see
+tests/test_engine_batched.py — and several times faster at this scale).
 """
 import numpy as np
 import pytest
@@ -10,6 +12,8 @@ import pytest
 from repro.sim import EngineConfig, make_testbed, simulate, summarize, utilization_stats
 from repro.workloads import azure
 from repro.workloads import functionbench as fb
+
+pytestmark = pytest.mark.slow      # full-scale claim tests
 
 
 @pytest.fixture(scope="module")
@@ -22,7 +26,8 @@ def fb_results(cluster):
     wl = fb.synthesize(m=6000, qps=300.0, seed=0)
     out = {}
     for pol in ("random", "pot", "dodoor", "prequal"):
-        res = simulate(wl, cluster, EngineConfig(policy=pol, b=50))
+        res = simulate(wl, cluster, EngineConfig(policy=pol, b=50),
+                       mode="batched")
         out[pol] = (res, summarize(res))
     return out
 
@@ -32,7 +37,8 @@ def azure_results(cluster):
     wl = azure.synthesize(m=1500, qps=10.0, seed=0)
     out = {}
     for pol in ("random", "pot", "dodoor", "prequal"):
-        res = simulate(wl, cluster, EngineConfig(policy=pol, b=50))
+        res = simulate(wl, cluster, EngineConfig(policy=pol, b=50),
+                       mode="batched")
         out[pol] = (res, summarize(res))
     return out
 
@@ -117,7 +123,8 @@ class TestSensitivity:
         out = {}
         for alpha in (0.0, 0.5, 1.0):
             res = simulate(wl, cluster,
-                           EngineConfig(policy="dodoor", alpha=alpha))
+                           EngineConfig(policy="dodoor", alpha=alpha),
+                           mode="batched")
             out[alpha] = (summarize(res), utilization_stats(res, cluster))
         return out
 

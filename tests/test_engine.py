@@ -1,6 +1,7 @@
 """Discrete-event engine invariants + exact message accounting."""
 import numpy as np
 import pytest
+from hypothesis_compat import given, settings, st
 
 from repro.sim import (EngineConfig, make_testbed, resource_violations,
                        simulate, summarize)
@@ -10,10 +11,11 @@ POLICIES = ("random", "pot", "dodoor", "prequal", "one_plus_beta")
 
 
 @pytest.fixture(scope="module", params=POLICIES)
-def result(request, small_testbed, fb_small):
+def result(request, small_testbed, fb_small, sim_cache):
     cfg = EngineConfig(policy=request.param,
                        b=max(1, small_testbed.num_servers // 2))
-    return simulate(fb_small, small_testbed, cfg), small_testbed, fb_small
+    return (sim_cache(fb_small, small_testbed, cfg, key="fb_small"),
+            small_testbed, fb_small)
 
 
 class TestInvariants:
@@ -107,10 +109,12 @@ class TestStaleness:
         """Fig. 8 trade-off: smaller b ⇒ better makespan, more messages."""
         wl = fb.synthesize(m=1500, qps=80.0, seed=1)
         small = summarize(simulate(wl, small_testbed,
-                                   EngineConfig(policy="dodoor", b=5)))
+                                   EngineConfig(policy="dodoor", b=5),
+                                   mode="batched"))
         big = summarize(simulate(wl, small_testbed,
                                  EngineConfig(policy="dodoor", b=160,
-                                              flush_every=32)))
+                                              flush_every=32),
+                                 mode="batched"))
         assert small.msgs_per_task > big.msgs_per_task
         assert small.makespan_mean_ms <= big.makespan_mean_ms * 1.10
 
@@ -120,14 +124,11 @@ class TestMessageFormulaProperty:
     count for ANY (b, flush_every, num_schedulers, m) — the §4.1 accounting
     is exact, not tuned to the defaults."""
 
-    from hypothesis import given, settings
-    from hypothesis import strategies as st
-
     @given(b=st.integers(2, 60), s=st.integers(1, 8),
            fe=st.integers(1, 8), m=st.integers(20, 150))
     @settings(max_examples=12, deadline=None)
     def test_ledger_closed_form(self, b, s, fe, m, small_testbed):
-        from hypothesis import assume
+        from hypothesis_compat import assume
         from repro.workloads import functionbench as fb
         assume(fe <= max(1, 2 * b // s))
         wl = fb.synthesize(m=m, qps=80.0, seed=0)

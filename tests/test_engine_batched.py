@@ -1,0 +1,202 @@
+"""Batched decision-block engine: exact parity vs the sequential oracle,
+plus property tests for the per-task invariants.
+
+The acceptance contract (ISSUE 1): the batched engine reproduces the
+sequential engine's *placements* and *message ledger* exactly.  Timestamps
+agree to float32 round-off — the two drivers emit the same arithmetic, but
+XLA may contract the interference multiply-add into an FMA in one lowering
+and not the other (observed only on single-server fleets), so they are
+compared with ``allclose`` at 1-ulp-scale tolerances.
+"""
+import numpy as np
+import pytest
+from hypothesis_compat import HAVE_HYPOTHESIS, given, settings, st
+
+from repro.sim import (EngineConfig, make_homogeneous, make_testbed,
+                       resource_violations, simulate)
+from repro.workloads import functionbench as fb
+
+PARITY_POLICIES = ("dodoor", "random", "pot", "one_plus_beta")
+
+
+def assert_parity(seq, bat, *, timestamps_exact=False):
+    assert (seq.server == bat.server).all(), "placements diverge"
+    ledger = lambda r: (r.msgs_base, r.msgs_probe, r.msgs_push, r.msgs_flush)
+    assert ledger(seq) == ledger(bat), "message ledger diverges"
+    for f in ("enqueue_ms", "start_ms", "finish_ms", "sched_ms",
+              "cores", "mem_mb"):
+        a, b = getattr(seq, f), getattr(bat, f)
+        if timestamps_exact:
+            assert np.array_equal(a, b), f"{f} not bit-identical"
+        else:
+            np.testing.assert_allclose(a, b, rtol=1e-6, atol=1e-3,
+                                       err_msg=f)
+
+
+class TestParityFunctionBench:
+    """fb_small on the 20-node small testbed — the ISSUE's parity suite."""
+
+    @pytest.mark.parametrize("policy", PARITY_POLICIES)
+    def test_default_b(self, policy, small_testbed, fb_small, sim_cache):
+        cfg = EngineConfig(policy=policy,
+                           b=max(1, small_testbed.num_servers // 2))
+        seq = sim_cache(fb_small, small_testbed, cfg, key="fb_small")
+        bat = sim_cache(fb_small, small_testbed, cfg, mode="batched",
+                        key="fb_small")
+        assert_parity(seq, bat, timestamps_exact=True)
+
+    @pytest.mark.parametrize("b", (1, 7, 160, 1000))
+    def test_block_sizes_and_ragged_tail(self, b, small_testbed, fb_small,
+                                         sim_cache):
+        """b=1 (push every task), b=7 (600 % 7 != 0: every block boundary is
+        ragged-adjacent), b=160 (partial tail), b=1000 (> m: single partial
+        block, no pushes)."""
+        fe = 1 if b == 1 else 2
+        cfg = EngineConfig(policy="dodoor", b=b, flush_every=fe)
+        seq = sim_cache(fb_small, small_testbed, cfg, key="fb_small")
+        bat = sim_cache(fb_small, small_testbed, cfg, mode="batched",
+                        key="fb_small")
+        assert_parity(seq, bat, timestamps_exact=True)
+        if b == 1000:
+            assert bat.msgs_push == 0      # never reaches the b-th decision
+
+    def test_outage_window(self, small_testbed, fb_small):
+        cfg = EngineConfig(policy="dodoor", b=10,
+                           outage_ms=(1000.0, 5000.0))
+        seq = simulate(fb_small, small_testbed, cfg)
+        bat = simulate(fb_small, small_testbed, cfg, mode="batched")
+        assert_parity(seq, bat, timestamps_exact=True)
+        healthy = simulate(fb_small, small_testbed,
+                           EngineConfig(policy="dodoor", b=10),
+                           mode="batched")
+        assert bat.msgs_push < healthy.msgs_push
+
+    def test_alpha_extremes(self, small_testbed, fb_small):
+        for alpha in (0.0, 1.0):
+            cfg = EngineConfig(policy="dodoor", b=10, alpha=alpha)
+            assert_parity(simulate(fb_small, small_testbed, cfg),
+                          simulate(fb_small, small_testbed, cfg,
+                                   mode="batched"),
+                          timestamps_exact=True)
+
+    def test_seed_sensitivity(self, small_testbed, fb_small):
+        runs = [simulate(fb_small, small_testbed,
+                         EngineConfig(policy="dodoor", b=10), seed=s,
+                         mode="batched")
+                for s in (0, 1)]
+        assert (runs[0].server != runs[1].server).any()
+        assert_parity(simulate(fb_small, small_testbed,
+                               EngineConfig(policy="dodoor", b=10), seed=1),
+                      runs[1], timestamps_exact=True)
+
+
+class TestParityEdges:
+    def test_single_server_fleet(self):
+        """n=1 exercises the FMA-contraction caveat: placements and the
+        ledger stay exact, timestamps to round-off."""
+        cluster = make_homogeneous(1, cores=28, mem_mb=128_000)
+        wl = fb.synthesize(m=100, qps=20.0, seed=0)
+        cfg = EngineConfig(policy="dodoor", b=1, flush_every=1)
+        seq = simulate(wl, cluster, cfg)
+        bat = simulate(wl, cluster, cfg, mode="batched")
+        assert_parity(seq, bat)
+        assert (bat.server == 0).all()
+
+    def test_burst_arrivals(self, small_testbed):
+        from dataclasses import replace
+        wl = fb.synthesize(m=300, qps=50.0, seed=3)
+        burst = replace(wl, submit_ms=np.zeros_like(wl.submit_ms))
+        cfg = EngineConfig(policy="dodoor", b=10)
+        assert_parity(simulate(burst, small_testbed, cfg),
+                      simulate(burst, small_testbed, cfg, mode="batched"),
+                      timestamps_exact=True)
+
+    def test_full_testbed(self, testbed, sim_cache):
+        wl = fb.synthesize(m=1200, qps=120.0, seed=2)
+        cfg = EngineConfig(policy="dodoor", b=50)
+        assert_parity(sim_cache(wl, testbed, cfg, key="fb1200"),
+                      sim_cache(wl, testbed, cfg, mode="batched",
+                                key="fb1200"),
+                      timestamps_exact=True)
+
+    def test_prequal_delegates_to_sequential(self, small_testbed, fb_small):
+        cfg = EngineConfig(policy="prequal", b=10)
+        seq = simulate(fb_small, small_testbed, cfg)
+        bat = simulate(fb_small, small_testbed, cfg, mode="batched")
+        assert_parity(seq, bat, timestamps_exact=True)
+
+    def test_unknown_mode_rejected(self, small_testbed, fb_small):
+        with pytest.raises(ValueError):
+            simulate(fb_small, small_testbed, EngineConfig(), mode="warp")
+
+
+def _assert_kernel_parity(seq, bat, wl, cluster, seed=0):
+    """Kernel-path placements are expected to be bit-identical to the jnp
+    path on this platform; on a platform whose lowering rounds the score's
+    multiply-by-reciprocal differently, a near-tie may legitimately flip to
+    the task's *other* sampled candidate (and downstream placements then
+    diverge).  Accept exactly that failure mode and nothing else: the first
+    divergent task must have picked one of its two Algorithm-1 candidates.
+    """
+    assert seq.msgs_total == bat.msgs_total
+    if (seq.server == bat.server).all():
+        np.testing.assert_allclose(seq.finish_ms, bat.finish_ms,
+                                   rtol=1e-5, atol=1e-2)
+        return
+    import jax
+    from repro.core.prefilter import feasible_mask, sample_feasible
+    i = int(np.argmax(seq.server != bat.server))
+    key = jax.random.fold_in(jax.random.PRNGKey(seed), i)
+    k_cand = jax.random.split(key)[0]
+    import jax.numpy as jnp
+    mask = feasible_mask(jnp.asarray(wl.r_submit[i]),
+                         jnp.asarray(cluster.C))
+    cand = set(np.asarray(sample_feasible(k_cand, mask, 2)).tolist())
+    assert {int(seq.server[i]), int(bat.server[i])} <= cand, (
+        f"first divergence at task {i} is not a candidate tie-flip")
+
+
+class TestKernelEnginePath:
+    """use_kernel=True routes Algorithm-1 selection through the Pallas
+    kernel (interpret mode on CPU) inside the batched driver."""
+
+    def test_kernel_parity(self, small_testbed, fb_small, sim_cache):
+        cfg = EngineConfig(policy="dodoor", b=10)
+        seq = sim_cache(fb_small, small_testbed, cfg, key="fb_small")
+        bat = sim_cache(fb_small, small_testbed, cfg, mode="batched",
+                        use_kernel=True, key="fb_small")
+        _assert_kernel_parity(seq, bat, fb_small, small_testbed)
+
+    def test_kernel_partial_tail(self, small_testbed):
+        """m=137, b=25 → last block holds 12 real + 13 padded tasks; the
+        kernel's tile padding must not leak into placements or messages."""
+        wl = fb.synthesize(m=137, qps=30.0, seed=1)
+        cfg = EngineConfig(policy="dodoor", b=25)
+        seq = simulate(wl, small_testbed, cfg)
+        bat = simulate(wl, small_testbed, cfg, mode="batched",
+                       use_kernel=True)
+        _assert_kernel_parity(seq, bat, wl, small_testbed)
+
+
+@pytest.mark.skipif(not HAVE_HYPOTHESIS, reason="hypothesis not installed")
+class TestBatchedInvariantsProperty:
+    """Per-task invariants hold for arbitrary (m, qps, b, policy, seed)."""
+
+    @given(m=st.integers(40, 160), qps=st.floats(10.0, 120.0),
+           b=st.integers(1, 64), seed=st.integers(0, 3),
+           policy=st.sampled_from(PARITY_POLICIES))
+    @settings(max_examples=8, deadline=None)
+    def test_invariants(self, m, qps, b, seed, policy, small_testbed):
+        wl = fb.synthesize(m=m, qps=qps, seed=seed)
+        cfg = EngineConfig(policy=policy, b=b, flush_every=1)
+        res = simulate(wl, small_testbed, cfg, seed=seed, mode="batched")
+        assert res.server.shape[0] == m
+        assert (res.server >= 0).all()
+        assert (res.server < small_testbed.num_servers).all()
+        # enqueue ≤ start ≤ finish, enqueue ≥ submit
+        assert (res.enqueue_ms >= res.submit_ms - 1e-3).all()
+        assert (res.start_ms >= res.enqueue_ms - 1e-3).all()
+        assert (res.finish_ms > res.start_ms).all()
+        assert np.isfinite(res.finish_ms).all()
+        # concurrent per-server core/memory usage never exceeds capacity
+        assert resource_violations(res, small_testbed, dt_ms=500.0) == 0

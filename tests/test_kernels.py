@@ -74,6 +74,83 @@ class TestDodoorChoiceKernel:
                                    np.asarray(scores[:, 1]), rtol=1e-6)
 
 
+class TestDodoorChoiceEnginePath:
+    """The kernel as the batched engine consumes it (ISSUE 1 satellite):
+    Algorithm-1 tie-breaking, the padded tail of a partial decision block,
+    and the interpret=True CPU path the engine runs on."""
+
+    def _inputs(self, T, N, seed=0):
+        rng = np.random.RandomState(seed)
+        r = jnp.asarray(rng.rand(T, 2).astype(np.float32) * 8)
+        cand = jnp.asarray(rng.randint(0, N, size=(T, 2)).astype(np.int32))
+        d_cand = jnp.asarray(rng.rand(T, 2).astype(np.float32) * 1000)
+        L = jnp.asarray(rng.rand(N, 2).astype(np.float32) * 50)
+        D = jnp.asarray(rng.rand(N).astype(np.float32) * 5000)
+        C = jnp.asarray(8.0 + rng.rand(N, 2).astype(np.float32) * 100)
+        return r, cand, d_cand, L, D, C
+
+    def test_tie_breaks_keep_candidate_a(self):
+        """Exact score ties (identical server rows) must resolve to A —
+        Algorithm 1 line 11 only switches on a strict '>'."""
+        N, T = 6, 16
+        rng = np.random.RandomState(2)
+        r = jnp.asarray(rng.rand(T, 2).astype(np.float32))
+        # Servers 1 and 4 share identical (L, D, C) rows → exact tie.
+        L = jnp.asarray(rng.rand(N, 2).astype(np.float32) * 20)
+        L = L.at[4].set(L[1])
+        D = jnp.asarray(rng.rand(N).astype(np.float32) * 100)
+        D = D.at[4].set(D[1])
+        C = jnp.ones((N, 2)) * 30
+        cand = jnp.tile(jnp.array([[1, 4]], jnp.int32), (T, 1))
+        d_cand = jnp.ones((T, 2)) * 7.0
+        choice, scores = dodoor_choice(r, cand, d_cand, L, D, C, 0.5,
+                                       block_t=8)
+        np.testing.assert_allclose(np.asarray(scores[:, 0]),
+                                   np.asarray(scores[:, 1]))
+        assert (np.asarray(choice) == 1).all()       # ties keep A
+
+    @pytest.mark.parametrize("T", (1, 9, 12, 137))
+    def test_partial_block_padding(self, T):
+        """T not a multiple of block_t: the padded tail must neither corrupt
+        the first T outputs nor leak padded rows into them (the engine's
+        last decision block is exactly this shape)."""
+        r, cand, d_cand, L, D, C = self._inputs(T, 20, seed=T)
+        choice, scores = dodoor_choice(r, cand, d_cand, L, D, C, 0.5,
+                                       block_t=8)
+        rchoice, rscores = dodoor_choice_ref(r, cand, d_cand, L, D, C, 0.5)
+        assert choice.shape == (T,)
+        np.testing.assert_allclose(np.asarray(scores), np.asarray(rscores),
+                                   rtol=2e-5, atol=1e-6)
+        margin = np.abs(np.asarray(rscores[:, 0] - rscores[:, 1]))
+        firm = margin > 1e-5
+        assert (np.asarray(choice)[firm] == np.asarray(rchoice)[firm]).all()
+
+    def test_interpret_cpu_path_matches_policy_layer(self):
+        """dodoor_choice_batch(use_kernel=True, interpret=True) — the exact
+        call the batched engine makes — agrees with the jnp path."""
+        from repro.core import SchedulerView, dodoor_choice_batch
+        r, cand, d_cand, L, D, C = self._inputs(50, 20, seed=5)
+        view = SchedulerView(L=L, D=D, rif=jnp.zeros(20), C=C)
+        jnp_choice = dodoor_choice_batch(r, cand, d_cand, view, 0.5,
+                                         use_kernel=False)
+        k_choice = dodoor_choice_batch(r, cand, d_cand, view, 0.5,
+                                       use_kernel=True, interpret=True)
+        assert (np.asarray(jnp_choice) == np.asarray(k_choice)).all()
+
+    def test_engine_block_sizes_cover_kernel_tiles(self):
+        """Engine-realistic block sizes b ∈ {1, 10, 50} all round-trip
+        through the kernel's tile clamp (block_t is shrunk to cover b)."""
+        for b in (1, 10, 50):
+            r, cand, d_cand, L, D, C = self._inputs(b, 20, seed=b)
+            choice, _ = dodoor_choice(r, cand, d_cand, L, D, C, 0.5)
+            rchoice, rscores = dodoor_choice_ref(r, cand, d_cand, L, D, C,
+                                                 0.5)
+            margin = np.abs(np.asarray(rscores[:, 0] - rscores[:, 1]))
+            firm = margin > 1e-5
+            assert (np.asarray(choice)[firm]
+                    == np.asarray(rchoice)[firm]).all()
+
+
 class TestFlashAttention:
     @pytest.mark.parametrize("B,H,Hkv,Lq,Lk,D,causal,window", [
         (1, 2, 2, 128, 128, 64, True, None),      # square causal

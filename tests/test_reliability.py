@@ -21,10 +21,11 @@ class TestStoreOutage:
     @pytest.fixture(scope="class")
     def runs(self, cluster):
         wl = fb.synthesize(m=5000, qps=100.0, seed=4)   # ~50 s of arrivals
-        healthy = simulate(wl, cluster, EngineConfig(policy="dodoor"))
+        healthy = simulate(wl, cluster, EngineConfig(policy="dodoor"),
+                           mode="batched")
         # store dies for 15 s early in the run
         out = simulate(wl, cluster, EngineConfig(
-            policy="dodoor", outage_ms=(5_000.0, 20_000.0)))
+            policy="dodoor", outage_ms=(5_000.0, 20_000.0)), mode="batched")
         return wl, healthy, out
 
     def test_fully_operational_during_outage(self, runs):
@@ -72,7 +73,8 @@ class TestMiniClusters:
     def test_hierarchical_schedules_everything(self, cluster):
         wl = fb.synthesize(m=2000, qps=150.0, seed=5)
         res = simulate_hierarchical(wl, cluster,
-                                    EngineConfig(policy="dodoor"), k=4)
+                                    EngineConfig(policy="dodoor"), k=4,
+                                    mode="batched")
         assert res.server.shape[0] == 2000
         assert np.isfinite(res.finish_ms).all()
         assert (res.finish_ms > res.start_ms - 1e-6).all()
@@ -81,9 +83,10 @@ class TestMiniClusters:
         """§4.2: mini-clusters trade a little placement quality (smaller
         candidate pools) for independence; the loss must be modest."""
         wl = fb.synthesize(m=3000, qps=200.0, seed=6)
-        flat = summarize(simulate(wl, cluster, EngineConfig(policy="dodoor")))
+        flat = summarize(simulate(wl, cluster, EngineConfig(policy="dodoor"),
+                                  mode="batched"))
         hier = summarize(simulate_hierarchical(
-            wl, cluster, EngineConfig(policy="dodoor"), k=4))
+            wl, cluster, EngineConfig(policy="dodoor"), k=4, mode="batched"))
         assert hier.makespan_mean_ms < 1.5 * flat.makespan_mean_ms
         # per-mini-cluster stores push to fewer schedulers → no msg blow-up
         assert hier.msgs_per_task < flat.msgs_per_task * 1.5
