@@ -1,15 +1,26 @@
 """Kernel-layer benchmark (§5's 5,299-LoC Java prototype, re-thought).
 
-Decision throughput of the scheduling hot path at three implementation
+Decision throughput of the scheduling hot path at four implementation
 levels: per-request Python (≈ one RPC-handler thread), vectorized jnp
-(VPU), and the fused Pallas kernel (interpret mode here — TPU-targeted).
+(VPU), the two-stage fused-select Pallas kernel, and the fused
+sample→score→select megakernel (interpret mode on CPU — TPU-targeted).
 Also sanity-checks kernel-vs-oracle agreement at benchmark shapes, and
 measures the end-to-end simulation speedup of the batched decision-block
-engine over the sequential oracle on the fb_small trace (ISSUE 1
-acceptance: ≥ 5× for the dodoor policy).
+engine over the sequential oracle on the fb_small trace for **every**
+policy (ISSUE 2 acceptance: ≥ 3× for PoT and Prequal too).
+
+Machine-readable results are written to ``BENCH_engine.json`` (per-policy
+sequential/batched ms, speedup, decisions/s, git SHA) so the perf
+trajectory is tracked across PRs instead of scraped from CSV stdout.
+
+    PYTHONPATH=src python -m benchmarks.bench_kernels [--smoke] [--json PATH]
 """
 from __future__ import annotations
 
+import argparse
+import json
+import os
+import subprocess
 import time
 
 import jax
@@ -17,8 +28,11 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import DodoorParams, SchedulerView, dodoor_select, task_key
-from repro.kernels.dodoor_choice import dodoor_choice, dodoor_choice_ref
+from repro.kernels.dodoor_choice import (dodoor_choice, dodoor_choice_ref,
+                                         dodoor_fused, dodoor_fused_ref)
 from repro.kernels.rl_score import rl_score_matrix, rl_score_matrix_ref
+
+ENGINE_POLICIES = ("dodoor", "random", "pot", "prequal")
 
 
 def _best_of(fn, reps: int = 7) -> float:
@@ -32,20 +46,32 @@ def _best_of(fn, reps: int = 7) -> float:
     return best * 1e3
 
 
-def bench_engine(policy: str = "dodoor", reps: int = 7):
+def _git_sha() -> str:
+    try:
+        return subprocess.check_output(
+            ["git", "rev-parse", "--short", "HEAD"],
+            cwd=os.path.dirname(os.path.abspath(__file__)), text=True,
+            stderr=subprocess.DEVNULL).strip()
+    except Exception:
+        return "unknown"
+
+
+def bench_engine(policy: str = "dodoor", reps: int = 7, bs=(10, 50, 100),
+                 m: int = 600, qps: float = 60.0, scale: float = 0.2):
     """Sequential oracle vs batched decision-block engine on the fb_small
     trace (m=600, qps=60, the tier-1 parity fixture) over the 20-node
     small testbed. Parity is asserted before timing — the speedup rows
-    only count if the engines agree exactly."""
+    only count if the engines agree exactly.  Returns the per-b rows as
+    dicts (consumed by the BENCH_engine.json writer)."""
     from repro.sim import EngineConfig, make_testbed, simulate
     from repro.workloads import functionbench as fb
 
-    cluster = make_testbed(scale=0.2)
-    wl = fb.synthesize(m=600, qps=60.0, seed=0)          # fb_small
+    cluster = make_testbed(scale=scale)
+    wl = fb.synthesize(m=m, qps=qps, seed=0)             # fb_small default
 
-    print("bench,policy,b,sequential_ms,batched_ms,speedup")
-    best = 0.0
-    for b in (10, 50, 100):
+    print("bench,policy,b,sequential_ms,batched_ms,speedup,decisions_per_s")
+    rows = []
+    for b in bs:
         cfg = EngineConfig(policy=policy, b=b)
         seq = simulate(wl, cluster, cfg)
         bat = simulate(wl, cluster, cfg, mode="batched")
@@ -54,16 +80,24 @@ def bench_engine(policy: str = "dodoor", reps: int = 7):
         t_seq = _best_of(lambda: simulate(wl, cluster, cfg), reps)
         t_bat = _best_of(
             lambda: simulate(wl, cluster, cfg, mode="batched"), reps)
-        speedup = t_seq / t_bat
-        best = max(best, speedup)
+        row = {"policy": policy, "b": b,
+               "sequential_ms": round(t_seq, 3),
+               "batched_ms": round(t_bat, 3),
+               "speedup": round(t_seq / t_bat, 2),
+               "decisions_per_s": round(m / (t_bat * 1e-3))}
+        rows.append(row)
         print(f"engine,{policy},{b},{t_seq:.1f},{t_bat:.1f},"
-              f"{speedup:.1f}", flush=True)
-    print(f"# {policy} fb_small batched-engine speedup (best over b): "
+              f"{row['speedup']:.1f},{row['decisions_per_s']}", flush=True)
+    best = max(r["speedup"] for r in rows)
+    trace = "fb_small" if m == 600 else f"fb(m={m})"
+    print(f"# {policy} {trace} batched-engine speedup (best over b): "
           f"{best:.1f}x")
-    return best
+    return rows
 
 
-def main(T: int = 2048, N: int = 100):
+def bench_hotpath(T: int = 2048, N: int = 100, reps: int = 7):
+    """Decision throughput of the four hot-path implementations.
+    Returns {impl: decisions_per_s}."""
     rng = np.random.RandomState(0)
     r = jnp.asarray(rng.rand(T, 2).astype(np.float32) * 8)
     cand = jnp.asarray(rng.randint(0, N, (T, 2)).astype(np.int32))
@@ -71,51 +105,120 @@ def main(T: int = 2048, N: int = 100):
     L = jnp.asarray(rng.rand(N, 2).astype(np.float32) * 50)
     D = jnp.asarray(rng.rand(N).astype(np.float32) * 5000)
     C = jnp.asarray(8.0 + rng.rand(N, 2).astype(np.float32) * 100)
+    d_full = jnp.asarray(rng.rand(T, N).astype(np.float32) * 1000)
+    base = jax.random.PRNGKey(0)
+    keys = jax.vmap(lambda i: jax.random.fold_in(base, i))(jnp.arange(T))
 
+    out = {}
     print("bench,impl,decisions_per_s")
 
     # per-decision python/jax (the RPC-handler analogue)
     view = SchedulerView(L=L, D=D, rif=jnp.zeros(N), C=C)
     params = DodoorParams()
-    key = jax.random.PRNGKey(0)
-    d_full = jnp.asarray(rng.rand(T, N).astype(np.float32) * 1000)
-    _ = dodoor_select(task_key(key, 0), r[0], d_full[0], view, params)
-    t0 = time.time()
     n_seq = 50
-    for i in range(n_seq):
-        dodoor_select(task_key(key, i), r[i], d_full[i], view,
-                      params).block_until_ready()
-    print(f"kernels,per_decision_python,{n_seq / (time.time() - t0):.0f}")
+    t = _best_of(
+        lambda: [dodoor_select(task_key(base, i), r[i], d_full[i], view,
+                               params).block_until_ready()
+                 for i in range(n_seq)], reps=min(3, reps))
+    out["per_decision_python"] = n_seq / (t * 1e-3)
+    print(f"kernels,per_decision_python,{out['per_decision_python']:.0f}")
 
-    # vectorized oracle
+    # vectorized oracle (two-stage: pre-sampled candidates)
     f_ref = jax.jit(lambda: dodoor_choice_ref(r, cand, d_cand, L, D, C, 0.5))
-    f_ref()[0].block_until_ready()
-    t0 = time.time()
-    reps = 20
-    for _ in range(reps):
-        f_ref()[0].block_until_ready()
-    print(f"kernels,batched_jnp,{T * reps / (time.time() - t0):.0f}")
+    t = _best_of(lambda: f_ref()[0].block_until_ready(), reps)
+    out["batched_jnp"] = T / (t * 1e-3)
+    print(f"kernels,batched_jnp,{out['batched_jnp']:.0f}")
 
-    # fused pallas (interpret mode on CPU; compiled on TPU target)
+    # two-stage fused-select pallas (interpret on CPU; compiled on TPU)
     choice, scores = dodoor_choice(r, cand, d_cand, L, D, C, 0.5)
     rchoice, rscores = f_ref()
     np.testing.assert_allclose(np.asarray(scores), np.asarray(rscores),
                                rtol=2e-5, atol=1e-6)
-    t0 = time.time()
-    for _ in range(3):
-        dodoor_choice(r, cand, d_cand, L, D, C, 0.5)[0].block_until_ready()
-    print(f"kernels,pallas_interpret,{T * 3 / (time.time() - t0):.0f}")
+    t = _best_of(
+        lambda: dodoor_choice(r, cand, d_cand, L, D, C,
+                              0.5)[0].block_until_ready(), min(3, reps))
+    out["pallas_select"] = T / (t * 1e-3)
+    print(f"kernels,pallas_select,{out['pallas_select']:.0f}")
+
+    # fused megakernel: sample→score→select in one pass; draws must be
+    # bit-identical to the two-stage sample_feasible_batch path.
+    fchoice, fcand, fscores = dodoor_fused(keys, r, d_full, L, D, C, 0.5)
+    gchoice, gcand, _ = dodoor_fused_ref(keys, r, d_full, L, D, C, 0.5)
+    assert (np.asarray(fcand) == np.asarray(gcand)).all(), \
+        "megakernel candidate draws diverge from the two-stage path"
+    assert (np.asarray(fchoice) == np.asarray(gchoice)).all(), \
+        "megakernel choices diverge from the fused reference"
+    t = _best_of(
+        lambda: dodoor_fused(keys, r, d_full, L, D, C,
+                             0.5)[0].block_until_ready(), min(3, reps))
+    out["pallas_megakernel"] = T / (t * 1e-3)
+    print(f"kernels,pallas_megakernel,{out['pallas_megakernel']:.0f}")
 
     # rl_score matrix kernel agreement at fleet scale
-    out = rl_score_matrix(r, L, C)
+    mat = rl_score_matrix(r, L, C)
     ref = rl_score_matrix_ref(r, L, C)
-    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=2e-5)
+    np.testing.assert_allclose(np.asarray(mat), np.asarray(ref), rtol=2e-5)
     print(f"# rl_score kernel allclose at ({T}×{N}): ok")
+    return out
 
-    # end-to-end engine: batched decision blocks vs the sequential oracle
-    bench_engine("dodoor")
-    bench_engine("random", reps=3)
+
+def write_json(path: str, kernels: dict, engine_rows: dict,
+               trace: dict) -> None:
+    """Persist machine-readable perf results (per-policy seq/batched ms,
+    speedup, decisions/s, git SHA) for cross-PR tracking."""
+    doc = {
+        "schema": 1,
+        "git_sha": _git_sha(),
+        "backend": jax.default_backend(),
+        "trace": trace,
+        "kernels_decisions_per_s": {k: round(v) for k, v in kernels.items()},
+        "engine": {
+            policy: {
+                "rows": rows,
+                "best_speedup": max(r["speedup"] for r in rows),
+                "best_decisions_per_s": max(r["decisions_per_s"]
+                                            for r in rows),
+            }
+            for policy, rows in engine_rows.items()
+        },
+    }
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=2, sort_keys=True)
+        f.write("\n")
+    print(f"# wrote {path}")
+
+
+def main(T: int = 2048, N: int = 100, *, smoke: bool = False,
+         json_path: str | None = "BENCH_engine.json"):
+    if smoke:                       # CI-sized: tiny shapes, interpret mode
+        T, N, m, bs, reps = 128, 16, 120, (10, 25), 2
+    else:
+        m, bs, reps = 600, (10, 50, 100), 7
+
+    kernels = bench_hotpath(T, N, reps=reps)
+
+    # end-to-end engine: batched decision blocks vs the sequential oracle,
+    # every policy on the batched path (PoT speculative commit, Prequal
+    # segment scan included)
+    engine_rows = {}
+    for policy in ENGINE_POLICIES:
+        engine_rows[policy] = bench_engine(
+            policy, reps=min(reps, 3) if policy != "dodoor" else reps,
+            bs=bs, m=m)
+
+    if json_path:
+        write_json(json_path, kernels, engine_rows,
+                   {"name": "fb_small" if not smoke else "fb_smoke",
+                    "m": m, "qps": 60.0, "T": T, "N": N})
+    return engine_rows
 
 
 if __name__ == "__main__":
-    main()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny CI-sized shapes (interpret mode)")
+    ap.add_argument("--json", default="BENCH_engine.json",
+                    help="output path for machine-readable results "
+                         "('' disables)")
+    args = ap.parse_args()
+    main(smoke=args.smoke, json_path=args.json or None)

@@ -16,8 +16,10 @@ def sweep(workload_fn, qps_list, policies=POLICIES, *, cluster=None,
 
     ``mode``/``use_kernel`` select the engine driver (see
     ``repro.sim.simulate``); the batched decision-block driver is the
-    default — it is placement-exact vs the sequential oracle and several
-    times faster, which is what makes the large sweeps tractable.
+    default — it is placement-exact vs the sequential oracle for *every*
+    policy (PoT rides the speculative commit, Prequal the segment scan —
+    no silent sequential fallback anymore) and several times faster, which
+    is what makes the large sweeps tractable.
     """
     cluster = cluster if cluster is not None else make_testbed()
     b = b or max(1, cluster.num_servers // 2)

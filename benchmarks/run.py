@@ -1,6 +1,10 @@
 """Benchmark aggregator: one section per paper table/figure.
 
-    PYTHONPATH=src python -m benchmarks.run [--quick]
+    PYTHONPATH=src python -m benchmarks.run [--quick] [--json PATH]
+
+The hot-path section additionally persists machine-readable perf results
+(per-policy sequential/batched ms, speedup, decisions/s, git SHA) to
+``BENCH_engine.json`` so the perf trajectory is tracked across PRs.
 """
 from __future__ import annotations
 
@@ -12,6 +16,8 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true",
                     help="smaller task counts (CI-sized)")
+    ap.add_argument("--json", default="BENCH_engine.json",
+                    help="hot-path results file ('' disables)")
     args = ap.parse_args()
     q = args.quick
 
@@ -32,7 +38,8 @@ def main():
         ("§2.1 — balls-into-bins gaps vs theory",
          lambda: bench_gap.main(m=8000 if q else 20000)),
         ("§5 — scheduling hot-path implementations",
-         lambda: bench_kernels.main(T=1024 if q else 2048)),
+         # smoke=True overrides the shapes internally (T=128, m=120)
+         lambda: bench_kernels.main(smoke=q, json_path=args.json or None)),
         ("§2.4 — Dodoor as LLM-serving router",
          lambda: bench_router.main(m=1000 if q else 2000,
                                    qps_list=(40,) if q else (20, 40, 80))),

@@ -77,7 +77,7 @@ def dodoor_select(key, r, d, view: SchedulerView, params: DodoorParams) -> jnp.n
 
 def dodoor_choice_batch(r, cand, d_cand, view: SchedulerView, alpha,
                         *, use_kernel: bool = False,
-                        interpret: bool = True,
+                        interpret: bool | None = None,
                         block_t: int = 256) -> jnp.ndarray:
     """Score a decision block's pre-sampled candidate pairs and pick winners.
 
@@ -87,7 +87,11 @@ def dodoor_choice_batch(r, cand, d_cand, view: SchedulerView, alpha,
     through the Pallas kernel (``repro.kernels.dodoor_choice``); the default
     is the pure-jnp path, bit-identical to :func:`dodoor_select` per task.
     ``alpha`` must be a static Python float when ``use_kernel`` is set (the
-    kernel bakes it into the grid program).
+    kernel bakes it into the grid program).  ``interpret=None`` auto-detects
+    the backend (compiled on TPU, interpreter elsewhere); the engine's
+    batched driver bypasses this two-stage form entirely when
+    ``use_kernel=True`` and calls the fused sample→score→select megakernel
+    (``repro.kernels.dodoor_choice.dodoor_fused``) instead.
     """
     if use_kernel:
         from ..kernels.dodoor_choice import dodoor_choice  # lazy: avoid cycle
@@ -105,7 +109,7 @@ def dodoor_choice_batch(r, cand, d_cand, view: SchedulerView, alpha,
 
 def dodoor_select_batch(key, r, d, view: SchedulerView, params: DodoorParams,
                         *, keys=None, use_kernel: bool = False,
-                        interpret: bool = True) -> jnp.ndarray:
+                        interpret: bool | None = None) -> jnp.ndarray:
     """Vectorized Algorithm 1 over a task batch (r [T,K], d [T,n]) — one cache
     snapshot for the whole batch (the b-batched model's decision block).
 

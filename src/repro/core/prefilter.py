@@ -43,6 +43,13 @@ def sample_feasible(key, mask: jnp.ndarray, num: int) -> jnp.ndarray:
     prefix sums — one uniform per draw instead of the N gumbels a masked
     categorical would burn, which keeps the simulation engines' RNG cost off
     the critical path.
+
+    CONTRACT: the fused Pallas megakernel
+    (``repro.kernels.dodoor_choice.dodoor_fused``) re-implements this exact
+    arithmetic in-kernel (inline threefry uniforms, same prefix-sum/rank
+    ops, same fallback substitution) and is pinned draw-for-draw against
+    this function by the parity suite — any change here must be mirrored
+    there.
     """
     import jax
 

@@ -1,4 +1,5 @@
-from .ops import dodoor_choice
-from .ref import dodoor_choice_ref
+from .ops import dodoor_choice, dodoor_fused
+from .ref import dodoor_choice_ref, dodoor_fused_ref
 
-__all__ = ["dodoor_choice", "dodoor_choice_ref"]
+__all__ = ["dodoor_choice", "dodoor_fused", "dodoor_choice_ref",
+           "dodoor_fused_ref"]

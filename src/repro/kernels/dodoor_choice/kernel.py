@@ -1,4 +1,4 @@
-"""Pallas kernel: fused Algorithm-1 two-choice selection.
+"""Pallas kernels: fused Algorithm-1 two-choice selection.
 
 TPU adaptation. The GPU/CPU-natural implementation gathers L[cand], D[cand],
 C[cand] with a scatter/gather unit; the TPU has none worth feeding from
@@ -8,13 +8,54 @@ VMEM, so the gathers are recast as **one-hot matmuls** on the MXU:
     L_cand       = onehot @ L                  (MXU, [block_t,N]×[N,K])
     D_cand       = onehot @ D                  (same pass)
 
-The whole (L | D | invC) table for a fleet tile lives in VMEM (an 8192-node
-fleet at K=2 is ~160 KB — well under the ~16 MB/core budget), so the kernel
-streams only the decision batch. loadScore and the argmin select fuse into
-the same pass: one HBM read per operand, one [T] write.
+Two entry points share that trick:
+
+* ``dodoor_choice_pallas`` — the two-stage form: candidates are sampled
+  outside (``sample_feasible_batch``) and only score+select fuse.
+* ``dodoor_fused_pallas``  — the megakernel: candidate *sampling* moves
+  inside too, so the whole sample → score → select chain is one pass with
+  one HBM read of the server table per tile and no [T, 2] candidate /
+  duration intermediates round-tripping through HBM.
+
+Megakernel VMEM layout
+----------------------
+The per-tile VMEM working set is one packed server table plus the tile's
+task rows:
+
+    tbl[N, 2K+2] = [ L (K cols) | D | 1/ΣC² | C (K cols) ]
+
+Columns 0..K-1 feed the RL numerator (one-hot matmul), column K the
+duration term, column K+1 the precomputed reciprocal capacity norm
+(Eq. 1's denominator), and the trailing K *prefilter columns* the
+feasibility mask (Algorithm 1 line 2: ``r ≤ C`` in every dimension).
+An 8192-node fleet at K=2 is ~192 KB — well under the ~16 MB/core VMEM
+budget — and the table block is pinned to grid index 0, so every tile
+reads it from HBM once.  Streamed per tile: ``key[block_t, 2]`` (uint32),
+``r[block_t, K]``, ``d[block_t, N]`` (per-server estimated durations).
+
+Megakernel PRNG scheme
+----------------------
+Candidate draws must be *draw-for-draw identical* to the two-stage path's
+``jax.random.uniform(k_cand, (2,))``, so the kernel re-implements JAX's
+threefry2x32 generator inline (20 rounds, rotation schedule
+(13,15,26,6)/(17,29,16,24), key-schedule constant 0x1BD11BDA):
+
+    bits0, bits1 = threefry2x32(key_lo, key_hi, counts=(0, 1))
+    u            = bitcast(bits >> 9 | 0x3F800000, f32) - 1.0
+
+exactly the mantissa-fill JAX uses for float32 uniforms.  The two uniforms
+then drive the same inverse-CDF pick as ``sample_feasible``: inclusive
+prefix-sum of the feasibility mask, rank ``min(int(u·k), k-1)+1``, index =
+#servers whose prefix count is below the rank (with the uniform-over-all
+fallback when no server is feasible).  ``tests/test_kernels.py`` /
+``tests/test_engine_batched.py`` pin this bit-for-bit against
+``sample_feasible_batch``.
 
 Grid: 1-D over decision-batch tiles of ``block_t``. The server table is
 broadcast to every grid step (index_map pins it to block 0).
+
+``interpret=None`` auto-detects the backend: compiled on TPU, interpreter
+mode elsewhere (the CPU test/CI path).
 """
 from __future__ import annotations
 
@@ -25,6 +66,58 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 _EPS = 1e-9
+
+# threefry2x32 rotation schedule (Salmon et al.; matches jax._src.prng).
+_ROTATIONS = ((13, 15, 26, 6), (17, 29, 16, 24))
+_PARITY = 0x1BD11BDA
+
+
+def _resolve_interpret(interpret):
+    """``None`` → interpreter mode unless running on a real TPU backend."""
+    if interpret is None:
+        return jax.default_backend() != "tpu"
+    return bool(interpret)
+
+
+def _threefry2x32(k0, k1, x0, x1):
+    """20-round threefry2x32, vectorized over uint32 arrays — bit-identical
+    to JAX's generator (verified against ``jax.random.uniform``/``split``)."""
+    ks = (k0, k1, k0 ^ k1 ^ jnp.uint32(_PARITY))
+    x = [x0 + ks[0], x1 + ks[1]]
+    for i in range(5):
+        for r in _ROTATIONS[i % 2]:
+            x[0] = x[0] + x[1]
+            x[1] = (x[1] << r) | (x[1] >> (32 - r))
+            x[1] = x[0] ^ x[1]
+        x[0] = x[0] + ks[(i + 1) % 3]
+        x[1] = x[1] + ks[(i + 2) % 3] + jnp.uint32(i + 1)
+    return x[0], x[1]
+
+
+def _unit_float(bits):
+    """uint32 bits → float32 in [0, 1) via JAX's mantissa fill."""
+    fb = (bits >> jnp.uint32(9)) | jnp.uint32(0x3F800000)
+    return jax.lax.bitcast_convert_type(fb, jnp.float32) - 1.0
+
+
+def _pair_scores(alpha, k, r, row_a, row_b, d_a, d_b):
+    """LOADSCORE for gathered candidate rows (shared by both kernels).
+
+    ``row_*[:, :k]`` = L, ``[:, k]`` = D, ``[:, k+1]`` = 1/ΣC².
+    """
+    rl_a = jnp.sum(r * row_a[:, :k], axis=-1) * row_a[:, k + 1]
+    rl_b = jnp.sum(r * row_b[:, :k], axis=-1) * row_b[:, k + 1]
+    D_a = row_a[:, k] + d_a
+    D_b = row_b[:, k] + d_b
+    rl_sum = rl_a + rl_b
+    d_sum = D_a + D_b
+    rl_fa = jnp.where(rl_sum > _EPS, rl_a / (rl_sum + _EPS), 0.5)
+    rl_fb = jnp.where(rl_sum > _EPS, rl_b / (rl_sum + _EPS), 0.5)
+    d_fa = jnp.where(d_sum > _EPS, D_a / (d_sum + _EPS), 0.5)
+    d_fb = jnp.where(d_sum > _EPS, D_b / (d_sum + _EPS), 0.5)
+    score_a = rl_fa * (1.0 - alpha) + d_fa * alpha
+    score_b = rl_fb * (1.0 - alpha) + d_fb * alpha
+    return score_a, score_b
 
 
 def _kernel(alpha, r_ref, cand_ref, d_ref, tbl_ref, out_choice_ref,
@@ -47,19 +140,8 @@ def _kernel(alpha, r_ref, cand_ref, d_ref, tbl_ref, out_choice_ref,
     row_a = gather(0)                                      # [bt, K+2]
     row_b = gather(1)
     r = r_ref[...]
-    rl_a = jnp.sum(r * row_a[:, :k], axis=-1) * row_a[:, k + 1]
-    rl_b = jnp.sum(r * row_b[:, :k], axis=-1) * row_b[:, k + 1]
-    D_a = row_a[:, k] + d_ref[:, 0]
-    D_b = row_b[:, k] + d_ref[:, 1]
-
-    rl_sum = rl_a + rl_b
-    d_sum = D_a + D_b
-    rl_fa = jnp.where(rl_sum > _EPS, rl_a / (rl_sum + _EPS), 0.5)
-    rl_fb = jnp.where(rl_sum > _EPS, rl_b / (rl_sum + _EPS), 0.5)
-    d_fa = jnp.where(d_sum > _EPS, D_a / (d_sum + _EPS), 0.5)
-    d_fb = jnp.where(d_sum > _EPS, D_b / (d_sum + _EPS), 0.5)
-    score_a = rl_fa * (1.0 - alpha) + d_fa * alpha
-    score_b = rl_fb * (1.0 - alpha) + d_fb * alpha
+    score_a, score_b = _pair_scores(alpha, k, r, row_a, row_b,
+                                    d_ref[:, 0], d_ref[:, 1])
 
     out_scores_ref[:, 0] = score_a
     out_scores_ref[:, 1] = score_b
@@ -70,7 +152,7 @@ def _kernel(alpha, r_ref, cand_ref, d_ref, tbl_ref, out_choice_ref,
 @functools.partial(jax.jit,
                    static_argnames=("alpha", "block_t", "interpret"))
 def dodoor_choice_pallas(r, cand, d_cand, tbl, *, alpha: float,
-                         block_t: int = 256, interpret: bool = True):
+                         block_t: int = 256, interpret: bool | None = None):
     """r [T,K], cand [T,2] int32, d_cand [T,2], tbl [N, K+2] → (choice [T],
     scores [T,2]). T must be a multiple of block_t (ops.py pads)."""
     T, K = r.shape
@@ -94,5 +176,99 @@ def dodoor_choice_pallas(r, cand, d_cand, tbl, *, alpha: float,
             jax.ShapeDtypeStruct((T,), jnp.int32),
             jax.ShapeDtypeStruct((T, 2), jnp.float32),
         ],
-        interpret=interpret,
+        interpret=_resolve_interpret(interpret),
     )(r, cand, d_cand, tbl)
+
+
+def _fused_kernel(alpha, k, key_ref, r_ref, d_ref, tbl_ref, out_choice_ref,
+                  out_cand_ref, out_scores_ref):
+    # key_ref:  [block_t, 2]   per-task uint32 PRNG key (k_cand)
+    # r_ref:    [block_t, K]   task demands
+    # d_ref:    [block_t, N]   per-server estimated durations
+    # tbl_ref:  [N, 2K+2]      server table: [L | D | 1/ΣC² | C]
+    # outputs:  choice [bt] i32, cand [bt, 2] i32, scores [bt, 2] f32
+    tbl = tbl_ref[...]
+    n = tbl.shape[0]
+    r = r_ref[...]
+    bt = r.shape[0]
+
+    # --- prefilter (Algorithm 1 line 2) from the table's capacity columns
+    caps = tbl[:, k + 2:]                                  # [N, K]
+    mask = jnp.all(r[:, None, :] <= caps[None, :, :], axis=-1)   # [bt, N]
+    cnt = jnp.cumsum(mask.astype(jnp.int32), axis=1)       # inclusive
+    total = cnt[:, -1]                                     # [bt]
+    any_ok = total > 0
+    pos = jax.lax.broadcasted_iota(jnp.int32, (bt, n), 1)
+    # No-feasible fallback: uniform over all servers (submission is never
+    # rejected) — identical to sample_feasible's eff_cnt/kk substitution.
+    eff_cnt = jnp.where(any_ok[:, None], cnt, pos + 1)
+    kk = jnp.where(any_ok, total, n)                       # [bt]
+
+    # --- per-task PRNG: uniform(k_cand, (2,)) via inline threefry
+    y0, y1 = _threefry2x32(key_ref[:, 0], key_ref[:, 1],
+                           jnp.zeros((bt,), jnp.uint32),
+                           jnp.ones((bt,), jnp.uint32))
+    u0 = _unit_float(y0)
+    u1 = _unit_float(y1)
+
+    # --- inverse-CDF prefix-sum pick (two independent RandomInt draws)
+    kk_f = kk.astype(jnp.float32)
+    km1 = kk - 1
+    tgt0 = jnp.minimum((u0 * kk_f).astype(jnp.int32), km1) + 1
+    tgt1 = jnp.minimum((u1 * kk_f).astype(jnp.int32), km1) + 1
+    cand0 = jnp.sum((eff_cnt < tgt0[:, None]).astype(jnp.int32), axis=1)
+    cand1 = jnp.sum((eff_cnt < tgt1[:, None]).astype(jnp.int32), axis=1)
+
+    # --- gather candidate rows + per-candidate durations, score, select
+    ids = jax.lax.broadcasted_iota(jnp.int32, (1, n), 1)
+    d = d_ref[...]
+
+    def gather(c):
+        onehot = (c[:, None] == ids).astype(jnp.float32)
+        row = jnp.dot(onehot, tbl, preferred_element_type=jnp.float32)
+        d_c = jnp.sum(onehot * d, axis=-1)
+        return row, d_c
+
+    row_a, d_a = gather(cand0)
+    row_b, d_b = gather(cand1)
+    score_a, score_b = _pair_scores(alpha, k, r, row_a, row_b, d_a, d_b)
+
+    out_cand_ref[:, 0] = cand0.astype(jnp.int32)
+    out_cand_ref[:, 1] = cand1.astype(jnp.int32)
+    out_scores_ref[:, 0] = score_a
+    out_scores_ref[:, 1] = score_b
+    out_choice_ref[...] = jnp.where(score_a > score_b, cand1,
+                                    cand0).astype(jnp.int32)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("alpha", "block_t", "interpret"))
+def dodoor_fused_pallas(keys, r, d, tbl, *, alpha: float,
+                        block_t: int = 256, interpret: bool | None = None):
+    """keys [T,2] uint32, r [T,K], d [T,N], tbl [N, 2K+2] → (choice [T],
+    cand [T,2], scores [T,2]). T must be a multiple of block_t (ops pads)."""
+    T, K = r.shape
+    N = tbl.shape[0]
+    grid = (T // block_t,)
+    kern = functools.partial(_fused_kernel, alpha, K)
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_t, 2), lambda i: (i, 0)),
+            pl.BlockSpec((block_t, K), lambda i: (i, 0)),
+            pl.BlockSpec((block_t, N), lambda i: (i, 0)),
+            pl.BlockSpec((N, 2 * K + 2), lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_t,), lambda i: (i,)),
+            pl.BlockSpec((block_t, 2), lambda i: (i, 0)),
+            pl.BlockSpec((block_t, 2), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((T,), jnp.int32),
+            jax.ShapeDtypeStruct((T, 2), jnp.int32),
+            jax.ShapeDtypeStruct((T, 2), jnp.float32),
+        ],
+        interpret=_resolve_interpret(interpret),
+    )(keys, r, d, tbl)

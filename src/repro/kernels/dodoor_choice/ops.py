@@ -1,23 +1,36 @@
-"""Public wrapper for the fused Dodoor two-choice kernel."""
+"""Public wrappers for the fused Dodoor two-choice kernels."""
 from __future__ import annotations
 
+import jax
 import jax.numpy as jnp
 
-from .kernel import dodoor_choice_pallas
+from .kernel import dodoor_choice_pallas, dodoor_fused_pallas
+
+
+def _clamp_block(T: int, block_t: int) -> int:
+    """Smallest multiple of 8 covering the batch, capped at ``block_t`` so
+    small decision blocks (the engine's partial tail, or b ≪ 256) do not pay
+    for a full tile of padding in interpret mode."""
+    return max(8, min(block_t, -(-T // 8) * 8))
+
+
+def _key_data(keys: jnp.ndarray) -> jnp.ndarray:
+    """Raw uint32 [T, 2] key words from either legacy or typed PRNG keys."""
+    if jnp.issubdtype(keys.dtype, jax.dtypes.prng_key):
+        keys = jax.random.key_data(keys)
+    return keys.astype(jnp.uint32)
 
 
 def dodoor_choice(r: jnp.ndarray, cand: jnp.ndarray, d_cand: jnp.ndarray,
                   L: jnp.ndarray, D: jnp.ndarray, C: jnp.ndarray,
                   alpha: float = 0.5, *, block_t: int = 256,
-                  interpret: bool = True):
-    """Fused Algorithm-1 selection for a decision batch (see ref.py for the
-    oracle semantics). Builds the packed server table [L | D | 1/ΣC²] once
-    per cache refresh and pads the batch to the tile size. ``block_t`` is
-    clamped to the smallest multiple of 8 covering the batch so that small
-    decision blocks (the engine's partial tail, or b ≪ 256) do not pay for a
-    full tile of padding in interpret mode."""
+                  interpret: bool | None = None):
+    """Fused Algorithm-1 selection for a pre-sampled decision batch (see
+    ref.py for the oracle semantics). Builds the packed server table
+    [L | D | 1/ΣC²] once per cache refresh and pads the batch to the tile
+    size. ``interpret=None`` auto-detects the backend (compiled on TPU)."""
     T, K = r.shape
-    block_t = max(8, min(block_t, -(-T // 8) * 8))
+    block_t = _clamp_block(T, block_t)
     inv = 1.0 / jnp.sum(C.astype(jnp.float32) ** 2, axis=-1, keepdims=True)
     tbl = jnp.concatenate([L.astype(jnp.float32),
                            D.astype(jnp.float32)[:, None], inv], axis=-1)
@@ -31,3 +44,39 @@ def dodoor_choice(r: jnp.ndarray, cand: jnp.ndarray, d_cand: jnp.ndarray,
         d_cand.astype(jnp.float32), tbl, alpha=alpha, block_t=block_t,
         interpret=interpret)
     return choice[:T], scores[:T]
+
+
+def dodoor_fused(keys: jnp.ndarray, r: jnp.ndarray, d: jnp.ndarray,
+                 L: jnp.ndarray, D: jnp.ndarray, C: jnp.ndarray,
+                 alpha: float = 0.5, *, block_t: int = 256,
+                 interpret: bool | None = None):
+    """Megakernel: sample → score → select in one Pallas pass.
+
+    keys [T, 2]: per-task candidate-draw PRNG keys (the engine passes the
+    first key of ``jax.random.split(fold_in(base, task_id))``); r [T, K]
+    task demands; d [T, N] per-server estimated durations.  Candidate
+    sampling happens *inside* the kernel (inline threefry + prefix-sum
+    inverse CDF over the table's capacity columns) and is draw-for-draw
+    identical to ``sample_feasible_batch(keys, feasible_mask(r, C), 2)``.
+
+    Returns (choice [T] int32, cand [T, 2] int32, scores [T, 2] f32).
+    """
+    T, K = r.shape
+    block_t = _clamp_block(T, block_t)
+    Cf = C.astype(jnp.float32)
+    inv = 1.0 / jnp.sum(Cf ** 2, axis=-1, keepdims=True)
+    tbl = jnp.concatenate([L.astype(jnp.float32),
+                           D.astype(jnp.float32)[:, None], inv, Cf], axis=-1)
+    keys = _key_data(keys)
+    pad = (-T) % block_t
+    if pad:
+        # Padded rows run through the full pipeline on zero demand/keys and
+        # are sliced away — zero demand is always feasible, so the fallback
+        # branch never corrupts the shared prefix-sum lanes.
+        keys = jnp.pad(keys, ((0, pad), (0, 0)))
+        r = jnp.pad(r, ((0, pad), (0, 0)))
+        d = jnp.pad(d, ((0, pad), (0, 0)))
+    choice, cand, scores = dodoor_fused_pallas(
+        keys, r.astype(jnp.float32), d.astype(jnp.float32), tbl,
+        alpha=alpha, block_t=block_t, interpret=interpret)
+    return choice[:T], cand[:T], scores[:T]

@@ -1,9 +1,12 @@
-"""Pure-jnp oracle for the fused two-choice select (Algorithm 1 lines 4-11)."""
+"""Pure-jnp oracles for the fused two-choice kernels (Algorithm 1 lines 2-11)."""
 from __future__ import annotations
 
 import jax.numpy as jnp
 
+from ...core.prefilter import feasible_mask, sample_feasible_batch
 from ...core.rl_score import load_score_batched
+
+_EPS = 1e-9
 
 
 def dodoor_choice_ref(r: jnp.ndarray, cand: jnp.ndarray, d_cand: jnp.ndarray,
@@ -25,3 +28,45 @@ def dodoor_choice_ref(r: jnp.ndarray, cand: jnp.ndarray, d_cand: jnp.ndarray,
     take_b = scores[:, 0] > scores[:, 1]        # line 11: ties keep A
     choice = jnp.where(take_b, cand[:, 1], cand[:, 0]).astype(jnp.int32)
     return choice, scores
+
+
+def dodoor_fused_ref(keys: jnp.ndarray, r: jnp.ndarray, d: jnp.ndarray,
+                     L: jnp.ndarray, D: jnp.ndarray, C: jnp.ndarray,
+                     alpha: float):
+    """jnp oracle for the fused megakernel.
+
+    Candidate draws delegate to :func:`sample_feasible_batch` (whose uniforms
+    are the same threefry stream the kernel generates inline) and are
+    **bit-exact** against the kernel — as is the returned ``choice``.  The
+    score mirrors the kernel's arithmetic *order* — multiply by the
+    precomputed reciprocal ``1/ΣC²`` rather than dividing — but XLA may
+    FMA-contract the two lowerings differently (the repo's known 1-ulp
+    caveat), so scores agree to 1 ulp, and an *exact* score tie can in
+    principle resolve to the other sampled candidate.
+
+    keys [T, 2] uint32 (or typed) per-task keys; r [T, K]; d [T, N].
+    Returns (choice [T] int32, cand [T, 2] int32, scores [T, 2] f32).
+    """
+    Cf = C.astype(jnp.float32)
+    mask = feasible_mask(r, Cf)                            # [T, N]
+    cand = sample_feasible_batch(keys, mask, 2)            # [T, 2]
+    d_cand = jnp.take_along_axis(d.astype(jnp.float32), cand, axis=1)
+
+    inv = 1.0 / jnp.sum(Cf ** 2, axis=-1)                  # [N]
+    L_ab = L.astype(jnp.float32)[cand]                     # [T, 2, K]
+    rl_ab = jnp.sum(r.astype(jnp.float32)[:, None, :] * L_ab,
+                    axis=-1) * inv[cand]                   # [T, 2]
+    D_ab = D.astype(jnp.float32)[cand] + d_cand            # [T, 2]
+
+    rl_sum = rl_ab[:, 0] + rl_ab[:, 1]
+    d_sum = D_ab[:, 0] + D_ab[:, 1]
+    rl_fa = jnp.where(rl_sum > _EPS, rl_ab[:, 0] / (rl_sum + _EPS), 0.5)
+    rl_fb = jnp.where(rl_sum > _EPS, rl_ab[:, 1] / (rl_sum + _EPS), 0.5)
+    d_fa = jnp.where(d_sum > _EPS, D_ab[:, 0] / (d_sum + _EPS), 0.5)
+    d_fb = jnp.where(d_sum > _EPS, D_ab[:, 1] / (d_sum + _EPS), 0.5)
+    score_a = rl_fa * (1.0 - alpha) + d_fa * alpha
+    score_b = rl_fb * (1.0 - alpha) + d_fb * alpha
+    scores = jnp.stack([score_a, score_b], axis=1)
+    choice = jnp.where(score_a > score_b, cand[:, 1],
+                       cand[:, 0]).astype(jnp.int32)
+    return choice, cand, scores

@@ -13,13 +13,31 @@ Two interchangeable drivers cover the same model:
   inserts, interference, channel contention — runs as *server-parallel
   rounds*: each server's FCFS chain is independent of every other server's,
   so round ``k`` commits the k-th task of every server simultaneously.
-  Only PoT, whose probes read other servers' live state mid-block, commits
-  through a per-task inner scan; Prequal (per-decision probe-pool state)
-  delegates to the sequential driver.
+
+  Every policy rides this driver — the probing baselines included:
+
+  * **PoT (speculative commit).** PoT's probes read other servers' live
+    ring buffers mid-block, so its decisions are scored against the current
+    carry for *all* pending tasks at once; a task is *safe* if no earlier
+    pending commit landed on either of its probed candidates (placements
+    inside a safe prefix are provably distinct, so the parallel commit is
+    one round).  The longest safe prefix commits in server-parallel rounds,
+    and only the conflicting suffix is replayed in the next loop iteration
+    — the common low-conflict case runs in O(#conflict-breaks), not O(b).
+
+  * **Prequal (segment scan).** Decisions round-robin over schedulers, so
+    any ``S`` consecutive tasks hit ``S`` distinct (and therefore
+    independent) probe pools.  The block is processed as a segment scan
+    over chunks of ``S`` tasks: pool selection and the pool update
+    vectorize across the chunk, the chunk commits in parallel rounds, and
+    each task's post-decision probes read ground truth *as of its own
+    decision point* by reverting the rb slots written by same-chunk commits
+    at or after it ((old, new) slot records telescope, so this is exact
+    even when commits collide on a slot).
 
 The batched driver is *exact*: placements, timestamps, and the message
-ledger are bit-identical to the sequential oracle for random/dodoor/
-(1+β) (and for PoT via the inner scan) — see ``tests/test_engine_batched.py``.
+ledger are bit-identical to the sequential oracle for every policy —
+see ``tests/test_engine_batched.py``.
 
 Server execution model
 ----------------------
@@ -83,6 +101,7 @@ import numpy as np
 
 from ..core.policies import dodoor_choice_batch
 from ..core.prefilter import feasible_mask, sample_feasible, sample_feasible_batch
+from ..kernels.dodoor_choice import dodoor_fused
 from ..core.rl_score import load_score_batched
 from ..core.types import PrequalParams, SchedulerView
 from .cluster import ClusterSpec
@@ -116,6 +135,9 @@ class EngineConfig(NamedTuple):
                                     # the first batch boundary after the end
     rpc: RpcModel = RpcModel()
     prequal: PrequalParams = PrequalParams()
+    block_t: int = 256              # fused-kernel tile size (use_kernel only)
+    interpret: bool | None = None   # Pallas interpret mode; None = auto
+                                    # (compiled on TPU, interpreter elsewhere)
 
 
 class _Dyn(NamedTuple):
@@ -189,26 +211,6 @@ class _Carry(NamedTuple):
     pool_age: jnp.ndarray
     pool_valid: jnp.ndarray
     msgs: jnp.ndarray         # [4] int32: base, probe, push, flush
-
-
-class _BlockCarry(NamedTuple):
-    """Batched-driver carry — the sequential carry minus the Prequal pools
-    (Prequal never runs batched)."""
-
-    core_free: jnp.ndarray
-    mem_free: jnp.ndarray
-    prev_start: jnp.ndarray
-    rb_release: jnp.ndarray
-    rb_cpu: jnp.ndarray
-    rb_mem: jnp.ndarray
-    rb_dur: jnp.ndarray
-    view_L: jnp.ndarray
-    view_D: jnp.ndarray
-    view_rif: jnp.ndarray
-    pending: jnp.ndarray
-    chan_free: jnp.ndarray
-    push_end: jnp.ndarray
-    msgs: jnp.ndarray
 
 
 def _truth_rows(carry, rows: jnp.ndarray, now: jnp.ndarray):
@@ -510,11 +512,13 @@ def _sorted_fill(arr, k, value):
     return jnp.where(in_win, value[:, None], gathered)
 
 
-def _commit_rounds(carry: _BlockCarry, valid, now, j, cores, mem_mb, dur_raw,
+def _commit_rounds(carry: _Carry, valid, now, j, cores, mem_mb, dur_raw,
                    d_est_j, extra_lat, dyn: _Dyn, cores_per, mem_unit,
-                   n: int, MU: int):
-    """Server-parallel block commit for policies whose placements are known
-    before the commit (random/dodoor/(1+β)).
+                   n: int, MU: int, outs0=None):
+    """Server-parallel commit of the ``valid``-masked tasks of a block —
+    used directly by policies whose placements are known up front
+    (random/dodoor/(1+β)) and as the inner commit step of the PoT
+    speculative loop and the Prequal segment scan.
 
     Every state row a task's commit reads or writes — ``chan_free[j]``,
     ``core_free[j]``, ``mem_free[j]``, ``prev_start[j]``, ``rb_*[j]`` —
@@ -529,6 +533,13 @@ def _commit_rounds(carry: _BlockCarry, valid, now, j, cores, mem_mb, dur_raw,
     performs that update as an O(width) shift-merge — no sorts in the loop —
     which yields bit-identical results to :func:`_commit_one`'s rank-based
     form (the oracle's per-unit identities never reach any output).
+
+    Returns ``(carry, outs)`` with ``outs`` a ``[7, b]`` float32 array —
+    rows: start, finish, enqueue, sched_ms, the overwritten rb slot's old
+    release, its old est-duration, and the slot index (exact in f32; the
+    last three feed Prequal's probe revert).  ``outs0`` seeds the
+    accumulator so iterative callers (PoT/Prequal) merge commits from
+    successive invocations.
     """
     bsz = j.shape[0]
     tt = jnp.arange(bsz, dtype=jnp.int32)
@@ -603,6 +614,8 @@ def _commit_rounds(carry: _BlockCarry, valid, now, j, cores, mem_mb, dur_raw,
                                  jnp.arange(carry.rb_release.shape[1],
                                             dtype=jnp.int32),
                                  carry.rb_release.shape[1]), axis=-1)
+        old_rel = carry.rb_release[rows, slot]                  # pre-write
+        old_dur = carry.rb_dur[rows, slot]
         rows_h = jnp.where(has, rows, n)                        # drop no-task
         carry = carry._replace(
             rb_release=carry.rb_release.at[rows_h, slot].set(
@@ -614,12 +627,16 @@ def _commit_rounds(carry: _BlockCarry, valid, now, j, cores, mem_mb, dur_raw,
 
         t_out = jnp.where(has, t, bsz)                          # drop pads
         outs = outs_prev.at[:, t_out].set(
-            jnp.stack([start, finish, enqueue_t, sched_ms]), mode="drop")
+            jnp.stack([start, finish, enqueue_t, sched_ms,
+                       old_rel, old_dur, slot.astype(jnp.float32)]),
+            mode="drop")
         return (k + 1, carry, outs)
 
-    state = (jnp.int32(0), carry, jnp.zeros((4, bsz), jnp.float32))
+    if outs0 is None:
+        outs0 = jnp.zeros((7, bsz), jnp.float32)
+    state = (jnp.int32(0), carry, outs0)
     _, carry, outs = jax.lax.while_loop(cond, body, state)
-    return carry, (outs[0], outs[1], outs[2], outs[3])
+    return carry, outs
 
 
 @partial(jax.jit, static_argnames=("cfg", "n", "num_types", "use_kernel"))
@@ -638,7 +655,7 @@ def _simulate_batched_jax(xs, C, node_type, mem_unit, cores_per, dyn_vec,
 
     core_init = jnp.where(jnp.arange(CMAX)[None, :] < cores_per[:, None],
                           0.0, jnp.inf)
-    carry0 = _BlockCarry(
+    carry0 = _Carry(
         core_free=core_init.astype(jnp.float32),
         mem_free=jnp.zeros((n, MU), jnp.float32),
         prev_start=jnp.zeros((n,), jnp.float32),
@@ -652,10 +669,15 @@ def _simulate_batched_jax(xs, C, node_type, mem_unit, cores_per, dyn_vec,
         pending=jnp.zeros((S, n, 4), jnp.float32),
         chan_free=jnp.zeros((n,), jnp.float32),
         push_end=jnp.zeros((), jnp.float32),
+        pool_server=jnp.zeros((S, cfg.prequal.s_pool), jnp.int32),
+        pool_rif=jnp.full((S, cfg.prequal.s_pool), jnp.inf, jnp.float32),
+        pool_lat=jnp.full((S, cfg.prequal.s_pool), jnp.inf, jnp.float32),
+        pool_age=jnp.full((S, cfg.prequal.s_pool), -jnp.inf, jnp.float32),
+        pool_valid=jnp.zeros((S, cfg.prequal.s_pool), bool),
         msgs=jnp.zeros((4,), jnp.int32),
     )
 
-    def block_step(carry: _BlockCarry, blk):
+    def block_step(carry: _Carry, blk):
         idx, r_sub, r_exec_t, d_est_t, d_act_t, submit, task_id, valid = blk
         bsz = idx.shape[0]
         tt = jnp.arange(bsz, dtype=jnp.int32)
@@ -668,70 +690,222 @@ def _simulate_batched_jax(xs, C, node_type, mem_unit, cores_per, dyn_vec,
         # ---- vectorized selection against the block's one cache snapshot
         extra_lat = jnp.zeros((bsz,), jnp.float32)
         probe_msgs = 0
-        cand = None
         if policy == "random":
             j = sample_feasible_batch(keys, mask, 1)[:, 0]
         elif policy in ("dodoor", "one_plus_beta"):
             kk = jax.vmap(jax.random.split)(keys)               # [b, 2, key]
             k_cand, k_beta = kk[:, 0], kk[:, 1]
-            cand2 = sample_feasible_batch(k_cand, mask, 2)      # [b, 2]
-            d_cand = jnp.take_along_axis(d_est_srv, cand2, axis=1)
-            view = SchedulerView(L=carry.view_L, D=carry.view_D,
-                                 rif=carry.view_rif, C=C)
-            # The kernel bakes α into its grid program (static); the jnp
-            # reference path takes the traced scalar.
-            alpha = cfg.alpha if use_kernel else dyn.alpha
-            two = dodoor_choice_batch(r_sub, cand2, d_cand, view, alpha,
-                                      use_kernel=use_kernel)
+            if use_kernel:
+                # Fused megakernel: candidate sampling, Algorithm-1 scoring
+                # and selection in one Pallas pass (α/block_t/interpret are
+                # static program knobs baked into the grid program).
+                two, cand2, _ = dodoor_fused(
+                    k_cand, r_sub, d_est_srv, carry.view_L, carry.view_D,
+                    C, alpha=cfg.alpha, block_t=cfg.block_t,
+                    interpret=cfg.interpret)
+            else:
+                cand2 = sample_feasible_batch(k_cand, mask, 2)  # [b, 2]
+                d_cand = jnp.take_along_axis(d_est_srv, cand2, axis=1)
+                view = SchedulerView(L=carry.view_L, D=carry.view_D,
+                                     rif=carry.view_rif, C=C)
+                two = dodoor_choice_batch(r_sub, cand2, d_cand, view,
+                                          dyn.alpha, use_kernel=False)
             if policy == "one_plus_beta":
                 u = jax.vmap(jax.random.uniform)(k_beta)
                 j = jnp.where(u < dyn.beta, two, cand2[:, 0]).astype(jnp.int32)
             else:
                 j = two.astype(jnp.int32)
             extra_lat = jnp.maximum(0.0, carry.push_end - now)
-        elif policy == "pot":
-            cand = sample_feasible_batch(keys, mask, 2)         # [b, 2]
-            probe_msgs = 4
-            j = None
-        else:
+        elif policy not in ("pot", "prequal"):
             raise ValueError(f"policy {policy!r} has no batched driver")
 
         # ---- commit
-        if j is not None:
+        if policy in ("random", "dodoor", "one_plus_beta"):
             nt_j = node_type[j]                                 # [b]
             cores_t = r_exec_t[tt, nt_j, 0]
             mem_t = r_exec_t[tt, nt_j, 1]
             dur_t = d_act_t[tt, nt_j]
             dest_t = d_est_srv[tt, j]
-            carry, (o_start, o_finish, o_enq, o_sched) = _commit_rounds(
+            carry, outs = _commit_rounds(
                 carry, valid, now, j, cores_t, mem_t, dur_t, dest_t,
                 extra_lat, dyn, cores_per, mem_unit, n, MU)
-        else:
-            # PoT probes other servers' live ring buffers mid-block, so its
-            # decisions stay on a per-task inner scan (still vectorized
-            # sampling + no per-task RNG/conds — just the probe + commit).
+        elif policy == "pot":
+            # Speculative commit + conflict replay.  Each iteration scores
+            # every pending task against the *current* carry, commits the
+            # longest conflict-free prefix in parallel rounds, and loops on
+            # the suffix.  Safety rule: a pending task conflicts iff an
+            # earlier pending task's speculative placement hits one of its
+            # two probed candidates — so within a committed prefix every
+            # probe read equals the sequential ground truth (and prefix
+            # placements are pairwise distinct, making the commit 1 round).
+            probe_msgs = 4
+            cand = sample_feasible_batch(keys, mask, 2)         # [b, 2]
             nt_c = node_type[cand]                              # [b, 2]
             cores_c = r_exec_t[tt[:, None], nt_c, 0]
             mem_c = r_exec_t[tt[:, None], nt_c, 1]
             dur_c = d_act_t[tt[:, None], nt_c]
             dest_c = jnp.take_along_axis(d_est_srv, cand, axis=1)
-            pot_lat = 2.0 * dyn.hop_ms
+            pot_lat = jnp.broadcast_to(2.0 * dyn.hop_ms, (bsz,))
 
-            def pot_step(c, inp):
-                valid_t, now_t, cand_t, cores_2, mem_2, dur_2, dest_2 = inp
-                _, _, rif = _truth_rows(c, cand_t, now_t)
-                pick_b = rif[1] < rif[0]
-                jt = jnp.where(pick_b, cand_t[1], cand_t[0]).astype(jnp.int32)
-                which = pick_b.astype(jnp.int32)
-                c, (st, fin, enq, sms) = _commit_one(
-                    c, valid_t, now_t, jt, cores_2[which], mem_2[which],
-                    dur_2[which], dest_2[which], pot_lat, dyn, cores_per,
-                    mem_unit, MU)
-                return c, (jt, st, fin, enq, sms)
+            def spec_cond(state):
+                return state[0] < bsz
 
-            carry, (j, o_start, o_finish, o_enq, o_sched) = jax.lax.scan(
-                pot_step, carry,
-                (valid, now, cand, cores_c, mem_c, dur_c, dest_c))
+            def spec_body(state):
+                p, c, j_acc, outs = state
+                pending = (tt >= p) & valid
+                act = (c.rb_release[cand]
+                       > now[:, None, None]).astype(jnp.float32)
+                rif = jnp.sum(act, axis=-1)                     # [b, 2]
+                pick_b = rif[:, 1] < rif[:, 0]
+                j_spec = jnp.where(pick_b, cand[:, 1],
+                                   cand[:, 0]).astype(jnp.int32)
+                j_eff = jnp.where(pending, j_spec, n)           # sentinel
+                hit = ((j_eff[None, :] == cand[:, :1])
+                       | (j_eff[None, :] == cand[:, 1:]))       # [b, b]
+                unsafe = (jnp.any(hit & (tt[None, :] < tt[:, None]), axis=1)
+                          & pending)
+                q = jnp.min(jnp.where(unsafe, tt, bsz)).astype(jnp.int32)
+                commit = pending & (tt < q)
+                c, outs = _commit_rounds(
+                    c, commit, now, j_spec,
+                    jnp.where(pick_b, cores_c[:, 1], cores_c[:, 0]),
+                    jnp.where(pick_b, mem_c[:, 1], mem_c[:, 0]),
+                    jnp.where(pick_b, dur_c[:, 1], dur_c[:, 0]),
+                    jnp.where(pick_b, dest_c[:, 1], dest_c[:, 0]),
+                    pot_lat, dyn, cores_per, mem_unit, n, MU, outs0=outs)
+                j_acc = jnp.where(commit, j_spec, j_acc)
+                return (q, c, j_acc, outs)
+
+            state = (jnp.int32(0), carry, jnp.zeros((bsz,), jnp.int32),
+                     jnp.zeros((7, bsz), jnp.float32))
+            _, carry, j, outs = jax.lax.while_loop(spec_cond, spec_body,
+                                                   state)
+        else:  # prequal — scheduler-parallel segment scan over S-chunks
+            PP = cfg.prequal
+            probe_msgs = 2 * PP.r_probe
+            P = PP.s_pool
+            kk3 = jax.vmap(lambda k: jax.random.split(k, 3))(keys)
+            rand_j = sample_feasible_batch(kk3[:, 1], mask, 1)[:, 0]
+            probes = jax.vmap(lambda k: jax.random.randint(
+                k, (PP.r_probe,), 0, n))(kk3[:, 2])             # [b, rp]
+            nchunks = -(-bsz // S)
+            rows_s = jnp.arange(S, dtype=jnp.int32)
+            iota_P = jnp.arange(P, dtype=jnp.int32)[None, :]
+
+            def chunk_body(ci, state):
+                c, j_acc, outs = state
+                ic_raw = ci * S + rows_s
+                ok = ic_raw < bsz
+                ic = jnp.minimum(ic_raw, bsz - 1)
+                m_c = ok & valid[ic]
+                s_c = sched[ic]          # S consecutive tasks → S distinct
+                now_c = now[ic]          # schedulers: pools are race-free
+                s_eff = jnp.where(m_c, s_c, S)
+                ic_eff = jnp.where(m_c, ic, bsz)
+
+                # -- HCL selection from each scheduler's own pool
+                pv = c.pool_valid[s_c]                          # [S, P]
+                pr = c.pool_rif[s_c]
+                plat = c.pool_lat[s_c]
+                pserv = c.pool_server[s_c]
+                page = c.pool_age[s_c]
+                rifs = jnp.where(pv, pr, jnp.inf)
+                lats = jnp.where(pv, plat, jnp.inf)
+                any_valid = jnp.any(pv, axis=1)
+                n_val = jnp.maximum(jnp.sum(pv, axis=1), 1)
+                sorted_rif = jnp.sort(rifs, axis=1)
+                q_idx = jnp.clip(
+                    (dyn.q_rif * n_val.astype(jnp.float32)).astype(jnp.int32),
+                    0, P - 1)
+                threshold = jnp.take_along_axis(sorted_rif, q_idx[:, None],
+                                                axis=1)[:, 0]
+                cold = pv & (pr <= threshold[:, None])
+                cold_lat = jnp.where(cold, lats, jnp.inf)
+                entry = jnp.where(jnp.any(cold, axis=1),
+                                  jnp.argmin(cold_lat, axis=1),
+                                  jnp.argmin(rifs, axis=1))
+                j_c = jnp.where(any_valid, pserv[rows_s, entry],
+                                rand_j[ic]).astype(jnp.int32)
+                # b_reuse = 1: consume the used entry.
+                pv = pv & ~(any_valid[:, None] & (iota_P == entry[:, None]))
+
+                # -- commit the chunk (placements now known; FCFS rank
+                #    within the chunk preserved by _commit_rounds' occ)
+                commit = jnp.zeros((bsz,), bool).at[ic_eff].set(
+                    True, mode="drop")
+                j_full = jnp.zeros((bsz,), jnp.int32).at[ic_eff].set(
+                    j_c, mode="drop")
+                nt_c = node_type[j_c]
+
+                def scat(v):
+                    return jnp.zeros((bsz,), v.dtype).at[ic_eff].set(
+                        v, mode="drop")
+
+                c, outs = _commit_rounds(
+                    c, commit, now, j_full, scat(r_exec_t[ic, nt_c, 0]),
+                    scat(r_exec_t[ic, nt_c, 1]), scat(d_act_t[ic, nt_c]),
+                    scat(d_est_srv[ic, j_c]),
+                    jnp.zeros((bsz,), jnp.float32), dyn, cores_per,
+                    mem_unit, n, MU, outs0=outs)
+                j_acc = jnp.where(commit, j_full, j_acc)
+
+                # -- post-scheduling async probes: each task reads ground
+                #    truth as of *its own* decision point.  The chunk
+                #    committed first, so revert the rb slots written by
+                #    same-chunk commits at or after each task — reverse-
+                #    order (old, new) slot records telescope, exact even
+                #    when commits collide on a server or slot.
+                probes_c = probes[ic]                           # [S, rp]
+                rel_rows = c.rb_release[probes_c]               # [S, rp, R]
+                dur_rows = c.rb_dur[probes_c]
+                for kloc in reversed(range(S)):
+                    col = ic[kloc]
+                    jk = j_full[col]
+                    slot_k = outs[6, col].astype(jnp.int32)
+                    do = (commit[col] & (rows_s <= kloc)[:, None]
+                          & (probes_c == jk))
+                    rel_rows = rel_rows.at[:, :, slot_k].set(
+                        jnp.where(do, outs[4, col],
+                                  rel_rows[:, :, slot_k]))
+                    dur_rows = dur_rows.at[:, :, slot_k].set(
+                        jnp.where(do, outs[5, col],
+                                  dur_rows[:, :, slot_k]))
+                act = (rel_rows > now_c[:, None, None]).astype(jnp.float32)
+                prif = jnp.sum(act, axis=-1)                    # [S, rp]
+                pD = jnp.sum(dur_rows * act, axis=-1)
+
+                # -- pool insert (sequential r_probe order) + maintenance
+                for ip in range(PP.r_probe):
+                    slot = jnp.argmin(jnp.where(pv, page, -jnp.inf), axis=1)
+                    one = iota_P == slot[:, None]
+                    pserv = jnp.where(one, probes_c[:, ip:ip + 1], pserv)
+                    pr = jnp.where(one, prif[:, ip:ip + 1], pr)
+                    plat = jnp.where(one, pD[:, ip:ip + 1], plat)
+                    page = jnp.where(
+                        one, (now_c + jnp.float32(ip) * 1e-3)[:, None],
+                        page)
+                    pv = jnp.where(one, True, pv)
+                full = jnp.sum(pv, axis=1) >= P
+                worst = jnp.argmax(jnp.where(pv, pr, -jnp.inf), axis=1)
+                pv = pv & ~(full[:, None] & (iota_P == worst[:, None]))
+                c = c._replace(
+                    pool_server=c.pool_server.at[s_eff].set(pserv,
+                                                            mode="drop"),
+                    pool_rif=c.pool_rif.at[s_eff].set(pr, mode="drop"),
+                    pool_lat=c.pool_lat.at[s_eff].set(plat, mode="drop"),
+                    pool_age=c.pool_age.at[s_eff].set(page, mode="drop"),
+                    pool_valid=c.pool_valid.at[s_eff].set(pv, mode="drop"),
+                )
+                return (c, j_acc, outs)
+
+            state = (carry, jnp.zeros((bsz,), jnp.int32),
+                     jnp.zeros((7, bsz), jnp.float32))
+            carry, j, outs = jax.lax.fori_loop(0, nchunks, chunk_body,
+                                               state)
+
+        o_start, o_finish, o_enq, o_sched = (outs[0], outs[1], outs[2],
+                                             outs[3])
+        if policy in ("pot", "prequal"):
             nt_j = node_type[j]
             cores_t = r_exec_t[tt, nt_j, 0]
             mem_t = r_exec_t[tt, nt_j, 1]
@@ -845,14 +1019,15 @@ def _make_dyn_ints(cfg: EngineConfig) -> jnp.ndarray:
         lambda: jnp.asarray(np.array([cfg.b, cfg.flush_every], np.int32)))
 
 
-def _static_cfg(cfg: EngineConfig, keep_alpha: bool = False,
+def _static_cfg(cfg: EngineConfig, for_kernel: bool = False,
                 keep_b: bool = False) -> EngineConfig:
     """Collapse traced-scalar fields to canonical values so one compiled
     program serves every (α, β, interference, RPC, outage, q_rif, b,
     flush_every) setting.  ``keep_b`` retains ``b`` — the batched driver's
-    block shape depends on it."""
+    block shape depends on it.  ``for_kernel`` retains α/block_t/interpret,
+    which the fused Pallas kernel bakes into its grid program."""
     return cfg._replace(
-        alpha=cfg.alpha if keep_alpha else 0.5,
+        alpha=cfg.alpha if for_kernel else 0.5,
         beta=0.5,
         interference=0.3,
         b=cfg.b if keep_b else 50,
@@ -860,6 +1035,8 @@ def _static_cfg(cfg: EngineConfig, keep_alpha: bool = False,
         outage_ms=(),
         rpc=RpcModel(),
         prequal=cfg.prequal._replace(q_rif=0.84),
+        block_t=cfg.block_t if for_kernel else 256,
+        interpret=cfg.interpret if for_kernel else None,
     )
 
 
@@ -871,11 +1048,16 @@ def simulate(workload, cluster: ClusterSpec, cfg: EngineConfig,
     mode:
         ``"sequential"`` — one scan step per task (the oracle).
         ``"batched"``    — decision-block driver (see module docstring);
-        exact-parity with the oracle, much faster.  Prequal has per-decision
-        probe-pool state and silently runs on the sequential driver.
+        exact-parity with the oracle for every policy, much faster (PoT
+        runs the speculative commit, Prequal the scheduler-parallel
+        segment scan).
     use_kernel:
-        batched mode only — route Algorithm-1 selection through the fused
-        ``dodoor_choice`` Pallas kernel instead of the jnp reference.
+        batched mode only — route the dodoor/(1+β) decision through the
+        fused sample→score→select Pallas megakernel
+        (``repro.kernels.dodoor_choice.dodoor_fused``) instead of the
+        two-stage jnp path; ``cfg.block_t``/``cfg.interpret`` control the
+        tile size and interpret-vs-compiled lowering (``None`` =
+        auto-detect: compiled on TPU only).
 
     ``workload`` and ``cluster`` are cached on device by object identity
     (they are frozen dataclasses): do not mutate their arrays in place
@@ -898,7 +1080,7 @@ def simulate(workload, cluster: ClusterSpec, cfg: EngineConfig,
     dyn = _make_dyn(cfg)
 
     m = workload.r_submit.shape[0]
-    batched = mode == "batched" and cfg.policy != "prequal"
+    batched = mode == "batched"
     if batched:
         b = cfg.b
         nb = -(-m // b)
@@ -930,7 +1112,7 @@ def simulate(workload, cluster: ClusterSpec, cfg: EngineConfig,
                           build_blocks)
         msgs, outs = _simulate_batched_jax(
             xs, C, node_type, mem_unit, cores_per, dyn, _make_dyn_ints(cfg),
-            _static_cfg(cfg, keep_alpha=use_kernel, keep_b=True), n,
+            _static_cfg(cfg, for_kernel=use_kernel, keep_b=True), n,
             cluster.num_types, seed, use_kernel)
         outs = tuple(np.asarray(o).reshape(nb * b, *o.shape[2:])[:m]
                      for o in outs)

@@ -16,7 +16,7 @@ from repro.sim import (EngineConfig, make_homogeneous, make_testbed,
                        resource_violations, simulate)
 from repro.workloads import functionbench as fb
 
-PARITY_POLICIES = ("dodoor", "random", "pot", "one_plus_beta")
+PARITY_POLICIES = ("dodoor", "random", "pot", "one_plus_beta", "prequal")
 
 
 def assert_parity(seq, bat, *, timestamps_exact=False):
@@ -59,6 +59,18 @@ class TestParityFunctionBench:
         assert_parity(seq, bat, timestamps_exact=True)
         if b == 1000:
             assert bat.msgs_push == 0      # never reaches the b-th decision
+
+    @pytest.mark.parametrize("policy", ("pot", "prequal"))
+    @pytest.mark.parametrize("b", (7, 160))
+    def test_probing_policies_ragged_tail(self, policy, b, small_testbed,
+                                          fb_small, sim_cache):
+        """b ∤ m for the probing policies: the padded tail tasks must be
+        inert in the PoT speculative loop and the Prequal segment scan."""
+        cfg = EngineConfig(policy=policy, b=b)
+        seq = sim_cache(fb_small, small_testbed, cfg, key="fb_small")
+        bat = sim_cache(fb_small, small_testbed, cfg, mode="batched",
+                        key="fb_small")
+        assert_parity(seq, bat, timestamps_exact=True)
 
     def test_outage_window(self, small_testbed, fb_small):
         cfg = EngineConfig(policy="dodoor", b=10,
@@ -119,15 +131,77 @@ class TestParityEdges:
                                 key="fb1200"),
                       timestamps_exact=True)
 
-    def test_prequal_delegates_to_sequential(self, small_testbed, fb_small):
-        cfg = EngineConfig(policy="prequal", b=10)
-        seq = simulate(fb_small, small_testbed, cfg)
-        bat = simulate(fb_small, small_testbed, cfg, mode="batched")
-        assert_parity(seq, bat, timestamps_exact=True)
-
     def test_unknown_mode_rejected(self, small_testbed, fb_small):
         with pytest.raises(ValueError):
             simulate(fb_small, small_testbed, EngineConfig(), mode="warp")
+
+
+class TestPoTSpeculative:
+    """The speculative-commit PoT driver: exactness across the conflict
+    spectrum (ISSUE 2 satellite)."""
+
+    def test_high_conflict_block(self):
+        """4 servers, b=48: nearly every task's candidates collide with an
+        earlier same-block commit, so the speculative loop degenerates to
+        short prefixes — placements and ledger must stay exact."""
+        cluster = make_homogeneous(4, cores=28, mem_mb=128_000)
+        wl = fb.synthesize(m=288, qps=120.0, seed=3)
+        cfg = EngineConfig(policy="pot", b=48)
+        assert_parity(simulate(wl, cluster, cfg),
+                      simulate(wl, cluster, cfg, mode="batched"),
+                      timestamps_exact=True)
+
+    def test_zero_conflict_blocks(self, small_testbed, fb_small):
+        """b=1: every block holds a single task, so no speculative decision
+        can ever conflict — the loop must commit each block in one pass."""
+        cfg = EngineConfig(policy="pot", b=1)
+        assert_parity(simulate(fb_small, small_testbed, cfg),
+                      simulate(fb_small, small_testbed, cfg,
+                               mode="batched"),
+                      timestamps_exact=True)
+
+    def test_low_conflict_wide_fleet(self):
+        """100-server fleet, b=20: conflicts are rare, the common case the
+        speculative commit optimizes for."""
+        cluster = make_homogeneous(100, cores=28, mem_mb=128_000)
+        wl = fb.synthesize(m=400, qps=100.0, seed=5)
+        cfg = EngineConfig(policy="pot", b=20)
+        assert_parity(simulate(wl, cluster, cfg),
+                      simulate(wl, cluster, cfg, mode="batched"),
+                      timestamps_exact=True)
+
+
+class TestPrequalSegmentScan:
+    """The scheduler-parallel Prequal driver (probe pools + exact probe
+    revert) — no longer delegates to the sequential oracle."""
+
+    def test_parity_small_fleet_collisions(self):
+        """5 servers: same-chunk commits frequently hit probed servers, so
+        the rb-slot revert path is exercised hard."""
+        cluster = make_homogeneous(5, cores=28, mem_mb=128_000)
+        wl = fb.synthesize(m=300, qps=100.0, seed=7)
+        cfg = EngineConfig(policy="prequal", b=30)
+        assert_parity(simulate(wl, cluster, cfg),
+                      simulate(wl, cluster, cfg, mode="batched"),
+                      timestamps_exact=True)
+
+    def test_parity_block_larger_than_trace(self, small_testbed, fb_small):
+        """b > m: one partial block — chunk masking over the padded tail."""
+        cfg = EngineConfig(policy="prequal", b=1000)
+        assert_parity(simulate(fb_small, small_testbed, cfg),
+                      simulate(fb_small, small_testbed, cfg,
+                               mode="batched"),
+                      timestamps_exact=True)
+
+    def test_chunks_straddle_scheduler_rounds(self, small_testbed, fb_small):
+        """b=8 with S=5 schedulers: chunk boundaries never align with
+        global scheduler rounds, so the chunk gather/scatter masking must
+        carry pool state across blocks exactly."""
+        cfg = EngineConfig(policy="prequal", b=8)
+        assert_parity(simulate(fb_small, small_testbed, cfg),
+                      simulate(fb_small, small_testbed, cfg,
+                               mode="batched"),
+                      timestamps_exact=True)
 
 
 def _assert_kernel_parity(seq, bat, wl, cluster, seed=0):
@@ -157,11 +231,21 @@ def _assert_kernel_parity(seq, bat, wl, cluster, seed=0):
 
 
 class TestKernelEnginePath:
-    """use_kernel=True routes Algorithm-1 selection through the Pallas
-    kernel (interpret mode on CPU) inside the batched driver."""
+    """use_kernel=True routes the dodoor/(1+β) decision through the fused
+    sample→score→select Pallas megakernel (interpret mode on CPU) inside
+    the batched driver."""
 
     def test_kernel_parity(self, small_testbed, fb_small, sim_cache):
         cfg = EngineConfig(policy="dodoor", b=10)
+        seq = sim_cache(fb_small, small_testbed, cfg, key="fb_small")
+        bat = sim_cache(fb_small, small_testbed, cfg, mode="batched",
+                        use_kernel=True, key="fb_small")
+        _assert_kernel_parity(seq, bat, fb_small, small_testbed)
+
+    def test_kernel_parity_one_plus_beta(self, small_testbed, fb_small,
+                                         sim_cache):
+        """(1+β) consumes the megakernel's cand output for its β-mix."""
+        cfg = EngineConfig(policy="one_plus_beta", b=10)
         seq = sim_cache(fb_small, small_testbed, cfg, key="fb_small")
         bat = sim_cache(fb_small, small_testbed, cfg, mode="batched",
                         use_kernel=True, key="fb_small")
@@ -176,6 +260,67 @@ class TestKernelEnginePath:
         bat = simulate(wl, small_testbed, cfg, mode="batched",
                        use_kernel=True)
         _assert_kernel_parity(seq, bat, wl, small_testbed)
+
+    def test_engine_config_kernel_knobs(self, small_testbed, fb_small):
+        """block_t/interpret flow from EngineConfig into the megakernel's
+        grid program (interpret=True pinned — the CPU auto-detected value —
+        and a non-default tile size)."""
+        base = EngineConfig(policy="dodoor", b=10)
+        knobbed = EngineConfig(policy="dodoor", b=10, block_t=32,
+                               interpret=True)
+        a = simulate(fb_small, small_testbed, base, mode="batched",
+                     use_kernel=True)
+        bvt = simulate(fb_small, small_testbed, knobbed, mode="batched",
+                       use_kernel=True)
+        assert (a.server == bvt.server).all()
+        assert a.msgs_total == bvt.msgs_total
+
+
+class TestFusedMegakernelDraws:
+    """The megakernel's in-kernel sampling pinned draw-for-draw to the
+    two-stage ``sample_feasible_batch`` + ``dodoor_choice_ref`` path at
+    engine-realistic shapes."""
+
+    def _pin(self, T, N, seed):
+        import jax
+        import jax.numpy as jnp
+        from repro.core.prefilter import feasible_mask, sample_feasible_batch
+        from repro.kernels.dodoor_choice import (dodoor_choice_ref,
+                                                 dodoor_fused)
+        rng = np.random.RandomState(seed)
+        base = jax.random.PRNGKey(seed)
+        keys = jax.vmap(lambda i: jax.random.fold_in(base, i))(
+            jnp.arange(T))
+        r = jnp.asarray(rng.rand(T, 2).astype(np.float32) * 8)
+        d = jnp.asarray(rng.rand(T, N).astype(np.float32) * 1000)
+        L = jnp.asarray(rng.rand(N, 2).astype(np.float32) * 50)
+        D = jnp.asarray(rng.rand(N).astype(np.float32) * 5000)
+        C = jnp.asarray(8.0 + rng.rand(N, 2).astype(np.float32) * 100)
+        choice, cand, scores = dodoor_fused(keys, r, d, L, D, C, 0.5)
+        # draws: bit-exact vs the two-stage sampler
+        ref_cand = sample_feasible_batch(keys, feasible_mask(r, C), 2)
+        assert (np.asarray(cand) == np.asarray(ref_cand)).all()
+        # choices: agree with the two-stage oracle wherever the score
+        # margin is firm (1-ulp FMA-contraction caveat on exact ties)
+        d_cand = jnp.take_along_axis(d, ref_cand, axis=1)
+        rchoice, rscores = dodoor_choice_ref(r, ref_cand, d_cand, L, D, C,
+                                             0.5)
+        np.testing.assert_allclose(np.asarray(scores), np.asarray(rscores),
+                                   rtol=2e-5, atol=1e-6)
+        margin = np.abs(np.asarray(rscores[:, 0] - rscores[:, 1]))
+        firm = margin > 1e-5
+        assert (np.asarray(choice)[firm] == np.asarray(rchoice)[firm]).all()
+
+    @pytest.mark.parametrize("T,N", [(50, 20), (600, 101), (2048, 100)])
+    def test_pinned_at_benchmark_shapes(self, T, N):
+        self._pin(T, N, seed=T + N)
+
+    @pytest.mark.skipif(not HAVE_HYPOTHESIS, reason="hypothesis not installed")
+    @given(T=st.integers(1, 200), N=st.integers(1, 130),
+           seed=st.integers(0, 5))
+    @settings(max_examples=10, deadline=None)
+    def test_pinned_property(self, T, N, seed):
+        self._pin(T, N, seed)
 
 
 @pytest.mark.skipif(not HAVE_HYPOTHESIS, reason="hypothesis not installed")

@@ -5,7 +5,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.kernels.dodoor_choice import dodoor_choice, dodoor_choice_ref
+from repro.kernels.dodoor_choice import (dodoor_choice, dodoor_choice_ref,
+                                         dodoor_fused, dodoor_fused_ref)
 from repro.kernels.flash_attention import attention_ref, flash_attention
 from repro.kernels.rl_score import rl_score_matrix, rl_score_matrix_ref
 from repro.kernels.ssd_chunk import ssd, ssd_ref
@@ -72,6 +73,81 @@ class TestDodoorChoiceKernel:
         assert (np.asarray(choice) == 3).all()
         np.testing.assert_allclose(np.asarray(scores[:, 0]),
                                    np.asarray(scores[:, 1]), rtol=1e-6)
+
+
+class TestDodoorFusedMegakernel:
+    """The fused sample→score→select megakernel: in-kernel threefry PRNG,
+    prefilter mask from the table's capacity columns, inverse-CDF pick."""
+
+    def _inputs(self, T, N, seed=0):
+        rng = np.random.RandomState(seed)
+        base = jax.random.PRNGKey(seed)
+        keys = jax.vmap(lambda i: jax.random.fold_in(base, i))(jnp.arange(T))
+        r = jnp.asarray(rng.rand(T, 2).astype(np.float32) * 8)
+        d = jnp.asarray(rng.rand(T, N).astype(np.float32) * 1000)
+        L = jnp.asarray(rng.rand(N, 2).astype(np.float32) * 50)
+        D = jnp.asarray(rng.rand(N).astype(np.float32) * 5000)
+        C = jnp.asarray(8.0 + rng.rand(N, 2).astype(np.float32) * 100)
+        return keys, r, d, L, D, C
+
+    @pytest.mark.parametrize("T,N,alpha", [(16, 20, 0.5), (300, 100, 0.5),
+                                           (257, 64, 0.0), (64, 500, 1.0)])
+    def test_matches_fused_ref(self, T, N, alpha):
+        """Candidate draws and choices are bit-exact vs the jnp reference
+        (which itself delegates draws to sample_feasible_batch); scores to
+        the documented 1-ulp FMA caveat."""
+        keys, r, d, L, D, C = self._inputs(T, N, seed=T)
+        choice, cand, scores = dodoor_fused(keys, r, d, L, D, C, alpha,
+                                            block_t=64)
+        rchoice, rcand, rscores = dodoor_fused_ref(keys, r, d, L, D, C,
+                                                   alpha)
+        assert (np.asarray(cand) == np.asarray(rcand)).all()
+        assert (np.asarray(choice) == np.asarray(rchoice)).all()
+        np.testing.assert_allclose(np.asarray(scores), np.asarray(rscores),
+                                   rtol=2e-5, atol=1e-6)
+
+    @pytest.mark.parametrize("T", (1, 9, 12, 137))
+    def test_partial_block_padding(self, T):
+        """T not a multiple of block_t: padded rows (zero demand, zero
+        keys) must not leak into the first T outputs."""
+        keys, r, d, L, D, C = self._inputs(T, 20, seed=T)
+        choice, cand, _ = dodoor_fused(keys, r, d, L, D, C, 0.5, block_t=8)
+        rchoice, rcand, _ = dodoor_fused_ref(keys, r, d, L, D, C, 0.5)
+        assert choice.shape == (T,)
+        assert (np.asarray(cand) == np.asarray(rcand)).all()
+        assert (np.asarray(choice) == np.asarray(rchoice)).all()
+
+    def test_infeasible_fallback_uniform_over_all(self):
+        """No feasible server → uniform over the whole fleet (submission
+        is never rejected), with the exact sample_feasible draws."""
+        from repro.core.prefilter import feasible_mask, sample_feasible_batch
+        T, N = 32, 7
+        keys, _, d, L, D, C = self._inputs(T, N, seed=2)
+        r = jnp.full((T, 2), 1e6, jnp.float32)       # exceeds every C
+        choice, cand, _ = dodoor_fused(keys, r, d, L, D, C, 0.5)
+        ref_cand = sample_feasible_batch(keys, feasible_mask(r, C), 2)
+        assert (np.asarray(cand) == np.asarray(ref_cand)).all()
+        assert (np.asarray(cand) >= 0).all() and (np.asarray(cand) < N).all()
+        assert np.isin(np.asarray(choice),
+                       np.asarray(cand)).all()
+
+    def test_mixed_feasibility_rows(self):
+        """Some tasks feasible on a strict subset of servers: the in-kernel
+        prefix-sum pick must respect each row's own mask."""
+        from repro.core.prefilter import feasible_mask
+        T, N = 64, 10
+        keys, _, d, L, D, C = self._inputs(T, N, seed=3)
+        rng = np.random.RandomState(3)
+        # Half the tasks demand more than the smaller servers offer.
+        r = jnp.asarray(
+            np.where(rng.rand(T, 1) < 0.5, 4.0, 60.0).astype(np.float32)
+            * np.ones((1, 2), np.float32))
+        C = C.at[:5].set(jnp.asarray([[8.0, 8.0]] * 5))
+        choice, cand, _ = dodoor_fused(keys, r, d, L, D, C, 0.5)
+        mask = np.asarray(feasible_mask(r, C))
+        feas_rows = mask.any(axis=1)
+        picked = np.take_along_axis(mask, np.asarray(cand), axis=1)
+        assert picked[feas_rows].all()
 
 
 class TestDodoorChoiceEnginePath:
