@@ -11,9 +11,12 @@ from repro.workloads import azure
 from .common import reduction_summary, sweep
 
 
-def main(m: int = 2000, qps_list=(2, 5, 10, 20)):
+def main(m: int = 2000, qps_list=(2, 5, 10, 20), seeds=(0, 1, 2)):
+    """Azure QPS sweep; ``seeds`` replicates every (QPS, policy) point and
+    reports cross-seed mean ± CI via ``repro.sim.simulate_many`` (one
+    compiled grid per point instead of a Python loop of runs)."""
     rows = sweep(lambda q: azure.synthesize(m=m, qps=q, seed=0),
-                 qps_list, tag="azure", utilization=True)
+                 qps_list, tag="azure", utilization=True, seeds=seeds)
     reduction_summary(rows, tag="azure")
     return rows
 

@@ -9,9 +9,10 @@ from repro.workloads import functionbench as fb
 from .common import reduction_summary, sweep
 
 
-def main(m: int = 5000, qps_list=(100, 200, 300, 400)):
+def main(m: int = 5000, qps_list=(100, 200, 300, 400), seeds=(0, 1, 2)):
     rows = sweep(lambda q: fb.synthesize(m=m, qps=q, seed=0),
-                 qps_list, tag="functionbench", utilization=True)
+                 qps_list, tag="functionbench", utilization=True,
+                 seeds=seeds)
     reduction_summary(rows, tag="functionbench")
     return rows
 

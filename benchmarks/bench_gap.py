@@ -16,18 +16,15 @@ from repro.core.balls_bins import (batched_gap_bound, gap,
                                    single_choice_gap_bound, tuned_beta)
 
 
-def _mean_gap(n, m, seeds=3, **kw):
+def _mean_gap(n, m, seeds=3, weights=None, **kw):
+    """Mean gap over ``seeds`` independent processes — the seed axis is
+    vmapped (one compiled program, all seeds in one dispatch) instead of a
+    Python loop of per-seed runs."""
     import jax.numpy as jnp
-    gaps = []
-    for s in range(seeds):
-        w = kw.pop("weights", None)
-        if w is None:
-            w = jnp.ones((m,))
-        loads = run_balls_into_bins(jax.random.PRNGKey(s), w, n, **kw)
-        gaps.append(float(gap(loads)))
-        kw["weights"] = None
-        kw.pop("weights")
-    return float(np.mean(gaps))
+    w = weights if weights is not None else jnp.ones((m,))
+    keys = jax.vmap(jax.random.PRNGKey)(jnp.arange(seeds))
+    gaps = jax.vmap(lambda k: gap(run_balls_into_bins(k, w, n, **kw)))(keys)
+    return float(jnp.mean(gaps))
 
 
 def main(n: int = 100, m: int = 20000):

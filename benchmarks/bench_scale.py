@@ -1,0 +1,197 @@
+"""Scale-study benchmark — the sweep engine at paper scale and beyond.
+
+Two sections, both persisted machine-readably to ``BENCH_scale.json``:
+
+* **sweep-vs-loop** — the acceptance grid: 4 seeds × 3 α-configs of the
+  dodoor batched driver on the fb_small trace, ``repro.sim.simulate_many``
+  (one compiled grid, fanned across devices) against the per-run Python
+  loop of ``simulate()`` calls it replaces.  Placement/ledger parity is
+  asserted before timing.
+* **scale points** — n ∈ {101, 10³, 10⁴} heterogeneous fleets
+  (``make_scaled``) under synthesized Azure traces with m up to 2·10⁵,
+  multi-seed, reporting per-point wall ms and decisions/s.
+
+CPU note: JAX exposes one host device by default, which would serialize the
+grid; this benchmark (and only it — the other benchmarks' numbers must not
+see a partitioned host) re-launches with
+``--xla_force_host_platform_device_count=<cores>`` so the grid genuinely
+spreads over cores, exactly as it would over real accelerator devices.
+
+    PYTHONPATH=src python -m benchmarks.bench_scale [--smoke] [--json PATH]
+                                                    [--single-device]
+"""
+from __future__ import annotations
+
+import os
+import sys
+
+# Must precede the first `import jax` in this process: expose one host
+# device per core so the sweep engine's multi-device fan-out has devices
+# to fan over.  `--single-device` (or an inherited XLA_FLAGS already
+# pinning a device count, or an already-imported jax) leaves things alone.
+if ("--single-device" not in sys.argv and "jax" not in sys.modules
+        and "xla_force_host_platform_device_count"
+        not in os.environ.get("XLA_FLAGS", "")):
+    _ndev = min(os.cpu_count() or 1, 16)
+    if _ndev > 1:
+        os.environ["XLA_FLAGS"] = (
+            os.environ.get("XLA_FLAGS", "")
+            + f" --xla_force_host_platform_device_count={_ndev}").strip()
+
+import argparse
+import json
+import subprocess
+import time
+
+import jax
+import numpy as np
+
+from repro.sim import (EngineConfig, make_scaled, make_testbed, simulate,
+                       simulate_many, summarize_sweep)
+from repro.workloads import azure
+from repro.workloads import functionbench as fb
+
+
+def _best_of(fn, reps: int = 5) -> float:
+    """Min-of-reps wall clock (ms) after a warmup call."""
+    fn()
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best * 1e3
+
+
+
+
+def _git_sha() -> str:
+    try:
+        return subprocess.check_output(
+            ["git", "rev-parse", "--short", "HEAD"],
+            cwd=os.path.dirname(os.path.abspath(__file__)), text=True,
+            stderr=subprocess.DEVNULL).strip()
+    except Exception:
+        return "unknown"
+
+
+def bench_sweep_vs_loop(seeds=(0, 1, 2, 3), alphas=(0.3, 0.5, 0.7),
+                        m: int = 600, qps: float = 60.0, b: int = 10,
+                        scale: float = 0.2, reps: int = 9) -> dict:
+    """The acceptance grid: simulate_many vs a per-run loop on fb_small.
+
+    Parity is asserted per grid point before timing — the speedup only
+    counts because the sweep returns exactly what the loop returns.
+    """
+    cluster = make_testbed(scale=scale)
+    wl = fb.synthesize(m=m, qps=qps, seed=0)
+    configs = [EngineConfig(policy="dodoor", b=b, alpha=a) for a in alphas]
+
+    def run_loop():
+        return [simulate(wl, cluster, c, seed=s, mode="batched")
+                for s in seeds for c in configs]
+
+    def run_sweep():
+        return simulate_many(wl, cluster, configs, seeds)
+
+    sw = run_sweep()
+    for si, s in enumerate(seeds):
+        for gi, c in enumerate(configs):
+            ref = simulate(wl, cluster, c, seed=s, mode="batched")
+            pt = sw.point(si, gi)
+            assert (ref.server == pt.server).all(), "sweep parity violated"
+            assert ref.msgs_total == pt.msgs_total, "sweep ledger violated"
+
+    # Same protocol as bench_kernels.bench_engine: each candidate timed
+    # separately, min-of-reps after a warmup call.
+    t_loop = _best_of(run_loop, reps)
+    t_sweep = _best_of(run_sweep, reps)
+    row = {"trace": "fb_small" if m == 600 else f"fb(m={m})",
+           "m": m, "b": b, "num_seeds": len(seeds),
+           "num_configs": len(configs), "points": len(seeds) * len(configs),
+           "devices": jax.device_count(),
+           "loop_ms": round(t_loop, 3), "sweep_ms": round(t_sweep, 3),
+           "speedup": round(t_loop / t_sweep, 2)}
+    print("bench,trace,points,devices,loop_ms,sweep_ms,speedup")
+    print(f"scale,{row['trace']},{row['points']},{row['devices']},"
+          f"{t_loop:.1f},{t_sweep:.1f},{row['speedup']:.2f}", flush=True)
+    return row
+
+
+def bench_scale_points(points, reps: int = 2) -> list:
+    """Big-fleet sweeps: one simulate_many per (n, m) point, multi-seed."""
+    rows = []
+    print("bench,n,m,b,seeds,sweep_ms,ms_per_point,decisions_per_s")
+    for p in points:
+        n, m, qps, b, seeds = (p["n"], p["m"], p["qps"], p["b"],
+                               tuple(p["seeds"]))
+        cluster = make_scaled(n, het=p.get("het", 1.0))
+        wl = azure.synthesize(m=m, qps=qps, seed=0)
+        cfg = EngineConfig(policy="dodoor", b=b)
+
+        t = _best_of(lambda: simulate_many(wl, cluster, cfg, seeds), reps)
+        npts = len(seeds)
+        row = {"n": n, "m": m, "b": b, "qps": qps, "num_seeds": npts,
+               "sweep_ms": round(t, 3),
+               "ms_per_point": round(t / npts, 3),
+               "decisions_per_s": round(npts * m / (t * 1e-3))}
+        rows.append(row)
+        print(f"scale,{n},{m},{b},{npts},{t:.0f},{row['ms_per_point']:.0f},"
+              f"{row['decisions_per_s']}", flush=True)
+    return rows
+
+
+def write_json(path: str, sweep_vs_loop: dict, scale_points: list) -> None:
+    doc = {
+        "schema": 1,
+        "git_sha": _git_sha(),
+        "backend": jax.default_backend(),
+        "devices": jax.device_count(),
+        "sweep_vs_loop": sweep_vs_loop,
+        "scale_points": scale_points,
+    }
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=2, sort_keys=True)
+        f.write("\n")
+    print(f"# wrote {path}")
+
+
+def main(*, smoke: bool = False,
+         json_path: str | None = "BENCH_scale.json"):
+    if smoke:
+        # CI-sized: the acceptance grid stays intact (it *is* the headline
+        # number) but fewer timing reps; scale points shrink to seconds.
+        svl = bench_sweep_vs_loop(reps=3)
+        points = [
+            {"n": 101, "m": 4000, "qps": 10.0, "b": 50, "seeds": (0, 1)},
+            {"n": 1000, "m": 20000, "qps": 100.0, "b": 500, "seeds": (0,)},
+        ]
+        rows = bench_scale_points(points, reps=1)
+    else:
+        svl = bench_sweep_vs_loop()
+        points = [
+            {"n": 101, "m": 20000, "qps": 20.0, "b": 50,
+             "seeds": (0, 1, 2, 3)},
+            {"n": 1000, "m": 100000, "qps": 100.0, "b": 500,
+             "seeds": (0, 1)},
+            {"n": 10000, "m": 200000, "qps": 400.0, "b": 500,
+             "seeds": (0, 1)},
+        ]
+        rows = bench_scale_points(points, reps=1)
+    if json_path:
+        write_json(json_path, svl, rows)
+    return svl, rows
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized shapes")
+    ap.add_argument("--json", default="BENCH_scale.json",
+                    help="output path for machine-readable results "
+                         "('' disables)")
+    ap.add_argument("--single-device", action="store_true",
+                    help="do not force one host device per core "
+                         "(exercises the chunked-vmap fallback)")
+    args = ap.parse_args()
+    main(smoke=args.smoke, json_path=args.json or None)

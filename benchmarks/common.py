@@ -1,47 +1,66 @@
-"""Shared benchmark plumbing: CSV-style rows, policy sweeps."""
+"""Shared benchmark plumbing: CSV-style rows, policy × QPS × seed sweeps."""
 from __future__ import annotations
 
 import sys
 import time
 
-from repro.sim import EngineConfig, make_testbed, simulate, summarize, utilization_stats
+from repro.sim import (EngineConfig, aggregate_summaries, make_testbed,
+                       simulate, simulate_many, summarize, summarize_sweep,
+                       utilization_stats)
 
 POLICIES = ("random", "pot", "prequal", "dodoor")
 
 
 def sweep(workload_fn, qps_list, policies=POLICIES, *, cluster=None,
           b=None, tag="", utilization=False, mode="batched",
-          use_kernel=False, **cfg_kw):
-    """Run policies × QPS; print one CSV row per run; return rows.
+          use_kernel=False, seeds=(0,), **cfg_kw):
+    """Run policies × QPS × seeds; print one CSV row per (QPS, policy);
+    return rows of ``(qps, policy, SummaryCI)``.
 
     ``mode``/``use_kernel`` select the engine driver (see
     ``repro.sim.simulate``); the batched decision-block driver is the
     default — it is placement-exact vs the sequential oracle for *every*
-    policy (PoT rides the speculative commit, Prequal the segment scan —
-    no silent sequential fallback anymore) and several times faster, which
-    is what makes the large sweeps tractable.
+    policy and several times faster, which is what makes the large sweeps
+    tractable.
+
+    ``seeds`` adds a cross-seed axis: in batched mode the whole seed grid
+    runs through ``repro.sim.simulate_many`` (one compiled program, fanned
+    across devices when more than one is visible), and each printed row
+    carries the cross-seed mean (± 95% CI column when more than one seed
+    ran) instead of a single-seed number.
     """
     cluster = cluster if cluster is not None else make_testbed()
     b = b or max(1, cluster.num_servers // 2)
+    seeds = tuple(seeds)
+    multi = len(seeds) > 1
     rows = []
     header = ("bench,qps,policy,msgs_per_task,throughput_tps,"
               "makespan_mean_ms,makespan_p95_ms,sched_mean_ms,sched_p95_ms"
+              + (",makespan_ci95_ms,num_seeds" if multi else "")
               + (",cpu_var,cpu_mean" if utilization else ""))
     print(header)
     for qps in qps_list:
         wl = workload_fn(qps)
         for pol in policies:
-            t0 = time.time()
-            res = simulate(wl, cluster, EngineConfig(policy=pol, b=b,
-                                                     **cfg_kw),
-                           mode=mode, use_kernel=use_kernel)
-            s = summarize(res)
+            cfg = EngineConfig(policy=pol, b=b, **cfg_kw)
+            if mode == "batched":
+                sw = simulate_many(wl, cluster, cfg, seeds,
+                                   use_kernel=use_kernel)
+                s = summarize_sweep(sw)[0]
+                res0 = sw.point(0, 0)
+            else:
+                per_seed = [simulate(wl, cluster, cfg, seed=sd, mode=mode,
+                                     use_kernel=use_kernel) for sd in seeds]
+                s = aggregate_summaries([summarize(r) for r in per_seed])
+                res0 = per_seed[0]
             row = (f"{tag},{qps},{pol},{s.msgs_per_task:.3f},"
                    f"{s.throughput_tps:.2f},{s.makespan_mean_ms:.1f},"
                    f"{s.makespan_p95_ms:.1f},{s.sched_mean_ms:.3f},"
                    f"{s.sched_p95_ms:.3f}")
+            if multi:
+                row += f",{s.ci95['makespan_mean_ms']:.1f},{s.num_seeds}"
             if utilization:
-                u = utilization_stats(res, cluster)
+                u = utilization_stats(res0, cluster)
                 row += f",{u['cpu_var']:.5f},{u['cpu_mean']:.4f}"
             print(row, flush=True)
             rows.append((qps, pol, s))
@@ -49,28 +68,42 @@ def sweep(workload_fn, qps_list, policies=POLICIES, *, cluster=None,
 
 
 def reduction_summary(rows, tag=""):
-    """The paper's headline deltas at the highest shared QPS."""
+    """The paper's headline deltas at the highest shared QPS.
+
+    Pivots on dodoor when it ran; otherwise on the best-makespan policy
+    present, so partial sweeps (``policies`` without dodoor) still report
+    deltas for whatever ran instead of crashing.
+    """
     top = max(q for q, _, _ in rows)
     at = {p: s for q, p, s in rows if q == top}
-    d = at["dodoor"]
+    if not at:
+        return []
+    pivot = ("dodoor" if "dodoor" in at
+             else min(at, key=lambda p: at[p].makespan_mean_ms))
+    d = at[pivot]
+    others = {p: s for p, s in at.items() if p != pivot}
     out = []
-    for base in ("pot", "prequal"):
-        if base in at:
-            out.append(f"{tag} msgs vs {base}: "
-                       f"-{(1 - d.msgs_per_task / at[base].msgs_per_task) * 100:.1f}%")
-    if "random" in at:
-        out.append(f"{tag} msg overhead vs random: "
-                   f"+{(d.msgs_per_task / at['random'].msgs_per_task - 1) * 100:.1f}%")
-    best_base = min((s for p, s in at.items() if p != "dodoor"),
-                    key=lambda s: s.makespan_mean_ms)
-    out.append(f"{tag} makespan mean vs best baseline: "
-               f"{(1 - d.makespan_mean_ms / best_base.makespan_mean_ms) * 100:+.1f}%")
-    best_p95 = min(s.makespan_p95_ms for p, s in at.items() if p != "dodoor")
-    out.append(f"{tag} makespan p95 vs best baseline: "
-               f"{(1 - d.makespan_p95_ms / best_p95) * 100:+.1f}%")
-    best_tput = max(s.throughput_tps for p, s in at.items() if p != "dodoor")
-    out.append(f"{tag} throughput vs best baseline: "
-               f"{(d.throughput_tps / best_tput - 1) * 100:+.1f}%")
+    if not others:
+        out.append(f"{tag} only {pivot} ran — no baseline deltas")
+    else:
+        for base in ("pot", "prequal"):
+            if base in others:
+                out.append(
+                    f"{tag} {pivot} msgs vs {base}: "
+                    f"{(d.msgs_per_task / others[base].msgs_per_task - 1) * 100:+.1f}%")
+        if "random" in others:
+            out.append(
+                f"{tag} {pivot} msg overhead vs random: "
+                f"+{(d.msgs_per_task / others['random'].msgs_per_task - 1) * 100:.1f}%")
+        best_base = min(others.values(), key=lambda s: s.makespan_mean_ms)
+        out.append(f"{tag} {pivot} makespan mean vs best baseline: "
+                   f"{(1 - d.makespan_mean_ms / best_base.makespan_mean_ms) * 100:+.1f}%")
+        best_p95 = min(s.makespan_p95_ms for s in others.values())
+        out.append(f"{tag} {pivot} makespan p95 vs best baseline: "
+                   f"{(1 - d.makespan_p95_ms / best_p95) * 100:+.1f}%")
+        best_tput = max(s.throughput_tps for s in others.values())
+        out.append(f"{tag} {pivot} throughput vs best baseline: "
+                   f"{(d.throughput_tps / best_tput - 1) * 100:+.1f}%")
     for line in out:
         print("#", line)
     return out

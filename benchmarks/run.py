@@ -2,14 +2,34 @@
 
     PYTHONPATH=src python -m benchmarks.run [--quick] [--json PATH]
 
-The hot-path section additionally persists machine-readable perf results
-(per-policy sequential/batched ms, speedup, decisions/s, git SHA) to
-``BENCH_engine.json`` so the perf trajectory is tracked across PRs.
+Two sections persist machine-readable perf results so the trajectory is
+tracked across PRs: the hot path writes ``BENCH_engine.json`` (per-policy
+sequential/batched ms, speedup, decisions/s, git SHA) and the scale-sweep
+section writes ``BENCH_scale.json`` (sweep-vs-loop speedup on the
+acceptance grid, big-fleet sweep points).
 """
 from __future__ import annotations
 
 import argparse
+import os
+import subprocess
+import sys
 import time
+
+
+def _run_bench_scale(smoke: bool, json_path: str):
+    """bench_scale re-launches itself so its one-host-device-per-core XLA
+    flag (a) exists before jax initializes and (b) cannot leak into the
+    other sections' single-device perf numbers.  An empty ``json_path``
+    passes through and disables the file, matching ``--json``."""
+    cmd = [sys.executable, "-m", "benchmarks.bench_scale",
+           "--json", json_path] + (["--smoke"] if smoke else [])
+    env = dict(os.environ)
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env["PYTHONPATH"] = os.pathsep.join(
+        [os.path.join(root, "src")]
+        + ([env["PYTHONPATH"]] if env.get("PYTHONPATH") else []))
+    subprocess.run(cmd, cwd=root, env=env, check=True)
 
 
 def main():
@@ -18,6 +38,8 @@ def main():
                     help="smaller task counts (CI-sized)")
     ap.add_argument("--json", default="BENCH_engine.json",
                     help="hot-path results file ('' disables)")
+    ap.add_argument("--json-scale", default="BENCH_scale.json",
+                    help="scale-sweep results file ('' disables)")
     args = ap.parse_args()
     q = args.quick
 
@@ -40,6 +62,8 @@ def main():
         ("§5 — scheduling hot-path implementations",
          # smoke=True overrides the shapes internally (T=128, m=120)
          lambda: bench_kernels.main(smoke=q, json_path=args.json or None)),
+        ("Scale studies — vmapped sweep engine (simulate_many)",
+         lambda: _run_bench_scale(smoke=q, json_path=args.json_scale)),
         ("§2.4 — Dodoor as LLM-serving router",
          lambda: bench_router.main(m=1000 if q else 2000,
                                    qps_list=(40,) if q else (20, 40, 80))),

@@ -1,17 +1,34 @@
 """Quickstart: Dodoor vs the baselines on the paper's testbed in ~60 s.
 
-    PYTHONPATH=src python examples/quickstart.py
+    PYTHONPATH=src python examples/quickstart.py [num_tasks]
+
+Runs every policy through the batched decision-block engine (bit-exact
+with the sequential oracle, several times faster), then replays the
+dodoor run across three seeds in one compiled sweep (`simulate_many`)
+to show the cross-seed mean ± CI form the benchmarks report.
 """
-from repro.sim import EngineConfig, make_testbed, simulate, summarize
+import sys
+
+from repro.sim import (EngineConfig, make_testbed, simulate, simulate_many,
+                       summarize, summarize_sweep)
 from repro.workloads import functionbench as fb
 
+m = int(sys.argv[1]) if len(sys.argv) > 1 else 3000
+
 cluster = make_testbed()                      # Table 2: 100 servers, 4 types
-workload = fb.synthesize(m=3000, qps=250.0)   # Table 3/4 serverless tasks
+workload = fb.synthesize(m=m, qps=250.0)      # Table 3/4 serverless tasks
 
 print(f"cluster: {cluster.num_servers} servers {cluster.type_names}")
 print(f"workload: {len(workload.submit_ms)} tasks @ 250 qps\n")
 for policy in ("random", "pot", "prequal", "dodoor"):
-    res = simulate(workload, cluster, EngineConfig(policy=policy, b=50))
+    res = simulate(workload, cluster, EngineConfig(policy=policy, b=50),
+                   mode="batched")
     print(summarize(res).row())
+
+print("\ncross-seed (3 seeds, one compiled sweep):")
+sw = simulate_many(workload, cluster, EngineConfig(policy="dodoor", b=50),
+                   seeds=(0, 1, 2))
+print(summarize_sweep(sw)[0].row())
+
 print("\nDodoor: fewest messages after Random, best makespan/throughput —")
 print("the paper's trade (stale-but-cheap load views + RL scoring) in action.")

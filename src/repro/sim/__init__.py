@@ -1,15 +1,20 @@
-"""repro.sim — the 101-node testbed (Table 2), FCFS discrete-event engine,
-message accounting, and metric aggregation."""
-from .cluster import NODE_TYPES, TESTBED_TYPES, ClusterSpec, make_homogeneous, make_testbed
+"""repro.sim — cluster models (the Table-2 testbed + parameterized scaled
+fleets), the FCFS discrete-event engine, message accounting, metric
+aggregation, and the vmapped scale-study sweep engine."""
+from .cluster import (NODE_TYPES, TESTBED_TYPES, ClusterSpec,
+                      make_homogeneous, make_scaled, make_testbed)
 from .engine import EngineConfig, SimResult, simulate
 from .hierarchy import simulate_hierarchical, split_cluster
 from .messages import RpcModel, per_decision_messages
 from .metrics import Summary, resource_violations, summarize, utilization_stats, utilization_timeline
+from .sweep import (SummaryCI, SweepResult, aggregate_summaries,
+                    simulate_many, summarize_sweep)
 
 __all__ = [
     "NODE_TYPES", "TESTBED_TYPES", "ClusterSpec", "make_homogeneous",
-    "make_testbed", "EngineConfig", "SimResult", "simulate",
+    "make_scaled", "make_testbed", "EngineConfig", "SimResult", "simulate",
     "simulate_hierarchical", "split_cluster", "RpcModel",
     "per_decision_messages", "Summary", "resource_violations", "summarize",
-    "utilization_stats", "utilization_timeline",
+    "utilization_stats", "utilization_timeline", "SummaryCI", "SweepResult",
+    "aggregate_summaries", "simulate_many", "summarize_sweep",
 ]

@@ -13,6 +13,11 @@ import numpy as np
 # Node-type order used everywhere a per-type array appears.
 NODE_TYPES = ("m510", "xl170", "c6525-25g", "c6620")
 
+#: Hard engine ceiling on per-node cores — the engine's per-core
+#: unit-resource table is [n, CMAX] (c6620, Table 2, is the biggest node).
+#: ``make_scaled`` clips to it; ``engine`` imports it.
+CMAX = 28
+
 
 @dataclass(frozen=True)
 class NodeType:
@@ -83,6 +88,74 @@ def make_testbed(scale: float = 1.0, interleave: bool = True) -> ClusterSpec:
         C, node_type = C[perm], node_type[perm]
     return ClusterSpec(C=C, node_type=node_type,
                        type_names=tuple(nt.name for nt in TESTBED_TYPES))
+
+
+def make_scaled(n: int, het: float = 1.0, capacity_skew: float = 0.0,
+                type_mix: tuple | None = None, seed: int = 0,
+                interleave: bool = True) -> ClusterSpec:
+    """A parameterized heterogeneous fleet of ``n`` servers — the Table-2
+    testbed generalized to the scales the mean-field / balls-into-bins
+    results speak about (n up to ~10⁴ and beyond).
+
+    Parameters
+    ----------
+    n:
+        Fleet size (any positive int; the paper's testbed is ``n=100``).
+    het:
+        Heterogeneity dial in [0, 1].  Per-type capacities are interpolated
+        between the mix-weighted fleet mean (``het=0`` — every server
+        identical, the classic homogeneous balls-into-bins assumption) and
+        the full Table-2 spread (``het=1``).
+    capacity_skew:
+        ≥ 0 — stretches each type's deviation from the fleet mean by
+        ``(1 + capacity_skew)`` before the ``het`` interpolation, widening
+        the capacity spread beyond Table 2's.  Cores clip to the engine's
+        per-node ceiling (28) and ≥ 1; memory to ≥ 1 GB.
+    type_mix:
+        Fraction of the fleet per node type, aligned with
+        :data:`NODE_TYPES` (defaults to Table 2's 40/25/18/17).  Node
+        counts follow the mix via a highest-averages (D'Hondt) allocation,
+        which is *house monotone*: growing ``n`` only ever adds nodes, so
+        total fleet capacity is strictly increasing in ``n``.
+    seed / interleave:
+        As :func:`make_testbed` — deterministic node-order shuffle so
+        uniform candidate sampling is uncorrelated with type blocks.
+
+    ``make_scaled(100, het=1.0)`` reproduces the Table-2 type counts and
+    capacities exactly (in a different node order).
+    """
+    if n < 1:
+        raise ValueError(f"n={n} must be ≥ 1")
+    if not 0.0 <= het <= 1.0:
+        raise ValueError(f"het={het} must be in [0, 1]")
+    if capacity_skew < 0.0:
+        raise ValueError(f"capacity_skew={capacity_skew} must be ≥ 0")
+    T = len(TESTBED_TYPES)
+    mix = np.asarray(type_mix if type_mix is not None
+                     else [t.count for t in TESTBED_TYPES], np.float64)
+    if mix.shape != (T,) or (mix < 0).any() or mix.sum() <= 0:
+        raise ValueError(f"type_mix must be {T} non-negative fractions")
+    mix = mix / mix.sum()
+
+    # Highest-averages (D'Hondt) seat allocation: house monotone in n.
+    counts = np.zeros(T, np.int64)
+    for _ in range(n):
+        counts[np.argmax(mix / (counts + 1))] += 1
+
+    base = np.array([[t.cores, t.mem_mb] for t in TESTBED_TYPES], np.float64)
+    mean = mix @ base                                   # [2] fleet mean
+    cap = mean + het * (base - mean) * (1.0 + capacity_skew)
+    cores = np.clip(np.round(cap[:, 0]), 1, CMAX)
+    mem = np.clip(np.round(cap[:, 1]), 1000, None)
+
+    node_type = np.repeat(np.arange(T, dtype=np.int32), counts)
+    C = np.stack([cores[node_type], mem[node_type]], axis=1).astype(np.float32)
+    if interleave:
+        rng = np.random.RandomState(seed)
+        perm = rng.permutation(n)
+        C, node_type = C[perm], node_type[perm]
+    return ClusterSpec(C=C, node_type=np.ascontiguousarray(node_type),
+                       type_names=tuple(t.name for t in TESTBED_TYPES))
 
 
 def make_homogeneous(n: int, cores: int = 16, mem_mb: int = 64_000) -> ClusterSpec:

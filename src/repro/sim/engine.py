@@ -104,10 +104,8 @@ from ..core.prefilter import feasible_mask, sample_feasible, sample_feasible_bat
 from ..kernels.dodoor_choice import dodoor_fused
 from ..core.rl_score import load_score_batched
 from ..core.types import PrequalParams, SchedulerView
-from .cluster import ClusterSpec
+from .cluster import CMAX, ClusterSpec
 from .messages import RpcModel
-
-CMAX = 28        # max cores of any node type (c6620, Table 2)
 
 
 class EngineConfig(NamedTuple):
@@ -1040,6 +1038,52 @@ def _static_cfg(cfg: EngineConfig, for_kernel: bool = False,
     )
 
 
+def _validate_config(cfg: EngineConfig) -> None:
+    """Shared sanity checks for ``simulate`` and ``sweep.simulate_many``."""
+    if cfg.b < 1 or cfg.flush_every < 1:
+        raise ValueError(
+            f"b={cfg.b} and flush_every={cfg.flush_every} must be ≥ 1")
+    if cfg.policy == "dodoor":
+        bound = max(1, 2 * cfg.b // max(1, cfg.num_schedulers))
+        if cfg.flush_every > bound:
+            raise ValueError(
+                f"flush_every={cfg.flush_every} violates the §4.1 mini-batch "
+                f"bound 2b/num_schedulers = {bound}")
+
+
+def _blocked_inputs(workload, b: int):
+    """The batched driver's xs: the workload reshaped to [nb, b, ...] decision
+    blocks (edge-padded ragged tail + validity mask), cached on device per
+    (workload, b) so sweeps and repeated runs share one upload."""
+    m = workload.r_submit.shape[0]
+    nb = -(-m // b)
+
+    def build_blocks():
+        pad = nb * b - m
+
+        def prep(a):
+            a = np.ascontiguousarray(a)
+            if pad:
+                a = np.pad(a, ((0, pad),) + ((0, 0),) * (a.ndim - 1),
+                           mode="edge")
+            return jnp.asarray(a.reshape((nb, b) + a.shape[1:]))
+
+        ids = np.arange(nb * b, dtype=np.int32)
+        ids_dev = jnp.asarray(ids.reshape(nb, b))
+        return (
+            ids_dev,
+            prep(workload.r_submit),
+            prep(workload.r_exec),
+            prep(workload.d_est),
+            prep(workload.d_act),
+            prep(workload.submit_ms),
+            ids_dev,                                   # task ids
+            jnp.asarray((ids < m).reshape(nb, b)),
+        )
+
+    return _conv_cached(("blocks", id(workload), b), workload, build_blocks)
+
+
 def simulate(workload, cluster: ClusterSpec, cfg: EngineConfig,
              seed: int = 0, *, mode: str = "sequential",
              use_kernel: bool = False) -> SimResult:
@@ -1065,15 +1109,7 @@ def simulate(workload, cluster: ClusterSpec, cfg: EngineConfig,
     """
     if mode not in ("sequential", "batched"):
         raise ValueError(f"unknown mode {mode!r}")
-    if cfg.b < 1 or cfg.flush_every < 1:
-        raise ValueError(
-            f"b={cfg.b} and flush_every={cfg.flush_every} must be ≥ 1")
-    if cfg.policy == "dodoor":
-        bound = max(1, 2 * cfg.b // max(1, cfg.num_schedulers))
-        if cfg.flush_every > bound:
-            raise ValueError(
-                f"flush_every={cfg.flush_every} violates the §4.1 mini-batch "
-                f"bound 2b/num_schedulers = {bound}")
+    _validate_config(cfg)
     n = cluster.num_servers
     C, node_type, cores_per, mem_unit = _cluster_arrays(cluster,
                                                         cfg.mem_units)
@@ -1084,32 +1120,7 @@ def simulate(workload, cluster: ClusterSpec, cfg: EngineConfig,
     if batched:
         b = cfg.b
         nb = -(-m // b)
-
-        def build_blocks():
-            pad = nb * b - m
-
-            def prep(a):
-                a = np.asarray(a)
-                if pad:
-                    a = np.pad(a, ((0, pad),) + ((0, 0),) * (a.ndim - 1),
-                               mode="edge")
-                return jnp.asarray(a.reshape((nb, b) + a.shape[1:]))
-
-            ids = np.arange(nb * b, dtype=np.int32)
-            ids_dev = jnp.asarray(ids.reshape(nb, b))
-            return (
-                ids_dev,
-                prep(workload.r_submit),
-                prep(workload.r_exec),
-                prep(workload.d_est),
-                prep(workload.d_act),
-                prep(workload.submit_ms),
-                ids_dev,                                   # task ids
-                jnp.asarray((ids < m).reshape(nb, b)),
-            )
-
-        xs = _conv_cached(("blocks", id(workload), b), workload,
-                          build_blocks)
+        xs = _blocked_inputs(workload, b)
         msgs, outs = _simulate_batched_jax(
             xs, C, node_type, mem_unit, cores_per, dyn, _make_dyn_ints(cfg),
             _static_cfg(cfg, for_kernel=use_kernel, keep_b=True), n,

@@ -1,0 +1,276 @@
+"""The sweep/scale subsystem (``repro.sim.sweep`` + ``make_scaled``).
+
+Contract (ISSUE 3): ``simulate_many`` results are bit-exact vs a Python
+loop of ``simulate(..., mode="batched")`` calls per (seed, config) point;
+``make_scaled`` fleets satisfy the scaling invariants; and the cross-seed
+summaries aggregate exactly the per-point summaries.
+"""
+import numpy as np
+import pytest
+
+from repro.sim import (EngineConfig, aggregate_summaries, make_scaled,
+                       make_testbed, simulate, simulate_many, summarize,
+                       summarize_sweep)
+from repro.workloads import azure
+from repro.workloads import functionbench as fb
+
+
+def assert_point_parity(ref, pt):
+    assert (ref.server == pt.server).all(), "placements diverge"
+    ledger = lambda r: (r.msgs_base, r.msgs_probe, r.msgs_push, r.msgs_flush)
+    assert ledger(ref) == ledger(pt), "message ledger diverges"
+    for f in ("enqueue_ms", "start_ms", "finish_ms", "sched_ms",
+              "cores", "mem_mb"):
+        assert np.array_equal(getattr(ref, f), getattr(pt, f)), \
+            f"{f} not bit-identical"
+
+
+class TestSimulateManyExact:
+    """The acceptance grid: every (seed, config) point of one compiled
+    sweep equals the corresponding standalone run."""
+
+    def test_acceptance_grid_dodoor(self, small_testbed, fb_small,
+                                    sim_cache):
+        """≥ (4 seeds × 3 configs), dodoor on fb_small — the ISSUE's
+        acceptance shape (α varies across the config axis)."""
+        seeds = (0, 1, 2, 3)
+        configs = [EngineConfig(policy="dodoor", b=10, alpha=a)
+                   for a in (0.3, 0.5, 0.7)]
+        sw = simulate_many(fb_small, small_testbed, configs, seeds)
+        for si, s in enumerate(seeds):
+            for gi, cfg in enumerate(configs):
+                ref = sim_cache(fb_small, small_testbed, cfg, seed=s,
+                                mode="batched", key="fb_small")
+                assert_point_parity(ref, sw.point(si, gi))
+
+    @pytest.mark.parametrize("policy", ("random", "pot", "prequal",
+                                        "one_plus_beta"))
+    def test_all_policies(self, small_testbed, policy):
+        """Non-dodoor policies ride the same vmapped driver — including
+        PoT's speculative while_loop and Prequal's segment scan, whose
+        per-lane trip counts differ across the grid."""
+        wl = fb.synthesize(m=200, qps=60.0, seed=0)
+        configs = [EngineConfig(policy=policy, b=10, interference=i)
+                   for i in (0.3, 0.6)]
+        seeds = (0, 7)
+        sw = simulate_many(wl, small_testbed, configs, seeds)
+        for si, s in enumerate(seeds):
+            for gi, cfg in enumerate(configs):
+                ref = simulate(wl, small_testbed, cfg, seed=s,
+                               mode="batched")
+                assert_point_parity(ref, sw.point(si, gi))
+
+    def test_traced_scalar_axes(self, small_testbed):
+        """flush_every and the outage window vary across the config axis
+        without recompiling or cross-lane leakage."""
+        wl = fb.synthesize(m=150, qps=60.0, seed=1)
+        configs = [EngineConfig(policy="dodoor", b=10, flush_every=1),
+                   EngineConfig(policy="dodoor", b=10, flush_every=4),
+                   EngineConfig(policy="dodoor", b=10,
+                                outage_ms=(500.0, 2500.0))]
+        sw = simulate_many(wl, small_testbed, configs, (0,))
+        for gi, cfg in enumerate(configs):
+            assert_point_parity(simulate(wl, small_testbed, cfg,
+                                         mode="batched"), sw.point(0, gi))
+        # the outage column pushed less than the healthy columns
+        assert sw.point(0, 2).msgs_push < sw.point(0, 0).msgs_push
+
+    def test_seed_chunking_invariant(self, small_testbed):
+        """Chunked dispatch concatenates host-side — values independent of
+        the chunk size."""
+        wl = fb.synthesize(m=120, qps=40.0, seed=2)
+        cfg = EngineConfig(policy="dodoor", b=10)
+        full = simulate_many(wl, small_testbed, cfg, (0, 1, 2), shard=False)
+        chunked = simulate_many(wl, small_testbed, cfg, (0, 1, 2),
+                                seed_chunk=1, shard=False)
+        assert (full.server == chunked.server).all()
+        assert np.array_equal(full.finish_ms, chunked.finish_ms)
+        assert (full.msgs == chunked.msgs).all()
+
+    def test_single_config_scalar_arg(self, small_testbed):
+        wl = fb.synthesize(m=80, qps=40.0, seed=3)
+        cfg = EngineConfig(policy="dodoor", b=10)
+        sw = simulate_many(wl, small_testbed, cfg, (0, 1))
+        assert sw.num_configs == 1 and sw.num_seeds == 2
+        assert_point_parity(simulate(wl, small_testbed, cfg, seed=1,
+                                     mode="batched"), sw.point(1, 0))
+
+    def test_program_shaping_mismatch_raises(self, small_testbed, fb_small):
+        with pytest.raises(ValueError, match="program-shaping"):
+            simulate_many(fb_small, small_testbed,
+                          [EngineConfig(b=10), EngineConfig(b=20)], (0,))
+        with pytest.raises(ValueError):
+            simulate_many(fb_small, small_testbed, [], (0,))
+        with pytest.raises(ValueError):
+            simulate_many(fb_small, small_testbed, EngineConfig(), ())
+
+    def test_summaries_aggregate_points(self, small_testbed):
+        """summarize_sweep == mean-over-seeds of per-point summarize; a
+        single seed yields zero CI widths."""
+        wl = fb.synthesize(m=150, qps=50.0, seed=4)
+        cfg = EngineConfig(policy="dodoor", b=10)
+        seeds = (0, 1, 2)
+        sw = simulate_many(wl, small_testbed, cfg, seeds)
+        agg = summarize_sweep(sw)[0]
+        per = [summarize(sw.point(si, 0)) for si in range(3)]
+        assert agg.num_seeds == 3
+        np.testing.assert_allclose(
+            agg.makespan_mean_ms,
+            np.mean([p.makespan_mean_ms for p in per]), rtol=1e-12)
+        np.testing.assert_allclose(
+            agg.msgs_per_task,
+            np.mean([p.msgs_per_task for p in per]), rtol=1e-12)
+        assert agg.ci95["makespan_mean_ms"] >= 0.0
+        single = aggregate_summaries(per[:1])
+        assert single.ci95["makespan_mean_ms"] == 0.0
+
+
+class TestMakeScaled:
+    def test_reproduces_testbed_at_100(self):
+        c = make_scaled(100, het=1.0)
+        tb = make_testbed()
+        assert c.num_servers == 100
+        assert np.array_equal(np.sort(c.C, axis=0), np.sort(tb.C, axis=0))
+        counts = np.bincount(c.node_type, minlength=4)
+        assert tuple(counts) == (40, 25, 18, 17)
+
+    def test_het_zero_is_homogeneous(self):
+        c = make_scaled(64, het=0.0)
+        assert np.unique(c.C, axis=0).shape[0] == 1
+        # still four node types for workload profile alignment
+        assert c.num_types == 4
+
+    def test_capacity_monotone_in_n(self):
+        prev = np.zeros(2)
+        for n in list(range(1, 40)) + [100, 101, 1000, 1001]:
+            tot = make_scaled(n).C.sum(axis=0)
+            assert (tot > prev).all(), f"capacity not monotone at n={n}"
+            prev = tot
+
+    def test_type_counts_monotone_in_n(self):
+        """House monotonicity of the D'Hondt allocation: growing the fleet
+        never removes nodes of any type."""
+        prev = np.zeros(4, np.int64)
+        for n in range(1, 120):
+            counts = np.bincount(make_scaled(n, interleave=False).node_type,
+                                 minlength=4)
+            assert (counts >= prev).all(), f"type counts shrank at n={n}"
+            prev = counts
+
+    def test_capacity_skew_widens_spread(self):
+        base = make_scaled(200, het=1.0, capacity_skew=0.0)
+        skew = make_scaled(200, het=1.0, capacity_skew=0.5)
+        assert skew.C[:, 1].std() > base.C[:, 1].std()
+        assert (skew.C[:, 0] >= 1).all() and (skew.C[:, 0] <= 28).all()
+
+    def test_het_interpolates(self):
+        mid = make_scaled(100, het=0.5)
+        full = make_scaled(100, het=1.0)
+        assert mid.C[:, 1].std() < full.C[:, 1].std()
+        assert np.unique(mid.C, axis=0).shape[0] > 1
+
+    def test_invalid_args_raise(self):
+        for bad in (lambda: make_scaled(0),
+                    lambda: make_scaled(10, het=1.5),
+                    lambda: make_scaled(10, capacity_skew=-0.1),
+                    lambda: make_scaled(10, type_mix=(1.0,)),
+                    lambda: make_scaled(10, type_mix=(0, 0, 0, 0))):
+            with pytest.raises(ValueError):
+                bad()
+
+    def test_simulates_with_standard_workloads(self):
+        """A scaled fleet is a drop-in ClusterSpec for both workload
+        families (num_types alignment)."""
+        cluster = make_scaled(37, het=0.7, seed=1)
+        wl = fb.synthesize(m=60, qps=30.0, seed=0)
+        res = simulate(wl, cluster, EngineConfig(policy="dodoor", b=10),
+                       mode="batched")
+        assert np.isfinite(res.finish_ms).all()
+        assert (res.server < 37).all()
+
+
+class TestReductionSummaryDegradation:
+    """benchmarks/common.reduction_summary without dodoor in ``policies``
+    (the KeyError fix)."""
+
+    def _rows(self, policies):
+        wl = fb.synthesize(m=120, qps=50.0, seed=0)
+        cluster = make_testbed(scale=0.2)
+        rows = []
+        for pol in policies:
+            res = simulate(wl, cluster, EngineConfig(policy=pol, b=10),
+                           mode="batched")
+            rows.append((50, pol, summarize(res)))
+        return rows
+
+    def test_without_dodoor(self):
+        from benchmarks.common import reduction_summary
+        out = reduction_summary(self._rows(("random", "pot")), tag="t")
+        assert out and all("dodoor" not in line for line in out)
+
+    def test_single_policy(self):
+        from benchmarks.common import reduction_summary
+        out = reduction_summary(self._rows(("pot",)), tag="t")
+        assert len(out) == 1 and "no baseline deltas" in out[0]
+
+    def test_with_dodoor_still_pivots_on_it(self):
+        from benchmarks.common import reduction_summary
+        out = reduction_summary(self._rows(("random", "dodoor")), tag="t")
+        assert any("dodoor" in line for line in out)
+
+
+@pytest.mark.slow
+class TestScaleSweepSlow:
+    def test_n1000_m1e5_azure_sweep(self):
+        """The ISSUE's scale smoke: an n=10³ fleet under an m ≥ 10⁵ Azure
+        trace, multi-seed, through one compiled sweep."""
+        cluster = make_scaled(1000, het=1.0)
+        wl = azure.synthesize(m=100_000, qps=100.0, seed=0)
+        cfg = EngineConfig(policy="dodoor", b=500)
+        sw = simulate_many(wl, cluster, cfg, (0, 1))
+        assert sw.server.shape == (2, 1, 100_000)
+        assert (sw.server >= 0).all() and (sw.server < 1000).all()
+        assert np.isfinite(sw.finish_ms).all()
+        assert (sw.finish_ms > sw.start_ms).all()
+        # seeds genuinely differ, summaries aggregate both
+        assert (sw.server[0, 0] != sw.server[1, 0]).any()
+        agg = summarize_sweep(sw)[0]
+        assert agg.num_seeds == 2 and agg.throughput_tps > 0
+
+    def test_pmap_fanout_subprocess(self, tmp_path):
+        """The multi-device pmap path needs >1 device, which the suite's
+        process (deliberately single-device, see conftest) cannot provide —
+        assert grid-vs-loop exactness in a fresh 2-device interpreter."""
+        import os
+        import subprocess
+        import sys
+        code = """
+import numpy as np, jax
+assert jax.device_count() == 2, jax.device_count()
+from repro.sim import EngineConfig, make_testbed, simulate, simulate_many
+from repro.workloads import functionbench as fb
+cluster = make_testbed(scale=0.2)
+wl = fb.synthesize(m=150, qps=60.0, seed=0)
+configs = [EngineConfig(policy="dodoor", b=10, alpha=a) for a in (0.3, 0.7)]
+seeds = (0, 1, 2)
+sw = simulate_many(wl, cluster, configs, seeds)
+for si, s in enumerate(seeds):
+    for gi, c in enumerate(configs):
+        ref = simulate(wl, cluster, c, seed=s, mode="batched")
+        pt = sw.point(si, gi)
+        assert (ref.server == pt.server).all()
+        assert ref.msgs_total == pt.msgs_total
+        assert np.array_equal(ref.finish_ms, pt.finish_ms)
+print("pmap fanout exact")
+"""
+        repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+        env = {**os.environ,
+               "PYTHONPATH": os.path.join(repo, "src"),
+               "JAX_PLATFORMS": "cpu",
+               "XLA_FLAGS": (os.environ.get("XLA_FLAGS", "") +
+                             " --xla_force_host_platform_device_count=2")
+               .strip()}
+        out = subprocess.run([sys.executable, "-c", code], env=env,
+                             capture_output=True, text=True, timeout=420)
+        assert out.returncode == 0, out.stdout + out.stderr
+        assert "pmap fanout exact" in out.stdout

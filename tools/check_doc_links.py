@@ -1,0 +1,52 @@
+#!/usr/bin/env python
+"""Docs link-check: every relative markdown link in README.md / docs/*.md
+must point at a file or directory that exists, so renames and deletions
+cannot silently rot the docs.
+
+    python tools/check_doc_links.py [files...]
+
+Exits non-zero listing every broken link. External (http/mailto) links and
+pure anchors are ignored; `path#anchor` checks only the path part.
+"""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+REPO = Path(__file__).resolve().parent.parent
+
+DEFAULT_FILES = ["README.md", "docs/ARCHITECTURE.md", "docs/SWEEPS.md",
+                 "ROADMAP.md", "CHANGES.md", "PAPER.md"]
+
+
+def broken_links(md_path: Path) -> list:
+    out = []
+    text = md_path.read_text(encoding="utf-8")
+    for target in LINK_RE.findall(text):
+        if target.startswith(("http://", "https://", "mailto:", "#")):
+            continue
+        rel = target.split("#", 1)[0]
+        if not rel:
+            continue
+        if not (md_path.parent / rel).exists() and not (REPO / rel).exists():
+            out.append((str(md_path.relative_to(REPO)), target))
+    return out
+
+
+def main(argv) -> int:
+    files = [Path(a) for a in argv[1:]] if len(argv) > 1 else [
+        REPO / f for f in DEFAULT_FILES if (REPO / f).exists()]
+    bad = []
+    for f in files:
+        bad.extend(broken_links(f))
+    for src, target in bad:
+        print(f"BROKEN {src}: ({target})")
+    if not bad:
+        print(f"ok: {len(files)} file(s), all relative links resolve")
+    return 1 if bad else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))
