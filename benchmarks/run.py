@@ -40,12 +40,14 @@ def main():
                     help="hot-path results file ('' disables)")
     ap.add_argument("--json-scale", default="BENCH_scale.json",
                     help="scale-sweep results file ('' disables)")
+    ap.add_argument("--json-scenarios", default="BENCH_scenarios.json",
+                    help="scenario-grid results file ('' disables)")
     args = ap.parse_args()
     q = args.quick
 
     from . import (bench_azure, bench_functionbench, bench_gap,
                    bench_kernels, bench_reliability, bench_roofline,
-                   bench_router, bench_sensitivity)
+                   bench_router, bench_scenarios, bench_sensitivity)
 
     sections = [
         ("Fig 3/4/5 — Azure VM placement (§6.2)",
@@ -64,6 +66,10 @@ def main():
          lambda: bench_kernels.main(smoke=q, json_path=args.json or None)),
         ("Scale studies — vmapped sweep engine (simulate_many)",
          lambda: _run_bench_scale(smoke=q, json_path=args.json_scale)),
+        ("Scenario engine — bursty/diurnal/outage/churn grid",
+         lambda: bench_scenarios.main(smoke=q,
+                                      json_path=args.json_scenarios
+                                      or None)),
         ("§2.4 — Dodoor as LLM-serving router",
          lambda: bench_router.main(m=1000 if q else 2000,
                                    qps_list=(40,) if q else (20, 40, 80))),

@@ -1,20 +1,36 @@
 """repro.sim — cluster models (the Table-2 testbed + parameterized scaled
-fleets), the FCFS discrete-event engine, message accounting, metric
-aggregation, and the vmapped scale-study sweep engine."""
+fleets), the FCFS discrete-event engine (with server-dynamics timelines),
+message accounting, metric aggregation, the vmapped scale-study sweep
+engine, the declarative scenario engine, and the mean-field predictor."""
 from .cluster import (NODE_TYPES, TESTBED_TYPES, ClusterSpec,
                       make_homogeneous, make_scaled, make_testbed)
-from .engine import EngineConfig, SimResult, simulate
+from .engine import Dynamics, EngineConfig, SimResult, simulate
 from .hierarchy import simulate_hierarchical, split_cluster
+from .meanfield import (MeanFieldPrediction, het_pod_equilibrium,
+                        make_service_workload, measured_mean_queue,
+                        pod_mean_queue, pod_tail, predict_pod,
+                        tolerance_band)
 from .messages import RpcModel, per_decision_messages
-from .metrics import Summary, resource_violations, summarize, utilization_stats, utilization_timeline
+from .metrics import (Summary, mean_in_system, phase_summaries,
+                      resource_violations, summarize, summarize_window,
+                      utilization_stats, utilization_timeline)
+from .scenarios import (Scenario, ScenarioSweep, random_churn,
+                        random_outages, random_stragglers, rolling_restart,
+                        run_scenario, run_scenario_grid, scenario_workload)
 from .sweep import (SummaryCI, SweepResult, aggregate_summaries,
                     simulate_many, summarize_sweep)
 
 __all__ = [
     "NODE_TYPES", "TESTBED_TYPES", "ClusterSpec", "make_homogeneous",
-    "make_scaled", "make_testbed", "EngineConfig", "SimResult", "simulate",
-    "simulate_hierarchical", "split_cluster", "RpcModel",
-    "per_decision_messages", "Summary", "resource_violations", "summarize",
+    "make_scaled", "make_testbed", "Dynamics", "EngineConfig", "SimResult",
+    "simulate", "simulate_hierarchical", "split_cluster", "RpcModel",
+    "per_decision_messages", "Summary", "mean_in_system", "phase_summaries",
+    "resource_violations", "summarize", "summarize_window",
     "utilization_stats", "utilization_timeline", "SummaryCI", "SweepResult",
     "aggregate_summaries", "simulate_many", "summarize_sweep",
+    "MeanFieldPrediction", "het_pod_equilibrium", "make_service_workload",
+    "measured_mean_queue", "pod_mean_queue", "pod_tail", "predict_pod",
+    "tolerance_band", "Scenario", "ScenarioSweep", "random_churn",
+    "random_outages", "random_stragglers", "rolling_restart",
+    "run_scenario", "run_scenario_grid", "scenario_workload",
 ]

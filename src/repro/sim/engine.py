@@ -154,6 +154,132 @@ class _Dyn(NamedTuple):
     q_rif: jnp.ndarray
 
 
+class Dynamics(NamedTuple):
+    """Declarative server-dynamics timelines (the scenario engine's
+    cluster axis) — all times in ms, all fields tuples so the spec is
+    hashable (cache/equality key, like :class:`EngineConfig`).
+
+    outages:       ``((server, t0, t1), ...)`` — server unavailable on
+                   [t0, t1): masked out of candidate sampling (no new
+                   placements land on it) and a committed task whose FCFS
+                   start falls inside the window starts at t1 instead
+                   (maintenance freeze: queued work resumes at recovery).
+    joins:         ``((server, t_join), ...)`` — node churn: the server is
+                   part of the fleet arrays from the start but unavailable
+                   on [0, t_join).
+    leaves:        ``((server, t_leave), ...)`` — unavailable on
+                   [t_leave, ∞): a graceful decommission — masked from
+                   sampling, but *not* start-gated: already-queued work
+                   drains to completion (unlike an outage's freeze).
+    slowdowns:     ``((server, t0, t1, mult), ...)`` — transient straggler:
+                   a task *starting* inside [t0, t1) runs ``mult``× its
+                   interference-stretched duration.
+    store_outages: ``((t0, t1), ...)`` — data-store outage windows
+                   (generalizes ``EngineConfig.outage_ms`` to a timeline;
+                   both are honored).
+
+    Semantics note: when every feasible server is unavailable the engine
+    falls back to uniform placement over the whole fleet (same rule as an
+    all-infeasible task) — submission is never rejected, the task queues
+    until the node recovers.
+    """
+
+    outages: tuple = ()
+    joins: tuple = ()
+    leaves: tuple = ()
+    slowdowns: tuple = ()
+    store_outages: tuple = ()
+
+    @property
+    def has_down_windows(self) -> bool:
+        return bool(self.outages or self.joins or self.leaves)
+
+    def merge(self, *others: "Dynamics") -> "Dynamics":
+        """Concatenate timelines — composes builder outputs, e.g.
+        ``random_churn(...).merge(random_outages(...))``."""
+        ds = (self,) + others
+        return Dynamics(*(tuple(w for d in ds for w in getattr(d, f))
+                          for f in self._fields))
+
+
+class _Win(NamedTuple):
+    """Traced window operands a :class:`Dynamics` spec lowers to — shapes
+    are program-shaping (pad widths), values are traced, so scenario grids
+    stack them on the vmap axis.  Empty slots hold +inf starts (a window
+    [+inf, +inf) matches no timestamp) and 1.0 multipliers.
+
+    ``down*`` masks candidate sampling (outages ∪ joins ∪ leaves);
+    ``gate*`` additionally freezes FCFS starts to the window end (outages
+    ∪ joins only — leaves drain their queues instead)."""
+
+    down0: jnp.ndarray      # [n, Wd] unavailability window starts
+    down1: jnp.ndarray      # [n, Wd] window ends
+    gate0: jnp.ndarray      # [n, Wg] start-freezing window starts
+    gate1: jnp.ndarray      # [n, Wg] ends
+    slow0: jnp.ndarray      # [n, Ws] straggler window starts
+    slow1: jnp.ndarray      # [n, Ws] ends
+    slow_mult: jnp.ndarray  # [n, Ws] duration multipliers
+    store0: jnp.ndarray     # [Wo] data-store outage starts
+    store1: jnp.ndarray     # [Wo] ends
+
+    @property
+    def widths(self) -> tuple:
+        return (self.down0.shape[1], self.gate0.shape[1],
+                self.slow0.shape[1], self.store0.shape[0])
+
+
+def _avail_rows(win: _Win, now):
+    """Availability mask from the down windows: ``now`` scalar → [n];
+    ``now`` [b] → [b, n].  Used identically by both drivers so the masked
+    sampling stays bit-exact between them."""
+    if now.ndim == 0:
+        return ~jnp.any((win.down0 <= now) & (now < win.down1), axis=-1)
+    t = now[:, None, None]
+    return ~jnp.any((win.down0[None] <= t) & (t < win.down1[None]), axis=-1)
+
+
+def _gate_start(win: _Win, j, start):
+    """Push a start time landing inside a gate window to the window's end.
+    ``j`` scalar + ``start`` scalar (sequential/_commit_one) or per-server
+    rows (``j`` is implicit, ``start`` [n] — _commit_rounds).  The unrolled
+    loop resolves chains of non-overlapping sorted windows; each iteration
+    is the same arithmetic in both drivers."""
+    if start.ndim == 0:
+        g0, g1 = win.gate0[j], win.gate1[j]          # [Wg]
+        for _ in range(g0.shape[0]):
+            inwin = (g0 <= start) & (start < g1)
+            start = jnp.max(jnp.where(inwin, g1, start))
+        return start
+    g0, g1 = win.gate0, win.gate1                    # [n, Wg]
+    for _ in range(g0.shape[1]):
+        inwin = (g0 <= start[:, None]) & (start[:, None] < g1)
+        start = jnp.max(jnp.where(inwin, g1, start[:, None]), axis=1)
+    return start
+
+
+def _slow_stretch(win: _Win, j, start):
+    """Straggler multiplier for a task starting at ``start`` — product of
+    the matching windows' factors, unrolled so the multiply order is
+    identical in both drivers (scalar and per-server-row forms)."""
+    if start.ndim == 0:
+        s0, s1, sm = win.slow0[j], win.slow1[j], win.slow_mult[j]
+        stretch = jnp.float32(1.0)
+        for w in range(s0.shape[0]):
+            inwin = (s0[w] <= start) & (start < s1[w])
+            stretch = stretch * jnp.where(inwin, sm[w], 1.0)
+        return stretch
+    s0, s1, sm = win.slow0, win.slow1, win.slow_mult
+    stretch = jnp.ones_like(start)
+    for w in range(s0.shape[1]):
+        inwin = (s0[:, w] <= start) & (start < s1[:, w])
+        stretch = stretch * jnp.where(inwin, sm[:, w], 1.0)
+    return stretch
+
+
+def _store_down(win: _Win, now):
+    return jnp.any((win.store0 <= now) & (now < win.store1))
+
+
 class SimResult(NamedTuple):
     """Per-task outcomes (numpy, ms) + aggregate message ledger."""
 
@@ -232,10 +358,11 @@ def _truth_all(carry, now: jnp.ndarray):
 
 
 def _select(policy: str, key, carry: _Carry, r_sub, d_est_srv, now, sched,
-            C, cfg: EngineConfig, dyn: _Dyn):
+            C, cfg: EngineConfig, dyn: _Dyn, win: _Win):
     """Dispatch the placement policy. Returns (server j, carry, extra_msgs,
     extra latency ms)."""
-    mask = feasible_mask(r_sub, C)
+    avail = _avail_rows(win, now)                       # [n] bool
+    mask = feasible_mask(r_sub, C) & avail
     zero = jnp.zeros((), jnp.float32)
 
     if policy == "random":
@@ -272,7 +399,10 @@ def _select(policy: str, key, carry: _Carry, r_sub, d_est_srv, now, sched,
     if policy == "prequal":
         k_sel, k_rand, k_probe = jax.random.split(key, 3)
         s = sched
-        valid = carry.pool_valid[s]
+        # Entries pointing at currently-down servers are skipped for
+        # selection (HCL never routes to a dead node) but stay in the pool
+        # — the server may come back before the entry is evicted.
+        valid = carry.pool_valid[s] & avail[carry.pool_server[s]]
         rifs = jnp.where(valid, carry.pool_rif[s], jnp.inf)
         lats = jnp.where(valid, carry.pool_lat[s], jnp.inf)
         any_valid = jnp.any(valid)
@@ -302,13 +432,16 @@ def _select(policy: str, key, carry: _Carry, r_sub, d_est_srv, now, sched,
                                   carry.pool_lat[s], carry.pool_age[s],
                                   carry.pool_valid[s])
         for i in range(cfg.prequal.r_probe):
+            # A probe to a down server gets no reply → no pool entry.
+            ok = avail[probes[i]]
             slot_scores = jnp.where(pv, page, -jnp.inf)
             slot = jnp.argmin(slot_scores)       # first invalid, else oldest
-            ps = ps.at[slot].set(probes[i])
-            pr = pr.at[slot].set(prif[i])
-            plat = plat.at[slot].set(pD[i])
-            page = page.at[slot].set(now + jnp.float32(i) * 1e-3)
-            pv = pv.at[slot].set(True)
+            ps = jnp.where(ok, ps.at[slot].set(probes[i]), ps)
+            pr = jnp.where(ok, pr.at[slot].set(prif[i]), pr)
+            plat = jnp.where(ok, plat.at[slot].set(pD[i]), plat)
+            page = jnp.where(ok, page.at[slot].set(now + jnp.float32(i) * 1e-3),
+                             page)
+            pv = jnp.where(ok, pv.at[slot].set(True), pv)
         # Maintenance (r_remove=1): evict worst-RIF entry when pool is full.
         full = jnp.sum(pv) >= pv.shape[0]
         worst = jnp.argmax(jnp.where(pv, pr, -jnp.inf))
@@ -326,7 +459,8 @@ def _select(policy: str, key, carry: _Carry, r_sub, d_est_srv, now, sched,
 
 
 def _commit_one(carry, valid, now, j, cores, mem_mb, dur_raw, d_est_j,
-                extra_lat, dyn: _Dyn, cores_per, mem_unit, MU: int):
+                extra_lat, dyn: _Dyn, win: _Win, cores_per, mem_unit,
+                MU: int):
     """Commit one placed task to server ``j``: channel contention, FCFS start,
     interference-stretched runtime, unit allocation, ring-buffer insert.
     Shared verbatim by the sequential driver and the batched PoT inner scan
@@ -352,12 +486,16 @@ def _commit_one(carry, valid, now, j, cores, mem_mb, dur_raw, d_est_j,
     start = jnp.maximum(
         jnp.maximum(enqueue_t, carry.prev_start[j]),
         jnp.maximum(cf_sorted[c_eff - 1], mf_sorted[mu_need - 1]))
+    # Server-dynamics gate: a start landing in a down window resumes at
+    # the window's end (maintenance freeze).
+    start = _gate_start(win, j, start)
     # Co-location interference: cores still busy when we start stretch the
     # actual runtime (profiles are measured at low occupancy, §6.3).
     pad = CMAX - cores_per[j]
     busy = jnp.sum(cf > start) - pad          # running tasks' cores
     frac = busy.astype(jnp.float32) / cores_per[j].astype(jnp.float32)
     dur = dur_raw * (1.0 + dyn.interference * jnp.clip(frac, 0.0, 1.0))
+    dur = dur * _slow_stretch(win, j, start)  # straggler windows
     finish = start + dur
 
     c_ranks = jnp.argsort(jnp.argsort(cf))
@@ -388,7 +526,7 @@ def _commit_one(carry, valid, now, j, cores, mem_mb, dur_raw, d_est_j,
 
 @partial(jax.jit, static_argnames=("cfg", "n", "num_types"))
 def _simulate_jax(xs, C, node_type, mem_unit, cores_per, dyn_vec, dyn_ints,
-                  cfg: EngineConfig, n: int, num_types: int, seed: int):
+                  win, cfg: EngineConfig, n: int, num_types: int, seed: int):
     """The sequential scan. xs = (i [m], r_sub [m,2], r_exec [m,T,2],
     d_est [m,T], d_act [m,T], submit [m], task_id [m]).
 
@@ -438,7 +576,8 @@ def _simulate_jax(xs, C, node_type, mem_unit, cores_per, dyn_vec, dyn_ints,
         d_est_srv = d_est_t[node_type]                 # [n]
 
         j, carry, extra_msgs, extra_lat = _select(
-            cfg.policy, key, carry, r_sub, d_est_srv, now, sched, C, cfg, dyn)
+            cfg.policy, key, carry, r_sub, d_est_srv, now, sched, C, cfg,
+            dyn, win)
 
         # --- commit: scheduling latency (compute + channel contention +
         # placement hop; the enqueue RPC's service time grows with the
@@ -450,7 +589,7 @@ def _simulate_jax(xs, C, node_type, mem_unit, cores_per, dyn_vec, dyn_ints,
         dur_raw = d_act_t[node_type[j]]
         carry, (start, finish, enqueue_t, sched_ms) = _commit_one(
             carry, jnp.bool_(True), now, j, cores, mem_mb, dur_raw,
-            d_est_srv[j], extra_lat, dyn, cores_per, mem_unit, MU)
+            d_est_srv[j], extra_lat, dyn, win, cores_per, mem_unit, MU)
 
         msgs = carry.msgs.at[0].add(2).at[1].add(extra_msgs)
 
@@ -472,6 +611,7 @@ def _simulate_jax(xs, C, node_type, mem_unit, cores_per, dyn_vec, dyn_ints,
             #     scheduling continues — graceful degradation by design).
             do_push = (i + 1) % b_dyn == 0
             do_push = do_push & ~((now >= dyn.outage0) & (now < dyn.outage1))
+            do_push = do_push & ~_store_down(win, now)
 
             def apply_push(carry):
                 L, D, rif = _truth_all(carry, now)
@@ -511,8 +651,8 @@ def _sorted_fill(arr, k, value):
 
 
 def _commit_rounds(carry: _Carry, valid, now, j, cores, mem_mb, dur_raw,
-                   d_est_j, extra_lat, dyn: _Dyn, cores_per, mem_unit,
-                   n: int, MU: int, outs0=None):
+                   d_est_j, extra_lat, dyn: _Dyn, win: _Win, cores_per,
+                   mem_unit, n: int, MU: int, outs0=None):
     """Server-parallel commit of the ``valid``-masked tasks of a block —
     used directly by policies whose placements are known up front
     (random/dodoor/(1+β)) and as the inner commit step of the PoT
@@ -588,10 +728,12 @@ def _commit_rounds(carry: _Carry, valid, now, j, cores, mem_mb, dur_raw,
         mem_gate = jnp.take_along_axis(mf, (mu_need - 1)[:, None], axis=1)[:, 0]
         start = jnp.maximum(jnp.maximum(enqueue_t, carry.prev_start),
                             jnp.maximum(core_gate, mem_gate))
+        start = _gate_start(win, None, start)           # down-window freeze
         pad = CMAX - cores_per
         busy = jnp.sum(cf > start[:, None], axis=-1) - pad
         frac = busy.astype(jnp.float32) / cores_per.astype(jnp.float32)
         dur = dur_s * (1.0 + dyn.interference * jnp.clip(frac, 0.0, 1.0))
+        dur = dur * _slow_stretch(win, None, start)     # straggler windows
         finish = start + dur
 
         cf_new = _sorted_fill(cf, c_eff, finish)
@@ -639,7 +781,7 @@ def _commit_rounds(carry: _Carry, valid, now, j, cores, mem_mb, dur_raw,
 
 @partial(jax.jit, static_argnames=("cfg", "n", "num_types", "use_kernel"))
 def _simulate_batched_jax(xs, C, node_type, mem_unit, cores_per, dyn_vec,
-                          dyn_ints, cfg: EngineConfig, n: int,
+                          dyn_ints, win, cfg: EngineConfig, n: int,
                           num_types: int, seed: int, use_kernel: bool):
     """The block scan. xs fields are [nb, b, ...]: global index, r_sub,
     r_exec, d_est, d_act, submit, task_id, valid."""
@@ -683,7 +825,8 @@ def _simulate_batched_jax(xs, C, node_type, mem_unit, cores_per, dyn_vec,
         sched = (idx % S).astype(jnp.int32)
         keys = jax.vmap(lambda t: jax.random.fold_in(base_key, t))(task_id)
         d_est_srv = d_est_t[:, node_type]                       # [b, n]
-        mask = feasible_mask(r_sub, C)                          # [b, n]
+        avail = _avail_rows(win, now)                           # [b, n]
+        mask = feasible_mask(r_sub, C) & avail                  # [b, n]
 
         # ---- vectorized selection against the block's one cache snapshot
         extra_lat = jnp.zeros((bsz,), jnp.float32)
@@ -726,7 +869,7 @@ def _simulate_batched_jax(xs, C, node_type, mem_unit, cores_per, dyn_vec,
             dest_t = d_est_srv[tt, j]
             carry, outs = _commit_rounds(
                 carry, valid, now, j, cores_t, mem_t, dur_t, dest_t,
-                extra_lat, dyn, cores_per, mem_unit, n, MU)
+                extra_lat, dyn, win, cores_per, mem_unit, n, MU)
         elif policy == "pot":
             # Speculative commit + conflict replay.  Each iteration scores
             # every pending task against the *current* carry, commits the
@@ -770,7 +913,8 @@ def _simulate_batched_jax(xs, C, node_type, mem_unit, cores_per, dyn_vec,
                     jnp.where(pick_b, mem_c[:, 1], mem_c[:, 0]),
                     jnp.where(pick_b, dur_c[:, 1], dur_c[:, 0]),
                     jnp.where(pick_b, dest_c[:, 1], dest_c[:, 0]),
-                    pot_lat, dyn, cores_per, mem_unit, n, MU, outs0=outs)
+                    pot_lat, dyn, win, cores_per, mem_unit, n, MU,
+                    outs0=outs)
                 j_acc = jnp.where(commit, j_spec, j_acc)
                 return (q, c, j_acc, outs)
 
@@ -801,23 +945,27 @@ def _simulate_batched_jax(xs, C, node_type, mem_unit, cores_per, dyn_vec,
                 s_eff = jnp.where(m_c, s_c, S)
                 ic_eff = jnp.where(m_c, ic, bsz)
 
-                # -- HCL selection from each scheduler's own pool
+                # -- HCL selection from each scheduler's own pool.  Down
+                #    servers' entries are skipped for selection (matching
+                #    the sequential driver) but not deleted.
+                avail_c = _avail_rows(win, now_c)               # [S, n]
                 pv = c.pool_valid[s_c]                          # [S, P]
                 pr = c.pool_rif[s_c]
                 plat = c.pool_lat[s_c]
                 pserv = c.pool_server[s_c]
                 page = c.pool_age[s_c]
-                rifs = jnp.where(pv, pr, jnp.inf)
-                lats = jnp.where(pv, plat, jnp.inf)
-                any_valid = jnp.any(pv, axis=1)
-                n_val = jnp.maximum(jnp.sum(pv, axis=1), 1)
+                pv_sel = pv & jnp.take_along_axis(avail_c, pserv, axis=1)
+                rifs = jnp.where(pv_sel, pr, jnp.inf)
+                lats = jnp.where(pv_sel, plat, jnp.inf)
+                any_valid = jnp.any(pv_sel, axis=1)
+                n_val = jnp.maximum(jnp.sum(pv_sel, axis=1), 1)
                 sorted_rif = jnp.sort(rifs, axis=1)
                 q_idx = jnp.clip(
                     (dyn.q_rif * n_val.astype(jnp.float32)).astype(jnp.int32),
                     0, P - 1)
                 threshold = jnp.take_along_axis(sorted_rif, q_idx[:, None],
                                                 axis=1)[:, 0]
-                cold = pv & (pr <= threshold[:, None])
+                cold = pv_sel & (pr <= threshold[:, None])
                 cold_lat = jnp.where(cold, lats, jnp.inf)
                 entry = jnp.where(jnp.any(cold, axis=1),
                                   jnp.argmin(cold_lat, axis=1),
@@ -843,7 +991,7 @@ def _simulate_batched_jax(xs, C, node_type, mem_unit, cores_per, dyn_vec,
                     c, commit, now, j_full, scat(r_exec_t[ic, nt_c, 0]),
                     scat(r_exec_t[ic, nt_c, 1]), scat(d_act_t[ic, nt_c]),
                     scat(d_est_srv[ic, j_c]),
-                    jnp.zeros((bsz,), jnp.float32), dyn, cores_per,
+                    jnp.zeros((bsz,), jnp.float32), dyn, win, cores_per,
                     mem_unit, n, MU, outs0=outs)
                 j_acc = jnp.where(commit, j_full, j_acc)
 
@@ -872,10 +1020,12 @@ def _simulate_batched_jax(xs, C, node_type, mem_unit, cores_per, dyn_vec,
                 prif = jnp.sum(act, axis=-1)                    # [S, rp]
                 pD = jnp.sum(dur_rows * act, axis=-1)
 
-                # -- pool insert (sequential r_probe order) + maintenance
+                # -- pool insert (sequential r_probe order) + maintenance;
+                #    probes to down servers get no reply → no entry.
+                avail_p = jnp.take_along_axis(avail_c, probes_c, axis=1)
                 for ip in range(PP.r_probe):
                     slot = jnp.argmin(jnp.where(pv, page, -jnp.inf), axis=1)
-                    one = iota_P == slot[:, None]
+                    one = (iota_P == slot[:, None]) & avail_p[:, ip:ip + 1]
                     pserv = jnp.where(one, probes_c[:, ip:ip + 1], pserv)
                     pr = jnp.where(one, prif[:, ip:ip + 1], pr)
                     plat = jnp.where(one, pD[:, ip:ip + 1], plat)
@@ -943,6 +1093,7 @@ def _simulate_batched_jax(xs, C, node_type, mem_unit, cores_per, dyn_vec,
             do_push = valid[-1]
             do_push = do_push & ~((now_push >= dyn.outage0)
                                   & (now_push < dyn.outage1))
+            do_push = do_push & ~_store_down(win, now_push)
 
             def apply_push(c):
                 L, D, rif = _truth_all(c, now_push)
@@ -1017,6 +1168,91 @@ def _make_dyn_ints(cfg: EngineConfig) -> jnp.ndarray:
         lambda: jnp.asarray(np.array([cfg.b, cfg.flush_every], np.int32)))
 
 
+def _pack_windows(rows: dict, n: int, width: int, fill):
+    """[n, width] start/end (+ optional payload) planes from per-server
+    window lists, sorted by start so `_gate_start`'s chained resolution is
+    exact for non-overlapping windows."""
+    k = len(fill)
+    out = [np.full((n, width), f, np.float32) for f in fill]
+    for srv, wins in rows.items():
+        for wi, entry in enumerate(sorted(wins)):
+            for a, v in zip(out, entry):
+                a[srv, wi] = v
+    return out
+
+
+def _lower_dynamics(dynamics, n: int,
+                    widths: tuple | None = None) -> _Win:
+    """Lower a :class:`Dynamics` spec to :class:`_Win` operand planes.
+
+    ``widths=(Wd, Wg, Ws, Wo)`` overrides the minimal pad widths — the
+    scenario grid aligns every scenario to shared shapes (one compiled
+    program); padding never changes results (empty windows are inert), so
+    per-run and grid lowerings agree bit-exactly.  Cached per
+    (dynamics, n, widths): the spec is a hashable NamedTuple.
+    """
+    dynamics = dynamics if dynamics is not None else Dynamics()
+    if not isinstance(dynamics, Dynamics):
+        raise TypeError(f"dynamics must be a Dynamics spec, "
+                        f"got {type(dynamics).__name__}")
+
+    def build():
+        servers = [int(e[0]) for field in ("outages", "joins", "leaves",
+                                           "slowdowns")
+                   for e in getattr(dynamics, field)]
+        for srv in servers:
+            if not 0 <= srv < n:
+                raise ValueError(f"dynamics server {srv} outside fleet "
+                                 f"of {n}")
+        down: dict = {}
+        gate: dict = {}
+        for srv, t0, t1 in dynamics.outages:
+            down.setdefault(int(srv), []).append((float(t0), float(t1)))
+            gate.setdefault(int(srv), []).append((float(t0), float(t1)))
+        for srv, t in dynamics.joins:
+            if float(t) <= 0.0:
+                continue                  # present from the start: inert
+            down.setdefault(int(srv), []).append((0.0, float(t)))
+            gate.setdefault(int(srv), []).append((0.0, float(t)))
+        for srv, t in dynamics.leaves:
+            # sampling mask only: a leaver drains, so no start gate
+            down.setdefault(int(srv), []).append((float(t), np.inf))
+        slow: dict = {}
+        for srv, t0, t1, mult in dynamics.slowdowns:
+            slow.setdefault(int(srv), []).append(
+                (float(t0), float(t1), float(mult)))
+        for wins in down.values():
+            if any(t1 <= t0 for t0, t1 in wins):
+                raise ValueError("dynamics window needs t1 > t0")
+        for wins in slow.values():
+            if any(t1 <= t0 or mult <= 0 for t0, t1, mult in wins):
+                raise ValueError("slowdown needs t1 > t0 and mult > 0")
+        if any(t1 <= t0 for t0, t1 in dynamics.store_outages):
+            raise ValueError("store outage needs t1 > t0")
+
+        wd = max(1, max((len(v) for v in down.values()), default=0))
+        wg = max(1, max((len(v) for v in gate.values()), default=0))
+        ws = max(1, max((len(v) for v in slow.values()), default=0))
+        wo = max(1, len(dynamics.store_outages))
+        if widths is not None:
+            need = (wd, wg, ws, wo)
+            if any(w < r for w, r in zip(widths, need)):
+                raise ValueError(f"widths {widths} < required {need}")
+            wd, wg, ws, wo = widths
+
+        d0, d1 = _pack_windows(down, n, wd, (np.inf, np.inf))
+        g0, g1 = _pack_windows(gate, n, wg, (np.inf, np.inf))
+        s0, s1, sm = _pack_windows(slow, n, ws, (np.inf, np.inf, 1.0))
+        o0 = np.full((wo,), np.inf, np.float32)
+        o1 = np.full((wo,), np.inf, np.float32)
+        for wi, (t0, t1) in enumerate(sorted(dynamics.store_outages)):
+            o0[wi], o1[wi] = t0, t1
+        return _Win(*(jnp.asarray(a)
+                      for a in (d0, d1, g0, g1, s0, s1, sm, o0, o1)))
+
+    return _conv_cached(("win", dynamics, n, widths), (), build)
+
+
 def _static_cfg(cfg: EngineConfig, for_kernel: bool = False,
                 keep_b: bool = False) -> EngineConfig:
     """Collapse traced-scalar fields to canonical values so one compiled
@@ -1086,7 +1322,7 @@ def _blocked_inputs(workload, b: int):
 
 def simulate(workload, cluster: ClusterSpec, cfg: EngineConfig,
              seed: int = 0, *, mode: str = "sequential",
-             use_kernel: bool = False) -> SimResult:
+             use_kernel: bool = False, dynamics=None) -> SimResult:
     """Run a full experiment: one workload trace through one policy.
 
     mode:
@@ -1102,6 +1338,13 @@ def simulate(workload, cluster: ClusterSpec, cfg: EngineConfig,
         two-stage jnp path; ``cfg.block_t``/``cfg.interpret`` control the
         tile size and interpret-vs-compiled lowering (``None`` =
         auto-detect: compiled on TPU only).
+    dynamics:
+        optional :class:`Dynamics` spec — per-server outage/churn
+        timelines, straggler windows, data-store outage windows (see the
+        scenario engine, ``repro.sim.scenarios``).  Exact in both modes.
+        Incompatible with ``use_kernel`` when down windows are present
+        (the fused kernel derives its sampling mask from capacity columns
+        alone).
 
     ``workload`` and ``cluster`` are cached on device by object identity
     (they are frozen dataclasses): do not mutate their arrays in place
@@ -1110,10 +1353,17 @@ def simulate(workload, cluster: ClusterSpec, cfg: EngineConfig,
     if mode not in ("sequential", "batched"):
         raise ValueError(f"unknown mode {mode!r}")
     _validate_config(cfg)
+    if (use_kernel and dynamics is not None
+            and dynamics.has_down_windows):
+        raise ValueError(
+            "use_kernel=True cannot honor per-server down windows (the "
+            "fused megakernel samples from the capacity prefilter only); "
+            "run the scenario with use_kernel=False")
     n = cluster.num_servers
     C, node_type, cores_per, mem_unit = _cluster_arrays(cluster,
                                                         cfg.mem_units)
     dyn = _make_dyn(cfg)
+    win = _lower_dynamics(dynamics, n)
 
     m = workload.r_submit.shape[0]
     batched = mode == "batched"
@@ -1123,7 +1373,7 @@ def simulate(workload, cluster: ClusterSpec, cfg: EngineConfig,
         xs = _blocked_inputs(workload, b)
         msgs, outs = _simulate_batched_jax(
             xs, C, node_type, mem_unit, cores_per, dyn, _make_dyn_ints(cfg),
-            _static_cfg(cfg, for_kernel=use_kernel, keep_b=True), n,
+            win, _static_cfg(cfg, for_kernel=use_kernel, keep_b=True), n,
             cluster.num_types, seed, use_kernel)
         outs = tuple(np.asarray(o).reshape(nb * b, *o.shape[2:])[:m]
                      for o in outs)
@@ -1142,7 +1392,7 @@ def simulate(workload, cluster: ClusterSpec, cfg: EngineConfig,
 
         xs = _conv_cached(("seq", id(workload)), workload, build_seq)
         msgs, outs = _simulate_jax(xs, C, node_type, mem_unit, cores_per,
-                                   dyn, _make_dyn_ints(cfg),
+                                   dyn, _make_dyn_ints(cfg), win,
                                    _static_cfg(cfg), n,
                                    cluster.num_types, seed)
         outs = tuple(np.asarray(o) for o in outs)

@@ -36,10 +36,20 @@ def split_cluster(cluster: ClusterSpec, k: int):
 
 def simulate_hierarchical(workload, cluster: ClusterSpec, cfg: EngineConfig,
                           k: int, seed: int = 0,
-                          mode: str = "sequential") -> SimResult:
+                          mode: str = "sequential",
+                          b: int | None = None) -> SimResult:
     """Run k independent mini-clusters; tasks round-robin across them.
+
     ``mode`` selects the engine driver per mini-cluster (see
-    :func:`repro.sim.simulate`)."""
+    :func:`repro.sim.simulate`).
+
+    ``b`` makes the per-mini-cluster batch size explicit (it used to be a
+    silent override of ``cfg.b``): ``None`` derives the paper's n/2
+    default from each mini-cluster's own fleet size — ``cfg.b`` sized for
+    the full fleet would starve a small mini-cluster's push cadence —
+    while an int applies that batch size to every mini-cluster (pass
+    ``b=cfg.b`` to force the caller's value through unchanged).
+    """
     m = workload.r_submit.shape[0]
     parts = split_cluster(cluster, k)
     assign = np.arange(m) % k
@@ -56,11 +66,16 @@ def simulate_hierarchical(workload, cluster: ClusterSpec, cfg: EngineConfig,
             task_type=workload.task_type[sel],
             submit_ms=workload.submit_ms[sel],
         )
-        sub_cfg = cfg._replace(b=max(1, spec.num_servers // 2))
-        res = simulate(sub, spec, sub_cfg, seed=seed + c, mode=mode)
+        sub_b = max(1, spec.num_servers // 2) if b is None else int(b)
+        res = simulate(sub, spec, cfg._replace(b=sub_b), seed=seed + c,
+                       mode=mode)
         results.append((res, sel, idx))
 
-    # merge back into submission order with global server ids
+    # merge back into submission order with global server ids; the policy
+    # metadata comes from the per-part results (asserted uniform), not
+    # from a separate cfg read.
+    policies = {res.policy for res, _, _ in results}
+    assert policies == {cfg.policy}, policies
     server = np.zeros(m, np.int32)
     arrays = {f: np.zeros(m, np.float32) for f in
               ("submit_ms", "enqueue_ms", "start_ms", "finish_ms",
@@ -74,4 +89,5 @@ def simulate_hierarchical(workload, cluster: ClusterSpec, cfg: EngineConfig,
                  res.msgs_flush]
     return SimResult(server=server, msgs_base=int(msgs[0]),
                      msgs_probe=int(msgs[1]), msgs_push=int(msgs[2]),
-                     msgs_flush=int(msgs[3]), policy=cfg.policy, **arrays)
+                     msgs_flush=int(msgs[3]), policy=policies.pop(),
+                     **arrays)

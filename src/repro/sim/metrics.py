@@ -58,29 +58,98 @@ def summarize(res: SimResult) -> Summary:
 
 
 def utilization_timeline(res: SimResult, cluster: ClusterSpec,
-                         dt_ms: float = 10_000.0):
+                         dt_ms: float = 10_000.0, *,
+                         chunk_cells: int = 8_000_000):
     """Per-server CPU/memory utilization sampled every ``dt_ms`` (paper: 10 s).
 
     Returns (times_s [T], cpu_util [T, n], mem_util [T, n]) where util is the
     fraction of the server's capacity in use by *running* tasks.
+
+    Vectorized with sample-chunking: a chunk of ``Tc`` sample times builds
+    one ``[Tc, m]`` running mask and scatters both resource planes with a
+    single flattened ``bincount`` per plane, keeping peak memory under
+    ``chunk_cells`` mask cells regardless of T × m.
     """
     t0 = float(res.submit_ms.min())
     t1 = float(res.finish_ms.max())
     times = np.arange(t0, t1 + dt_ms, dt_ms)
     n = cluster.num_servers
-    cpu = np.zeros((times.shape[0], n), np.float64)
-    mem = np.zeros((times.shape[0], n), np.float64)
-    # Chunk over samples to bound memory (m × T can be 100k × 200).
-    for ti, t in enumerate(times):
-        running = (res.start_ms <= t) & (t < res.finish_ms)
-        if not running.any():
+    T = times.shape[0]
+    m = res.start_ms.shape[0]
+    cpu = np.zeros((T, n), np.float64)
+    mem = np.zeros((T, n), np.float64)
+    chunk = max(1, chunk_cells // max(m, 1))
+    for lo in range(0, T, chunk):
+        tc = times[lo:lo + chunk, None]                    # [Tc, 1]
+        running = (res.start_ms[None, :] <= tc) & (tc < res.finish_ms[None, :])
+        si, tj = np.nonzero(running)
+        if si.size == 0:
             continue
-        srv = res.server[running]
-        cpu[ti] = np.bincount(srv, weights=res.cores[running], minlength=n)
-        mem[ti] = np.bincount(srv, weights=res.mem_mb[running], minlength=n)
+        flat = si * n + res.server[tj]
+        Tc = tc.shape[0]
+        cpu[lo:lo + Tc] += np.bincount(
+            flat, weights=res.cores[tj], minlength=Tc * n).reshape(Tc, n)
+        mem[lo:lo + Tc] += np.bincount(
+            flat, weights=res.mem_mb[tj], minlength=Tc * n).reshape(Tc, n)
     cpu /= cluster.C[None, :, 0]
     mem /= cluster.C[None, :, 1]
     return times / 1e3, cpu, mem
+
+
+def summarize_window(res: SimResult, t0_ms: float, t1_ms: float) -> Summary:
+    """:func:`summarize` restricted to tasks *submitted* in [t0, t1) — the
+    per-phase view the scenario engine needs (burst vs lull, during vs
+    after an outage).  Throughput uses the window length; an empty window
+    returns a zero Summary (num_tasks=0)."""
+    sel = (res.submit_ms >= t0_ms) & (res.submit_ms < t1_ms)
+    cnt = int(sel.sum())
+    wall_s = max((t1_ms - t0_ms) / 1e3, 1e-9)
+    if cnt == 0:
+        return Summary(policy=res.policy, num_tasks=0, msgs_total=0,
+                       msgs_per_task=0.0, throughput_tps=0.0,
+                       makespan_mean_ms=0.0, makespan_p95_ms=0.0,
+                       sched_mean_ms=0.0, sched_p95_ms=0.0,
+                       wait_mean_ms=0.0, wall_time_s=wall_s)
+    mk = res.makespan_ms[sel]
+    sched = res.sched_ms[sel]
+    wait = res.wait_ms[sel]
+    # The ledger is aggregate-only; attribute it uniformly per task so
+    # msgs_per_task stays comparable across phases of one run.
+    per_task = res.msgs_total / max(1, res.server.shape[0])
+    return Summary(
+        policy=res.policy, num_tasks=cnt,
+        msgs_total=int(round(per_task * cnt)), msgs_per_task=per_task,
+        throughput_tps=cnt / wall_s,
+        makespan_mean_ms=float(mk.mean()),
+        makespan_p95_ms=float(np.percentile(mk, 95)),
+        sched_mean_ms=float(sched.mean()),
+        sched_p95_ms=float(np.percentile(sched, 95)),
+        wait_mean_ms=float(wait.mean()),
+        wall_time_s=wall_s,
+    )
+
+
+def phase_summaries(res: SimResult, edges_ms) -> list:
+    """[(t0, t1, Summary), ...] over consecutive windows between
+    ``edges_ms`` — e.g. ``[0, outage_start, outage_end, horizon]`` gives
+    before/during/after summaries of an outage scenario."""
+    edges = [float(e) for e in edges_ms]
+    if len(edges) < 2 or any(b <= a for a, b in zip(edges, edges[1:])):
+        raise ValueError("edges_ms must be ≥ 2 strictly increasing times")
+    return [(a, b, summarize_window(res, a, b))
+            for a, b in zip(edges, edges[1:])]
+
+
+def mean_in_system(res: SimResult, t0_ms: float, t1_ms: float) -> float:
+    """Time-averaged number of tasks in the system (enqueued, not yet
+    finished) over [t0, t1) — cluster-wide; divide by n for the per-server
+    queue length the mean-field predictions speak about."""
+    if t1_ms <= t0_ms:
+        raise ValueError("need t1_ms > t0_ms")
+    lo = np.maximum(res.enqueue_ms, t0_ms)
+    hi = np.minimum(res.finish_ms, t1_ms)
+    return float(np.clip(hi - lo, 0.0, None).sum(dtype=np.float64)
+                 / (t1_ms - t0_ms))
 
 
 def utilization_stats(res: SimResult, cluster: ClusterSpec,

@@ -1,0 +1,340 @@
+"""repro.sim.scenarios — the declarative scenario engine.
+
+The paper's experiments (and the seed repro) run one shape of experiment:
+homogeneous Poisson arrivals on a static fleet.  The ROADMAP's scenario
+item asks for the rest of the operating envelope — bursty/skewed arrival
+processes, outage grids, node churn — *through the sweep layer*, so that a
+scenario study is one compiled program, not a Python loop of bespoke
+experiments.  This module is that layer:
+
+* a :class:`Scenario` is a declarative, hashable spec composing an
+  **arrival process** (``repro.workloads.arrivals`` — Poisson, MMPP
+  on-off bursts, diurnal sinusoid, heavy-tailed batches) with a
+  **server-dynamics timeline** (:class:`repro.sim.engine.Dynamics` —
+  per-server outage windows, churn joins/leaves, straggler slowdowns,
+  data-store outages);
+
+* :func:`run_scenario` runs one (scenario, seed) point through
+  ``simulate`` — the dynamics lower to traced ``[n, W]`` window operands
+  that mask candidate sampling, gate FCFS starts, stretch straggler
+  durations, and suppress data-store pushes, *exactly* in both the
+  sequential and batched drivers (``tests/test_scenarios.py`` pins all
+  five policies);
+
+* :func:`run_scenario_grid` vmaps the batched driver over a flattened
+  (seed × scenario) point axis — per-point submit planes and window
+  operands ride the vmap axis, every other operand is broadcast — so a
+  whole scenario study compiles once and dispatches once (chunked under a
+  memory budget, like ``simulate_many``), and every grid point is
+  bit-exact vs its standalone :func:`run_scenario` run.
+
+Scenario timestamps are sampled per (spec, m, seed) and cached
+(``repro.workloads.arrivals.arrival_times``), so the grid and the per-run
+path consume the *same* float32 planes by construction.
+"""
+from __future__ import annotations
+
+from dataclasses import replace as dc_replace
+from functools import partial
+from typing import NamedTuple, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..workloads.arrivals import arrival_times
+from .cluster import ClusterSpec
+from .engine import (Dynamics, EngineConfig, SimResult, _blocked_inputs,
+                     _cluster_arrays, _lower_dynamics, _make_dyn,
+                     _make_dyn_ints, _simulate_batched_jax, _static_cfg,
+                     _validate_config, simulate)
+
+#: Per-dispatch budget for the stacked per-task outputs, as in sweep.py.
+_CHUNK_BYTES = 256 << 20
+
+
+class Scenario(NamedTuple):
+    """One named experiment condition.
+
+    arrivals:
+        an arrival-process spec (``PoissonArrivals`` / ``OnOffArrivals`` /
+        ``DiurnalArrivals`` / ``BatchArrivals``) whose sampled timestamps
+        replace the base workload's ``submit_ms`` — per seed, so the seed
+        axis redraws both the arrival times and the engine's decisions.
+        ``None`` keeps the base workload's trace.
+    dynamics:
+        the server/store timeline (:class:`repro.sim.engine.Dynamics`).
+
+    The spec is a NamedTuple of NamedTuples/tuples — hashable, usable as a
+    cache key, comparable across runs.
+    """
+
+    name: str = "steady"
+    arrivals: object = None
+    dynamics: Dynamics = Dynamics()
+
+
+def scenario_workload(base, scenario: Scenario, seed: int = 0):
+    """The base workload with ``submit_ms`` replaced by the scenario's
+    sampled arrival plane (identity-cached so repeated runs — and the
+    grid/per-run parity pair — share one frozen object)."""
+    if scenario.arrivals is None:
+        return base
+    m = base.submit_ms.shape[0]
+    key = (id(base), scenario.arrivals, int(seed))
+    hit = _WL_CACHE.get(key)
+    if hit is not None:
+        return hit[1]
+    wl = dc_replace(base,
+                    submit_ms=arrival_times(scenario.arrivals, m, seed))
+    if len(_WL_CACHE) >= _WL_CACHE_MAX:
+        _WL_CACHE.clear()
+    _WL_CACHE[key] = (base, wl)        # pin base so its id stays unique
+    return wl
+
+
+_WL_CACHE: dict = {}
+_WL_CACHE_MAX = 256
+
+
+def run_scenario(base, cluster: ClusterSpec, scenario: Scenario,
+                 cfg: EngineConfig, seed: int = 0, *,
+                 mode: str = "batched",
+                 use_kernel: bool = False) -> SimResult:
+    """One (scenario, seed) point = ``simulate`` on the scenario workload
+    with the scenario's dynamics lowered to window operands."""
+    wl = scenario_workload(base, scenario, seed)
+    return simulate(wl, cluster, cfg, seed, mode=mode,
+                    use_kernel=use_kernel, dynamics=scenario.dynamics)
+
+
+class ScenarioSweep(NamedTuple):
+    """Stacked per-task outcomes over a (seeds × scenarios) grid.
+
+    Array fields are ``[S, K, m]`` (seed-major); ``submit_ms`` is per-point
+    (scenarios resample arrivals); ``msgs`` is ``[S, K, 4]``.
+    """
+
+    server: np.ndarray
+    enqueue_ms: np.ndarray
+    start_ms: np.ndarray
+    finish_ms: np.ndarray
+    sched_ms: np.ndarray
+    cores: np.ndarray
+    mem_mb: np.ndarray
+    submit_ms: np.ndarray     # [S, K, m]
+    msgs: np.ndarray          # [S, K, 4] int32
+    policy: str
+    seeds: tuple
+    scenarios: tuple          # length K, Scenario per grid column
+    config: EngineConfig
+
+    @property
+    def num_seeds(self) -> int:
+        return len(self.seeds)
+
+    @property
+    def num_scenarios(self) -> int:
+        return len(self.scenarios)
+
+    def point(self, si: int, ki: int) -> SimResult:
+        """The (seed ``si``, scenario ``ki``) point as a plain
+        :class:`SimResult` — interchangeable with a ``run_scenario``
+        return."""
+        return SimResult(
+            server=self.server[si, ki],
+            submit_ms=self.submit_ms[si, ki],
+            enqueue_ms=self.enqueue_ms[si, ki],
+            start_ms=self.start_ms[si, ki],
+            finish_ms=self.finish_ms[si, ki],
+            sched_ms=self.sched_ms[si, ki],
+            cores=self.cores[si, ki],
+            mem_mb=self.mem_mb[si, ki],
+            msgs_base=int(self.msgs[si, ki, 0]),
+            msgs_probe=int(self.msgs[si, ki, 1]),
+            msgs_push=int(self.msgs[si, ki, 2]),
+            msgs_flush=int(self.msgs[si, ki, 3]),
+            policy=self.policy,
+        )
+
+
+@partial(jax.jit, static_argnames=("cfg", "n", "num_types", "use_kernel"))
+def _scenario_grid_jax(xs, submit_blocks, wins, C, node_type, mem_unit,
+                       cores_per, dyn_vec, dyn_ints, seeds,
+                       cfg: EngineConfig, n: int, num_types: int,
+                       use_kernel: bool):
+    """vmap the batched block scan over the flattened point axis: each
+    point carries its own blocked submit plane, window operands, and seed;
+    every other operand (task bodies, cluster, scalars) broadcasts."""
+    def point(submit_b, win, seed):
+        ids, r_sub, r_exec, d_est, d_act, _, tid, valid = xs
+        xs_p = (ids, r_sub, r_exec, d_est, d_act, submit_b, tid, valid)
+        return _simulate_batched_jax(xs_p, C, node_type, mem_unit,
+                                     cores_per, dyn_vec, dyn_ints, win,
+                                     cfg, n, num_types, seed, use_kernel)
+
+    return jax.vmap(point)(submit_blocks, wins, seeds)
+
+
+def _block_plane(a: np.ndarray, b: int) -> np.ndarray:
+    """[m] → [nb, b] with the edge-padded ragged tail — the same padding
+    arithmetic as ``engine._blocked_inputs`` (identical f32 values, so
+    grid points match per-run blocking bit-exactly)."""
+    m = a.shape[0]
+    nb = -(-m // b)
+    pad = nb * b - m
+    a = np.ascontiguousarray(a)
+    if pad:
+        a = np.pad(a, ((0, pad),), mode="edge")
+    return a.reshape(nb, b)
+
+
+def run_scenario_grid(base, cluster: ClusterSpec,
+                      scenarios: Sequence[Scenario] | Scenario,
+                      cfg: EngineConfig, seeds: Sequence[int] = (0,), *,
+                      point_chunk: int | None = None) -> ScenarioSweep:
+    """Run a (seeds × scenarios) grid of batched-driver simulations in one
+    compiled program.
+
+    All scenarios share the one program-shaping config ``cfg`` (policy,
+    ``b``, buffer shapes); their arrival planes and dynamics windows are
+    traced per-point operands (window pads aligned to the grid maximum —
+    padding is inert, so per-point results equal the standalone
+    :func:`run_scenario` bit-exactly; see ``tests/test_scenarios.py``).
+
+    point_chunk:
+        max grid points per dispatch (default: sized so one dispatch's
+        stacked outputs stay under ~256 MB).  Chunking concatenates
+        host-side and never changes values.
+    """
+    if isinstance(scenarios, Scenario):
+        scenarios = (scenarios,)
+    scenarios = tuple(scenarios)
+    seeds = tuple(int(s) for s in seeds)
+    if not scenarios or not seeds:
+        raise ValueError("run_scenario_grid needs ≥ 1 scenario and ≥ 1 seed")
+    for sc in scenarios:
+        if not isinstance(sc, Scenario):
+            raise TypeError(f"expected Scenario, got {type(sc).__name__}")
+    _validate_config(cfg)
+
+    n = cluster.num_servers
+    C, node_type, cores_per, mem_unit = _cluster_arrays(cluster,
+                                                        cfg.mem_units)
+    static_cfg = _static_cfg(cfg, keep_b=True)
+    b = static_cfg.b
+    m = base.submit_ms.shape[0]
+    nb = -(-m // b)
+    xs = _blocked_inputs(base, b)
+    dyn_vec = _make_dyn(cfg)
+    dyn_ints = _make_dyn_ints(cfg)
+
+    # Align every scenario's window operands to shared pad widths (one
+    # compiled program); padding never changes values.
+    per_scen = [_lower_dynamics(sc.dynamics, n) for sc in scenarios]
+    widths = tuple(max(w.widths[i] for w in per_scen) for i in range(4))
+    wins_np = [jax.device_get(_lower_dynamics(sc.dynamics, n, widths=widths))
+               for sc in scenarios]
+    wins_k = jax.tree_util.tree_map(lambda *xs_: np.stack(xs_), *wins_np)
+
+    # Per-point (seed-major) submit planes + point operands.
+    K, S = len(scenarios), len(seeds)
+    planes = np.stack([
+        np.stack([np.asarray(scenario_workload(base, sc, sd).submit_ms)
+                  for sc in scenarios])
+        for sd in seeds])                                   # [S, K, m]
+    P = S * K
+    kidx = np.tile(np.arange(K), S)
+    submit_pt = np.stack([_block_plane(planes[p // K, p % K], b)
+                          for p in range(P)])               # [P, nb, b]
+    seeds_pt = np.repeat(np.asarray(seeds, np.int32), K)
+
+    if point_chunk is None:
+        per_point_bytes = nb * b * 7 * 4
+        point_chunk = max(1, min(P, _CHUNK_BYTES // max(1,
+                                                        per_point_bytes)))
+    msgs_parts, outs_parts = [], []
+    for lo in range(0, P, point_chunk):
+        sel = slice(lo, lo + point_chunk)
+        wins_c = jax.tree_util.tree_map(
+            lambda a: jnp.asarray(a[kidx[sel]]), wins_k)
+        msgs_c, outs = _scenario_grid_jax(
+            xs, jnp.asarray(submit_pt[sel]), wins_c, C, node_type,
+            mem_unit, cores_per, dyn_vec, dyn_ints,
+            jnp.asarray(seeds_pt[sel]), static_cfg, n, cluster.num_types,
+            False)
+        msgs_parts.append(np.asarray(msgs_c))
+        outs_parts.append(tuple(
+            np.asarray(o).reshape(o.shape[0], nb * b)[:, :m] for o in outs))
+    msgs = np.concatenate(msgs_parts, 0).reshape(S, K, 4)
+    j, start, finish, enq, sched_ms, cores, mem_mb = (
+        np.concatenate([p[i] for p in outs_parts], 0).reshape(S, K, m)
+        for i in range(7))
+
+    return ScenarioSweep(
+        server=j.astype(np.int32),
+        enqueue_ms=enq, start_ms=start, finish_ms=finish, sched_ms=sched_ms,
+        cores=cores, mem_mb=mem_mb, submit_ms=planes, msgs=msgs,
+        policy=static_cfg.policy, seeds=seeds, scenarios=scenarios,
+        config=cfg,
+    )
+
+
+# --------------------------------------------------------------------------
+# Timeline builders — deterministic Dynamics generators.  All return a
+# complete Dynamics; compose them with ``a.merge(b, ...)``.
+# --------------------------------------------------------------------------
+
+def random_outages(n: int, count: int, horizon_ms: float,
+                   mean_down_ms: float = 5_000.0, seed: int = 0) -> Dynamics:
+    """``count`` outage windows on uniformly drawn servers, exponential
+    durations (mean ``mean_down_ms``), starts uniform in the horizon —
+    the §4.3 "servers fail at random" grid axis."""
+    rng = np.random.RandomState(seed)
+    srv = rng.randint(0, n, size=count)
+    t0 = rng.uniform(0.0, horizon_ms, size=count)
+    dur = rng.exponential(mean_down_ms, size=count)
+    return Dynamics(outages=tuple((int(s), float(a), float(a + d))
+                                  for s, a, d in zip(srv, t0, dur)))
+
+
+def rolling_restart(n: int, down_ms: float, stagger_ms: float,
+                    start_ms: float = 0.0, stride: int = 1) -> Dynamics:
+    """A maintenance wave: every ``stride``-th server goes down for
+    ``down_ms``, waves offset by ``stagger_ms`` (server 0 first)."""
+    out = []
+    for i, srv in enumerate(range(0, n, stride)):
+        t0 = start_ms + i * stagger_ms
+        out.append((srv, float(t0), float(t0 + down_ms)))
+    return Dynamics(outages=tuple(out))
+
+
+def random_churn(n: int, leave_frac: float, join_frac: float,
+                 horizon_ms: float, seed: int = 0) -> Dynamics:
+    """Node churn: disjoint random subsets of the fleet leave (down from a
+    uniform time onward) and join late (down until a uniform time)."""
+    rng = np.random.RandomState(seed)
+    k_leave = int(round(leave_frac * n))
+    k_join = int(round(join_frac * n))
+    perm = rng.permutation(n)
+    leavers = perm[:k_leave]
+    joiners = perm[k_leave:k_leave + k_join]
+    leaves = tuple((int(s), float(rng.uniform(0.3, 1.0) * horizon_ms))
+                   for s in leavers)
+    joins = tuple((int(s), float(rng.uniform(0.0, 0.7) * horizon_ms))
+                  for s in joiners)
+    return Dynamics(joins=joins, leaves=leaves)
+
+
+def random_stragglers(n: int, count: int, horizon_ms: float,
+                      mean_slow_ms: float = 10_000.0, mult: float = 4.0,
+                      seed: int = 0) -> Dynamics:
+    """``count`` transient slowdown windows (tasks starting inside run
+    ``mult``× longer) on uniform servers/starts."""
+    rng = np.random.RandomState(seed)
+    srv = rng.randint(0, n, size=count)
+    t0 = rng.uniform(0.0, horizon_ms, size=count)
+    dur = rng.exponential(mean_slow_ms, size=count)
+    return Dynamics(slowdowns=tuple((int(s), float(a), float(a + d),
+                                     float(mult))
+                                    for s, a, d in zip(srv, t0, dur)))

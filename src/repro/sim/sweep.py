@@ -51,8 +51,9 @@ import numpy as np
 
 from .cluster import ClusterSpec
 from .engine import (EngineConfig, SimResult, _blocked_inputs,
-                     _cluster_arrays, _make_dyn, _make_dyn_ints, _static_cfg,
-                     _simulate_batched_jax, _validate_config)
+                     _cluster_arrays, _lower_dynamics, _make_dyn,
+                     _make_dyn_ints, _static_cfg, _simulate_batched_jax,
+                     _validate_config)
 from .metrics import Summary, summarize
 
 #: Per-dispatch budget for the stacked per-task outputs (bytes).  A seed
@@ -201,7 +202,7 @@ def _grid_static(configs: Sequence[EngineConfig],
 
 @partial(jax.jit, static_argnames=("cfg", "n", "num_types", "use_kernel"))
 def _grid_jax(xs, C, node_type, mem_unit, cores_per, dyn_grid, ints_grid,
-              seeds, cfg: EngineConfig, n: int, num_types: int,
+              win, seeds, cfg: EngineConfig, n: int, num_types: int,
               use_kernel: bool):
     """vmap the batched block scan over (config, seed); jit at the top so
     the whole grid is one compile + one dispatch (cached per static cfg and
@@ -209,7 +210,7 @@ def _grid_jax(xs, C, node_type, mem_unit, cores_per, dyn_grid, ints_grid,
     def point(dyn_vec, dyn_ints, seed):
         return _simulate_batched_jax(
             xs, C, node_type, mem_unit, cores_per, dyn_vec, dyn_ints,
-            cfg, n, num_types, seed, use_kernel)
+            win, cfg, n, num_types, seed, use_kernel)
 
     per_cfg = jax.vmap(point, in_axes=(0, 0, None))        # config axis
     per_seed = jax.vmap(per_cfg, in_axes=(None, None, 0))  # seed axis
@@ -229,15 +230,17 @@ def _pmap_shard(static_cfg: EngineConfig, n: int, num_types: int,
     key = (static_cfg, n, num_types, use_kernel)
     fn = _PMAP_CACHE.get(key)
     if fn is None:
-        def shard(xs, C, node_type, mem_unit, cores_per, dyn, ints, seed):
+        def shard(xs, C, node_type, mem_unit, cores_per, dyn, ints, win,
+                  seed):
             # dyn [k, 10], ints [k, 2], seed [k] — this device's points.
             return jax.lax.map(
                 lambda t: _simulate_batched_jax(
-                    xs, C, node_type, mem_unit, cores_per, t[0], t[1],
+                    xs, C, node_type, mem_unit, cores_per, t[0], t[1], win,
                     static_cfg, n, num_types, t[2], use_kernel),
                 (dyn, ints, seed))
 
-        fn = jax.pmap(shard, in_axes=(None, None, None, None, None, 0, 0, 0))
+        fn = jax.pmap(shard,
+                      in_axes=(None, None, None, None, None, 0, 0, None, 0))
         _PMAP_CACHE[key] = fn
     return fn
 
@@ -247,7 +250,7 @@ def simulate_many(workload, cluster: ClusterSpec,
                   seeds: Sequence[int] = (0,), *,
                   use_kernel: bool = False,
                   seed_chunk: int | None = None,
-                  shard: bool = True) -> SweepResult:
+                  shard: bool = True, dynamics=None) -> SweepResult:
     """Run a (seeds × configs) grid of batched-driver simulations in one
     compiled program.
 
@@ -276,6 +279,10 @@ def simulate_many(workload, cluster: ClusterSpec,
         When ``jax.device_count() > 1``, fan the flattened grid out with
         ``pmap`` (one point per device).  ``False`` forces the
         single-device chunked-vmap path regardless of device count.
+    dynamics:
+        optional :class:`repro.sim.engine.Dynamics` timeline applied to
+        *every* grid point (as ``simulate(dynamics=...)``).  To sweep the
+        scenario axis itself, use ``repro.sim.scenarios.run_scenario_grid``.
 
     Returns a :class:`SweepResult`; ``point(si, gi)`` recovers any single
     run bit-identically to ``simulate(workload, cluster, configs[gi],
@@ -290,6 +297,10 @@ def simulate_many(workload, cluster: ClusterSpec,
         raise ValueError("simulate_many needs ≥ 1 config and ≥ 1 seed")
     for c in configs:
         _validate_config(c)
+    if (use_kernel and dynamics is not None
+            and dynamics.has_down_windows):
+        raise ValueError("use_kernel=True cannot honor per-server down "
+                         "windows (see simulate())")
     static_cfg = _grid_static(configs, use_kernel)
 
     n = cluster.num_servers
@@ -302,6 +313,7 @@ def simulate_many(workload, cluster: ClusterSpec,
 
     dyn_grid = jnp.stack([_make_dyn(c) for c in configs])        # [G, 10]
     ints_grid = jnp.stack([_make_dyn_ints(c) for c in configs])  # [G, 2]
+    win = _lower_dynamics(dynamics, n)
     G, S = len(configs), len(seeds)
     ndev = jax.device_count() if shard else 1
 
@@ -329,7 +341,7 @@ def simulate_many(workload, cluster: ClusterSpec,
         seeds_flat = lay(np.repeat(np.asarray(seeds, np.int32), G))
         msgs_d, outs_d = jax.device_get(
             run(xs, C, node_type, mem_unit, cores_per,
-                dyn_flat, ints_flat, seeds_flat))
+                dyn_flat, ints_flat, win, seeds_flat))
         msgs = msgs_d.reshape(use_dev * k, 4)[:P].reshape(S, G, 4)
         j, start, finish, enq, sched_ms, cores, mem_mb = (
             o.reshape(use_dev * k, nb * b)[:P].reshape(S, G, nb * b)[..., :m]
@@ -345,7 +357,7 @@ def simulate_many(workload, cluster: ClusterSpec,
             chunk = np.asarray(seeds[lo:lo + seed_chunk], np.int32)
             msgs_c, outs = _grid_jax(
                 xs, C, node_type, mem_unit, cores_per, dyn_grid, ints_grid,
-                jnp.asarray(chunk), static_cfg, n,
+                win, jnp.asarray(chunk), static_cfg, n,
                 cluster.num_types, use_kernel)
             msgs_parts.append(np.asarray(msgs_c))                # [s, G, 4]
             outs_parts.append(tuple(

@@ -1,6 +1,12 @@
 """repro.workloads — Azure VM trace synthesis (§6.2), FunctionBench (§6.3,
-Tables 3-4 embedded), Poisson arrivals."""
+Tables 3-4 embedded), and the arrival-process module (Poisson + the
+scenario engine's bursty/diurnal/batch processes)."""
 from . import azure, functionbench
-from .arrivals import poisson_arrivals, round_robin_scheduler
+from .arrivals import (BatchArrivals, DiurnalArrivals, OnOffArrivals,
+                       PoissonArrivals, arrival_times, arrival_times_grid,
+                       mean_qps, poisson_arrivals, round_robin_scheduler)
 
-__all__ = ["azure", "functionbench", "poisson_arrivals", "round_robin_scheduler"]
+__all__ = ["azure", "functionbench", "poisson_arrivals",
+           "round_robin_scheduler", "PoissonArrivals", "OnOffArrivals",
+           "DiurnalArrivals", "BatchArrivals", "arrival_times",
+           "arrival_times_grid", "mean_qps"]

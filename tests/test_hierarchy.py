@@ -1,0 +1,119 @@
+"""Hierarchical mini-clusters (`repro.sim.hierarchy`) — §4.2: split/merge
+round-trip, message-ledger additivity, batched-vs-sequential parity per
+mini-cluster, and the explicit per-mini-cluster batch size.
+"""
+from dataclasses import replace as dc_replace
+
+import numpy as np
+import pytest
+
+from repro.sim import (EngineConfig, make_testbed, simulate,
+                       simulate_hierarchical, split_cluster)
+from repro.workloads import functionbench as fb
+
+
+def _subtrace(wl, sel):
+    return dc_replace(wl, r_submit=wl.r_submit[sel], r_exec=wl.r_exec[sel],
+                      d_est=wl.d_est[sel], d_act=wl.d_act[sel],
+                      task_type=wl.task_type[sel],
+                      submit_ms=wl.submit_ms[sel])
+
+
+class TestSplitCluster:
+    @pytest.mark.parametrize("k", (2, 3, 7))
+    def test_round_trip_partition(self, k):
+        cluster = make_testbed(scale=0.5)
+        parts = split_cluster(cluster, k)
+        assert len(parts) == k
+        all_idx = np.concatenate([idx for _, idx in parts])
+        assert np.array_equal(np.sort(all_idx),
+                              np.arange(cluster.num_servers))
+        for spec, idx in parts:
+            np.testing.assert_array_equal(spec.C, cluster.C[idx])
+            np.testing.assert_array_equal(spec.node_type,
+                                          cluster.node_type[idx])
+            assert spec.type_names == cluster.type_names
+
+    def test_type_mix_preserved(self):
+        # interleave=False keeps types in contiguous blocks, so the
+        # round-robin node split carries each type's share within ±1
+        cluster = make_testbed(interleave=False)
+        full = np.bincount(cluster.node_type, minlength=4)
+        for spec, _ in split_cluster(cluster, 4):
+            counts = np.bincount(spec.node_type, minlength=4)
+            assert (np.abs(counts - full / 4) <= 1).all()
+            assert (counts > 0).all()
+
+
+class TestSimulateHierarchical:
+    @pytest.fixture(scope="class")
+    def wl(self):
+        return fb.synthesize(m=240, qps=60.0, seed=0)
+
+    @pytest.fixture(scope="class")
+    def cluster(self):
+        return make_testbed(scale=0.2)
+
+    def test_merge_respects_mini_cluster_membership(self, wl, cluster):
+        """Task i runs in mini-cluster i%k; the interleaved node split
+        means its global server id must be ≡ i (mod k)."""
+        k = 2
+        res = simulate_hierarchical(wl, cluster,
+                                    EngineConfig(policy="dodoor"), k,
+                                    mode="batched")
+        m = wl.submit_ms.shape[0]
+        assert (res.server % k == np.arange(m) % k).all()
+        np.testing.assert_array_equal(res.submit_ms, wl.submit_ms)
+        assert res.policy == "dodoor"
+
+    def test_message_ledger_additivity(self, wl, cluster):
+        """The merged ledger is exactly the sum of the independent
+        mini-cluster runs' ledgers (no cross-cluster traffic exists)."""
+        k, cfg = 2, EngineConfig(policy="dodoor")
+        hier = simulate_hierarchical(wl, cluster, cfg, k, mode="batched")
+        total = np.zeros(4, np.int64)
+        m = wl.submit_ms.shape[0]
+        for c, (spec, _) in enumerate(split_cluster(cluster, k)):
+            sub = _subtrace(wl, np.where(np.arange(m) % k == c)[0])
+            part = simulate(sub, spec,
+                            cfg._replace(b=max(1, spec.num_servers // 2)),
+                            seed=c, mode="batched")
+            total += (part.msgs_base, part.msgs_probe, part.msgs_push,
+                      part.msgs_flush)
+        assert (hier.msgs_base, hier.msgs_probe, hier.msgs_push,
+                hier.msgs_flush) == tuple(total)
+
+    @pytest.mark.parametrize("policy", ("dodoor", "pot", "prequal"))
+    def test_batched_sequential_parity_per_mini_cluster(self, wl, cluster,
+                                                        policy):
+        cfg = EngineConfig(policy=policy)
+        seq = simulate_hierarchical(wl, cluster, cfg, 2, mode="sequential")
+        bat = simulate_hierarchical(wl, cluster, cfg, 2, mode="batched")
+        assert (seq.server == bat.server).all()
+        assert seq.msgs_total == bat.msgs_total
+        for f in ("enqueue_ms", "start_ms", "finish_ms", "sched_ms"):
+            assert np.array_equal(getattr(seq, f), getattr(bat, f)), f
+
+    def test_explicit_b_override(self, wl, cluster):
+        """b=None derives n_c/2 per mini-cluster (the previously-silent
+        behavior, now explicit); an int is respected for every part."""
+        cfg = EngineConfig(policy="dodoor", b=37)   # deliberately odd
+        derived = simulate_hierarchical(wl, cluster, cfg, 2,
+                                        mode="batched")
+        explicit = simulate_hierarchical(wl, cluster, cfg, 2,
+                                         mode="batched", b=7)
+        forced = simulate_hierarchical(wl, cluster, cfg, 2,
+                                       mode="batched", b=cfg.b)
+        # derived == manual reconstruction with b = n_c // 2
+        m = wl.submit_ms.shape[0]
+        parts = split_cluster(cluster, 2)
+        for c, (spec, idx) in enumerate(parts):
+            sub = _subtrace(wl, np.where(np.arange(m) % 2 == c)[0])
+            ref = simulate(sub, spec,
+                           cfg._replace(b=max(1, spec.num_servers // 2)),
+                           seed=c, mode="batched")
+            np.testing.assert_array_equal(
+                idx[ref.server], derived.server[np.arange(m) % 2 == c])
+        # a different b genuinely changes the push cadence
+        assert explicit.msgs_push != derived.msgs_push
+        assert forced.msgs_push <= explicit.msgs_push  # bigger b, fewer

@@ -1,0 +1,142 @@
+"""The mean-field predictor (`repro.sim.meanfield`) and the acceptance
+validation: at n = 10³ (`make_scaled`) the simulated mean queue length
+under dodoor/PoT lands in the predictor's tolerance band, and the
+homogeneous het=0 case reproduces the classical power-of-d prediction.
+"""
+import numpy as np
+import pytest
+
+from repro.sim import (EngineConfig, het_pod_equilibrium, make_scaled,
+                       make_service_workload, measured_mean_queue,
+                       pod_mean_queue, pod_tail, predict_pod, simulate,
+                       tolerance_band)
+
+
+class TestPredictor:
+    def test_homogeneous_ode_collapses_to_closed_form(self):
+        """One class → the coupled ODE's fixed point is the classical
+        λ^((dᵏ−1)/(d−1)) tail."""
+        for lam in (0.5, 0.7, 0.9):
+            for d in (2, 3):
+                x = het_pod_equilibrium([1.0], [1.0], lam, d=d, kmax=48)
+                np.testing.assert_allclose(x[0], pod_tail(lam, d, 48),
+                                           atol=1e-7)
+
+    def test_pod_tail_shape_and_d1(self):
+        s = pod_tail(0.7, d=2, kmax=20)
+        assert s[0] == 1.0 and (np.diff(s) <= 0).all()
+        # d=1 is the M/M/1 geometric tail, mean queue λ/(1−λ)
+        assert pod_mean_queue(0.7, d=1, kmax=2000) == pytest.approx(
+            0.7 / 0.3, rel=1e-6)
+        # the power of two choices: doubly-exponential vs geometric
+        assert pod_mean_queue(0.9, d=2) < 0.5 * pod_mean_queue(0.9, d=1,
+                                                               kmax=2000)
+
+    def test_slower_classes_queue_longer(self):
+        p = predict_pod([0.5, 0.5], [0.5, 1.5], 0.7, d=2)
+        assert p.per_class_mean[0] > p.per_class_mean[1]
+        assert p.mean_queue == pytest.approx(
+            float(p.gammas @ p.per_class_mean))
+
+    def test_invalid_inputs_raise(self):
+        with pytest.raises(ValueError):
+            pod_tail(1.2)
+        with pytest.raises(ValueError):
+            pod_tail(0.5, d=0)
+        with pytest.raises(ValueError):
+            het_pod_equilibrium([1.0], [1.0], 1.1)       # unstable
+        with pytest.raises(ValueError):
+            het_pod_equilibrium([0.5, 0.5], [1.0], 0.5)  # shape mismatch
+        with pytest.raises(ValueError):
+            make_service_workload(make_scaled(8), 1.5, 10)
+
+    def test_tolerance_band_widens_with_staleness(self):
+        lo, hi = tolerance_band(1.0, n=1000)
+        lo_b, hi_b = tolerance_band(1.0, n=1000, b=100)
+        assert lo_b < lo < 1.0 < hi < hi_b
+
+    def test_service_workload_shape(self):
+        cluster = make_scaled(16, het=0.0)
+        wl = make_service_workload(cluster, 0.5, 200, seed=1)
+        # full-capacity demands → single task in service per server
+        np.testing.assert_array_equal(
+            wl.r_exec[0], cluster.type_capacity())
+        assert (wl.r_submit == 1.0).all()
+        assert (np.diff(wl.submit_ms) >= 0).all()
+        # per-type scaling multiplies durations
+        wl2 = make_service_workload(cluster, 0.5, 200,
+                                    service_scale_by_type=(2.0,) * 4,
+                                    seed=1)
+        np.testing.assert_allclose(wl2.d_act, 2.0 * wl.d_act, rtol=1e-6)
+
+
+@pytest.mark.slow
+class TestMeanFieldValidationN1000:
+    """The acceptance experiment: a 10³-server `make_scaled` fleet under
+    the M/M-style service workload, measured in its steady-state window."""
+
+    LAM = 0.7
+    N = 1000
+    M = 30_000
+
+    @pytest.fixture(scope="class")
+    def setup(self):
+        cluster = make_scaled(self.N, het=0.0)
+        wl = make_service_workload(cluster, self.LAM, self.M, seed=0)
+        horizon = float(wl.submit_ms[-1])
+        window = (0.25 * horizon, 0.95 * horizon)
+        return cluster, wl, window
+
+    def _measure(self, setup, policy, b=50):
+        cluster, wl, window = setup
+        cfg = EngineConfig(policy=policy, b=b, interference=0.0,
+                           rbuf_slots=64, mem_units=8)
+        res = simulate(wl, cluster, cfg, mode="batched")
+        return measured_mean_queue(res, self.N, *window)
+
+    def test_pot_matches_classical_power_of_two(self, setup):
+        """het=0 PoT is JSQ(2) on queue length — the classical prediction
+        (Mitzenmacher) within the finite-n band."""
+        q = self._measure(setup, "pot")
+        pred = pod_mean_queue(self.LAM, d=2)
+        lo, hi = tolerance_band(pred, self.N)
+        assert lo <= q <= hi, (q, pred)
+        # and decisively better than the single-choice (M/M/1) queue
+        assert q < 0.6 * pod_mean_queue(self.LAM, d=1, kmax=2000)
+
+    def test_dodoor_in_staleness_band(self, setup):
+        """dodoor = JSQ(2) on a b-batched stale cached view; the band adds
+        the O(b/n) staleness term."""
+        q = self._measure(setup, "dodoor", b=50)
+        pred = pod_mean_queue(self.LAM, d=2)
+        lo, hi = tolerance_band(pred, self.N, b=50)
+        assert lo <= q <= hi, (q, pred)
+
+    def test_het_service_rates_match_ode(self):
+        """Per-type service rates (Mukhopadhyay-style heterogeneity): the
+        coupled-ODE per-class queue means match the simulation per class."""
+        n, m, lam = 1000, 30_000, 0.6
+        cluster = make_scaled(n, het=0.0)
+        scale = (1.6, 1.0, 0.8, 0.5)
+        wl = make_service_workload(cluster, lam, m,
+                                   service_scale_by_type=scale, seed=0)
+        horizon = float(wl.submit_ms[-1])
+        t0, t1 = 0.25 * horizon, 0.95 * horizon
+        counts = np.bincount(cluster.node_type, minlength=4)
+        pred = predict_pod(counts / n, 1.0 / np.asarray(scale), lam, d=2)
+        res = simulate(wl, cluster,
+                       EngineConfig(policy="pot", b=50, interference=0.0,
+                                    rbuf_slots=64, mem_units=8),
+                       mode="batched")
+        q = measured_mean_queue(res, n, t0, t1)
+        lo, hi = tolerance_band(pred.mean_queue, n)
+        assert lo <= q <= hi, (q, pred.mean_queue)
+        # per-class agreement within 10%
+        for c in range(4):
+            srv_c = np.flatnonzero(cluster.node_type == c)
+            on_c = np.isin(res.server, srv_c)
+            ov = np.clip(np.minimum(res.finish_ms[on_c], t1)
+                         - np.maximum(res.enqueue_ms[on_c], t0), 0, None)
+            qc = float(ov.sum()) / (t1 - t0) / len(srv_c)
+            assert abs(qc - pred.per_class_mean[c]) < \
+                0.10 * pred.per_class_mean[c] + 0.03, (c, qc)

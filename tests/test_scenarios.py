@@ -1,0 +1,449 @@
+"""The scenario engine (ISSUE 4): arrival processes, server-dynamics
+timelines, sequential/batched bit-exactness for all five policies, and the
+(seeds × scenarios) grid vs the per-run loop.
+"""
+import numpy as np
+import pytest
+
+from repro.sim import (Dynamics, EngineConfig, Scenario, make_testbed,
+                       mean_in_system, phase_summaries, random_churn,
+                       random_outages, random_stragglers, rolling_restart,
+                       run_scenario, run_scenario_grid, scenario_workload,
+                       simulate, simulate_many, summarize, summarize_window)
+from repro.sim.engine import _lower_dynamics
+from repro.workloads import (BatchArrivals, DiurnalArrivals, OnOffArrivals,
+                             PoissonArrivals, arrival_times,
+                             arrival_times_grid, mean_qps, poisson_arrivals)
+from repro.workloads import functionbench as fb
+
+N_SMALL = 20                       # small_testbed fleet size (scale=0.2)
+
+# The three acceptance scenario classes, shaped for fb_small's ~10 s
+# horizon.  Dynamics use ≤ 1 window per server so every scenario lowers to
+# the same operand widths (shared compiled programs across the suite).
+BURSTY = Scenario("bursty", arrivals=OnOffArrivals(240.0, 20.0, 1.0, 2.0))
+OUTAGE = Scenario("outage", dynamics=rolling_restart(
+    N_SMALL, down_ms=1500.0, stagger_ms=400.0, start_ms=500.0, stride=4))
+CHURN = Scenario("churn", dynamics=random_churn(
+    N_SMALL, leave_frac=0.25, join_frac=0.25, horizon_ms=8000.0, seed=2))
+
+ACCEPTANCE_SCENARIOS = (BURSTY, OUTAGE, CHURN)
+PARITY_POLICIES = ("dodoor", "random", "pot", "one_plus_beta", "prequal")
+
+
+def assert_parity(a, b):
+    assert (a.server == b.server).all(), "placements diverge"
+    ledger = lambda r: (r.msgs_base, r.msgs_probe, r.msgs_push, r.msgs_flush)
+    assert ledger(a) == ledger(b), "message ledger diverges"
+    for f in ("submit_ms", "enqueue_ms", "start_ms", "finish_ms",
+              "sched_ms", "cores", "mem_mb"):
+        assert np.array_equal(getattr(a, f), getattr(b, f)), \
+            f"{f} not bit-identical"
+
+
+class TestArrivalProcesses:
+    def test_poisson_float64_accumulation(self):
+        """The satellite fix: timestamps accumulate in float64 — at
+        m ≫ 10⁵ each float32 output equals the float64 truth rounded
+        once, with no running-sum drift."""
+        m, qps, seed = 300_000, 200.0, 7
+        t = poisson_arrivals(m, qps, seed)
+        rng = np.random.RandomState(seed)
+        truth = np.cumsum(rng.exponential(1000.0 / qps, size=m),
+                          dtype=np.float64)
+        assert t.dtype == np.float32
+        # every output equals the float64 truth rounded once — a float32
+        # running sum would drift by many inter-arrival gaps here
+        np.testing.assert_array_equal(t, truth.astype(np.float32))
+        rng2 = np.random.RandomState(seed)
+        f32sum = np.cumsum(rng2.exponential(1000.0 / qps, size=m)
+                           .astype(np.float32), dtype=np.float32)
+        assert abs(float(f32sum[-1]) - truth[-1]) > 1000.0 / qps
+
+    @pytest.mark.parametrize("spec", [
+        PoissonArrivals(80.0),
+        OnOffArrivals(200.0, 10.0, 2.0, 8.0),
+        DiurnalArrivals(60.0, 0.8, 20.0),
+        BatchArrivals(10.0, 1.5, 64),
+    ], ids=lambda s: type(s).__name__)
+    def test_monotone_rate_deterministic(self, spec):
+        m = 30_000
+        rates = []
+        for seed in range(4):
+            t = arrival_times(spec, m, seed)
+            assert t.shape == (m,) and t.dtype == np.float32
+            assert (np.diff(t) >= 0).all()
+            rates.append(1000.0 * m / float(t[-1]))
+        # empirical long-run rate matches the spec's mean (loose: finite
+        # realizations of bursty processes fluctuate)
+        assert abs(np.mean(rates) - mean_qps(spec)) < 0.35 * mean_qps(spec)
+        # cached + deterministic, seeds genuinely differ
+        assert arrival_times(spec, m, 0) is arrival_times(spec, m, 0)
+        assert (arrival_times(spec, m, 0) != arrival_times(spec, m, 1)).any()
+
+    def test_onoff_is_bursty(self):
+        t = arrival_times(OnOffArrivals(200.0, 10.0, 2.0, 8.0), 50_000, 0)
+        counts = np.bincount((t / 1000.0).astype(int))
+        # index of dispersion ≫ 1 (Poisson would be ≈ 1)
+        assert counts.var() / counts.mean() > 10.0
+        p = arrival_times(PoissonArrivals(48.0), 50_000, 0)
+        pc = np.bincount((p / 1000.0).astype(int))
+        assert pc.var() / pc.mean() < 3.0
+
+    def test_diurnal_peak_vs_trough(self):
+        spec = DiurnalArrivals(qps_mean=100.0, amplitude=0.9, period_s=40.0)
+        t = arrival_times(spec, 40_000, 1) / 1000.0
+        # phase = -π/2: trough at t≡0 (mod P), peak at t≡P/2
+        peak = ((t % 40.0 >= 15.0) & (t % 40.0 < 25.0)).sum()
+        trough = ((t % 40.0 < 5.0) | (t % 40.0 >= 35.0)).sum()
+        assert peak > 4 * trough
+
+    def test_batch_arrivals_tie_structure(self):
+        spec = BatchArrivals(batch_qps=5.0, pareto_alpha=1.2, max_batch=32)
+        t = arrival_times(spec, 20_000, 0)
+        sizes = np.diff(np.flatnonzero(
+            np.concatenate([[True], np.diff(t) > 0, [True]])))
+        assert sizes.max() > 1            # real batches (ties) exist
+        assert sizes.max() <= 32
+        # heavy tail: the largest batches dominate a Poisson's
+        assert (sizes >= 8).sum() > 10
+
+    def test_workloads_package_imports_standalone(self):
+        """`import repro.workloads` as the *first* repro import must not
+        trip the workloads↔sim import cycle (meanfield defers its
+        workload-type imports)."""
+        import subprocess
+        import sys
+        out = subprocess.run(
+            [sys.executable, "-c",
+             "import repro.workloads; import repro.sim; print('ok')"],
+            capture_output=True, text=True, timeout=120)
+        assert out.returncode == 0, out.stderr
+        assert "ok" in out.stdout
+
+    def test_grid_matches_single(self):
+        spec = OnOffArrivals(100.0, 5.0, 1.0, 1.0)
+        g = arrival_times_grid(spec, 500, (3, 4))
+        assert g.shape == (2, 500)
+        np.testing.assert_array_equal(g[0], arrival_times(spec, 500, 3))
+        np.testing.assert_array_equal(g[1], arrival_times(spec, 500, 4))
+
+    def test_invalid_specs_raise(self):
+        with pytest.raises(ValueError):
+            arrival_times(DiurnalArrivals(60.0, 1.5), 100, 0)
+        with pytest.raises(ValueError):
+            arrival_times(BatchArrivals(10.0, -1.0), 100, 0)
+        with pytest.raises(TypeError):
+            arrival_times("poisson", 100, 0)
+
+
+class TestDynamicsLowering:
+    def test_invalid_dynamics_raise(self, small_testbed, fb_small):
+        cfg = EngineConfig(policy="dodoor", b=10)
+        for bad in (Dynamics(outages=((99, 0.0, 1.0),)),       # bad server
+                    Dynamics(joins=((99, 0.0),)),    # bad server, inert t
+                    Dynamics(outages=((0, 5.0, 5.0),)),        # empty window
+                    Dynamics(slowdowns=((0, 0.0, 1.0, -1.0),)),
+                    Dynamics(store_outages=((3.0, 2.0),))):
+            with pytest.raises(ValueError):
+                simulate(fb_small, small_testbed, cfg, mode="batched",
+                         dynamics=bad)
+        with pytest.raises(TypeError):
+            simulate(fb_small, small_testbed, cfg, dynamics="nope")
+
+    def test_padding_is_inert(self, small_testbed, fb_small):
+        """Extra window slots (the grid's width alignment) never change
+        results — same run, minimal vs padded widths, bit-exact."""
+        dyn = Dynamics(outages=((3, 500.0, 2500.0),),
+                       slowdowns=((5, 0.0, 4000.0, 2.0),),
+                       store_outages=((1000.0, 3000.0),))
+        n = small_testbed.num_servers
+        assert _lower_dynamics(dyn, n).widths == (1, 1, 1, 1)
+        assert _lower_dynamics(dyn, n, widths=(3, 2, 2, 4)).widths == \
+            (3, 2, 2, 4)
+        with pytest.raises(ValueError):
+            _lower_dynamics(dyn, n, widths=(1, 1, 0, 1))  # too narrow
+        cfg = EngineConfig(policy="dodoor", b=10)
+        a = simulate(fb_small, small_testbed, cfg, mode="batched",
+                     dynamics=dyn)
+        b = run_scenario(fb_small, small_testbed,
+                         Scenario("d", dynamics=dyn), cfg, mode="batched")
+        assert_parity(a, b)
+
+
+class TestScenarioParity:
+    """The acceptance matrix: all five policies × {bursty, outage, churn},
+    mode='sequential' vs mode='batched' bit-exact."""
+
+    @pytest.mark.parametrize("policy", PARITY_POLICIES)
+    @pytest.mark.parametrize("scenario", ACCEPTANCE_SCENARIOS,
+                             ids=lambda s: s.name)
+    def test_seq_batched_bit_exact(self, policy, scenario, small_testbed,
+                                   fb_small):
+        cfg = EngineConfig(policy=policy, b=10)
+        seq = run_scenario(fb_small, small_testbed, scenario, cfg,
+                           mode="sequential")
+        bat = run_scenario(fb_small, small_testbed, scenario, cfg,
+                           mode="batched")
+        assert_parity(seq, bat)
+
+
+class TestScenarioSemantics:
+    def test_outage_masks_placements_and_gates_starts(self, small_testbed,
+                                                      fb_small):
+        dyn = Dynamics(outages=((4, 1000.0, 6000.0),))
+        cfg = EngineConfig(policy="dodoor", b=10)
+        res = simulate(fb_small, small_testbed, cfg, mode="batched",
+                       dynamics=dyn)
+        during = (fb_small.submit_ms >= 1000.0) & (fb_small.submit_ms
+                                                   < 6000.0)
+        assert not ((res.server == 4) & during).any()
+        # tasks already queued on 4 freeze through the window
+        on4 = res.server == 4
+        assert not ((res.start_ms[on4] >= 1000.0)
+                    & (res.start_ms[on4] < 6000.0)).any()
+        assert on4.any()                # the server is used outside it
+
+    def test_join_leave_windows(self, small_testbed, fb_small):
+        dyn = Dynamics(joins=((2, 4000.0),), leaves=((9, 3000.0),))
+        res = simulate(fb_small, small_testbed,
+                       EngineConfig(policy="random", b=10), mode="batched",
+                       dynamics=dyn)
+        sub = fb_small.submit_ms
+        assert not ((res.server == 2) & (sub < 4000.0)).any()
+        assert ((res.server == 2) & (sub >= 4000.0)).any()
+        assert not ((res.server == 9) & (sub >= 3000.0)).any()
+        assert ((res.server == 9) & (sub < 3000.0)).any()
+        # a leaver drains: everything queued on it still completes
+        assert np.isfinite(res.finish_ms).all()
+
+    def test_slowdown_stretches_durations(self, small_testbed, fb_small):
+        mult = 5.0
+        dyn = Dynamics(slowdowns=tuple(
+            (s, 0.0, 1e9, mult) for s in range(N_SMALL)))
+        cfg = EngineConfig(policy="dodoor", b=10)
+        base = simulate(fb_small, small_testbed, cfg, mode="batched")
+        slow = simulate(fb_small, small_testbed, cfg, mode="batched",
+                        dynamics=dyn)
+        # every task everywhere runs 5×: mean service time scales up
+        assert (slow.finish_ms - slow.start_ms).mean() > \
+            3.0 * (base.finish_ms - base.start_ms).mean()
+
+    def test_store_outage_equals_scalar_outage(self, small_testbed,
+                                               fb_small):
+        """Dynamics store windows generalize EngineConfig.outage_ms: a
+        single window is bit-identical to the scalar path."""
+        window = (1000.0, 5000.0)
+        a = simulate(fb_small, small_testbed,
+                     EngineConfig(policy="dodoor", b=10,
+                                  outage_ms=window), mode="batched")
+        b = simulate(fb_small, small_testbed,
+                     EngineConfig(policy="dodoor", b=10), mode="batched",
+                     dynamics=Dynamics(store_outages=(window,)))
+        assert_parity(a, b)
+        healthy = simulate(fb_small, small_testbed,
+                           EngineConfig(policy="dodoor", b=10),
+                           mode="batched")
+        assert b.msgs_push < healthy.msgs_push
+
+    def test_all_down_fallback_queues(self, small_testbed, fb_small):
+        """Every server down → uniform fallback placement (submission is
+        never rejected); runs stay finite and tasks start post-recovery."""
+        dyn = Dynamics(outages=tuple(
+            (s, 0.0, 20000.0) for s in range(N_SMALL)))
+        res = simulate(fb_small, small_testbed,
+                       EngineConfig(policy="pot", b=10), mode="batched",
+                       dynamics=dyn)
+        assert np.isfinite(res.finish_ms).all()
+        early = fb_small.submit_ms < 20000.0
+        assert (res.start_ms[early] >= 20000.0).all()
+
+    def test_use_kernel_down_windows_guard(self, small_testbed, fb_small):
+        dyn = Dynamics(outages=((0, 0.0, 1.0),))
+        with pytest.raises(ValueError, match="use_kernel"):
+            simulate(fb_small, small_testbed, EngineConfig(b=10),
+                     mode="batched", use_kernel=True, dynamics=dyn)
+        with pytest.raises(ValueError, match="use_kernel"):
+            simulate_many(fb_small, small_testbed, EngineConfig(b=10),
+                          (0,), use_kernel=True, dynamics=dyn)
+        # slowdown/store-only dynamics stay kernel-compatible
+        ok = Dynamics(slowdowns=((0, 0.0, 1.0, 2.0),))
+        res = simulate(fb_small, small_testbed, EngineConfig(b=10),
+                       mode="batched", use_kernel=True, dynamics=ok)
+        assert np.isfinite(res.finish_ms).all()
+
+    def test_timeline_builders(self):
+        out = random_outages(50, 8, 10_000.0, seed=3)
+        assert len(out.outages) == 8 and all(0 <= s < 50 and t1 > t0
+                                             for s, t0, t1 in out.outages)
+        rr = rolling_restart(10, down_ms=100.0, stagger_ms=50.0, stride=2)
+        assert [s for s, _, _ in rr.outages] == [0, 2, 4, 6, 8]
+        ch = random_churn(40, 0.25, 0.25, 10_000.0, seed=0)
+        movers = {s for s, _ in ch.joins} | {s for s, _ in ch.leaves}
+        assert len(movers) == len(ch.joins) + len(ch.leaves) == 20
+        st = random_stragglers(30, 5, 10_000.0, mult=3.0, seed=1)
+        assert all(m == 3.0 and t1 > t0 for _, t0, t1, m in st.slowdowns)
+        # builders compose via merge
+        both = ch.merge(out, st)
+        assert (both.outages == out.outages and both.joins == ch.joins
+                and both.slowdowns == st.slowdowns)
+        assert both.has_down_windows
+
+    def test_join_at_zero_is_inert(self, small_testbed, fb_small):
+        cfg = EngineConfig(policy="random", b=10)
+        base = simulate(fb_small, small_testbed, cfg, mode="batched")
+        res = simulate(fb_small, small_testbed, cfg, mode="batched",
+                       dynamics=Dynamics(joins=((3, 0.0),)))
+        assert (base.server == res.server).all()
+        assert np.array_equal(base.finish_ms, res.finish_ms)
+
+
+class TestScenarioGrid:
+    """Acceptance: a (≥ 3 scenarios × ≥ 2 seeds) grid in one compiled
+    program, per-point bit-exact vs the per-run loop."""
+
+    def test_grid_bit_exact_vs_loop(self, small_testbed, fb_small):
+        # "flap" needs 2 window slots on server 2 — the grid aligns every
+        # scenario to width 2 while the per-run path lowers each at its
+        # minimal width, so this grid also pins padding inertness.
+        flap = Scenario("flap", dynamics=Dynamics(
+            outages=((2, 500.0, 1000.0), (2, 3000.0, 3500.0))))
+        scens = ACCEPTANCE_SCENARIOS + (flap, Scenario("steady"))
+        cfg = EngineConfig(policy="dodoor", b=10)
+        seeds = (0, 1)
+        sw = run_scenario_grid(fb_small, small_testbed, scens, cfg, seeds)
+        assert sw.num_seeds == 2 and sw.num_scenarios == 5
+        for si, sd in enumerate(seeds):
+            for ki, sc in enumerate(scens):
+                ref = run_scenario(fb_small, small_testbed, sc, cfg,
+                                   seed=sd, mode="batched")
+                assert_parity(ref, sw.point(si, ki))
+
+    def test_grid_probing_policy(self, small_testbed, fb_small):
+        """PoT's speculative while_loop rides the scenario vmap."""
+        cfg = EngineConfig(policy="pot", b=10)
+        sw = run_scenario_grid(fb_small, small_testbed,
+                               (BURSTY, OUTAGE, CHURN), cfg, (0, 5))
+        for si, sd in enumerate((0, 5)):
+            for ki, sc in enumerate((BURSTY, OUTAGE, CHURN)):
+                assert_parity(run_scenario(fb_small, small_testbed, sc,
+                                           cfg, seed=sd, mode="batched"),
+                              sw.point(si, ki))
+
+    def test_point_chunking_invariant(self, small_testbed, fb_small):
+        cfg = EngineConfig(policy="dodoor", b=10)
+        full = run_scenario_grid(fb_small, small_testbed,
+                                 ACCEPTANCE_SCENARIOS, cfg, (0, 1))
+        chunked = run_scenario_grid(fb_small, small_testbed,
+                                    ACCEPTANCE_SCENARIOS, cfg, (0, 1),
+                                    point_chunk=1)
+        assert (full.server == chunked.server).all()
+        assert np.array_equal(full.finish_ms, chunked.finish_ms)
+        assert (full.msgs == chunked.msgs).all()
+
+    def test_simulate_many_carries_dynamics(self, small_testbed, fb_small):
+        """The config×seed sweep accepts a shared Dynamics timeline and
+        stays bit-exact vs the per-run loop."""
+        dyn = OUTAGE.dynamics
+        configs = [EngineConfig(policy="dodoor", b=10, alpha=a)
+                   for a in (0.3, 0.7)]
+        sw = simulate_many(fb_small, small_testbed, configs, (0, 1),
+                           dynamics=dyn)
+        for si, sd in enumerate((0, 1)):
+            for gi, c in enumerate(configs):
+                ref = simulate(fb_small, small_testbed, c, seed=sd,
+                               mode="batched", dynamics=dyn)
+                pt = sw.point(si, gi)
+                assert (ref.server == pt.server).all()
+                assert ref.msgs_total == pt.msgs_total
+                assert np.array_equal(ref.finish_ms, pt.finish_ms)
+
+    def test_grid_input_validation(self, small_testbed, fb_small):
+        cfg = EngineConfig(policy="dodoor", b=10)
+        with pytest.raises(ValueError):
+            run_scenario_grid(fb_small, small_testbed, (), cfg, (0,))
+        with pytest.raises(ValueError):
+            run_scenario_grid(fb_small, small_testbed, BURSTY, cfg, ())
+        with pytest.raises(TypeError):
+            run_scenario_grid(fb_small, small_testbed, ("nope",), cfg,
+                              (0,))
+
+    def test_scenario_workload_cache(self, fb_small):
+        a = scenario_workload(fb_small, BURSTY, 0)
+        assert scenario_workload(fb_small, BURSTY, 0) is a
+        assert scenario_workload(fb_small, Scenario("steady"),
+                                 0) is fb_small
+        assert (scenario_workload(fb_small, BURSTY, 1).submit_ms
+                != a.submit_ms).any()
+        np.testing.assert_array_equal(a.r_exec, fb_small.r_exec)
+
+
+class TestWindowedMetrics:
+    def test_phase_summaries_partition_tasks(self, small_testbed, fb_small,
+                                             sim_cache):
+        cfg = EngineConfig(policy="dodoor", b=10)
+        res = sim_cache(fb_small, small_testbed, cfg, mode="batched",
+                        key="fb_small")
+        hor = float(fb_small.submit_ms[-1]) + 1.0
+        phases = phase_summaries(res, [0.0, hor / 3, 2 * hor / 3, hor])
+        assert len(phases) == 3
+        assert sum(s.num_tasks for _, _, s in phases) == 600
+        full = summarize(res)
+        mk_weighted = sum(s.num_tasks * s.makespan_mean_ms
+                          for _, _, s in phases) / 600
+        np.testing.assert_allclose(mk_weighted, full.makespan_mean_ms,
+                                   rtol=1e-6)
+
+    def test_summarize_window_empty_and_errors(self, small_testbed,
+                                               fb_small, sim_cache):
+        res = sim_cache(fb_small, small_testbed,
+                        EngineConfig(policy="dodoor", b=10),
+                        mode="batched", key="fb_small")
+        s = summarize_window(res, -100.0, -50.0)
+        assert s.num_tasks == 0 and s.throughput_tps == 0.0
+        with pytest.raises(ValueError):
+            phase_summaries(res, [0.0])
+        with pytest.raises(ValueError):
+            phase_summaries(res, [0.0, 5.0, 5.0])
+        with pytest.raises(ValueError):
+            mean_in_system(res, 5.0, 5.0)
+
+    def test_mean_in_system_hand_checked(self):
+        from repro.sim import SimResult
+        # two tasks in system [0, 10) and [5, 15): 20 task-ms over a 20 ms
+        # window → 1.0; the second half holds only [10, 15) → 0.5
+        mk = lambda a: np.asarray(a, np.float32)
+        res = SimResult(server=np.zeros(2, np.int32),
+                        submit_ms=mk([0.0, 5.0]), enqueue_ms=mk([0.0, 5.0]),
+                        start_ms=mk([0.0, 10.0]), finish_ms=mk([10.0, 15.0]),
+                        sched_ms=mk([0.0, 0.0]), cores=mk([1, 1]),
+                        mem_mb=mk([1, 1]), msgs_base=4, msgs_probe=0,
+                        msgs_push=0, msgs_flush=0, policy="random")
+        assert mean_in_system(res, 0.0, 20.0) == pytest.approx(1.0)
+        assert mean_in_system(res, 10.0, 20.0) == pytest.approx(0.5)
+
+    def test_utilization_timeline_chunked_equivalence(self, small_testbed,
+                                                      fb_small, sim_cache):
+        """The vectorized chunked scatter equals the per-sample reference
+        loop, including with a chunk size that forces many chunks."""
+        from repro.sim import utilization_timeline
+        res = sim_cache(fb_small, small_testbed,
+                        EngineConfig(policy="dodoor", b=10),
+                        mode="batched", key="fb_small")
+        dt = 500.0
+        times, cpu, mem = utilization_timeline(res, small_testbed, dt)
+        t2, cpu2, mem2 = utilization_timeline(res, small_testbed, dt,
+                                              chunk_cells=700)
+        np.testing.assert_array_equal(cpu, cpu2)
+        np.testing.assert_array_equal(mem, mem2)
+        # reference loop
+        n = small_testbed.num_servers
+        ref_cpu = np.zeros_like(cpu)
+        for ti, t in enumerate(times * 1e3):
+            running = (res.start_ms <= t) & (t < res.finish_ms)
+            if running.any():
+                ref_cpu[ti] = np.bincount(res.server[running],
+                                          weights=res.cores[running],
+                                          minlength=n)
+        ref_cpu /= small_testbed.C[None, :, 0]
+        np.testing.assert_allclose(cpu, ref_cpu, rtol=1e-12, atol=1e-12)

@@ -18,7 +18,8 @@ LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
 REPO = Path(__file__).resolve().parent.parent
 
 DEFAULT_FILES = ["README.md", "docs/ARCHITECTURE.md", "docs/SWEEPS.md",
-                 "ROADMAP.md", "CHANGES.md", "PAPER.md"]
+                 "docs/SCENARIOS.md", "ROADMAP.md", "CHANGES.md",
+                 "PAPER.md"]
 
 
 def broken_links(md_path: Path) -> list:
