@@ -1,0 +1,181 @@
+"""Unified-study-planner benchmark — the combined (seeds × configs ×
+scenarios) grid, persisted machine-readably to ``BENCH_study.json``.
+
+Two sections:
+
+* **combined grid vs nested loop** — one `run_study` over the full
+  (seeds × α-columns × scenarios) axis against the nested per-run
+  `run_scenario` loop it replaces (parity asserted per cell first), plus
+  the cross-seed §6.2 metrics per (config, scenario) column.
+* **masked megakernel vs two-stage masked path** — `use_kernel=True`
+  under a down-window timeline (the combination the old engines refused
+  with a ``ValueError``) timed against the two-stage jnp path, parity
+  asserted.  On CPU the Pallas kernel runs interpret mode, so the jnp
+  path wins there; the row tracks the TPU-relevant ratio.
+
+    PYTHONPATH=src python -m benchmarks.bench_study [--smoke] [--json PATH]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import time
+
+import numpy as np
+
+from repro.sim import (EngineConfig, Scenario, Study, make_testbed,
+                       random_outages, run_scenario, run_study, simulate,
+                       summarize_study)
+from repro.workloads import OnOffArrivals, PoissonArrivals
+from repro.workloads import functionbench as fb
+
+
+def _git_sha() -> str:
+    try:
+        return subprocess.check_output(
+            ["git", "rev-parse", "--short", "HEAD"],
+            cwd=os.path.dirname(os.path.abspath(__file__)), text=True,
+            stderr=subprocess.DEVNULL).strip()
+    except Exception:
+        return "unknown"
+
+
+def _best_of(fn, reps: int = 3) -> float:
+    """Min-of-reps wall clock (ms) after a warmup call."""
+    fn()
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best * 1e3
+
+
+def main(m: int = 3000, qps: float = 60.0, seeds=(0, 1), scale: float = 1.0,
+         json_path: str | None = "BENCH_study.json", smoke: bool = False):
+    if smoke:
+        m, seeds, scale, qps = 500, (0,), 0.2, 12.0
+    cluster = make_testbed(scale=scale)
+    n = cluster.num_servers
+    base = fb.synthesize(m=m, qps=qps, seed=0)
+    horizon = float(base.submit_ms[-1])
+
+    configs = tuple(EngineConfig(policy="dodoor", b=max(1, n // 2), alpha=a)
+                    for a in (0.3, 0.5, 0.7))
+    scens = (
+        Scenario("steady", arrivals=PoissonArrivals(qps)),
+        Scenario("bursty_mmpp",
+                 arrivals=OnOffArrivals(4.0 * qps, qps / 6.0,
+                                        mean_on_s=1.0, mean_off_s=3.0)),
+        Scenario("outage_storm", arrivals=PoissonArrivals(qps),
+                 dynamics=random_outages(
+                     n, max(2, n // 5), 0.6 * horizon,
+                     mean_down_ms=0.2 * horizon, seed=7)),
+    )
+    spec = Study(seeds=seeds, configs=configs, scenarios=scens)
+
+    # ---- section 1: combined grid vs the nested per-run loop
+    def grid():
+        return run_study(base, cluster, spec)
+
+    def loop():
+        return [run_scenario(base, cluster, sc, cfg, seed=sd,
+                             mode="batched")
+                for sd in seeds for cfg in configs for sc in scens]
+
+    st, refs = grid(), loop()          # compile + warm + parity inputs
+    it = iter(refs)
+    for si in range(len(seeds)):
+        for gi in range(len(configs)):
+            for ki, sc in enumerate(scens):
+                ref, pt = next(it), st.point(si, gi, ki)
+                assert (ref.server == pt.server).all(), sc.name
+                assert ref.msgs_total == pt.msgs_total, sc.name
+    grid_ms = _best_of(grid)
+    loop_ms = _best_of(loop)
+    points = len(seeds) * len(configs) * len(scens)
+    speedup = loop_ms / grid_ms if grid_ms > 0 else float("inf")
+
+    print("bench,alpha,scenario,msgs_per_task,tput_tps,mk_mean_ms,"
+          "mk_p95_ms,sched_mean_ms")
+    agg = summarize_study(st)
+    rows = []
+    for gi, cfg in enumerate(configs):
+        for ki, sc in enumerate(scens):
+            s = agg[gi][ki]
+            row = dict(alpha=cfg.alpha, scenario=sc.name,
+                       msgs_per_task=round(s.msgs_per_task, 3),
+                       throughput_tps=round(s.throughput_tps, 2),
+                       makespan_mean_ms=round(s.makespan_mean_ms, 1),
+                       makespan_p95_ms=round(s.makespan_p95_ms, 1),
+                       sched_mean_ms=round(s.sched_mean_ms, 3))
+            rows.append(row)
+            print(f"study,{cfg.alpha},{sc.name},{row['msgs_per_task']},"
+                  f"{row['throughput_tps']},{row['makespan_mean_ms']},"
+                  f"{row['makespan_p95_ms']},{row['sched_mean_ms']}")
+    grid_note = ("one compile/dispatch for the combined axis; on a single "
+                 "CPU device the vmapped lanes lock-step their per-block "
+                 "while-loops, so a warm-cached loop can match it — the "
+                 "grid wins on compile amortization and device fan-out")
+    print(f"# combined grid: {points} points, grid {grid_ms:.0f} ms vs "
+          f"nested loop {loop_ms:.0f} ms ({speedup:.2f}x; {grid_note})")
+
+    # ---- section 2: masked megakernel vs the two-stage masked path
+    kcfg = EngineConfig(policy="dodoor", b=max(1, n // 2))
+    storm = scens[2].dynamics
+    wl_k = fb.synthesize(m=min(m, 1000) if not smoke else 300,
+                         qps=qps, seed=3)
+
+    def masked_kernel():
+        return simulate(wl_k, cluster, kcfg, mode="batched",
+                        use_kernel=True, dynamics=storm)
+
+    def two_stage():
+        return simulate(wl_k, cluster, kcfg, mode="batched",
+                        use_kernel=False, dynamics=storm)
+
+    rk, rj = masked_kernel(), two_stage()
+    assert (rk.server == rj.server).all(), "masked kernel diverged"
+    assert rk.msgs_total == rj.msgs_total
+    kern_ms = _best_of(masked_kernel)
+    jnp_ms = _best_of(two_stage)
+    kern_note = ("parity-pinned draw-for-draw; CPU runs the Pallas kernel "
+                 "in interpret mode, so the two-stage path wins here — "
+                 "the ratio is the number to re-measure on TPU")
+    print(f"# masked megakernel {kern_ms:.0f} ms vs two-stage masked "
+          f"{jnp_ms:.0f} ms ({jnp_ms / kern_ms:.2f}x kernel; {kern_note})")
+
+    if json_path:
+        payload = dict(
+            bench="study", git=_git_sha(), smoke=smoke,
+            n=n, m=m, qps=qps, seeds=list(seeds),
+            grid=dict(points=points,
+                      axes=dict(seeds=len(seeds), configs=len(configs),
+                                scenarios=len(scens)),
+                      grid_ms=round(grid_ms, 1),
+                      loop_ms=round(loop_ms, 1),
+                      speedup=round(speedup, 2), note=grid_note),
+            masked_kernel=dict(m=int(wl_k.submit_ms.shape[0]),
+                               kernel_ms=round(kern_ms, 1),
+                               two_stage_ms=round(jnp_ms, 1),
+                               kernel_speedup=round(jnp_ms / kern_ms, 2),
+                               note=kern_note),
+            rows=rows,
+        )
+        with open(json_path, "w") as f:
+            json.dump(payload, f, indent=2)
+            f.write("\n")
+        print(f"# wrote {json_path}")
+    return rows
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized: m=500, 1 seed, 20-node fleet")
+    ap.add_argument("--json", default="BENCH_study.json",
+                    help="results file ('' disables)")
+    args = ap.parse_args()
+    main(smoke=args.smoke, json_path=args.json or None)

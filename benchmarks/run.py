@@ -42,12 +42,15 @@ def main():
                     help="scale-sweep results file ('' disables)")
     ap.add_argument("--json-scenarios", default="BENCH_scenarios.json",
                     help="scenario-grid results file ('' disables)")
+    ap.add_argument("--json-study", default="BENCH_study.json",
+                    help="combined-study results file ('' disables)")
     args = ap.parse_args()
     q = args.quick
 
     from . import (bench_azure, bench_functionbench, bench_gap,
                    bench_kernels, bench_reliability, bench_roofline,
-                   bench_router, bench_scenarios, bench_sensitivity)
+                   bench_router, bench_scenarios, bench_sensitivity,
+                   bench_study)
 
     sections = [
         ("Fig 3/4/5 — Azure VM placement (§6.2)",
@@ -70,6 +73,9 @@ def main():
          lambda: bench_scenarios.main(smoke=q,
                                       json_path=args.json_scenarios
                                       or None)),
+        ("Unified study planner — seeds × configs × scenarios, one compile",
+         lambda: bench_study.main(smoke=q,
+                                  json_path=args.json_study or None)),
         ("§2.4 — Dodoor as LLM-serving router",
          lambda: bench_router.main(m=1000 if q else 2000,
                                    qps_list=(40,) if q else (20, 40, 80))),

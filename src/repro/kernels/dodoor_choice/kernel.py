@@ -16,6 +16,12 @@ Two entry points share that trick:
   inside too, so the whole sample → score → select chain is one pass with
   one HBM read of the server table per tile and no [T, 2] candidate /
   duration intermediates round-tripping through HBM.
+* ``dodoor_fused_masked_pallas`` — the megakernel's masked-sampling form:
+  a per-task ``avail [T, N]`` 0/1 plane (the scenario engine's down-window
+  mask) is streamed per tile and ANDed into the in-kernel prefilter, so
+  ``use_kernel=True`` stays legal under outage/churn timelines.  Sampling
+  arithmetic is otherwise identical, so draws remain bit-exact against
+  ``sample_feasible_batch`` on the intersected mask.
 
 Megakernel VMEM layout
 ----------------------
@@ -180,21 +186,34 @@ def dodoor_choice_pallas(r, cand, d_cand, tbl, *, alpha: float,
     )(r, cand, d_cand, tbl)
 
 
-def _fused_kernel(alpha, k, key_ref, r_ref, d_ref, tbl_ref, out_choice_ref,
-                  out_cand_ref, out_scores_ref):
+def _fused_kernel(alpha, k, masked, *refs):
     # key_ref:  [block_t, 2]   per-task uint32 PRNG key (k_cand)
     # r_ref:    [block_t, K]   task demands
     # d_ref:    [block_t, N]   per-server estimated durations
+    # avail_ref:[block_t, N]   (masked form only) 0/1 availability plane —
+    #                          per-task down-window mask from the scenario
+    #                          engine's Dynamics timelines
     # tbl_ref:  [N, 2K+2]      server table: [L | D | 1/ΣC² | C]
     # outputs:  choice [bt] i32, cand [bt, 2] i32, scores [bt, 2] f32
+    if masked:
+        (key_ref, r_ref, d_ref, avail_ref, tbl_ref, out_choice_ref,
+         out_cand_ref, out_scores_ref) = refs
+    else:
+        (key_ref, r_ref, d_ref, tbl_ref, out_choice_ref, out_cand_ref,
+         out_scores_ref) = refs
+        avail_ref = None
     tbl = tbl_ref[...]
     n = tbl.shape[0]
     r = r_ref[...]
     bt = r.shape[0]
 
-    # --- prefilter (Algorithm 1 line 2) from the table's capacity columns
+    # --- prefilter (Algorithm 1 line 2) from the table's capacity columns,
+    #     intersected with the per-task availability plane in the masked
+    #     form (down windows: outages ∪ joins ∪ leaves)
     caps = tbl[:, k + 2:]                                  # [N, K]
     mask = jnp.all(r[:, None, :] <= caps[None, :, :], axis=-1)   # [bt, N]
+    if avail_ref is not None:
+        mask = mask & (avail_ref[...] > 0.0)
     cnt = jnp.cumsum(mask.astype(jnp.int32), axis=1)       # inclusive
     total = cnt[:, -1]                                     # [bt]
     any_ok = total > 0
@@ -250,7 +269,7 @@ def dodoor_fused_pallas(keys, r, d, tbl, *, alpha: float,
     T, K = r.shape
     N = tbl.shape[0]
     grid = (T // block_t,)
-    kern = functools.partial(_fused_kernel, alpha, K)
+    kern = functools.partial(_fused_kernel, alpha, K, False)
     return pl.pallas_call(
         kern,
         grid=grid,
@@ -272,3 +291,42 @@ def dodoor_fused_pallas(keys, r, d, tbl, *, alpha: float,
         ],
         interpret=_resolve_interpret(interpret),
     )(keys, r, d, tbl)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("alpha", "block_t", "interpret"))
+def dodoor_fused_masked_pallas(keys, r, d, avail, tbl, *, alpha: float,
+                               block_t: int = 256,
+                               interpret: bool | None = None):
+    """The masked-sampling megakernel: like :func:`dodoor_fused_pallas`
+    with an extra ``avail [T, N]`` 0/1 float32 plane ANDed into the
+    in-kernel prefilter, so the scenario engine's per-server down windows
+    (outages, churn) ride the fused path.  The threefry draws and the
+    inverse-CDF pick are untouched — draws stay bit-identical to
+    ``sample_feasible_batch(keys, capacity_mask & avail, 2)``."""
+    T, K = r.shape
+    N = tbl.shape[0]
+    grid = (T // block_t,)
+    kern = functools.partial(_fused_kernel, alpha, K, True)
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_t, 2), lambda i: (i, 0)),
+            pl.BlockSpec((block_t, K), lambda i: (i, 0)),
+            pl.BlockSpec((block_t, N), lambda i: (i, 0)),
+            pl.BlockSpec((block_t, N), lambda i: (i, 0)),
+            pl.BlockSpec((N, 2 * K + 2), lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_t,), lambda i: (i,)),
+            pl.BlockSpec((block_t, 2), lambda i: (i, 0)),
+            pl.BlockSpec((block_t, 2), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((T,), jnp.int32),
+            jax.ShapeDtypeStruct((T, 2), jnp.int32),
+            jax.ShapeDtypeStruct((T, 2), jnp.float32),
+        ],
+        interpret=_resolve_interpret(interpret),
+    )(keys, r, d, avail, tbl)

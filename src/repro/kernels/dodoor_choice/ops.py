@@ -4,7 +4,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from .kernel import dodoor_choice_pallas, dodoor_fused_pallas
+from .kernel import (dodoor_choice_pallas, dodoor_fused_masked_pallas,
+                     dodoor_fused_pallas)
 
 
 def _clamp_block(T: int, block_t: int) -> int:
@@ -48,8 +49,8 @@ def dodoor_choice(r: jnp.ndarray, cand: jnp.ndarray, d_cand: jnp.ndarray,
 
 def dodoor_fused(keys: jnp.ndarray, r: jnp.ndarray, d: jnp.ndarray,
                  L: jnp.ndarray, D: jnp.ndarray, C: jnp.ndarray,
-                 alpha: float = 0.5, *, block_t: int = 256,
-                 interpret: bool | None = None):
+                 alpha: float = 0.5, *, avail: jnp.ndarray | None = None,
+                 block_t: int = 256, interpret: bool | None = None):
     """Megakernel: sample → score → select in one Pallas pass.
 
     keys [T, 2]: per-task candidate-draw PRNG keys (the engine passes the
@@ -58,6 +59,12 @@ def dodoor_fused(keys: jnp.ndarray, r: jnp.ndarray, d: jnp.ndarray,
     sampling happens *inside* the kernel (inline threefry + prefix-sum
     inverse CDF over the table's capacity columns) and is draw-for-draw
     identical to ``sample_feasible_batch(keys, feasible_mask(r, C), 2)``.
+
+    avail [T, N] (optional): per-task server availability — the scenario
+    engine's down-window mask.  When given, the masked-sampling kernel
+    ANDs it into the in-kernel prefilter, keeping draws bit-identical to
+    ``sample_feasible_batch(keys, feasible_mask(r, C) & avail, 2)``; when
+    ``None`` the original unmasked program runs (no extra operand).
 
     Returns (choice [T] int32, cand [T, 2] int32, scores [T, 2] f32).
     """
@@ -71,12 +78,22 @@ def dodoor_fused(keys: jnp.ndarray, r: jnp.ndarray, d: jnp.ndarray,
     pad = (-T) % block_t
     if pad:
         # Padded rows run through the full pipeline on zero demand/keys and
-        # are sliced away — zero demand is always feasible, so the fallback
-        # branch never corrupts the shared prefix-sum lanes.
+        # are sliced away — zero demand is always feasible (and padded
+        # avail rows are all-ones), so the fallback branch never corrupts
+        # the shared prefix-sum lanes.
         keys = jnp.pad(keys, ((0, pad), (0, 0)))
         r = jnp.pad(r, ((0, pad), (0, 0)))
         d = jnp.pad(d, ((0, pad), (0, 0)))
-    choice, cand, scores = dodoor_fused_pallas(
-        keys, r.astype(jnp.float32), d.astype(jnp.float32), tbl,
-        alpha=alpha, block_t=block_t, interpret=interpret)
+    if avail is None:
+        choice, cand, scores = dodoor_fused_pallas(
+            keys, r.astype(jnp.float32), d.astype(jnp.float32), tbl,
+            alpha=alpha, block_t=block_t, interpret=interpret)
+    else:
+        avail = avail.astype(jnp.float32)
+        if pad:
+            avail = jnp.pad(avail, ((0, pad), (0, 0)),
+                            constant_values=1.0)
+        choice, cand, scores = dodoor_fused_masked_pallas(
+            keys, r.astype(jnp.float32), d.astype(jnp.float32), avail, tbl,
+            alpha=alpha, block_t=block_t, interpret=interpret)
     return choice[:T], cand[:T], scores[:T]

@@ -32,7 +32,7 @@ def dodoor_choice_ref(r: jnp.ndarray, cand: jnp.ndarray, d_cand: jnp.ndarray,
 
 def dodoor_fused_ref(keys: jnp.ndarray, r: jnp.ndarray, d: jnp.ndarray,
                      L: jnp.ndarray, D: jnp.ndarray, C: jnp.ndarray,
-                     alpha: float):
+                     alpha: float, avail: jnp.ndarray | None = None):
     """jnp oracle for the fused megakernel.
 
     Candidate draws delegate to :func:`sample_feasible_batch` (whose uniforms
@@ -44,11 +44,15 @@ def dodoor_fused_ref(keys: jnp.ndarray, r: jnp.ndarray, d: jnp.ndarray,
     caveat), so scores agree to 1 ulp, and an *exact* score tie can in
     principle resolve to the other sampled candidate.
 
-    keys [T, 2] uint32 (or typed) per-task keys; r [T, K]; d [T, N].
+    keys [T, 2] uint32 (or typed) per-task keys; r [T, K]; d [T, N];
+    ``avail`` [T, N] optional availability mask (the masked-sampling
+    variant — intersected with the capacity prefilter before the draws).
     Returns (choice [T] int32, cand [T, 2] int32, scores [T, 2] f32).
     """
     Cf = C.astype(jnp.float32)
     mask = feasible_mask(r, Cf)                            # [T, N]
+    if avail is not None:
+        mask = mask & (avail.astype(jnp.float32) > 0.0)
     cand = sample_feasible_batch(keys, mask, 2)            # [T, 2]
     d_cand = jnp.take_along_axis(d.astype(jnp.float32), cand, axis=1)
 

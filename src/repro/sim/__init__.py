@@ -1,13 +1,15 @@
 """repro.sim — cluster models (the Table-2 testbed + parameterized scaled
 fleets), the FCFS discrete-event engine (with server-dynamics timelines),
-message accounting, metric aggregation, the vmapped scale-study sweep
-engine, the declarative scenario engine, and the mean-field predictor."""
+message accounting, metric aggregation, the unified study planner (one
+compiled program per seeds × configs × scenarios grid) with its sweep and
+scenario wrappers, and the mean-field predictor."""
 from .cluster import (NODE_TYPES, TESTBED_TYPES, ClusterSpec,
                       make_homogeneous, make_scaled, make_testbed)
 from .engine import Dynamics, EngineConfig, SimResult, simulate
 from .hierarchy import simulate_hierarchical, split_cluster
 from .meanfield import (MeanFieldPrediction, het_pod_equilibrium,
                         make_service_workload, measured_mean_queue,
+                        one_plus_beta_mean_queue, one_plus_beta_tail,
                         pod_mean_queue, pod_tail, predict_pod,
                         tolerance_band)
 from .messages import RpcModel, per_decision_messages
@@ -17,6 +19,7 @@ from .metrics import (Summary, mean_in_system, phase_summaries,
 from .scenarios import (Scenario, ScenarioSweep, random_churn,
                         random_outages, random_stragglers, rolling_restart,
                         run_scenario, run_scenario_grid, scenario_workload)
+from .study import Study, StudyResult, run_study, summarize_study
 from .sweep import (SummaryCI, SweepResult, aggregate_summaries,
                     simulate_many, summarize_sweep)
 
@@ -29,8 +32,10 @@ __all__ = [
     "utilization_stats", "utilization_timeline", "SummaryCI", "SweepResult",
     "aggregate_summaries", "simulate_many", "summarize_sweep",
     "MeanFieldPrediction", "het_pod_equilibrium", "make_service_workload",
-    "measured_mean_queue", "pod_mean_queue", "pod_tail", "predict_pod",
+    "measured_mean_queue", "one_plus_beta_mean_queue", "one_plus_beta_tail",
+    "pod_mean_queue", "pod_tail", "predict_pod",
     "tolerance_band", "Scenario", "ScenarioSweep", "random_churn",
     "random_outages", "random_stragglers", "rolling_restart",
     "run_scenario", "run_scenario_grid", "scenario_workload",
+    "Study", "StudyResult", "run_study", "summarize_study",
 ]

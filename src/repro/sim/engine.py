@@ -779,12 +779,22 @@ def _commit_rounds(carry: _Carry, valid, now, j, cores, mem_mb, dur_raw,
     return carry, outs
 
 
-@partial(jax.jit, static_argnames=("cfg", "n", "num_types", "use_kernel"))
+@partial(jax.jit, static_argnames=("cfg", "n", "num_types", "use_kernel",
+                                   "kernel_masked"))
 def _simulate_batched_jax(xs, C, node_type, mem_unit, cores_per, dyn_vec,
                           dyn_ints, win, cfg: EngineConfig, n: int,
-                          num_types: int, seed: int, use_kernel: bool):
+                          num_types: int, seed: int, use_kernel: bool,
+                          kernel_masked: bool = False):
     """The block scan. xs fields are [nb, b, ...]: global index, r_sub,
-    r_exec, d_est, d_act, submit, task_id, valid."""
+    r_exec, d_est, d_act, submit, task_id, valid.
+
+    ``kernel_masked`` selects the megakernel's masked-sampling program
+    (the avail plane streamed into the in-kernel prefilter).  It is a
+    static knob derived from the Dynamics *spec* — window pad widths are
+    always ≥ 1, so the operand shapes cannot reveal whether down windows
+    exist — and stays False on dynamics-free runs so they keep the
+    cheaper unmasked program.  With an all-true mask both programs draw
+    identically, so the flag never changes results."""
     dyn = _Dyn(*dyn_vec)
     fe_dyn = dyn_ints[1]                 # flush cadence is traced; b shapes
     S = cfg.num_schedulers               # the blocks and stays static
@@ -839,11 +849,15 @@ def _simulate_batched_jax(xs, C, node_type, mem_unit, cores_per, dyn_vec,
             if use_kernel:
                 # Fused megakernel: candidate sampling, Algorithm-1 scoring
                 # and selection in one Pallas pass (α/block_t/interpret are
-                # static program knobs baked into the grid program).
+                # static program knobs baked into the grid program).  Under
+                # down-window timelines the availability plane rides into
+                # the in-kernel prefilter, so scenarios are honored with
+                # draws bit-identical to the two-stage masked path.
                 two, cand2, _ = dodoor_fused(
                     k_cand, r_sub, d_est_srv, carry.view_L, carry.view_D,
-                    C, alpha=cfg.alpha, block_t=cfg.block_t,
-                    interpret=cfg.interpret)
+                    C, alpha=cfg.alpha,
+                    avail=avail if kernel_masked else None,
+                    block_t=cfg.block_t, interpret=cfg.interpret)
             else:
                 cand2 = sample_feasible_batch(k_cand, mask, 2)  # [b, 2]
                 d_cand = jnp.take_along_axis(d_est_srv, cand2, axis=1)
@@ -1341,10 +1355,10 @@ def simulate(workload, cluster: ClusterSpec, cfg: EngineConfig,
     dynamics:
         optional :class:`Dynamics` spec — per-server outage/churn
         timelines, straggler windows, data-store outage windows (see the
-        scenario engine, ``repro.sim.scenarios``).  Exact in both modes.
-        Incompatible with ``use_kernel`` when down windows are present
-        (the fused kernel derives its sampling mask from capacity columns
-        alone).
+        scenario engine, ``repro.sim.scenarios``).  Exact in both modes
+        and on the kernel path: ``use_kernel=True`` routes the down-window
+        availability plane into the megakernel's masked-sampling prefilter
+        (draw-for-draw identical to the two-stage masked path).
 
     ``workload`` and ``cluster`` are cached on device by object identity
     (they are frozen dataclasses): do not mutate their arrays in place
@@ -1353,12 +1367,6 @@ def simulate(workload, cluster: ClusterSpec, cfg: EngineConfig,
     if mode not in ("sequential", "batched"):
         raise ValueError(f"unknown mode {mode!r}")
     _validate_config(cfg)
-    if (use_kernel and dynamics is not None
-            and dynamics.has_down_windows):
-        raise ValueError(
-            "use_kernel=True cannot honor per-server down windows (the "
-            "fused megakernel samples from the capacity prefilter only); "
-            "run the scenario with use_kernel=False")
     n = cluster.num_servers
     C, node_type, cores_per, mem_unit = _cluster_arrays(cluster,
                                                         cfg.mem_units)
@@ -1371,10 +1379,12 @@ def simulate(workload, cluster: ClusterSpec, cfg: EngineConfig,
         b = cfg.b
         nb = -(-m // b)
         xs = _blocked_inputs(workload, b)
+        masked = (use_kernel and dynamics is not None
+                  and dynamics.has_down_windows)
         msgs, outs = _simulate_batched_jax(
             xs, C, node_type, mem_unit, cores_per, dyn, _make_dyn_ints(cfg),
             win, _static_cfg(cfg, for_kernel=use_kernel, keep_b=True), n,
-            cluster.num_types, seed, use_kernel)
+            cluster.num_types, seed, use_kernel, masked)
         outs = tuple(np.asarray(o).reshape(nb * b, *o.shape[2:])[:m]
                      for o in outs)
     else:

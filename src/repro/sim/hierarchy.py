@@ -19,7 +19,29 @@ from dataclasses import replace as dc_replace
 import numpy as np
 
 from .cluster import ClusterSpec
-from .engine import EngineConfig, SimResult, simulate
+from .engine import Dynamics, EngineConfig, SimResult, simulate
+
+
+def _restrict_dynamics(dynamics: Dynamics, idx: np.ndarray) -> Dynamics:
+    """Project a fleet-global :class:`Dynamics` timeline onto one
+    mini-cluster: per-server windows on servers inside ``idx`` are kept
+    with their ids remapped to the part's local numbering; windows on
+    servers outside the part are dropped (they belong to another
+    mini-cluster's timeline).  Store outages are cluster-local state in
+    §4.2's model — each mini-cluster has its own data store — but a
+    *global* store-outage timeline (the operator's whole backing service
+    down) applies to every part, so it passes through unchanged."""
+    local = {int(g): li for li, g in enumerate(np.asarray(idx))}
+
+    def remap(entries):
+        return tuple((local[int(e[0])],) + tuple(e[1:])
+                     for e in entries if int(e[0]) in local)
+
+    return Dynamics(outages=remap(dynamics.outages),
+                    joins=remap(dynamics.joins),
+                    leaves=remap(dynamics.leaves),
+                    slowdowns=remap(dynamics.slowdowns),
+                    store_outages=dynamics.store_outages)
 
 
 def split_cluster(cluster: ClusterSpec, k: int):
@@ -37,7 +59,8 @@ def split_cluster(cluster: ClusterSpec, k: int):
 def simulate_hierarchical(workload, cluster: ClusterSpec, cfg: EngineConfig,
                           k: int, seed: int = 0,
                           mode: str = "sequential",
-                          b: int | None = None) -> SimResult:
+                          b: int | None = None,
+                          dynamics: Dynamics | None = None) -> SimResult:
     """Run k independent mini-clusters; tasks round-robin across them.
 
     ``mode`` selects the engine driver per mini-cluster (see
@@ -49,10 +72,23 @@ def simulate_hierarchical(workload, cluster: ClusterSpec, cfg: EngineConfig,
     the full fleet would starve a small mini-cluster's push cadence —
     while an int applies that batch size to every mini-cluster (pass
     ``b=cfg.b`` to force the caller's value through unchanged).
+
+    ``dynamics`` is a fleet-global :class:`Dynamics` timeline in the full
+    cluster's server numbering: each mini-cluster receives the windows on
+    its own servers (ids remapped to the part-local numbering; windows on
+    servers outside the part dropped), and store-outage windows apply to
+    every part.
     """
     m = workload.r_submit.shape[0]
     parts = split_cluster(cluster, k)
     assign = np.arange(m) % k
+    if dynamics is not None:
+        for field in ("outages", "joins", "leaves", "slowdowns"):
+            for e in getattr(dynamics, field):
+                if not 0 <= int(e[0]) < cluster.num_servers:
+                    raise ValueError(
+                        f"dynamics server {int(e[0])} outside fleet of "
+                        f"{cluster.num_servers}")
 
     results = []
     for c, (spec, idx) in enumerate(parts):
@@ -67,8 +103,10 @@ def simulate_hierarchical(workload, cluster: ClusterSpec, cfg: EngineConfig,
             submit_ms=workload.submit_ms[sel],
         )
         sub_b = max(1, spec.num_servers // 2) if b is None else int(b)
+        part_dyn = None if dynamics is None \
+            else _restrict_dynamics(dynamics, idx)
         res = simulate(sub, spec, cfg._replace(b=sub_b), seed=seed + c,
-                       mode=mode)
+                       mode=mode, dynamics=part_dyn)
         results.append((res, sel, idx))
 
     # merge back into submission order with global server ids; the policy

@@ -30,6 +30,13 @@ simulation is expected to land in:
   this to its fixed point; with one class it collapses to the closed form
   (a property pinned in ``tests/test_meanfield.py``).
 
+* **(1+β)-choices** (Mitzenmacher; tail bounds for the heterogeneous
+  case in Moaddeli et al.): one sample w.p. 1−β, two w.p. β — the
+  fractional interpolation the engine's ``one_plus_beta`` policy ablates.
+  :func:`one_plus_beta_tail` solves the interpolated fixed point
+  s_k = λ·s_{k−1}·((1−β) + β·s_{k−1}), collapsing to M/M/1 at β=0 and to
+  JSQ(2) at β=1.
+
 The matching simulation setup is built by :func:`make_service_workload`:
 full-capacity demands (one task in service per server → per-server FCFS
 queues), Exp durations, Poisson arrivals — under which the engine's PoT
@@ -65,6 +72,53 @@ def pod_tail(lam: float, d: int = 2, kmax: int = 64) -> np.ndarray:
 def pod_mean_queue(lam: float, d: int = 2, kmax: int = 64) -> float:
     """Mean queue length (incl. in service) per server, homogeneous JSQ(d)."""
     return float(pod_tail(lam, d, kmax)[1:].sum())
+
+
+def one_plus_beta_tail(lam: float, beta: float,
+                       kmax: int = 512) -> np.ndarray:
+    """[kmax+1] stationary tail of the ``(1+β)``-choices system
+    (Mitzenmacher's (1+β) process; the fractional-d interpolation whose
+    heterogeneous-server tail bounds Moaddeli et al., arXiv:1904.00447,
+    analyze): each arrival samples one queue w.p. 1−β and two w.p. β,
+    joining the shorter.  The mean-field fixed point interpolates the
+    d=1/d=2 flow balances:
+
+        s_k = λ · s_{k−1} · ((1−β) + β · s_{k−1}),   s_0 = 1,
+
+    collapsing to the M/M/1 geometric tail λᵏ at β=0 and to the JSQ(2)
+    doubly-exponential tail λ^(2ᵏ−1) at β=1 (both pinned in
+    ``tests/test_meanfield.py``).  The tail is a *lower bound on the
+    improvement* of full d=2: doubly-exponential decay kicks in only past
+    the level where βs_{k−1} dominates 1−β, so the asymptotic ratio is
+    geometric with rate λ(1−β) — the qualitative claim the engine's
+    ``one_plus_beta`` policy ablates."""
+    if not 0.0 < lam < 1.0:
+        raise ValueError(f"lam={lam} must be in (0, 1)")
+    if not 0.0 <= beta <= 1.0:
+        raise ValueError(f"beta={beta} must be in [0, 1]")
+    s = np.empty(kmax + 1, np.float64)
+    s[0] = 1.0
+    for k in range(1, kmax + 1):
+        s[k] = lam * s[k - 1] * ((1.0 - beta) + beta * s[k - 1])
+    return s
+
+
+def one_plus_beta_mean_queue(lam: float, beta: float,
+                             kmax: int = 4096) -> float:
+    """Mean queue length per server under ``(1+β)``-choices: the sum of
+    the :func:`one_plus_beta_tail`, continued past ``kmax`` until the
+    remaining geometric-rate-λ(1−β) tail is negligible — so the value is
+    accurate even at loads near saturation (e.g. β=0, λ=0.999, where a
+    fixed truncation would silently drop percent-level mass)."""
+    s = one_plus_beta_tail(lam, beta, kmax)
+    total = float(s[1:].sum())
+    last = float(s[-1])
+    # Continue the recursion scalar-wise; the ratio is ≤ λ, so this
+    # terminates quickly except exactly at the unreachable λ=1 boundary.
+    while last > 1e-15 * max(total, 1.0):
+        last = lam * last * ((1.0 - beta) + beta * last)
+        total += last
+    return total
 
 
 def het_pod_equilibrium(gammas, mus, lam: float, d: int = 2,

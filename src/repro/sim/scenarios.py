@@ -21,12 +21,14 @@ experiments.  This module is that layer:
   sequential and batched drivers (``tests/test_scenarios.py`` pins all
   five policies);
 
-* :func:`run_scenario_grid` vmaps the batched driver over a flattened
-  (seed × scenario) point axis — per-point submit planes and window
-  operands ride the vmap axis, every other operand is broadcast — so a
-  whole scenario study compiles once and dispatches once (chunked under a
-  memory budget, like ``simulate_many``), and every grid point is
-  bit-exact vs its standalone :func:`run_scenario` run.
+* :func:`run_scenario_grid` lowers a (seeds × scenarios) grid onto the
+  **unified study planner** (``repro.sim.study.run_study``) with a
+  singleton config axis — per-point submit planes and window operands
+  ride the point axis, every other operand is broadcast — so a whole
+  scenario study compiles once and dispatches once (chunked under a
+  memory budget, pmap fan-out on multi-device hosts), and every grid
+  point is bit-exact vs its standalone :func:`run_scenario` run.  To
+  sweep the config axis jointly, call ``run_study`` directly.
 
 Scenario timestamps are sampled per (spec, m, seed) and cached
 (``repro.workloads.arrivals.arrival_times``), so the grid and the per-run
@@ -35,22 +37,13 @@ path consume the *same* float32 planes by construction.
 from __future__ import annotations
 
 from dataclasses import replace as dc_replace
-from functools import partial
 from typing import NamedTuple, Sequence
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
 from ..workloads.arrivals import arrival_times
 from .cluster import ClusterSpec
-from .engine import (Dynamics, EngineConfig, SimResult, _blocked_inputs,
-                     _cluster_arrays, _lower_dynamics, _make_dyn,
-                     _make_dyn_ints, _simulate_batched_jax, _static_cfg,
-                     _validate_config, simulate)
-
-#: Per-dispatch budget for the stacked per-task outputs, as in sweep.py.
-_CHUNK_BYTES = 256 << 20
+from .engine import Dynamics, EngineConfig, SimResult, simulate
 
 
 class Scenario(NamedTuple):
@@ -158,125 +151,57 @@ class ScenarioSweep(NamedTuple):
         )
 
 
-@partial(jax.jit, static_argnames=("cfg", "n", "num_types", "use_kernel"))
-def _scenario_grid_jax(xs, submit_blocks, wins, C, node_type, mem_unit,
-                       cores_per, dyn_vec, dyn_ints, seeds,
-                       cfg: EngineConfig, n: int, num_types: int,
-                       use_kernel: bool):
-    """vmap the batched block scan over the flattened point axis: each
-    point carries its own blocked submit plane, window operands, and seed;
-    every other operand (task bodies, cluster, scalars) broadcasts."""
-    def point(submit_b, win, seed):
-        ids, r_sub, r_exec, d_est, d_act, _, tid, valid = xs
-        xs_p = (ids, r_sub, r_exec, d_est, d_act, submit_b, tid, valid)
-        return _simulate_batched_jax(xs_p, C, node_type, mem_unit,
-                                     cores_per, dyn_vec, dyn_ints, win,
-                                     cfg, n, num_types, seed, use_kernel)
-
-    return jax.vmap(point)(submit_blocks, wins, seeds)
-
-
-def _block_plane(a: np.ndarray, b: int) -> np.ndarray:
-    """[m] → [nb, b] with the edge-padded ragged tail — the same padding
-    arithmetic as ``engine._blocked_inputs`` (identical f32 values, so
-    grid points match per-run blocking bit-exactly)."""
-    m = a.shape[0]
-    nb = -(-m // b)
-    pad = nb * b - m
-    a = np.ascontiguousarray(a)
-    if pad:
-        a = np.pad(a, ((0, pad),), mode="edge")
-    return a.reshape(nb, b)
-
-
 def run_scenario_grid(base, cluster: ClusterSpec,
                       scenarios: Sequence[Scenario] | Scenario,
                       cfg: EngineConfig, seeds: Sequence[int] = (0,), *,
-                      point_chunk: int | None = None) -> ScenarioSweep:
+                      point_chunk: int | None = None,
+                      use_kernel: bool = False,
+                      shard: bool = True) -> ScenarioSweep:
     """Run a (seeds × scenarios) grid of batched-driver simulations in one
-    compiled program.
+    compiled program — a thin wrapper over the unified study planner
+    (:func:`repro.sim.study.run_study`) with a singleton config axis.
 
     All scenarios share the one program-shaping config ``cfg`` (policy,
     ``b``, buffer shapes); their arrival planes and dynamics windows are
     traced per-point operands (window pads aligned to the grid maximum —
     padding is inert, so per-point results equal the standalone
     :func:`run_scenario` bit-exactly; see ``tests/test_scenarios.py``).
+    To sweep the config axis *jointly* with the scenario axis, call
+    ``run_study`` directly.
 
     point_chunk:
         max grid points per dispatch (default: sized so one dispatch's
         stacked outputs stay under ~256 MB).  Chunking concatenates
         host-side and never changes values.
+    use_kernel:
+        route dodoor/(1+β) decisions through the fused Pallas megakernel;
+        scenarios with down windows ride its masked-sampling variant.
+    shard:
+        fan the flattened point axis out with ``pmap`` on a multi-device
+        host (``False`` forces the chunked-vmap path).
     """
+    from .study import Study, run_study
+
     if isinstance(scenarios, Scenario):
         scenarios = (scenarios,)
     scenarios = tuple(scenarios)
     seeds = tuple(int(s) for s in seeds)
     if not scenarios or not seeds:
         raise ValueError("run_scenario_grid needs ≥ 1 scenario and ≥ 1 seed")
-    for sc in scenarios:
-        if not isinstance(sc, Scenario):
-            raise TypeError(f"expected Scenario, got {type(sc).__name__}")
-    _validate_config(cfg)
-
-    n = cluster.num_servers
-    C, node_type, cores_per, mem_unit = _cluster_arrays(cluster,
-                                                        cfg.mem_units)
-    static_cfg = _static_cfg(cfg, keep_b=True)
-    b = static_cfg.b
-    m = base.submit_ms.shape[0]
-    nb = -(-m // b)
-    xs = _blocked_inputs(base, b)
-    dyn_vec = _make_dyn(cfg)
-    dyn_ints = _make_dyn_ints(cfg)
-
-    # Align every scenario's window operands to shared pad widths (one
-    # compiled program); padding never changes values.
-    per_scen = [_lower_dynamics(sc.dynamics, n) for sc in scenarios]
-    widths = tuple(max(w.widths[i] for w in per_scen) for i in range(4))
-    wins_np = [jax.device_get(_lower_dynamics(sc.dynamics, n, widths=widths))
-               for sc in scenarios]
-    wins_k = jax.tree_util.tree_map(lambda *xs_: np.stack(xs_), *wins_np)
-
-    # Per-point (seed-major) submit planes + point operands.
-    K, S = len(scenarios), len(seeds)
-    planes = np.stack([
-        np.stack([np.asarray(scenario_workload(base, sc, sd).submit_ms)
-                  for sc in scenarios])
-        for sd in seeds])                                   # [S, K, m]
-    P = S * K
-    kidx = np.tile(np.arange(K), S)
-    submit_pt = np.stack([_block_plane(planes[p // K, p % K], b)
-                          for p in range(P)])               # [P, nb, b]
-    seeds_pt = np.repeat(np.asarray(seeds, np.int32), K)
-
-    if point_chunk is None:
-        per_point_bytes = nb * b * 7 * 4
-        point_chunk = max(1, min(P, _CHUNK_BYTES // max(1,
-                                                        per_point_bytes)))
-    msgs_parts, outs_parts = [], []
-    for lo in range(0, P, point_chunk):
-        sel = slice(lo, lo + point_chunk)
-        wins_c = jax.tree_util.tree_map(
-            lambda a: jnp.asarray(a[kidx[sel]]), wins_k)
-        msgs_c, outs = _scenario_grid_jax(
-            xs, jnp.asarray(submit_pt[sel]), wins_c, C, node_type,
-            mem_unit, cores_per, dyn_vec, dyn_ints,
-            jnp.asarray(seeds_pt[sel]), static_cfg, n, cluster.num_types,
-            False)
-        msgs_parts.append(np.asarray(msgs_c))
-        outs_parts.append(tuple(
-            np.asarray(o).reshape(o.shape[0], nb * b)[:, :m] for o in outs))
-    msgs = np.concatenate(msgs_parts, 0).reshape(S, K, 4)
-    j, start, finish, enq, sched_ms, cores, mem_mb = (
-        np.concatenate([p[i] for p in outs_parts], 0).reshape(S, K, m)
-        for i in range(7))
-
+    st = run_study(base, cluster,
+                   Study(seeds=seeds, configs=(cfg,), scenarios=scenarios),
+                   use_kernel=use_kernel, point_chunk=point_chunk,
+                   shard=shard)
     return ScenarioSweep(
-        server=j.astype(np.int32),
-        enqueue_ms=enq, start_ms=start, finish_ms=finish, sched_ms=sched_ms,
-        cores=cores, mem_mb=mem_mb, submit_ms=planes, msgs=msgs,
-        policy=static_cfg.policy, seeds=seeds, scenarios=scenarios,
-        config=cfg,
+        server=st.server[:, 0],
+        enqueue_ms=st.enqueue_ms[:, 0], start_ms=st.start_ms[:, 0],
+        finish_ms=st.finish_ms[:, 0], sched_ms=st.sched_ms[:, 0],
+        cores=st.cores[:, 0], mem_mb=st.mem_mb[:, 0],
+        # ascontiguousarray materializes the planner's broadcast view for
+        # arrival-free grids (ScenarioSweep's plane was always a real,
+        # writable array) and is a no-copy pass-through otherwise.
+        submit_ms=np.ascontiguousarray(st.submit_ms), msgs=st.msgs[:, 0],
+        policy=st.policy, seeds=seeds, scenarios=scenarios, config=cfg,
     )
 
 

@@ -1,0 +1,447 @@
+"""repro.sim.study — the unified grid planner: one compiled program for a
+(seeds × configs × scenarios) study.
+
+The repo used to carry two parallel grid engines: ``sweep.simulate_many``
+(seeds × scalar-configs) and ``scenarios.run_scenario_grid``
+(seeds × scenarios).  Each re-implemented chunking, pmap fan-out, and
+point recovery, and they could not be composed — a study that swept α
+*and* an outage timeline needed a Python loop over one of the axes.  This
+module is the single planner both now wrap:
+
+* a :class:`Study` is a declarative spec of the three grid axes — seeds,
+  :class:`~repro.sim.engine.EngineConfig` columns (traced scalars may
+  vary; program-shaping knobs must be shared), and
+  :class:`~repro.sim.scenarios.Scenario` columns (arrival processes ×
+  server-dynamics timelines);
+
+* :func:`run_study` lowers the spec to **one flattened point axis** of
+  P = S·G·K cells.  Each point carries its own traced operands — the
+  config's packed scalar vector ``dyn [10]`` + ``ints [2]``, the
+  scenario's blocked submit plane ``[nb, b]`` and ``[n, W]`` window
+  operands (pad widths aligned to the grid maximum — padding is inert),
+  and its seed — while everything else (task bodies, cluster arrays)
+  broadcasts.  Operands that do not vary across the grid are *kept off*
+  the point axis (a pure config sweep compiles the same broadcast-submit
+  program ``simulate_many`` always used);
+
+* execution follows the sweep engine's strategy: on a multi-device host
+  the point axis fans out with ``jax.pmap`` (each device ``lax.map``s its
+  chunk of unvmapped single-run lanes); on one device a **chunked vmap**
+  sized under a ~256 MB stacked-output budget.  Chunking and device
+  layout never change values;
+
+* :meth:`StudyResult.point` recovers any (seed, config, scenario) cell as
+  a plain :class:`~repro.sim.engine.SimResult`, bit-identical to the
+  nested per-run loop ``simulate(scenario_workload(base, sc, sd),
+  cluster, cfg, sd, mode="batched", dynamics=sc.dynamics)`` —
+  placements/ledger exact, timestamps to the engine's known float32
+  FMA-contraction round-off (``tests/test_study.py``).
+
+Every axis admits every driver: ``use_kernel=True`` rides the masked
+fused Pallas megakernel (the down-window availability plane feeds the
+in-kernel prefilter), so the fastest dodoor path is legal under
+outage/churn scenarios — the exclusion the old engines enforced with a
+``ValueError`` is gone.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import NamedTuple, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .cluster import ClusterSpec
+from .engine import (EngineConfig, SimResult, _blocked_inputs,
+                     _cluster_arrays, _lower_dynamics, _make_dyn,
+                     _make_dyn_ints, _simulate_batched_jax, _static_cfg,
+                     _validate_config)
+from .metrics import summarize
+from .scenarios import Scenario, scenario_workload
+
+#: Per-dispatch budget for the stacked per-task outputs (bytes).  A point
+#: chunk is sized so ``chunk × m × 7 × 4B`` stays under this; the full
+#: carry (ring buffers etc.) is per-lane on top, so keep it conservative.
+_CHUNK_BYTES = 256 << 20
+
+
+class Study(NamedTuple):
+    """The declarative (seeds × configs × scenarios) grid spec.
+
+    seeds:
+        the seed axis (python ints, as ``simulate(seed=...)``).
+    configs:
+        one :class:`EngineConfig` or a sequence — the config axis.  All
+        must share the program-shaping knobs (policy, ``b``,
+        ``num_schedulers``, buffer shapes, ``block_t``/``interpret``);
+        the traced scalars (α, β, interference, the RPC model,
+        ``outage_ms``, q_rif, ``flush_every``) may vary per column at no
+        recompile cost.
+    scenarios:
+        one :class:`Scenario` or a sequence — the scenario axis (arrival
+        process × :class:`~repro.sim.engine.Dynamics` timeline per
+        column).
+
+    All three components are hashable, so a ``Study`` is usable as a
+    cache key and comparable across runs.
+    """
+
+    seeds: tuple = (0,)
+    configs: object = EngineConfig()
+    scenarios: object = Scenario()
+
+
+class StudyResult(NamedTuple):
+    """Stacked per-task outcomes over a (seeds × configs × scenarios)
+    grid.  Array fields are ``[S, G, K, m]`` (seed-major, config, then
+    scenario); ``submit_ms`` is ``[S, K, m]`` (configs share each
+    scenario's arrival plane; when no scenario resamples arrivals it is
+    a read-only broadcast view of the base trace — copy before
+    mutating); ``msgs`` is ``[S, G, K, 4]``."""
+
+    server: np.ndarray
+    enqueue_ms: np.ndarray
+    start_ms: np.ndarray
+    finish_ms: np.ndarray
+    sched_ms: np.ndarray
+    cores: np.ndarray
+    mem_mb: np.ndarray
+    submit_ms: np.ndarray     # [S, K, m]
+    msgs: np.ndarray          # [S, G, K, 4] int32
+    policy: str
+    seeds: tuple              # length S
+    configs: tuple            # length G
+    scenarios: tuple          # length K
+
+    @property
+    def num_seeds(self) -> int:
+        return len(self.seeds)
+
+    @property
+    def num_configs(self) -> int:
+        return len(self.configs)
+
+    @property
+    def num_scenarios(self) -> int:
+        return len(self.scenarios)
+
+    def point(self, si: int, gi: int, ki: int) -> SimResult:
+        """The (seed ``si``, config ``gi``, scenario ``ki``) cell as a
+        plain :class:`SimResult` — interchangeable with the per-run
+        ``run_scenario(base, cluster, scenarios[ki], configs[gi],
+        seeds[si], mode="batched")`` return."""
+        return SimResult(
+            server=self.server[si, gi, ki],
+            submit_ms=self.submit_ms[si, ki],
+            enqueue_ms=self.enqueue_ms[si, gi, ki],
+            start_ms=self.start_ms[si, gi, ki],
+            finish_ms=self.finish_ms[si, gi, ki],
+            sched_ms=self.sched_ms[si, gi, ki],
+            cores=self.cores[si, gi, ki],
+            mem_mb=self.mem_mb[si, gi, ki],
+            msgs_base=int(self.msgs[si, gi, ki, 0]),
+            msgs_probe=int(self.msgs[si, gi, ki, 1]),
+            msgs_push=int(self.msgs[si, gi, ki, 2]),
+            msgs_flush=int(self.msgs[si, gi, ki, 3]),
+            policy=self.policy,
+        )
+
+
+def _grid_static(configs: Sequence[EngineConfig],
+                 use_kernel: bool) -> EngineConfig:
+    """The single static (program-shaping) config the grid compiles under;
+    raises if the configs disagree on any program-shaping knob."""
+    statics = {_static_cfg(c, for_kernel=use_kernel, keep_b=True)
+               for c in configs}
+    policies = {c.policy for c in configs}
+    if len(statics) > 1 or len(policies) > 1:
+        raise ValueError(
+            "study configs must share every program-shaping knob "
+            "(policy, b, num_schedulers, rbuf_slots, mem_units, prequal pool "
+            "shapes, block_t/interpret); traced scalars (alpha, beta, "
+            "interference, rpc, outage_ms, q_rif, flush_every) may vary. "
+            f"Got {len(statics)} distinct programs over {len(configs)} "
+            "configs — split the study by program, or align the knobs.")
+    return statics.pop()
+
+
+def _block_plane(a: np.ndarray, b: int) -> np.ndarray:
+    """[m] → [nb, b] with the edge-padded ragged tail — the same padding
+    arithmetic as ``engine._blocked_inputs`` (identical f32 values, so
+    grid points match per-run blocking bit-exactly)."""
+    m = a.shape[0]
+    nb = -(-m // b)
+    pad = nb * b - m
+    a = np.ascontiguousarray(a)
+    if pad:
+        a = np.pad(a, ((0, pad),), mode="edge")
+    return a.reshape(nb, b)
+
+
+@partial(jax.jit, static_argnames=("cfg", "n", "num_types", "use_kernel",
+                                   "kernel_masked"))
+def _study_jax(xs, submit_pt, wins, C, node_type, mem_unit, cores_per,
+               dyn_pt, ints_pt, seeds_pt, cfg: EngineConfig, n: int,
+               num_types: int, use_kernel: bool, kernel_masked: bool):
+    """vmap the batched block scan over the flattened point axis.  Whether
+    the submit plane and the window operands ride the point axis or
+    broadcast is read off their ranks (``[P, nb, b]`` vs ``[nb, b]``;
+    ``[P, n, W]`` vs ``[n, W]`` leaves) — rank is static under jit, so a
+    pure config sweep keeps the broadcast program it always compiled."""
+    sub_ax = 0 if submit_pt.ndim == 3 else None
+    win_ax = 0 if wins.down0.ndim == 3 else None
+
+    def point(submit_b, win, dyn_vec, dyn_ints, seed):
+        ids, r_sub, r_exec, d_est, d_act, _, tid, valid = xs
+        xs_p = (ids, r_sub, r_exec, d_est, d_act, submit_b, tid, valid)
+        return _simulate_batched_jax(xs_p, C, node_type, mem_unit,
+                                     cores_per, dyn_vec, dyn_ints, win,
+                                     cfg, n, num_types, seed, use_kernel,
+                                     kernel_masked)
+
+    return jax.vmap(point, in_axes=(sub_ax, win_ax, 0, 0, 0))(
+        submit_pt, wins, dyn_pt, ints_pt, seeds_pt)
+
+
+#: pmap executables keyed on the static program knobs + which operands
+#: ride the point axis (pmap keeps its own per-shape compile cache
+#: underneath, like jit).
+_PMAP_CACHE: dict = {}
+
+
+def _pmap_shard(static_cfg: EngineConfig, n: int, num_types: int,
+                use_kernel: bool, kernel_masked: bool, sub_ax: bool,
+                win_ax: bool):
+    """One dispatch for the whole grid: each device ``lax.map``s its chunk
+    of points sequentially (the unvmapped single-run program per point),
+    so the broadcast operands ship once, not once per round."""
+    key = (static_cfg, n, num_types, use_kernel, kernel_masked, sub_ax,
+           win_ax)
+    fn = _PMAP_CACHE.get(key)
+    if fn is None:
+        def shard(xs, C, node_type, mem_unit, cores_per, submit, wins,
+                  dyn, ints, seed):
+            # dyn [k, 10], ints [k, 2], seed [k] — this device's points;
+            # submit [k, nb, b] / wins [k, n, W] leaves iff per-point.
+            def one(t):
+                dyn_i, ints_i, seed_i = t[0], t[1], t[2]
+                sub_i = t[3] if sub_ax else submit
+                win_i = (t[3 + int(sub_ax)] if win_ax else wins)
+                ids, r_sub, r_exec, d_est, d_act, _, tid, valid = xs
+                xs_p = (ids, r_sub, r_exec, d_est, d_act, sub_i, tid,
+                        valid)
+                return _simulate_batched_jax(
+                    xs_p, C, node_type, mem_unit, cores_per, dyn_i, ints_i,
+                    win_i, static_cfg, n, num_types, seed_i, use_kernel,
+                    kernel_masked)
+
+            mapped = (dyn, ints, seed)
+            if sub_ax:
+                mapped = mapped + (submit,)
+            if win_ax:
+                mapped = mapped + (wins,)
+            return jax.lax.map(one, mapped)
+
+        fn = jax.pmap(shard,
+                      in_axes=(None, None, None, None, None,
+                               0 if sub_ax else None,
+                               0 if win_ax else None, 0, 0, 0))
+        _PMAP_CACHE[key] = fn
+    return fn
+
+
+def run_study(base, cluster: ClusterSpec, study: Study, *,
+              use_kernel: bool = False, point_chunk: int | None = None,
+              shard: bool = True) -> StudyResult:
+    """Run a (seeds × configs × scenarios) study as one compiled program.
+
+    Parameters
+    ----------
+    base:
+        the base workload; scenarios with an arrival process replace its
+        ``submit_ms`` per (scenario, seed) — identity-cached, so the grid
+        and the per-run parity path consume the same frozen planes.
+    study:
+        the :class:`Study` spec (singleton configs/scenarios allowed).
+    use_kernel:
+        route dodoor/(1+β) decisions through the fused Pallas megakernel
+        on **every** axis — scenarios with down windows ride its
+        masked-sampling variant (draw-for-draw identical to the two-stage
+        masked path).  The kernel bakes ``alpha``/``block_t``/
+        ``interpret`` into its grid program, so those become
+        program-shaping on this path: an α sweep under ``use_kernel``
+        must be split per α column.
+    point_chunk:
+        single-device path only — max flattened points per dispatch
+        (default: sized so one dispatch's stacked outputs stay under
+        ~256 MB).  Chunking concatenates host-side and never changes
+        values.
+    shard:
+        when ``jax.device_count() > 1``, fan the flattened point axis out
+        with ``pmap``; ``False`` forces the chunked-vmap path.
+
+    Returns a :class:`StudyResult`; ``point(si, gi, ki)`` recovers any
+    cell bit-identically to the nested per-run loop (placements/ledger
+    exact, timestamps to float32 round-off).
+    """
+    seeds = tuple(int(s) for s in study.seeds)
+    configs = study.configs
+    if isinstance(configs, EngineConfig):
+        configs = (configs,)
+    configs = tuple(configs)
+    scenarios = study.scenarios
+    if isinstance(scenarios, Scenario):
+        scenarios = (scenarios,)
+    scenarios = tuple(scenarios)
+    if not seeds or not configs or not scenarios:
+        raise ValueError("run_study needs ≥ 1 seed, ≥ 1 config and "
+                         "≥ 1 scenario")
+    for c in configs:
+        if not isinstance(c, EngineConfig):
+            raise TypeError(f"expected EngineConfig, got {type(c).__name__}")
+        _validate_config(c)
+    for sc in scenarios:
+        if not isinstance(sc, Scenario):
+            raise TypeError(f"expected Scenario, got {type(sc).__name__}")
+    static_cfg = _grid_static(configs, use_kernel)
+
+    # The masked megakernel program is selected statically from the
+    # Dynamics specs (operand shapes can't reveal it — widths pad to ≥ 1):
+    # down-window-free studies keep the cheaper unmasked kernel, and an
+    # all-true mask draws identically anyway.
+    kernel_masked = use_kernel and any(sc.dynamics.has_down_windows
+                                       for sc in scenarios)
+
+    n = cluster.num_servers
+    C, node_type, cores_per, mem_unit = _cluster_arrays(cluster,
+                                                        static_cfg.mem_units)
+    b = static_cfg.b
+    m = base.r_submit.shape[0]
+    nb = -(-m // b)
+    xs = _blocked_inputs(base, b)
+    S, G, K = len(seeds), len(configs), len(scenarios)
+    P = S * G * K
+
+    # --- per-axis operand planes (unique values; points gather into them)
+    dyn_g = np.stack([np.asarray(_make_dyn(c)) for c in configs])   # [G,10]
+    ints_g = np.stack([np.asarray(_make_dyn_ints(c))
+                       for c in configs])                           # [G, 2]
+    seeds_np = np.asarray(seeds, np.int32)                          # [S]
+
+    # Window operands ride the point axis only when the scenario axis is
+    # real; widths align to the grid maximum (padding is inert).
+    win_ax = K > 1
+    if win_ax:
+        per_scen = [_lower_dynamics(sc.dynamics, n) for sc in scenarios]
+        widths = tuple(max(w.widths[i] for w in per_scen) for i in range(4))
+        wins_np = [jax.device_get(_lower_dynamics(sc.dynamics, n,
+                                                  widths=widths))
+                   for sc in scenarios]
+        wins_k = jax.tree_util.tree_map(lambda *ws: np.stack(ws), *wins_np)
+    else:
+        wins_k = _lower_dynamics(scenarios[0].dynamics, n)
+
+    # Submit planes ride the point axis only when some scenario resamples
+    # arrivals; unique planes are per (seed, scenario) — configs share.
+    sub_ax = any(sc.arrivals is not None for sc in scenarios)
+    if sub_ax:
+        planes = np.stack([
+            np.stack([np.asarray(scenario_workload(base, sc, sd).submit_ms)
+                      for sc in scenarios])
+            for sd in seeds])                                   # [S, K, m]
+        submit_sk = np.stack([_block_plane(planes[si, ki], b)
+                              for si in range(S)
+                              for ki in range(K)])              # [S*K,nb,b]
+    else:
+        # A zero-stride read-only broadcast view: arrival-free studies
+        # allocate no [S, K, m] plane (writes raise loudly rather than
+        # silently corrupting the identity-cached base array; wrappers
+        # that promise a writable plane materialize it themselves).
+        planes = np.broadcast_to(np.asarray(base.submit_ms), (S, K, m))
+        submit_sk = None
+
+    # Flattened point axis, seed-major then config then scenario:
+    # p = (si·G + gi)·K + ki.
+    p_idx = np.arange(P)
+    si_g = p_idx // (G * K)
+    gi_g = (p_idx // K) % G
+    ki_g = p_idx % K
+    ndev = jax.device_count() if shard else 1
+
+    if ndev > 1 and P > 1:
+        # --- pmap fan-out, one dispatch: the flattened point axis is laid
+        #     out [ndev, k] (k = ⌈P/ndev⌉; the ragged tail is padded with
+        #     repeats of the last point and dropped after the gather — the
+        #     pad never adds wall-clock rounds, every device already runs
+        #     k sequential points).  Per-point operands stay host-side
+        #     numpy and pmap shards them on dispatch.
+        run = _pmap_shard(static_cfg, n, cluster.num_types, use_kernel,
+                          kernel_masked, sub_ax, win_ax)
+        use_dev = min(ndev, P)
+        k = -(-P // use_dev)
+        pad = use_dev * k - P
+
+        def lay(a):
+            a = np.concatenate([a, np.repeat(a[-1:], pad, axis=0)]) \
+                if pad else a
+            return a.reshape((use_dev, k) + a.shape[1:])
+
+        submit_in = (lay(submit_sk[si_g * K + ki_g]) if sub_ax
+                     else xs[5])
+        wins_in = (jax.tree_util.tree_map(lambda a: lay(a[ki_g]), wins_k)
+                   if win_ax else wins_k)
+        msgs_d, outs_d = jax.device_get(
+            run(xs, C, node_type, mem_unit, cores_per, submit_in, wins_in,
+                lay(dyn_g[gi_g]), lay(ints_g[gi_g]), lay(seeds_np[si_g])))
+        msgs = msgs_d.reshape(use_dev * k, 4)[:P]
+        outs = tuple(o.reshape(use_dev * k, nb * b)[:P] for o in outs_d)
+    else:
+        # --- single device: chunked vmap over the flattened point axis.
+        if point_chunk is None:
+            per_point_bytes = nb * b * 7 * 4
+            point_chunk = max(1, min(P, _CHUNK_BYTES // max(
+                1, per_point_bytes)))
+        msgs_parts, outs_parts = [], []
+        for lo in range(0, P, point_chunk):
+            sel = slice(lo, lo + point_chunk)
+            sub_c = (jnp.asarray(submit_sk[si_g[sel] * K + ki_g[sel]])
+                     if sub_ax else xs[5])
+            wins_c = (jax.tree_util.tree_map(
+                lambda a: jnp.asarray(a[ki_g[sel]]), wins_k)
+                if win_ax else wins_k)
+            msgs_c, outs_c = _study_jax(
+                xs, sub_c, wins_c, C, node_type, mem_unit, cores_per,
+                jnp.asarray(dyn_g[gi_g[sel]]),
+                jnp.asarray(ints_g[gi_g[sel]]),
+                jnp.asarray(seeds_np[si_g[sel]]), static_cfg, n,
+                cluster.num_types, use_kernel, kernel_masked)
+            msgs_parts.append(np.asarray(msgs_c))
+            outs_parts.append(tuple(
+                np.asarray(o).reshape(o.shape[0], nb * b) for o in outs_c))
+        msgs = np.concatenate(msgs_parts, axis=0)
+        outs = tuple(np.concatenate([p[i] for p in outs_parts], axis=0)
+                     for i in range(7))
+
+    msgs = msgs.reshape(S, G, K, 4)
+    j, start, finish, enq, sched_ms, cores, mem_mb = (
+        o[:, :m].reshape(S, G, K, m) for o in outs)
+    return StudyResult(
+        server=j.astype(np.int32),
+        enqueue_ms=enq, start_ms=start, finish_ms=finish,
+        sched_ms=sched_ms, cores=cores, mem_mb=mem_mb,
+        submit_ms=planes, msgs=msgs, policy=static_cfg.policy,
+        seeds=seeds, configs=configs, scenarios=scenarios,
+    )
+
+
+def summarize_study(st: StudyResult) -> list:
+    """Cross-seed aggregates for every grid column: a ``[G][K]`` nested
+    list of :class:`~repro.sim.sweep.SummaryCI` (mean ± 95% CI over the
+    seed axis, the §6.2 metric list)."""
+    from .sweep import aggregate_summaries   # sweep wraps this module
+
+    return [[aggregate_summaries([summarize(st.point(si, gi, ki))
+                                  for si in range(st.num_seeds)])
+             for ki in range(st.num_scenarios)]
+            for gi in range(st.num_configs)]

@@ -7,33 +7,27 @@ calls, paying per-call dispatch, host↔device transfer, and — before PR 1
 made every scalar model parameter a traced operand — a recompile per
 configuration.  This module cashes in that operand-ification:
 
-* :func:`simulate_many` ``jax.vmap``s the batched decision-block driver
-  (``repro.sim.engine._simulate_batched_jax``) over a **seed axis** and a
-  stacked **scalar-config axis** — one compile, one dispatch, for the whole
-  (seeds × configs) grid.  Every quantity that PR 1 made a traced operand
-  (α, β, interference, the RPC timing model, the outage window, Prequal's
+* :func:`simulate_many` lowers the (seeds × configs) grid onto the
+  **unified study planner** (``repro.sim.study.run_study``) with a
+  singleton scenario axis — one compile, one dispatch, for the whole
+  grid.  Every quantity that PR 1 made a traced operand (α, β,
+  interference, the RPC timing model, the outage window, Prequal's
   q_rif, ``flush_every``) can vary across the grid; quantities that shape
   the program (``b``, policy, ``num_schedulers``, ``rbuf_slots``,
   ``mem_units``, Prequal pool shapes) must be shared — they select the one
   compiled program the grid reuses.
 
-* On a multi-device host the flattened (seed, config) point axis is
-  fanned out with ``jax.pmap`` — each device runs the *unvmapped*
-  single-run program on its own lane, so the grid parallelizes across
-  devices with zero cross-device traffic (the points are embarrassingly
-  parallel; per-lane ``while_loop`` trip counts stay per-lane instead of
-  lock-stepping to the grid maximum as they would under a partitioned
-  vmap).  On CPU, hosts expose one device by default — benchmarks opt
-  into ``--xla_force_host_platform_device_count=<cores>`` (see
-  ``benchmarks/bench_scale.py``) to spread the grid over cores.  On a
-  single device the grid falls back to a **chunked vmap**: seed-chunks
-  sized so one dispatch's stacked outputs stay under a memory budget.
+* Execution strategy (pmap fan-out across devices, chunked vmap on one
+  device, the ~256 MB stacked-output budget) lives in the planner — see
+  ``repro.sim.study`` and ``docs/STUDIES.md``.  To sweep configs and
+  scenarios *jointly*, call ``run_study`` directly.
 
-* Exactness: the vmapped lanes run the same arithmetic as the single-run
-  driver, so placements and message ledgers are **bit-identical** to a
-  Python loop of ``simulate(..., mode="batched")`` calls per (seed, config)
-  point, and timestamps agree to float32 round-off (the engine's known
-  FMA-contraction caveat) — see ``tests/test_sweep.py``.
+* Exactness: the planner's lanes run the same arithmetic as the
+  single-run driver, so placements and message ledgers are
+  **bit-identical** to a Python loop of ``simulate(..., mode="batched")``
+  calls per (seed, config) point, and timestamps agree to float32
+  round-off (the engine's known FMA-contraction caveat) — see
+  ``tests/test_sweep.py``.
 
 Cross-seed aggregation (:func:`summarize_sweep`) replaces single-seed
 numbers with mean ± 95% CI per metric — the form the mean-field /
@@ -42,24 +36,13 @@ and the form ``benchmarks/common.reduction_summary`` now consumes.
 """
 from __future__ import annotations
 
-from functools import partial
 from typing import NamedTuple, Sequence
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
 from .cluster import ClusterSpec
-from .engine import (EngineConfig, SimResult, _blocked_inputs,
-                     _cluster_arrays, _lower_dynamics, _make_dyn,
-                     _make_dyn_ints, _static_cfg, _simulate_batched_jax,
-                     _validate_config)
+from .engine import EngineConfig, SimResult
 from .metrics import Summary, summarize
-
-#: Per-dispatch budget for the stacked per-task outputs (bytes).  A seed
-#: chunk is sized so ``chunk × G × m × 7 × 4B`` stays under this; the full
-#: carry (ring buffers etc.) is per-lane on top, so keep this conservative.
-_CHUNK_BYTES = 256 << 20
 
 # Two-sided 95% t critical values for df = 1..30 (normal beyond).
 _T95 = (12.706, 4.303, 3.182, 2.776, 2.571, 2.447, 2.365, 2.306, 2.262,
@@ -182,69 +165,6 @@ def summarize_sweep(sw: SweepResult) -> list:
     return out
 
 
-def _grid_static(configs: Sequence[EngineConfig],
-                 use_kernel: bool) -> EngineConfig:
-    """The single static (program-shaping) config the grid compiles under;
-    raises if the configs disagree on any program-shaping knob."""
-    statics = {_static_cfg(c, for_kernel=use_kernel, keep_b=True)
-               for c in configs}
-    policies = {c.policy for c in configs}
-    if len(statics) > 1 or len(policies) > 1:
-        raise ValueError(
-            "simulate_many configs must share every program-shaping knob "
-            "(policy, b, num_schedulers, rbuf_slots, mem_units, prequal pool "
-            "shapes, block_t/interpret); traced scalars (alpha, beta, "
-            "interference, rpc, outage_ms, q_rif, flush_every) may vary. "
-            f"Got {len(statics)} distinct programs over {len(configs)} "
-            "configs — split the sweep by program, or align the knobs.")
-    return statics.pop()
-
-
-@partial(jax.jit, static_argnames=("cfg", "n", "num_types", "use_kernel"))
-def _grid_jax(xs, C, node_type, mem_unit, cores_per, dyn_grid, ints_grid,
-              win, seeds, cfg: EngineConfig, n: int, num_types: int,
-              use_kernel: bool):
-    """vmap the batched block scan over (config, seed); jit at the top so
-    the whole grid is one compile + one dispatch (cached per static cfg and
-    grid shape, like every other engine entry point)."""
-    def point(dyn_vec, dyn_ints, seed):
-        return _simulate_batched_jax(
-            xs, C, node_type, mem_unit, cores_per, dyn_vec, dyn_ints,
-            win, cfg, n, num_types, seed, use_kernel)
-
-    per_cfg = jax.vmap(point, in_axes=(0, 0, None))        # config axis
-    per_seed = jax.vmap(per_cfg, in_axes=(None, None, 0))  # seed axis
-    return per_seed(dyn_grid, ints_grid, seeds)
-
-
-#: pmap executables keyed on the static program knobs (pmap keeps its own
-#: per-shape compile cache underneath, like jit).
-_PMAP_CACHE: dict = {}
-
-
-def _pmap_shard(static_cfg: EngineConfig, n: int, num_types: int,
-                use_kernel: bool):
-    """One dispatch for the whole grid: each device ``lax.map``s its chunk
-    of points sequentially (the unvmapped single-run program per point),
-    so the broadcast operands ship once, not once per round."""
-    key = (static_cfg, n, num_types, use_kernel)
-    fn = _PMAP_CACHE.get(key)
-    if fn is None:
-        def shard(xs, C, node_type, mem_unit, cores_per, dyn, ints, win,
-                  seed):
-            # dyn [k, 10], ints [k, 2], seed [k] — this device's points.
-            return jax.lax.map(
-                lambda t: _simulate_batched_jax(
-                    xs, C, node_type, mem_unit, cores_per, t[0], t[1], win,
-                    static_cfg, n, num_types, t[2], use_kernel),
-                (dyn, ints, seed))
-
-        fn = jax.pmap(shard,
-                      in_axes=(None, None, None, None, None, 0, 0, None, 0))
-        _PMAP_CACHE[key] = fn
-    return fn
-
-
 def simulate_many(workload, cluster: ClusterSpec,
                   configs: Sequence[EngineConfig] | EngineConfig,
                   seeds: Sequence[int] = (0,), *,
@@ -252,7 +172,8 @@ def simulate_many(workload, cluster: ClusterSpec,
                   seed_chunk: int | None = None,
                   shard: bool = True, dynamics=None) -> SweepResult:
     """Run a (seeds × configs) grid of batched-driver simulations in one
-    compiled program.
+    compiled program — a thin wrapper over the unified study planner
+    (:func:`repro.sim.study.run_study`) with a singleton scenario axis.
 
     Parameters
     ----------
@@ -269,7 +190,8 @@ def simulate_many(workload, cluster: ClusterSpec,
         Route dodoor/(1+β) decisions through the fused Pallas megakernel
         (as ``simulate(use_kernel=True)``).  The kernel is vmapped over the
         grid; on CPU it runs interpret-mode — leave False for large grids
-        there.
+        there.  Timelines with down windows ride the masked-sampling
+        kernel variant (draw-for-draw identical to the two-stage path).
     seed_chunk:
         Single-device path only — max seeds per vmap dispatch.  Default
         sizes chunks so one dispatch's stacked outputs stay under ~256 MB;
@@ -282,96 +204,38 @@ def simulate_many(workload, cluster: ClusterSpec,
     dynamics:
         optional :class:`repro.sim.engine.Dynamics` timeline applied to
         *every* grid point (as ``simulate(dynamics=...)``).  To sweep the
-        scenario axis itself, use ``repro.sim.scenarios.run_scenario_grid``.
+        scenario axis itself — or scenario × config jointly — use
+        ``repro.sim.scenarios.run_scenario_grid`` or
+        ``repro.sim.study.run_study``.
 
     Returns a :class:`SweepResult`; ``point(si, gi)`` recovers any single
     run bit-identically to ``simulate(workload, cluster, configs[gi],
     seeds[si], mode="batched")`` (placements/ledger exact, timestamps to
     float32 round-off).
     """
+    from .scenarios import Scenario
+    from .study import Study, run_study
+
     if isinstance(configs, EngineConfig):
         configs = (configs,)
     configs = tuple(configs)
     seeds = tuple(int(s) for s in seeds)
     if not configs or not seeds:
         raise ValueError("simulate_many needs ≥ 1 config and ≥ 1 seed")
-    for c in configs:
-        _validate_config(c)
-    if (use_kernel and dynamics is not None
-            and dynamics.has_down_windows):
-        raise ValueError("use_kernel=True cannot honor per-server down "
-                         "windows (see simulate())")
-    static_cfg = _grid_static(configs, use_kernel)
-
-    n = cluster.num_servers
-    C, node_type, cores_per, mem_unit = _cluster_arrays(cluster,
-                                                        static_cfg.mem_units)
-    b = static_cfg.b
-    m = workload.r_submit.shape[0]
-    nb = -(-m // b)
-    xs = _blocked_inputs(workload, b)
-
-    dyn_grid = jnp.stack([_make_dyn(c) for c in configs])        # [G, 10]
-    ints_grid = jnp.stack([_make_dyn_ints(c) for c in configs])  # [G, 2]
-    win = _lower_dynamics(dynamics, n)
-    G, S = len(configs), len(seeds)
-    ndev = jax.device_count() if shard else 1
-
-    if ndev > 1:
-        # --- pmap fan-out, one dispatch: the flattened point axis is laid
-        #     out [ndev, k] (k = ⌈P/ndev⌉; the ragged tail is padded with
-        #     repeats of the last point and dropped after the gather — the
-        #     pad never adds wall-clock rounds, every device already runs k
-        #     sequential points).  Devices run their chunks in parallel
-        #     with zero cross-device traffic; per-point operands stay
-        #     host-side numpy and pmap shards them on dispatch.
-        run = _pmap_shard(static_cfg, n, cluster.num_types, use_kernel)
-        P = S * G
-        use_dev = min(ndev, P)
-        k = -(-P // use_dev)
-        pad = use_dev * k - P
-
-        def lay(a):
-            a = np.concatenate([a, np.repeat(a[-1:], pad, axis=0)]) \
-                if pad else a
-            return a.reshape((use_dev, k) + a.shape[1:])
-
-        dyn_flat = lay(np.tile(np.asarray(dyn_grid), (S, 1)))
-        ints_flat = lay(np.tile(np.asarray(ints_grid), (S, 1)))
-        seeds_flat = lay(np.repeat(np.asarray(seeds, np.int32), G))
-        msgs_d, outs_d = jax.device_get(
-            run(xs, C, node_type, mem_unit, cores_per,
-                dyn_flat, ints_flat, win, seeds_flat))
-        msgs = msgs_d.reshape(use_dev * k, 4)[:P].reshape(S, G, 4)
-        j, start, finish, enq, sched_ms, cores, mem_mb = (
-            o.reshape(use_dev * k, nb * b)[:P].reshape(S, G, nb * b)[..., :m]
-            for o in outs_d)
-    else:
-        # --- single device: chunked vmap over the seed axis.
-        if seed_chunk is None:
-            per_seed_bytes = G * nb * b * 7 * 4
-            seed_chunk = max(1, min(S, _CHUNK_BYTES // max(1,
-                                                           per_seed_bytes)))
-        msgs_parts, outs_parts = [], []
-        for lo in range(0, S, seed_chunk):
-            chunk = np.asarray(seeds[lo:lo + seed_chunk], np.int32)
-            msgs_c, outs = _grid_jax(
-                xs, C, node_type, mem_unit, cores_per, dyn_grid, ints_grid,
-                win, jnp.asarray(chunk), static_cfg, n,
-                cluster.num_types, use_kernel)
-            msgs_parts.append(np.asarray(msgs_c))                # [s, G, 4]
-            outs_parts.append(tuple(
-                np.asarray(o).reshape(o.shape[0], G, nb * b)[..., :m]
-                for o in outs))
-        msgs = np.concatenate(msgs_parts, axis=0)
-        j, start, finish, enq, sched_ms, cores, mem_mb = (
-            np.concatenate([p[i] for p in outs_parts], axis=0)
-            for i in range(7))
-
+    scen = Scenario("sweep", dynamics=dynamics) if dynamics is not None \
+        else Scenario("sweep")
+    point_chunk = None if seed_chunk is None \
+        else max(1, int(seed_chunk)) * len(configs)
+    st = run_study(workload, cluster,
+                   Study(seeds=seeds, configs=configs, scenarios=(scen,)),
+                   use_kernel=use_kernel, point_chunk=point_chunk,
+                   shard=shard)
     return SweepResult(
-        server=j.astype(np.int32),
-        enqueue_ms=enq, start_ms=start, finish_ms=finish, sched_ms=sched_ms,
-        cores=cores, mem_mb=mem_mb,
+        server=st.server[:, :, 0],
+        enqueue_ms=st.enqueue_ms[:, :, 0], start_ms=st.start_ms[:, :, 0],
+        finish_ms=st.finish_ms[:, :, 0], sched_ms=st.sched_ms[:, :, 0],
+        cores=st.cores[:, :, 0], mem_mb=st.mem_mb[:, :, 0],
         submit_ms=np.asarray(workload.submit_ms),
-        msgs=msgs, policy=static_cfg.policy, seeds=seeds, configs=configs,
+        msgs=st.msgs[:, :, 0], policy=st.policy, seeds=seeds,
+        configs=configs,
     )

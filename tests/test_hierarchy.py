@@ -7,8 +7,9 @@ from dataclasses import replace as dc_replace
 import numpy as np
 import pytest
 
-from repro.sim import (EngineConfig, make_testbed, simulate,
+from repro.sim import (Dynamics, EngineConfig, make_testbed, simulate,
                        simulate_hierarchical, split_cluster)
+from repro.sim.hierarchy import _restrict_dynamics
 from repro.workloads import functionbench as fb
 
 
@@ -93,6 +94,45 @@ class TestSimulateHierarchical:
         assert seq.msgs_total == bat.msgs_total
         for f in ("enqueue_ms", "start_ms", "finish_ms", "sched_ms"):
             assert np.array_equal(getattr(seq, f), getattr(bat, f)), f
+
+    def test_dynamics_routed_to_mini_clusters(self, wl, cluster):
+        """ISSUE 5 satellite: a fleet-global Dynamics timeline routes to
+        the mini-clusters with server ids remapped per part (windows on
+        servers outside a part dropped; store outages global) — parity
+        with the manual per-part reconstruction."""
+        k, cfg = 2, EngineConfig(policy="dodoor")
+        # servers 4 and 7 land in parts 0 and 1 of the k=2 interleaved
+        # split (local ids 2 and 3); the store window hits both parts.
+        dyn = Dynamics(outages=((4, 500.0, 3000.0),),
+                       leaves=((7, 2500.0),),
+                       slowdowns=((4, 0.0, 4000.0, 2.0),),
+                       store_outages=((1000.0, 2000.0),))
+        hier = simulate_hierarchical(wl, cluster, cfg, k, mode="batched",
+                                     dynamics=dyn)
+        m = wl.submit_ms.shape[0]
+        for c, (spec, idx) in enumerate(split_cluster(cluster, k)):
+            sel = np.where(np.arange(m) % k == c)[0]
+            part_dyn = _restrict_dynamics(dyn, idx)
+            # the remap puts each window on the right local server
+            for srv, *_ in (part_dyn.outages + part_dyn.leaves
+                            + part_dyn.slowdowns):
+                assert idx[srv] in (4, 7)
+            assert part_dyn.store_outages == dyn.store_outages
+            ref = simulate(_subtrace(wl, sel), spec,
+                           cfg._replace(b=max(1, spec.num_servers // 2)),
+                           seed=c, mode="batched", dynamics=part_dyn)
+            np.testing.assert_array_equal(idx[ref.server], hier.server[sel])
+            np.testing.assert_array_equal(ref.finish_ms,
+                                          hier.finish_ms[sel])
+        # semantics carry through the split: no placement on server 4
+        # during its outage window, none on 7 after its leave
+        during = (wl.submit_ms >= 500.0) & (wl.submit_ms < 3000.0)
+        assert not ((hier.server == 4) & during).any()
+        assert not ((hier.server == 7) & (wl.submit_ms >= 2500.0)).any()
+        with pytest.raises(ValueError):
+            simulate_hierarchical(wl, cluster, cfg, k, mode="batched",
+                                  dynamics=Dynamics(outages=((99, 0.0,
+                                                              1.0),)))
 
     def test_explicit_b_override(self, wl, cluster):
         """b=None derives n_c/2 per mini-cluster (the previously-silent

@@ -150,6 +150,83 @@ class TestDodoorFusedMegakernel:
         assert picked[feas_rows].all()
 
 
+class TestDodoorFusedMaskedMegakernel:
+    """The masked-sampling megakernel variant (ISSUE 5): a per-task
+    availability plane — the scenario engine's down-window mask — is ANDed
+    into the in-kernel prefilter, with draws pinned bit-for-bit against
+    the two-stage masked ``sample_feasible_batch`` oracle."""
+
+    def _inputs(self, T, N, seed=0):
+        rng = np.random.RandomState(seed)
+        base = jax.random.PRNGKey(seed)
+        keys = jax.vmap(lambda i: jax.random.fold_in(base, i))(jnp.arange(T))
+        r = jnp.asarray(rng.rand(T, 2).astype(np.float32) * 8)
+        d = jnp.asarray(rng.rand(T, N).astype(np.float32) * 1000)
+        L = jnp.asarray(rng.rand(N, 2).astype(np.float32) * 50)
+        D = jnp.asarray(rng.rand(N).astype(np.float32) * 5000)
+        C = jnp.asarray(8.0 + rng.rand(N, 2).astype(np.float32) * 100)
+        avail = jnp.asarray(rng.rand(T, N) > 0.4)
+        return keys, r, d, L, D, C, avail
+
+    @pytest.mark.parametrize("T,N", [(16, 20), (300, 100), (137, 64)])
+    def test_draws_pinned_to_masked_oracle(self, T, N):
+        """Candidates and choice are bit-exact vs the jnp reference, whose
+        draws delegate to sample_feasible_batch on the intersected mask —
+        the engine-level contract that makes use_kernel legal under down
+        windows."""
+        from repro.core.prefilter import feasible_mask, sample_feasible_batch
+        keys, r, d, L, D, C, avail = self._inputs(T, N, seed=T)
+        choice, cand, scores = dodoor_fused(keys, r, d, L, D, C, 0.5,
+                                            avail=avail, block_t=64)
+        rchoice, rcand, rscores = dodoor_fused_ref(keys, r, d, L, D, C,
+                                                   0.5, avail=avail)
+        assert (np.asarray(cand) == np.asarray(rcand)).all()
+        assert (np.asarray(choice) == np.asarray(rchoice)).all()
+        np.testing.assert_allclose(np.asarray(scores), np.asarray(rscores),
+                                   rtol=2e-5, atol=1e-6)
+        # and directly against the prefilter layer's two-stage draws
+        two_stage = sample_feasible_batch(
+            keys, feasible_mask(r, C) & avail, 2)
+        assert (np.asarray(cand) == np.asarray(two_stage)).all()
+
+    def test_all_true_mask_equals_unmasked_kernel(self):
+        """avail ≡ 1 must reproduce the unmasked program bit-for-bit (the
+        engine always routes through the masked form; scenario-free runs
+        may not shift a single draw)."""
+        keys, r, d, L, D, C, _ = self._inputs(128, 32, seed=5)
+        ones = jnp.ones((128, 32), bool)
+        c0, k0, s0 = dodoor_fused(keys, r, d, L, D, C, 0.5)
+        c1, k1, s1 = dodoor_fused(keys, r, d, L, D, C, 0.5, avail=ones)
+        assert (np.asarray(k0) == np.asarray(k1)).all()
+        assert (np.asarray(c0) == np.asarray(c1)).all()
+        np.testing.assert_array_equal(np.asarray(s0), np.asarray(s1))
+
+    def test_all_down_fallback_uniform(self):
+        """No available server → the same uniform-over-all substitution as
+        an all-infeasible task (submission is never rejected)."""
+        from repro.core.prefilter import feasible_mask, sample_feasible_batch
+        T, N = 32, 9
+        keys, r, d, L, D, C, _ = self._inputs(T, N, seed=2)
+        none = jnp.zeros((T, N), bool)
+        choice, cand, _ = dodoor_fused(keys, r, d, L, D, C, 0.5, avail=none)
+        ref_cand = sample_feasible_batch(keys, feasible_mask(r, C) & none, 2)
+        assert (np.asarray(cand) == np.asarray(ref_cand)).all()
+        assert (np.asarray(cand) >= 0).all() and (np.asarray(cand) < N).all()
+
+    @pytest.mark.parametrize("T", (1, 9, 137))
+    def test_partial_block_padding(self, T):
+        """T not a multiple of block_t: padded avail rows are all-ones and
+        must not leak into the first T outputs."""
+        keys, r, d, L, D, C, avail = self._inputs(T, 20, seed=T)
+        choice, cand, _ = dodoor_fused(keys, r, d, L, D, C, 0.5,
+                                       avail=avail, block_t=8)
+        rchoice, rcand, _ = dodoor_fused_ref(keys, r, d, L, D, C, 0.5,
+                                             avail=avail)
+        assert choice.shape == (T,)
+        assert (np.asarray(cand) == np.asarray(rcand)).all()
+        assert (np.asarray(choice) == np.asarray(rchoice)).all()
+
+
 class TestDodoorChoiceEnginePath:
     """The kernel as the batched engine consumes it (ISSUE 1 satellite):
     Algorithm-1 tie-breaking, the padded tail of a partial decision block,

@@ -8,6 +8,7 @@ import pytest
 
 from repro.sim import (EngineConfig, het_pod_equilibrium, make_scaled,
                        make_service_workload, measured_mean_queue,
+                       one_plus_beta_mean_queue, one_plus_beta_tail,
                        pod_mean_queue, pod_tail, predict_pod, simulate,
                        tolerance_band)
 
@@ -49,6 +50,40 @@ class TestPredictor:
             het_pod_equilibrium([0.5, 0.5], [1.0], 0.5)  # shape mismatch
         with pytest.raises(ValueError):
             make_service_workload(make_scaled(8), 1.5, 10)
+
+    def test_one_plus_beta_endpoints(self):
+        """ISSUE 5 satellite: the (1+β) fixed point collapses to M/M/1 at
+        β=0 and to the JSQ(2) doubly-exponential tail at β=1."""
+        for lam in (0.5, 0.7, 0.9):
+            np.testing.assert_allclose(
+                one_plus_beta_tail(lam, 0.0, 64),
+                lam ** np.arange(65, dtype=np.float64), rtol=1e-12)
+            np.testing.assert_allclose(one_plus_beta_tail(lam, 1.0, 48),
+                                       pod_tail(lam, 2, 48), rtol=1e-12)
+        assert one_plus_beta_mean_queue(0.7, 0.0) == pytest.approx(
+            0.7 / 0.3, rel=1e-9)
+        assert one_plus_beta_mean_queue(0.7, 1.0) == pytest.approx(
+            pod_mean_queue(0.7, 2, kmax=64), rel=1e-9)
+
+    def test_one_plus_beta_monotone_in_beta(self):
+        """More second choices → shorter queues: the mean queue is
+        strictly decreasing in β, and even a small β buys a large share
+        of the full power-of-two gain (the paper's (1+β) ablation)."""
+        lam = 0.9
+        qs = [one_plus_beta_mean_queue(lam, b)
+              for b in (0.0, 0.2, 0.5, 0.8, 1.0)]
+        assert all(a > b for a, b in zip(qs, qs[1:]))
+        gain_half = qs[0] - qs[2]
+        gain_full = qs[0] - qs[-1]
+        assert gain_half > 0.6 * gain_full
+
+    def test_one_plus_beta_invalid_inputs(self):
+        with pytest.raises(ValueError):
+            one_plus_beta_tail(1.2, 0.5)
+        with pytest.raises(ValueError):
+            one_plus_beta_tail(0.7, -0.1)
+        with pytest.raises(ValueError):
+            one_plus_beta_tail(0.7, 1.5)
 
     def test_tolerance_band_widens_with_staleness(self):
         lo, hi = tolerance_band(1.0, n=1000)
@@ -111,6 +146,28 @@ class TestMeanFieldValidationN1000:
         pred = pod_mean_queue(self.LAM, d=2)
         lo, hi = tolerance_band(pred, self.N, b=50)
         assert lo <= q <= hi, (q, pred)
+
+    def test_one_plus_beta_band_and_two_choice_ordering(self, setup):
+        """ISSUE 5 satellite: the engine's (1+β) policy at β=0.5 lands in
+        the staleness-widened band of the (1+β) fixed point, and the full
+        two-choice policies (PoT live, dodoor cached) measure below it —
+        the d-interpolation ordering Moaddeli et al.'s bounds predict."""
+        beta = 0.5
+        cluster, wl, window = setup
+        cfg = EngineConfig(policy="one_plus_beta", b=50, beta=beta,
+                           interference=0.0, rbuf_slots=64, mem_units=8)
+        res = simulate(wl, cluster, cfg, mode="batched")
+        q = measured_mean_queue(res, self.N, *window)
+        pred = one_plus_beta_mean_queue(self.LAM, beta)
+        lo, hi = tolerance_band(pred, self.N, b=50)
+        assert lo <= q <= hi, (q, pred)
+        # strictly inside the β-interpolation: better than single choice,
+        # worse than the full power of two
+        assert q < one_plus_beta_mean_queue(self.LAM, 0.0)
+        assert q > pod_mean_queue(self.LAM, 2)
+        q_pot = self._measure(setup, "pot")
+        q_dod = self._measure(setup, "dodoor", b=50)
+        assert q_pot < q and q_dod < q, (q_pot, q_dod, q)
 
     def test_het_service_rates_match_ode(self):
         """Per-type service rates (Mukhopadhyay-style heterogeneity): the

@@ -258,15 +258,21 @@ class TestScenarioSemantics:
         early = fb_small.submit_ms < 20000.0
         assert (res.start_ms[early] >= 20000.0).all()
 
-    def test_use_kernel_down_windows_guard(self, small_testbed, fb_small):
-        dyn = Dynamics(outages=((0, 0.0, 1.0),))
-        with pytest.raises(ValueError, match="use_kernel"):
-            simulate(fb_small, small_testbed, EngineConfig(b=10),
+    def test_use_kernel_honors_down_windows(self, small_testbed, fb_small):
+        """The masked megakernel replaced the old ValueError guards:
+        use_kernel=True under down windows samples draw-for-draw with the
+        two-stage masked path (see tests/test_study.py for grid-level
+        coverage)."""
+        dyn = Dynamics(outages=((0, 0.0, 6000.0),))
+        k = simulate(fb_small, small_testbed, EngineConfig(b=10),
                      mode="batched", use_kernel=True, dynamics=dyn)
-        with pytest.raises(ValueError, match="use_kernel"):
-            simulate_many(fb_small, small_testbed, EngineConfig(b=10),
-                          (0,), use_kernel=True, dynamics=dyn)
-        # slowdown/store-only dynamics stay kernel-compatible
+        j = simulate(fb_small, small_testbed, EngineConfig(b=10),
+                     mode="batched", dynamics=dyn)
+        assert (k.server == j.server).all()
+        assert k.msgs_total == j.msgs_total
+        during = fb_small.submit_ms < 6000.0
+        assert not ((k.server == 0) & during).any()
+        # slowdown/store-only dynamics remain kernel-compatible too
         ok = Dynamics(slowdowns=((0, 0.0, 1.0, 2.0),))
         res = simulate(fb_small, small_testbed, EngineConfig(b=10),
                        mode="batched", use_kernel=True, dynamics=ok)

@@ -1,0 +1,275 @@
+"""The unified study planner (ISSUE 5): one compiled program for a
+(seeds × configs × scenarios) grid, per-point bit-exact vs the nested
+per-run loop for all five policies — including ``use_kernel=True`` under
+down windows via the masked-sampling megakernel — plus ragged chunking
+and the pmap fan-out path for the combined axis.
+"""
+import numpy as np
+import pytest
+
+from repro.sim import (Dynamics, EngineConfig, Scenario, Study, make_testbed,
+                       random_churn, rolling_restart, run_scenario,
+                       run_scenario_grid, run_study, simulate, simulate_many,
+                       summarize, summarize_study)
+from repro.workloads import OnOffArrivals
+from repro.workloads import functionbench as fb
+
+N_SMALL = 20                       # small_testbed fleet size (scale=0.2)
+
+BURSTY = Scenario("bursty", arrivals=OnOffArrivals(240.0, 20.0, 1.0, 2.0))
+OUTAGE = Scenario("outage", dynamics=rolling_restart(
+    N_SMALL, down_ms=1500.0, stagger_ms=400.0, start_ms=500.0, stride=4))
+CHURN = Scenario("churn", dynamics=random_churn(
+    N_SMALL, leave_frac=0.25, join_frac=0.25, horizon_ms=8000.0, seed=2))
+STEADY = Scenario("steady")
+
+
+def assert_point_parity(ref, pt):
+    assert (ref.server == pt.server).all(), "placements diverge"
+    ledger = lambda r: (r.msgs_base, r.msgs_probe, r.msgs_push, r.msgs_flush)
+    assert ledger(ref) == ledger(pt), "message ledger diverges"
+    for f in ("submit_ms", "enqueue_ms", "start_ms", "finish_ms",
+              "sched_ms", "cores", "mem_mb"):
+        assert np.array_equal(getattr(ref, f), getattr(pt, f)), \
+            f"{f} not bit-identical"
+
+
+class TestRunStudyExact:
+    """The acceptance grid: every (seed, config, scenario) cell of one
+    compiled study equals the nested per-run loop."""
+
+    def test_combined_axes_dodoor(self, small_testbed, fb_small):
+        """(2 seeds × 2 configs × 3 scenarios) — the combined axis the two
+        old grid engines could not compose."""
+        seeds = (0, 1)
+        configs = [EngineConfig(policy="dodoor", b=10, alpha=a)
+                   for a in (0.3, 0.7)]
+        scens = (BURSTY, OUTAGE, STEADY)
+        st = run_study(fb_small, small_testbed,
+                       Study(seeds=seeds, configs=configs, scenarios=scens))
+        assert st.num_seeds == 2 and st.num_configs == 2 \
+            and st.num_scenarios == 3
+        for si, sd in enumerate(seeds):
+            for gi, cfg in enumerate(configs):
+                for ki, sc in enumerate(scens):
+                    ref = run_scenario(fb_small, small_testbed, sc, cfg,
+                                       seed=sd, mode="batched")
+                    assert_point_parity(ref, st.point(si, gi, ki))
+
+    @pytest.mark.parametrize("policy", ("random", "pot", "prequal",
+                                        "one_plus_beta"))
+    def test_all_policies_combined(self, small_testbed, policy):
+        """Non-dodoor policies ride the same flattened point axis —
+        including PoT's speculative while_loop and Prequal's segment scan,
+        whose per-lane trip counts differ across the grid."""
+        wl = fb.synthesize(m=200, qps=60.0, seed=0)
+        configs = [EngineConfig(policy=policy, b=10, interference=i)
+                   for i in (0.3, 0.6)]
+        scens = (OUTAGE, STEADY)
+        st = run_study(wl, small_testbed,
+                       Study(seeds=(0, 7), configs=configs,
+                             scenarios=scens))
+        for si, sd in enumerate((0, 7)):
+            for gi, cfg in enumerate(configs):
+                for ki, sc in enumerate(scens):
+                    ref = run_scenario(wl, small_testbed, sc, cfg, seed=sd,
+                                       mode="batched")
+                    assert_point_parity(ref, st.point(si, gi, ki))
+
+    def test_kernel_rides_down_window_scenarios(self, small_testbed,
+                                                fb_small):
+        """use_kernel=True is legal on every axis: under outage/churn
+        timelines the masked megakernel samples draw-for-draw identically
+        to the two-stage masked path, so placements and the ledger match
+        both the per-run kernel loop and the jnp study."""
+        cfg = EngineConfig(policy="dodoor", b=10)
+        scens = (OUTAGE, CHURN, BURSTY, STEADY)
+        spec = Study(seeds=(0, 1), configs=(cfg,), scenarios=scens)
+        st_k = run_study(fb_small, small_testbed, spec, use_kernel=True)
+        st_j = run_study(fb_small, small_testbed, spec, use_kernel=False)
+        for si, sd in enumerate((0, 1)):
+            for ki, sc in enumerate(scens):
+                ref = run_scenario(fb_small, small_testbed, sc, cfg,
+                                   seed=sd, mode="batched",
+                                   use_kernel=True)
+                assert_point_parity(ref, st_k.point(si, 0, ki))
+                # kernel vs two-stage: same draws → same placements/ledger
+                pt_k, pt_j = st_k.point(si, 0, ki), st_j.point(si, 0, ki)
+                assert (pt_k.server == pt_j.server).all(), sc.name
+                assert pt_k.msgs_total == pt_j.msgs_total, sc.name
+
+    def test_simulate_under_down_windows_with_kernel(self, small_testbed,
+                                                     fb_small):
+        """The old ValueError guards are gone: simulate() and
+        simulate_many() accept use_kernel=True with down-window dynamics
+        and agree with the two-stage path."""
+        dyn = Dynamics(outages=((0, 0.0, 4000.0), (5, 1000.0, 6000.0)))
+        cfg = EngineConfig(b=10)
+        k = simulate(fb_small, small_testbed, cfg, mode="batched",
+                     use_kernel=True, dynamics=dyn)
+        j = simulate(fb_small, small_testbed, cfg, mode="batched",
+                     dynamics=dyn)
+        assert (k.server == j.server).all()
+        assert k.msgs_total == j.msgs_total
+        during = (fb_small.submit_ms >= 0.0) & (fb_small.submit_ms < 4000.0)
+        assert not ((k.server == 0) & during).any()
+        sw = simulate_many(fb_small, small_testbed, cfg, (0, 1),
+                           use_kernel=True, dynamics=dyn)
+        for si, sd in enumerate((0, 1)):
+            ref = simulate(fb_small, small_testbed, cfg, seed=sd,
+                           mode="batched", use_kernel=True, dynamics=dyn)
+            assert_point_parity(ref, sw.point(si, 0))
+
+    def test_wrappers_delegate_to_planner(self, small_testbed, fb_small):
+        """simulate_many and run_scenario_grid are thin wrappers: their
+        grids equal the corresponding run_study slices cell-for-cell."""
+        configs = [EngineConfig(policy="dodoor", b=10, alpha=a)
+                   for a in (0.3, 0.7)]
+        cfg = configs[0]
+        seeds = (0, 1)
+        sw = simulate_many(fb_small, small_testbed, configs, seeds)
+        st = run_study(fb_small, small_testbed,
+                       Study(seeds=seeds, configs=configs))
+        for si in range(2):
+            for gi in range(2):
+                assert_point_parity(st.point(si, gi, 0), sw.point(si, gi))
+        scens = (BURSTY, STEADY)
+        sg = run_scenario_grid(fb_small, small_testbed, scens, cfg, seeds)
+        st2 = run_study(fb_small, small_testbed,
+                        Study(seeds=seeds, configs=(cfg,), scenarios=scens))
+        for si in range(2):
+            for ki in range(2):
+                assert_point_parity(st2.point(si, 0, ki), sg.point(si, ki))
+
+
+class TestRaggedChunking:
+    """Satellite: point counts not divisible by the chunk, single-point
+    grids, and chunking invariance on the combined axis."""
+
+    def test_point_chunk_indivisible(self, small_testbed):
+        """P = 2·3·3 = 18 points, chunks of 4 → ragged tail of 2; values
+        must be independent of the chunk size."""
+        wl = fb.synthesize(m=120, qps=40.0, seed=2)
+        configs = [EngineConfig(policy="dodoor", b=10, alpha=a)
+                   for a in (0.3, 0.5, 0.7)]
+        spec = Study(seeds=(0, 1), configs=configs,
+                     scenarios=(BURSTY, OUTAGE, STEADY))
+        full = run_study(wl, small_testbed, spec, shard=False)
+        ragged = run_study(wl, small_testbed, spec, shard=False,
+                           point_chunk=4)
+        one = run_study(wl, small_testbed, spec, shard=False,
+                        point_chunk=1)
+        for other in (ragged, one):
+            assert (full.server == other.server).all()
+            assert np.array_equal(full.finish_ms, other.finish_ms)
+            assert (full.msgs == other.msgs).all()
+
+    def test_single_point_grid(self, small_testbed):
+        wl = fb.synthesize(m=80, qps=40.0, seed=3)
+        cfg = EngineConfig(policy="dodoor", b=10)
+        st = run_study(wl, small_testbed,
+                       Study(seeds=(5,), configs=cfg, scenarios=OUTAGE))
+        assert st.server.shape == (1, 1, 1, 80)
+        ref = run_scenario(wl, small_testbed, OUTAGE, cfg, seed=5,
+                           mode="batched")
+        assert_point_parity(ref, st.point(0, 0, 0))
+
+    def test_seed_chunk_wrapper_invariant(self, small_testbed):
+        """simulate_many's seed_chunk knob still chunks (now via the
+        planner's point axis) without changing values — including a chunk
+        size that does not divide the seed count."""
+        wl = fb.synthesize(m=120, qps=40.0, seed=2)
+        cfg = EngineConfig(policy="dodoor", b=10)
+        full = simulate_many(wl, small_testbed, cfg, (0, 1, 2), shard=False)
+        chunked = simulate_many(wl, small_testbed, cfg, (0, 1, 2),
+                                seed_chunk=2, shard=False)
+        assert (full.server == chunked.server).all()
+        assert np.array_equal(full.finish_ms, chunked.finish_ms)
+        assert (full.msgs == chunked.msgs).all()
+
+
+class TestStudyValidation:
+    def test_program_shaping_mismatch_raises(self, small_testbed, fb_small):
+        with pytest.raises(ValueError, match="program-shaping"):
+            run_study(fb_small, small_testbed,
+                      Study(configs=(EngineConfig(b=10),
+                                     EngineConfig(b=20))))
+
+    def test_empty_axes_raise(self, small_testbed, fb_small):
+        for spec in (Study(seeds=()), Study(configs=()),
+                     Study(scenarios=())):
+            with pytest.raises(ValueError):
+                run_study(fb_small, small_testbed, spec)
+
+    def test_type_errors(self, small_testbed, fb_small):
+        with pytest.raises(TypeError):
+            run_study(fb_small, small_testbed, Study(scenarios=("nope",)))
+        with pytest.raises(TypeError):
+            run_study(fb_small, small_testbed, Study(configs=("nope",)))
+
+    def test_summarize_study_shape_and_values(self, small_testbed):
+        wl = fb.synthesize(m=120, qps=50.0, seed=4)
+        configs = [EngineConfig(policy="dodoor", b=10, alpha=a)
+                   for a in (0.3, 0.7)]
+        st = run_study(wl, small_testbed,
+                       Study(seeds=(0, 1, 2), configs=configs,
+                             scenarios=(STEADY, OUTAGE)))
+        agg = summarize_study(st)
+        assert len(agg) == 2 and len(agg[0]) == 2
+        per = [summarize(st.point(si, 1, 0)) for si in range(3)]
+        np.testing.assert_allclose(
+            agg[1][0].makespan_mean_ms,
+            np.mean([p.makespan_mean_ms for p in per]), rtol=1e-12)
+        assert agg[0][0].num_seeds == 3
+
+
+@pytest.mark.slow
+class TestStudyPmapFanout:
+    def test_pmap_fanout_combined_axis_subprocess(self):
+        """The multi-device pmap path for the *combined* axis needs >1
+        device, which the suite's process (deliberately single-device)
+        cannot provide — assert study-vs-loop exactness, with per-point
+        submit planes and window operands sharded across devices, in a
+        fresh 2-device interpreter."""
+        import os
+        import subprocess
+        import sys
+        code = """
+import numpy as np, jax
+assert jax.device_count() == 2, jax.device_count()
+from repro.sim import (EngineConfig, Scenario, Study, make_testbed,
+                       rolling_restart, run_scenario, run_study)
+from repro.workloads import OnOffArrivals
+from repro.workloads import functionbench as fb
+cluster = make_testbed(scale=0.2)
+wl = fb.synthesize(m=150, qps=60.0, seed=0)
+configs = [EngineConfig(policy="dodoor", b=10, alpha=a) for a in (0.3, 0.7)]
+scens = (Scenario("bursty", arrivals=OnOffArrivals(240.0, 20.0, 1.0, 2.0)),
+         Scenario("outage", dynamics=rolling_restart(
+             20, down_ms=1500.0, stagger_ms=400.0, start_ms=500.0,
+             stride=4)),
+         Scenario("steady"))
+seeds = (0, 1)
+st = run_study(wl, cluster, Study(seeds=seeds, configs=configs,
+                                  scenarios=scens))
+for si, sd in enumerate(seeds):
+    for gi, c in enumerate(configs):
+        for ki, sc in enumerate(scens):
+            ref = run_scenario(wl, cluster, sc, c, seed=sd, mode="batched")
+            pt = st.point(si, gi, ki)
+            assert (ref.server == pt.server).all(), (sd, gi, sc.name)
+            assert ref.msgs_total == pt.msgs_total
+            assert np.array_equal(ref.finish_ms, pt.finish_ms)
+print("study pmap fanout exact")
+"""
+        repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+        env = {**os.environ,
+               "PYTHONPATH": os.path.join(repo, "src"),
+               "JAX_PLATFORMS": "cpu",
+               "XLA_FLAGS": (os.environ.get("XLA_FLAGS", "") +
+                             " --xla_force_host_platform_device_count=2")
+               .strip()}
+        out = subprocess.run([sys.executable, "-c", code], env=env,
+                             capture_output=True, text=True, timeout=420)
+        assert out.returncode == 0, out.stdout + out.stderr
+        assert "study pmap fanout exact" in out.stdout
