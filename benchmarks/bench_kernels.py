@@ -18,15 +18,13 @@ trajectory is tracked across PRs instead of scraped from CSV stdout.
 from __future__ import annotations
 
 import argparse
-import json
-import os
-import subprocess
 import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from benchmarks.common import write_bench_json
 from repro.core import DodoorParams, SchedulerView, dodoor_select, task_key
 from repro.kernels.dodoor_choice import (dodoor_choice, dodoor_choice_ref,
                                          dodoor_fused, dodoor_fused_ref)
@@ -44,16 +42,6 @@ def _best_of(fn, reps: int = 7) -> float:
         fn()
         best = min(best, time.perf_counter() - t0)
     return best * 1e3
-
-
-def _git_sha() -> str:
-    try:
-        return subprocess.check_output(
-            ["git", "rev-parse", "--short", "HEAD"],
-            cwd=os.path.dirname(os.path.abspath(__file__)), text=True,
-            stderr=subprocess.DEVNULL).strip()
-    except Exception:
-        return "unknown"
 
 
 def bench_engine(policy: str = "dodoor", reps: int = 7, bs=(10, 50, 100),
@@ -165,11 +153,9 @@ def bench_hotpath(T: int = 2048, N: int = 100, reps: int = 7):
 def write_json(path: str, kernels: dict, engine_rows: dict,
                trace: dict) -> None:
     """Persist machine-readable perf results (per-policy seq/batched ms,
-    speedup, decisions/s, git SHA) for cross-PR tracking."""
-    doc = {
-        "schema": 1,
-        "git_sha": _git_sha(),
-        "backend": jax.default_backend(),
+    speedup, decisions/s) for cross-PR tracking, through the shared
+    envelope writer."""
+    write_bench_json(path, {
         "trace": trace,
         "kernels_decisions_per_s": {k: round(v) for k, v in kernels.items()},
         "engine": {
@@ -181,11 +167,7 @@ def write_json(path: str, kernels: dict, engine_rows: dict,
             }
             for policy, rows in engine_rows.items()
         },
-    }
-    with open(path, "w") as f:
-        json.dump(doc, f, indent=2, sort_keys=True)
-        f.write("\n")
-    print(f"# wrote {path}")
+    }, bench="engine")
 
 
 def main(T: int = 2048, N: int = 100, *, smoke: bool = False,

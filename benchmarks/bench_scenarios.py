@@ -17,29 +17,17 @@ Two sections:
 from __future__ import annotations
 
 import argparse
-import json
-import os
-import subprocess
 import time
 
 import numpy as np
 
+from benchmarks.common import write_bench_json
 from repro.sim import (EngineConfig, Scenario, make_testbed, random_churn,
                        random_outages, run_scenario, run_scenario_grid,
                        summarize, summarize_window)
 from repro.workloads import (BatchArrivals, DiurnalArrivals, OnOffArrivals,
                              PoissonArrivals)
 from repro.workloads import functionbench as fb
-
-
-def _git_sha() -> str:
-    try:
-        return subprocess.check_output(
-            ["git", "rev-parse", "--short", "HEAD"],
-            cwd=os.path.dirname(os.path.abspath(__file__)), text=True,
-            stderr=subprocess.DEVNULL).strip()
-    except Exception:
-        return "unknown"
 
 
 def make_scenarios(n: int, horizon_ms: float, qps: float):
@@ -157,17 +145,14 @@ def main(m: int = 4000, qps: float = 60.0, seeds=(0, 1), scale: float = 1.0,
 
     if json_path:
         payload = dict(
-            bench="scenarios", git=_git_sha(), smoke=smoke,
+            smoke=smoke,
             n=n, m=m, qps=qps, seeds=list(seeds),
             grid=dict(points=points, grid_ms=round(grid_ms, 1),
                       loop_ms=round(loop_ms, 1),
                       speedup=round(speedup, 2), note=note),
             scenarios=rows,
         )
-        with open(json_path, "w") as f:
-            json.dump(payload, f, indent=2)
-            f.write("\n")
-        print(f"# wrote {json_path}")
+        write_bench_json(json_path, payload, bench="scenarios")
     return rows
 
 

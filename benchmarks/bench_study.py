@@ -18,28 +18,16 @@ Two sections:
 from __future__ import annotations
 
 import argparse
-import json
-import os
-import subprocess
 import time
 
 import numpy as np
 
+from benchmarks.common import write_bench_json
 from repro.sim import (EngineConfig, Scenario, Study, make_testbed,
                        random_outages, run_scenario, run_study, simulate,
                        summarize_study)
 from repro.workloads import OnOffArrivals, PoissonArrivals
 from repro.workloads import functionbench as fb
-
-
-def _git_sha() -> str:
-    try:
-        return subprocess.check_output(
-            ["git", "rev-parse", "--short", "HEAD"],
-            cwd=os.path.dirname(os.path.abspath(__file__)), text=True,
-            stderr=subprocess.DEVNULL).strip()
-    except Exception:
-        return "unknown"
 
 
 def _best_of(fn, reps: int = 3) -> float:
@@ -149,7 +137,7 @@ def main(m: int = 3000, qps: float = 60.0, seeds=(0, 1), scale: float = 1.0,
 
     if json_path:
         payload = dict(
-            bench="study", git=_git_sha(), smoke=smoke,
+            smoke=smoke,
             n=n, m=m, qps=qps, seeds=list(seeds),
             grid=dict(points=points,
                       axes=dict(seeds=len(seeds), configs=len(configs),
@@ -164,10 +152,7 @@ def main(m: int = 3000, qps: float = 60.0, seeds=(0, 1), scale: float = 1.0,
                                note=kern_note),
             rows=rows,
         )
-        with open(json_path, "w") as f:
-            json.dump(payload, f, indent=2)
-            f.write("\n")
-        print(f"# wrote {json_path}")
+        write_bench_json(json_path, payload, bench="study")
     return rows
 
 

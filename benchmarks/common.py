@@ -1,6 +1,10 @@
-"""Shared benchmark plumbing: CSV-style rows, policy × QPS × seed sweeps."""
+"""Shared benchmark plumbing: CSV-style rows, policy × QPS × seed sweeps,
+and the unified machine-readable JSON envelope."""
 from __future__ import annotations
 
+import json
+import os
+import subprocess
 import sys
 import time
 
@@ -9,6 +13,37 @@ from repro.sim import (EngineConfig, aggregate_summaries, make_testbed,
                        utilization_stats)
 
 POLICIES = ("random", "pot", "prequal", "dodoor")
+
+
+def git_sha() -> str:
+    """Short HEAD sha of the repo this file lives in ('unknown' outside
+    git — benchmark artifacts stay writable from exported trees)."""
+    try:
+        return subprocess.check_output(
+            ["git", "rev-parse", "--short", "HEAD"],
+            cwd=os.path.dirname(os.path.abspath(__file__)), text=True,
+            stderr=subprocess.DEVNULL).strip()
+    except Exception:
+        return "unknown"
+
+
+def write_bench_json(path: str, sections: dict, *, bench: str) -> None:
+    """Write a committed ``BENCH_*.json`` artifact with the one shared
+    envelope: ``schema`` / ``bench`` / ``git_sha`` / ``backend`` /
+    ``devices``, then the bench's own sections.  Every benchmark writes
+    through here so the artifacts stay machine-comparable
+    (``tests/test_docs.py`` guards the envelope keys — the legacy ``git``
+    key is specifically banned)."""
+    import jax
+
+    doc = {"schema": 1, "bench": bench, "git_sha": git_sha(),
+           "backend": jax.default_backend(),
+           "devices": jax.device_count(), **sections}
+    assert "git" not in doc, "legacy 'git' key — use the envelope's git_sha"
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=2, sort_keys=True)
+        f.write("\n")
+    print(f"# wrote {path}")
 
 
 def sweep(workload_fn, qps_list, policies=POLICIES, *, cluster=None,

@@ -81,8 +81,8 @@ def main():
                                    qps_list=(40,) if q else (20, 40, 80))),
         ("§4.2/§4.3 — store outage + hierarchical mini-clusters",
          lambda: bench_reliability.main(m=2000 if q else 4000)),
-        ("§Roofline — dry-run derived table (if artifacts exist)",
-         bench_roofline.main),
+        ("§Roofline — fused-kernel bytes-touched model vs measurement",
+         lambda: bench_roofline.main(smoke=q)),
     ]
     t_all = time.time()
     for title, fn in sections:

@@ -1,5 +1,7 @@
-from .ops import dodoor_choice, dodoor_fused
-from .ref import dodoor_choice_ref, dodoor_fused_ref
+from .ops import dodoor_choice, dodoor_fused, dodoor_fused_sparse
+from .ref import (dodoor_choice_ref, dodoor_fused_ref,
+                  dodoor_fused_sparse_ref)
 
-__all__ = ["dodoor_choice", "dodoor_fused", "dodoor_choice_ref",
-           "dodoor_fused_ref"]
+__all__ = ["dodoor_choice", "dodoor_fused", "dodoor_fused_sparse",
+           "dodoor_choice_ref", "dodoor_fused_ref",
+           "dodoor_fused_sparse_ref"]

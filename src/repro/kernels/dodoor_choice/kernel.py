@@ -22,6 +22,21 @@ Two entry points share that trick:
   ``use_kernel=True`` stays legal under outage/churn timelines.  Sampling
   arithmetic is otherwise identical, so draws remain bit-exact against
   ``sample_feasible_batch`` on the intersected mask.
+* ``dodoor_fused_sparse_pallas`` (+ ``_sparse_masked``) — the
+  sparse-candidate-gather megakernel.  The dense form streams a
+  ``d [T, N]`` per-server duration plane per tile — the operand that
+  breaks the 10⁴-server ceiling (it is the only [T, N] input, and the
+  engine materializes it from a tiny ``[T, num_types]`` table).  The
+  sparse form streams that ``d_types [T, TT]`` table instead (TT = node
+  types, ~4) and carries each server's node type as one extra table
+  column; after the candidate rows are gathered, the candidate's duration
+  is a second (tiny) one-hot pick over the TT type columns.  Per-task
+  bytes touched drop from O(N) to O(TT + N/block_t·(2K+3)) — the
+  full-row read is gone.  Sampling arithmetic is untouched, so draws stay
+  bit-exact against ``sample_feasible_batch``, and the gathered duration
+  is the *same float* the dense kernel gathers (``d[t, j] ==
+  d_types[t, node_type[j]]`` by construction), so choices/scores match
+  the dense megakernel exactly.
 
 Megakernel VMEM layout
 ----------------------
@@ -330,3 +345,156 @@ def dodoor_fused_masked_pallas(keys, r, d, avail, tbl, *, alpha: float,
         ],
         interpret=_resolve_interpret(interpret),
     )(keys, r, d, avail, tbl)
+
+
+def _fused_sparse_kernel(alpha, k, masked, *refs):
+    # key_ref:  [block_t, 2]   per-task uint32 PRNG key (k_cand)
+    # r_ref:    [block_t, K]   task demands
+    # dt_ref:   [block_t, TT]  per-*type* estimated durations (TT = node
+    #                          types) — replaces the dense [block_t, N]
+    #                          per-server plane
+    # avail_ref:[block_t, N]   (masked form only) 0/1 availability plane
+    # tbl_ref:  [N, 2K+3]      server table: [L | D | 1/ΣC² | C | node_type]
+    # outputs:  choice [bt] i32, cand [bt, 2] i32, scores [bt, 2] f32
+    if masked:
+        (key_ref, r_ref, dt_ref, avail_ref, tbl_ref, out_choice_ref,
+         out_cand_ref, out_scores_ref) = refs
+    else:
+        (key_ref, r_ref, dt_ref, tbl_ref, out_choice_ref, out_cand_ref,
+         out_scores_ref) = refs
+        avail_ref = None
+    tbl = tbl_ref[...]
+    n = tbl.shape[0]
+    r = r_ref[...]
+    bt = r.shape[0]
+
+    # --- prefilter + draws: identical arithmetic to _fused_kernel (the
+    #     draw-for-draw contract with sample_feasible) — only the duration
+    #     gather below differs.
+    caps = tbl[:, k + 2:2 * k + 2]                         # [N, K]
+    mask = jnp.all(r[:, None, :] <= caps[None, :, :], axis=-1)   # [bt, N]
+    if avail_ref is not None:
+        mask = mask & (avail_ref[...] > 0.0)
+    cnt = jnp.cumsum(mask.astype(jnp.int32), axis=1)       # inclusive
+    total = cnt[:, -1]                                     # [bt]
+    any_ok = total > 0
+    pos = jax.lax.broadcasted_iota(jnp.int32, (bt, n), 1)
+    eff_cnt = jnp.where(any_ok[:, None], cnt, pos + 1)
+    kk = jnp.where(any_ok, total, n)                       # [bt]
+
+    y0, y1 = _threefry2x32(key_ref[:, 0], key_ref[:, 1],
+                           jnp.zeros((bt,), jnp.uint32),
+                           jnp.ones((bt,), jnp.uint32))
+    u0 = _unit_float(y0)
+    u1 = _unit_float(y1)
+
+    kk_f = kk.astype(jnp.float32)
+    km1 = kk - 1
+    tgt0 = jnp.minimum((u0 * kk_f).astype(jnp.int32), km1) + 1
+    tgt1 = jnp.minimum((u1 * kk_f).astype(jnp.int32), km1) + 1
+    cand0 = jnp.sum((eff_cnt < tgt0[:, None]).astype(jnp.int32), axis=1)
+    cand1 = jnp.sum((eff_cnt < tgt1[:, None]).astype(jnp.int32), axis=1)
+
+    # --- sparse gather: candidate rows from the table (one-hot matmul as
+    #     before), then the candidate's *node type* rides out as the last
+    #     table column — node types are small ints, exactly representable
+    #     in f32 and exactly recovered by the single-nonzero one-hot sum —
+    #     and a second, tiny one-hot over the TT type columns picks the
+    #     duration.  No [bt, N] duration operand exists anywhere.
+    ids = jax.lax.broadcasted_iota(jnp.int32, (1, n), 1)
+    dt = dt_ref[...]                                       # [bt, TT]
+    tt_n = dt.shape[1]
+    tio = jax.lax.broadcasted_iota(jnp.float32, (1, tt_n), 1)
+
+    def gather(c):
+        onehot = (c[:, None] == ids).astype(jnp.float32)
+        row = jnp.dot(onehot, tbl, preferred_element_type=jnp.float32)
+        nt_c = row[:, 2 * k + 2]                           # [bt] exact
+        d_c = jnp.sum((nt_c[:, None] == tio).astype(jnp.float32) * dt,
+                      axis=-1)
+        return row, d_c
+
+    row_a, d_a = gather(cand0)
+    row_b, d_b = gather(cand1)
+    score_a, score_b = _pair_scores(alpha, k, r, row_a, row_b, d_a, d_b)
+
+    out_cand_ref[:, 0] = cand0.astype(jnp.int32)
+    out_cand_ref[:, 1] = cand1.astype(jnp.int32)
+    out_scores_ref[:, 0] = score_a
+    out_scores_ref[:, 1] = score_b
+    out_choice_ref[...] = jnp.where(score_a > score_b, cand1,
+                                    cand0).astype(jnp.int32)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("alpha", "block_t", "interpret"))
+def dodoor_fused_sparse_pallas(keys, r, d_types, tbl, *, alpha: float,
+                               block_t: int = 256,
+                               interpret: bool | None = None):
+    """keys [T,2] uint32, r [T,K], d_types [T,TT], tbl [N, 2K+3] →
+    (choice [T], cand [T,2], scores [T,2]).  T must be a multiple of
+    block_t (ops.py pads)."""
+    T, K = r.shape
+    N = tbl.shape[0]
+    TT = d_types.shape[1]
+    grid = (T // block_t,)
+    kern = functools.partial(_fused_sparse_kernel, alpha, K, False)
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_t, 2), lambda i: (i, 0)),
+            pl.BlockSpec((block_t, K), lambda i: (i, 0)),
+            pl.BlockSpec((block_t, TT), lambda i: (i, 0)),
+            pl.BlockSpec((N, 2 * K + 3), lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_t,), lambda i: (i,)),
+            pl.BlockSpec((block_t, 2), lambda i: (i, 0)),
+            pl.BlockSpec((block_t, 2), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((T,), jnp.int32),
+            jax.ShapeDtypeStruct((T, 2), jnp.int32),
+            jax.ShapeDtypeStruct((T, 2), jnp.float32),
+        ],
+        interpret=_resolve_interpret(interpret),
+    )(keys, r, d_types, tbl)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("alpha", "block_t", "interpret"))
+def dodoor_fused_sparse_masked_pallas(keys, r, d_types, avail, tbl, *,
+                                      alpha: float, block_t: int = 256,
+                                      interpret: bool | None = None):
+    """Masked-sampling form of :func:`dodoor_fused_sparse_pallas`: the
+    ``avail [T, N]`` 0/1 plane is ANDed into the in-kernel prefilter
+    exactly as in :func:`dodoor_fused_masked_pallas` — draws stay
+    bit-identical to ``sample_feasible_batch`` on the intersected mask."""
+    T, K = r.shape
+    N = tbl.shape[0]
+    TT = d_types.shape[1]
+    grid = (T // block_t,)
+    kern = functools.partial(_fused_sparse_kernel, alpha, K, True)
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_t, 2), lambda i: (i, 0)),
+            pl.BlockSpec((block_t, K), lambda i: (i, 0)),
+            pl.BlockSpec((block_t, TT), lambda i: (i, 0)),
+            pl.BlockSpec((block_t, N), lambda i: (i, 0)),
+            pl.BlockSpec((N, 2 * K + 3), lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_t,), lambda i: (i,)),
+            pl.BlockSpec((block_t, 2), lambda i: (i, 0)),
+            pl.BlockSpec((block_t, 2), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((T,), jnp.int32),
+            jax.ShapeDtypeStruct((T, 2), jnp.int32),
+            jax.ShapeDtypeStruct((T, 2), jnp.float32),
+        ],
+        interpret=_resolve_interpret(interpret),
+    )(keys, r, d_types, avail, tbl)

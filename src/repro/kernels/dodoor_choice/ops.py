@@ -5,7 +5,8 @@ import jax
 import jax.numpy as jnp
 
 from .kernel import (dodoor_choice_pallas, dodoor_fused_masked_pallas,
-                     dodoor_fused_pallas)
+                     dodoor_fused_pallas, dodoor_fused_sparse_masked_pallas,
+                     dodoor_fused_sparse_pallas)
 
 
 def _clamp_block(T: int, block_t: int) -> int:
@@ -96,4 +97,60 @@ def dodoor_fused(keys: jnp.ndarray, r: jnp.ndarray, d: jnp.ndarray,
         choice, cand, scores = dodoor_fused_masked_pallas(
             keys, r.astype(jnp.float32), d.astype(jnp.float32), avail, tbl,
             alpha=alpha, block_t=block_t, interpret=interpret)
+    return choice[:T], cand[:T], scores[:T]
+
+
+def dodoor_fused_sparse(keys: jnp.ndarray, r: jnp.ndarray,
+                        d_types: jnp.ndarray, node_type: jnp.ndarray,
+                        L: jnp.ndarray, D: jnp.ndarray, C: jnp.ndarray,
+                        alpha: float = 0.5, *,
+                        avail: jnp.ndarray | None = None,
+                        block_t: int = 256,
+                        interpret: bool | None = None):
+    """Sparse-candidate-gather megakernel: like :func:`dodoor_fused` but
+    without the dense ``d [T, N]`` per-server duration plane.
+
+    d_types [T, TT] is each task's estimated duration *per node type*
+    (TT = number of node types, ~4) and node_type [N] maps servers to
+    types — the factorization the engine's duration model already has
+    (``d[t, j] == d_types[t, node_type[j]]``).  The kernel carries
+    node_type as one extra server-table column and resolves each sampled
+    candidate's duration with a tiny one-hot pick over the TT columns, so
+    the per-task bytes touched drop from O(N) to O(TT).
+
+    Candidate draws are bit-exact vs ``sample_feasible_batch`` (same
+    in-kernel threefry + inverse-CDF as :func:`dodoor_fused`), and
+    choices/scores are exactly the dense megakernel's on the factorized
+    ``d`` — the gathered duration is the same float.
+
+    Returns (choice [T] int32, cand [T, 2] int32, scores [T, 2] f32).
+    """
+    T, K = r.shape
+    block_t = _clamp_block(T, block_t)
+    Cf = C.astype(jnp.float32)
+    inv = 1.0 / jnp.sum(Cf ** 2, axis=-1, keepdims=True)
+    nt = node_type.astype(jnp.float32)[:, None]
+    tbl = jnp.concatenate([L.astype(jnp.float32),
+                           D.astype(jnp.float32)[:, None], inv, Cf, nt],
+                          axis=-1)
+    keys = _key_data(keys)
+    pad = (-T) % block_t
+    if pad:
+        # Same inert-padding argument as dodoor_fused: zero demand is
+        # always feasible, so padded rows never flip the fallback branch.
+        keys = jnp.pad(keys, ((0, pad), (0, 0)))
+        r = jnp.pad(r, ((0, pad), (0, 0)))
+        d_types = jnp.pad(d_types, ((0, pad), (0, 0)))
+    if avail is None:
+        choice, cand, scores = dodoor_fused_sparse_pallas(
+            keys, r.astype(jnp.float32), d_types.astype(jnp.float32), tbl,
+            alpha=alpha, block_t=block_t, interpret=interpret)
+    else:
+        avail = avail.astype(jnp.float32)
+        if pad:
+            avail = jnp.pad(avail, ((0, pad), (0, 0)),
+                            constant_values=1.0)
+        choice, cand, scores = dodoor_fused_sparse_masked_pallas(
+            keys, r.astype(jnp.float32), d_types.astype(jnp.float32),
+            avail, tbl, alpha=alpha, block_t=block_t, interpret=interpret)
     return choice[:T], cand[:T], scores[:T]

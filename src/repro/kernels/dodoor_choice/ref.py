@@ -74,3 +74,21 @@ def dodoor_fused_ref(keys: jnp.ndarray, r: jnp.ndarray, d: jnp.ndarray,
     choice = jnp.where(score_a > score_b, cand[:, 1],
                        cand[:, 0]).astype(jnp.int32)
     return choice, cand, scores
+
+
+def dodoor_fused_sparse_ref(keys: jnp.ndarray, r: jnp.ndarray,
+                            d_types: jnp.ndarray, node_type: jnp.ndarray,
+                            L: jnp.ndarray, D: jnp.ndarray, C: jnp.ndarray,
+                            alpha: float, avail: jnp.ndarray | None = None):
+    """jnp oracle for the sparse-candidate-gather megakernel.
+
+    The sparse kernel consumes the factorized duration model — ``d_types
+    [T, TT]`` per-type estimates plus the server→type map — whose dense
+    expansion ``d[t, j] = d_types[t, node_type[j]]`` is exactly the
+    ``[T, N]`` plane the dense megakernel reads.  The oracle materializes
+    that expansion and delegates to :func:`dodoor_fused_ref`, so draws and
+    choices inherit the bit-exactness contract (and scores the 1-ulp FMA
+    caveat) unchanged.
+    """
+    d = d_types.astype(jnp.float32)[:, node_type]          # [T, N]
+    return dodoor_fused_ref(keys, r, d, L, D, C, alpha, avail=avail)

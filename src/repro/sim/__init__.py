@@ -5,7 +5,8 @@ compiled program per seeds × configs × scenarios grid) with its sweep and
 scenario wrappers, and the mean-field predictor."""
 from .cluster import (NODE_TYPES, TESTBED_TYPES, ClusterSpec,
                       make_homogeneous, make_scaled, make_testbed)
-from .engine import Dynamics, EngineConfig, SimResult, simulate
+from .engine import (Dynamics, EngineConfig, SimResult, resolve_use_kernel,
+                     simulate)
 from .hierarchy import simulate_hierarchical, split_cluster
 from .meanfield import (MeanFieldPrediction, het_pod_equilibrium,
                         make_service_workload, measured_mean_queue,
@@ -26,7 +27,8 @@ from .sweep import (SummaryCI, SweepResult, aggregate_summaries,
 __all__ = [
     "NODE_TYPES", "TESTBED_TYPES", "ClusterSpec", "make_homogeneous",
     "make_scaled", "make_testbed", "Dynamics", "EngineConfig", "SimResult",
-    "simulate", "simulate_hierarchical", "split_cluster", "RpcModel",
+    "simulate", "resolve_use_kernel", "simulate_hierarchical",
+    "split_cluster", "RpcModel",
     "per_decision_messages", "Summary", "mean_in_system", "phase_summaries",
     "resource_violations", "summarize", "summarize_window",
     "utilization_stats", "utilization_timeline", "SummaryCI", "SweepResult",

@@ -101,7 +101,8 @@ import numpy as np
 
 from ..core.policies import dodoor_choice_batch
 from ..core.prefilter import feasible_mask, sample_feasible, sample_feasible_batch
-from ..kernels.dodoor_choice import dodoor_fused
+from ..kernels.dodoor_choice import dodoor_fused_sparse
+from ..kernels.dodoor_choice.kernel import _resolve_interpret
 from ..core.rl_score import load_score_batched
 from ..core.types import PrequalParams, SchedulerView
 from .cluster import CMAX, ClusterSpec
@@ -834,7 +835,11 @@ def _simulate_batched_jax(xs, C, node_type, mem_unit, cores_per, dyn_vec,
         now = submit                                            # [b]
         sched = (idx % S).astype(jnp.int32)
         keys = jax.vmap(lambda t: jax.random.fold_in(base_key, t))(task_id)
-        d_est_srv = d_est_t[:, node_type]                       # [b, n]
+        # Durations stay factorized as d_est_t [b, num_types] + the
+        # server→type map; every consumer gathers per type, so no dense
+        # [b, n] duration plane is ever materialized (the operand that
+        # collapsed decisions/s above 10⁴ servers).  d_est_t[t, nt[j]] is
+        # the same float the old plane held — placements are unchanged.
         avail = _avail_rows(win, now)                           # [b, n]
         mask = feasible_mask(r_sub, C) & avail                  # [b, n]
 
@@ -847,20 +852,21 @@ def _simulate_batched_jax(xs, C, node_type, mem_unit, cores_per, dyn_vec,
             kk = jax.vmap(jax.random.split)(keys)               # [b, 2, key]
             k_cand, k_beta = kk[:, 0], kk[:, 1]
             if use_kernel:
-                # Fused megakernel: candidate sampling, Algorithm-1 scoring
-                # and selection in one Pallas pass (α/block_t/interpret are
-                # static program knobs baked into the grid program).  Under
+                # Sparse-gather megakernel: candidate sampling, Algorithm-1
+                # scoring and selection in one Pallas pass over the
+                # factorized duration table (α/block_t/interpret are static
+                # program knobs baked into the grid program).  Under
                 # down-window timelines the availability plane rides into
                 # the in-kernel prefilter, so scenarios are honored with
                 # draws bit-identical to the two-stage masked path.
-                two, cand2, _ = dodoor_fused(
-                    k_cand, r_sub, d_est_srv, carry.view_L, carry.view_D,
-                    C, alpha=cfg.alpha,
+                two, cand2, _ = dodoor_fused_sparse(
+                    k_cand, r_sub, d_est_t, node_type, carry.view_L,
+                    carry.view_D, C, alpha=cfg.alpha,
                     avail=avail if kernel_masked else None,
                     block_t=cfg.block_t, interpret=cfg.interpret)
             else:
                 cand2 = sample_feasible_batch(k_cand, mask, 2)  # [b, 2]
-                d_cand = jnp.take_along_axis(d_est_srv, cand2, axis=1)
+                d_cand = d_est_t[tt[:, None], node_type[cand2]]
                 view = SchedulerView(L=carry.view_L, D=carry.view_D,
                                      rif=carry.view_rif, C=C)
                 two = dodoor_choice_batch(r_sub, cand2, d_cand, view,
@@ -880,7 +886,7 @@ def _simulate_batched_jax(xs, C, node_type, mem_unit, cores_per, dyn_vec,
             cores_t = r_exec_t[tt, nt_j, 0]
             mem_t = r_exec_t[tt, nt_j, 1]
             dur_t = d_act_t[tt, nt_j]
-            dest_t = d_est_srv[tt, j]
+            dest_t = d_est_t[tt, nt_j]
             carry, outs = _commit_rounds(
                 carry, valid, now, j, cores_t, mem_t, dur_t, dest_t,
                 extra_lat, dyn, win, cores_per, mem_unit, n, MU)
@@ -899,7 +905,7 @@ def _simulate_batched_jax(xs, C, node_type, mem_unit, cores_per, dyn_vec,
             cores_c = r_exec_t[tt[:, None], nt_c, 0]
             mem_c = r_exec_t[tt[:, None], nt_c, 1]
             dur_c = d_act_t[tt[:, None], nt_c]
-            dest_c = jnp.take_along_axis(d_est_srv, cand, axis=1)
+            dest_c = d_est_t[tt[:, None], nt_c]
             pot_lat = jnp.broadcast_to(2.0 * dyn.hop_ms, (bsz,))
 
             def spec_cond(state):
@@ -1004,7 +1010,7 @@ def _simulate_batched_jax(xs, C, node_type, mem_unit, cores_per, dyn_vec,
                 c, outs = _commit_rounds(
                     c, commit, now, j_full, scat(r_exec_t[ic, nt_c, 0]),
                     scat(r_exec_t[ic, nt_c, 1]), scat(d_act_t[ic, nt_c]),
-                    scat(d_est_srv[ic, j_c]),
+                    scat(d_est_t[ic, nt_c]),
                     jnp.zeros((bsz,), jnp.float32), dyn, win, cores_per,
                     mem_unit, n, MU, outs0=outs)
                 j_acc = jnp.where(commit, j_full, j_acc)
@@ -1071,7 +1077,7 @@ def _simulate_batched_jax(xs, C, node_type, mem_unit, cores_per, dyn_vec,
             nt_j = node_type[j]
             cores_t = r_exec_t[tt, nt_j, 0]
             mem_t = r_exec_t[tt, nt_j, 1]
-            dest_t = d_est_srv[tt, j]
+            dest_t = d_est_t[tt, nt_j]
 
         n_valid = jnp.sum(valid).astype(jnp.int32)
         msgs = carry.msgs.at[0].add(2 * n_valid)
@@ -1334,9 +1340,32 @@ def _blocked_inputs(workload, b: int):
     return _conv_cached(("blocks", id(workload), b), workload, build_blocks)
 
 
+def resolve_use_kernel(use_kernel, interpret: bool | None = None) -> bool:
+    """Resolve the ``use_kernel`` knob (``"auto"`` | True | False) to the
+    boolean the batched driver compiles under.
+
+    ``"auto"`` picks the fused Pallas megakernel only where its lowering
+    actually *compiles* — a real TPU backend, or an explicit
+    ``interpret=False`` override (the same rule as
+    ``kernel._resolve_interpret``).  Off-accelerator the kernel runs the
+    Pallas interpreter and measures ~0.6× the two-stage jnp path (the
+    ``BENCH_study.json`` ``masked_kernel`` row), so auto keeps the
+    two-stage path there.  ``True`` forces the kernel everywhere
+    (interpret mode included — the CI parity path), ``False`` forces the
+    two-stage path everywhere.  Pinned by ``tests/test_engine_batched.py``.
+    """
+    if isinstance(use_kernel, str):
+        if use_kernel != "auto":
+            raise ValueError(
+                f"use_kernel must be True, False or 'auto', got "
+                f"{use_kernel!r}")
+        return not _resolve_interpret(interpret)
+    return bool(use_kernel)
+
+
 def simulate(workload, cluster: ClusterSpec, cfg: EngineConfig,
              seed: int = 0, *, mode: str = "sequential",
-             use_kernel: bool = False, dynamics=None) -> SimResult:
+             use_kernel: bool | str = "auto", dynamics=None) -> SimResult:
     """Run a full experiment: one workload trace through one policy.
 
     mode:
@@ -1347,11 +1376,14 @@ def simulate(workload, cluster: ClusterSpec, cfg: EngineConfig,
         segment scan).
     use_kernel:
         batched mode only — route the dodoor/(1+β) decision through the
-        fused sample→score→select Pallas megakernel
-        (``repro.kernels.dodoor_choice.dodoor_fused``) instead of the
-        two-stage jnp path; ``cfg.block_t``/``cfg.interpret`` control the
-        tile size and interpret-vs-compiled lowering (``None`` =
-        auto-detect: compiled on TPU only).
+        fused sample→score→select sparse-gather Pallas megakernel
+        (``repro.kernels.dodoor_choice.dodoor_fused_sparse``) instead of
+        the two-stage jnp path; ``cfg.block_t``/``cfg.interpret`` control
+        the tile size and interpret-vs-compiled lowering (``None`` =
+        auto-detect: compiled on TPU only).  The default ``"auto"``
+        selects the kernel exactly where its lowering compiles (see
+        :func:`resolve_use_kernel`) — two-stage off-accelerator, kernel on
+        TPU; pass True/False to force a path.
     dynamics:
         optional :class:`Dynamics` spec — per-server outage/churn
         timelines, straggler windows, data-store outage windows (see the
@@ -1366,6 +1398,7 @@ def simulate(workload, cluster: ClusterSpec, cfg: EngineConfig,
     """
     if mode not in ("sequential", "batched"):
         raise ValueError(f"unknown mode {mode!r}")
+    use_kernel = resolve_use_kernel(use_kernel, cfg.interpret)
     _validate_config(cfg)
     n = cluster.num_servers
     C, node_type, cores_per, mem_unit = _cluster_arrays(cluster,

@@ -44,6 +44,22 @@ def _restrict_dynamics(dynamics: Dynamics, idx: np.ndarray) -> Dynamics:
                     store_outages=dynamics.store_outages)
 
 
+def _take_tasks(workload, sel: np.ndarray):
+    """The sub-workload of the tasks at indices ``sel`` (submission order
+    preserved).  Shared by :func:`simulate_hierarchical` and the study
+    planner's sharded path (``run_study(server_shards=k)``) so both split
+    the trace identically — the parity contract between them."""
+    return dc_replace(
+        workload,
+        r_submit=workload.r_submit[sel],
+        r_exec=workload.r_exec[sel],
+        d_est=workload.d_est[sel],
+        d_act=workload.d_act[sel],
+        task_type=workload.task_type[sel],
+        submit_ms=workload.submit_ms[sel],
+    )
+
+
 def split_cluster(cluster: ClusterSpec, k: int):
     """k mini-clusters with interleaved membership (type mix preserved).
     Returns list of (spec, global_server_indices)."""
@@ -60,7 +76,8 @@ def simulate_hierarchical(workload, cluster: ClusterSpec, cfg: EngineConfig,
                           k: int, seed: int = 0,
                           mode: str = "sequential",
                           b: int | None = None,
-                          dynamics: Dynamics | None = None) -> SimResult:
+                          dynamics: Dynamics | None = None,
+                          use_kernel: bool | str = "auto") -> SimResult:
     """Run k independent mini-clusters; tasks round-robin across them.
 
     ``mode`` selects the engine driver per mini-cluster (see
@@ -78,6 +95,14 @@ def simulate_hierarchical(workload, cluster: ClusterSpec, cfg: EngineConfig,
     its own servers (ids remapped to the part-local numbering; windows on
     servers outside the part dropped), and store-outage windows apply to
     every part.
+
+    ``use_kernel`` forwards to :func:`repro.sim.simulate` per mini-cluster
+    (``"auto"`` picks the fused megakernel only where it compiles).  For
+    the grid-scale version of this decomposition — every part in one
+    compiled program, parts pmap-sharded across devices — use
+    ``run_study(..., server_shards=k)`` / ``simulate_many(...,
+    server_shards=k)``, which match this function's batched mode
+    bit-exactly at ``b=cfg.b``.
     """
     m = workload.r_submit.shape[0]
     parts = split_cluster(cluster, k)
@@ -93,20 +118,12 @@ def simulate_hierarchical(workload, cluster: ClusterSpec, cfg: EngineConfig,
     results = []
     for c, (spec, idx) in enumerate(parts):
         sel = np.where(assign == c)[0]
-        sub = dc_replace(
-            workload,
-            r_submit=workload.r_submit[sel],
-            r_exec=workload.r_exec[sel],
-            d_est=workload.d_est[sel],
-            d_act=workload.d_act[sel],
-            task_type=workload.task_type[sel],
-            submit_ms=workload.submit_ms[sel],
-        )
+        sub = _take_tasks(workload, sel)
         sub_b = max(1, spec.num_servers // 2) if b is None else int(b)
         part_dyn = None if dynamics is None \
             else _restrict_dynamics(dynamics, idx)
         res = simulate(sub, spec, cfg._replace(b=sub_b), seed=seed + c,
-                       mode=mode, dynamics=part_dyn)
+                       mode=mode, dynamics=part_dyn, use_kernel=use_kernel)
         results.append((res, sel, idx))
 
     # merge back into submission order with global server ids; the policy

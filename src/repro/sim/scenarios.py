@@ -93,7 +93,7 @@ _WL_CACHE_MAX = 256
 def run_scenario(base, cluster: ClusterSpec, scenario: Scenario,
                  cfg: EngineConfig, seed: int = 0, *,
                  mode: str = "batched",
-                 use_kernel: bool = False) -> SimResult:
+                 use_kernel: bool | str = "auto") -> SimResult:
     """One (scenario, seed) point = ``simulate`` on the scenario workload
     with the scenario's dynamics lowered to window operands."""
     wl = scenario_workload(base, scenario, seed)
@@ -155,7 +155,7 @@ def run_scenario_grid(base, cluster: ClusterSpec,
                       scenarios: Sequence[Scenario] | Scenario,
                       cfg: EngineConfig, seeds: Sequence[int] = (0,), *,
                       point_chunk: int | None = None,
-                      use_kernel: bool = False,
+                      use_kernel: bool | str = "auto",
                       shard: bool = True) -> ScenarioSweep:
     """Run a (seeds × scenarios) grid of batched-driver simulations in one
     compiled program — a thin wrapper over the unified study planner

@@ -56,7 +56,8 @@ from .cluster import ClusterSpec
 from .engine import (EngineConfig, SimResult, _blocked_inputs,
                      _cluster_arrays, _lower_dynamics, _make_dyn,
                      _make_dyn_ints, _simulate_batched_jax, _static_cfg,
-                     _validate_config)
+                     _validate_config, resolve_use_kernel)
+from .hierarchy import _restrict_dynamics, _take_tasks, split_cluster
 from .metrics import summarize
 from .scenarios import Scenario, scenario_workload
 
@@ -64,6 +65,15 @@ from .scenarios import Scenario, scenario_workload
 #: chunk is sized so ``chunk × m × 7 × 4B`` stays under this; the full
 #: carry (ring buffers etc.) is per-lane on top, so keep it conservative.
 _CHUNK_BYTES = 256 << 20
+
+#: Single-device grids at or below this many flattened points default to
+#: ``point_chunk=1`` — a host loop over the per-run program.  vmap lanes
+#: on one device run in lock-step with no fan-out to hide it, and for
+#: small grids the lock-step overhead loses to the plain per-run loop
+#: (the committed BENCH_study grid measured 0.73× at 18 points on one
+#: CPU device).  Larger grids keep the chunked vmap, which amortizes
+#: dispatch overhead across many lanes.
+_SMALL_GRID_POINTS = 24
 
 
 class Study(NamedTuple):
@@ -252,8 +262,10 @@ def _pmap_shard(static_cfg: EngineConfig, n: int, num_types: int,
 
 
 def run_study(base, cluster: ClusterSpec, study: Study, *,
-              use_kernel: bool = False, point_chunk: int | None = None,
-              shard: bool = True) -> StudyResult:
+              use_kernel: bool | str = "auto",
+              point_chunk: int | None = None,
+              shard: bool = True,
+              server_shards: int | None = None) -> StudyResult:
     """Run a (seeds × configs × scenarios) study as one compiled program.
 
     Parameters
@@ -268,22 +280,42 @@ def run_study(base, cluster: ClusterSpec, study: Study, *,
         route dodoor/(1+β) decisions through the fused Pallas megakernel
         on **every** axis — scenarios with down windows ride its
         masked-sampling variant (draw-for-draw identical to the two-stage
-        masked path).  The kernel bakes ``alpha``/``block_t``/
-        ``interpret`` into its grid program, so those become
+        masked path).  The default ``"auto"`` resolves via
+        :func:`repro.sim.resolve_use_kernel`: the kernel path only when
+        it would *compile* (TPU backend, or ``interpret`` explicitly
+        forced off) — interpret-mode emulation is strictly slower than
+        the two-stage jnp path it mirrors.  The kernel bakes ``alpha``/
+        ``block_t``/``interpret`` into its grid program, so those become
         program-shaping on this path: an α sweep under ``use_kernel``
         must be split per α column.
     point_chunk:
         single-device path only — max flattened points per dispatch
         (default: sized so one dispatch's stacked outputs stay under
-        ~256 MB).  Chunking concatenates host-side and never changes
-        values.
+        ~256 MB, except small grids — ≤ ``_SMALL_GRID_POINTS`` flattened
+        points — which default to ``1``).  ``point_chunk=1`` dispatches
+        the *per-run* program point by point (no vmap lock-step, shares
+        :func:`simulate`'s compile cache); larger chunks vmap.  Chunking
+        never changes values.
     shard:
-        when ``jax.device_count() > 1``, fan the flattened point axis out
-        with ``pmap``; ``False`` forces the chunked-vmap path.
-
-    Returns a :class:`StudyResult`; ``point(si, gi, ki)`` recovers any
-    cell bit-identically to the nested per-run loop (placements/ledger
-    exact, timestamps to float32 round-off).
+        when ``jax.device_count() > 1``, fan out with ``pmap`` — the
+        flattened point axis, or under ``server_shards`` the mini-cluster
+        axis; ``False`` forces the single-device path.
+    server_shards:
+        split the **server table** instead of replicating it: the fleet
+        is partitioned into ``k`` round-robin mini-clusters (exactly
+        :func:`repro.sim.split_cluster`) and tasks round-robin across
+        them, so every engine operand with an ``[n, …]`` axis — the
+        load-cache table, ring buffers, core/memory ledgers, and the
+        per-block ``O(b·n)`` candidate-sampling planes — shrinks to
+        ``n/k``, cutting total sampling work ``k×``.  Each point's merged
+        result is **bit-identical** to ``simulate_hierarchical(workload,
+        cluster, cfg, k, seed, mode="batched", b=cfg.b,
+        dynamics=sc.dynamics)`` (§4.2 semantics: ``cfg.b`` is the
+        *per-mini-cluster* batch; per-part seeds ``seed + c``).  Requires
+        ``k | num_servers`` so every part compiles the same program.  On
+        a multi-device host the part axis pmap-shards (the
+        ``jax.distributed``-ready layout: shard c's table lives only on
+        its device); on one device the parts ride an outer vmap.
     """
     seeds = tuple(int(s) for s in study.seeds)
     configs = study.configs
@@ -304,6 +336,7 @@ def run_study(base, cluster: ClusterSpec, study: Study, *,
     for sc in scenarios:
         if not isinstance(sc, Scenario):
             raise TypeError(f"expected Scenario, got {type(sc).__name__}")
+    use_kernel = resolve_use_kernel(use_kernel, configs[0].interpret)
     static_cfg = _grid_static(configs, use_kernel)
 
     # The masked megakernel program is selected statically from the
@@ -312,6 +345,11 @@ def run_study(base, cluster: ClusterSpec, study: Study, *,
     # all-true mask draws identically anyway.
     kernel_masked = use_kernel and any(sc.dynamics.has_down_windows
                                        for sc in scenarios)
+
+    if server_shards is not None and int(server_shards) > 1:
+        return _run_study_sharded(base, cluster, seeds, configs, scenarios,
+                                  static_cfg, use_kernel, kernel_masked,
+                                  int(server_shards), shard, point_chunk)
 
     n = cluster.num_servers
     C, node_type, cores_per, mem_unit = _cluster_arrays(cluster,
@@ -397,11 +435,49 @@ def run_study(base, cluster: ClusterSpec, study: Study, *,
         msgs = msgs_d.reshape(use_dev * k, 4)[:P]
         outs = tuple(o.reshape(use_dev * k, nb * b)[:P] for o in outs_d)
     else:
-        # --- single device: chunked vmap over the flattened point axis.
+        # --- single device: chunked vmap over the flattened point axis,
+        #     except small grids, which drop to the plain per-run loop
+        #     (vmap lock-step on one device loses below ~2 dozen points —
+        #     see _SMALL_GRID_POINTS).
         if point_chunk is None:
             per_point_bytes = nb * b * 7 * 4
             point_chunk = max(1, min(P, _CHUNK_BYTES // max(
                 1, per_point_bytes)))
+            if P <= _SMALL_GRID_POINTS:
+                point_chunk = 1
+        if point_chunk == 1:
+            # Dispatch the unvmapped per-run program point by point: the
+            # same jit cache entry simulate()/run_scenario() populate, so
+            # a study after a warm-up run compiles nothing.  Windows stay
+            # per-scenario (no cross-grid width alignment) and the masked
+            # kernel is selected per scenario, exactly as per-run.
+            dyn_dev = [_make_dyn(c) for c in configs]
+            ints_dev = [_make_dyn_ints(c) for c in configs]
+            wins_run = ([_lower_dynamics(sc.dynamics, n)
+                         for sc in scenarios] if win_ax else [wins_k])
+            msgs_parts, outs_parts = [], []
+            for p in range(P):
+                si, gi, ki = int(si_g[p]), int(gi_g[p]), int(ki_g[p])
+                sub_p = (jnp.asarray(submit_sk[si * K + ki]) if sub_ax
+                         else xs[5])
+                ids, r_sub, r_exec, d_est, d_act, _, tid, valid = xs
+                xs_p = (ids, r_sub, r_exec, d_est, d_act, sub_p, tid,
+                        valid)
+                masked_p = (use_kernel and
+                            scenarios[ki].dynamics.has_down_windows)
+                msgs_c, outs_c = _simulate_batched_jax(
+                    xs_p, C, node_type, mem_unit, cores_per, dyn_dev[gi],
+                    ints_dev[gi], wins_run[ki if win_ax else 0],
+                    static_cfg, n, cluster.num_types, seeds_np[si],
+                    use_kernel, masked_p)
+                msgs_parts.append(np.asarray(msgs_c)[None])
+                outs_parts.append(tuple(
+                    np.asarray(o).reshape(1, nb * b) for o in outs_c))
+            msgs = np.concatenate(msgs_parts, axis=0)
+            outs = tuple(np.concatenate([p[i] for p in outs_parts], axis=0)
+                         for i in range(7))
+            return _finish_study(outs, msgs, planes, static_cfg, seeds,
+                                 configs, scenarios, S, G, K, m)
         msgs_parts, outs_parts = [], []
         for lo in range(0, P, point_chunk):
             sel = slice(lo, lo + point_chunk)
@@ -423,9 +499,17 @@ def run_study(base, cluster: ClusterSpec, study: Study, *,
         outs = tuple(np.concatenate([p[i] for p in outs_parts], axis=0)
                      for i in range(7))
 
-    msgs = msgs.reshape(S, G, K, 4)
+    return _finish_study(outs, msgs, planes, static_cfg, seeds, configs,
+                         scenarios, S, G, K, m)
+
+
+def _finish_study(outs, msgs, planes, static_cfg, seeds, configs, scenarios,
+                  S, G, K, m) -> StudyResult:
+    """Fold the flattened-point outputs ``outs`` (7 leaves ``[P, ≥m]``) and
+    ``msgs [P, 4]`` back into the ``[S, G, K, …]`` grid."""
+    msgs = np.asarray(msgs).reshape(S, G, K, 4)
     j, start, finish, enq, sched_ms, cores, mem_mb = (
-        o[:, :m].reshape(S, G, K, m) for o in outs)
+        np.asarray(o)[:, :m].reshape(S, G, K, m) for o in outs)
     return StudyResult(
         server=j.astype(np.int32),
         enqueue_ms=enq, start_ms=start, finish_ms=finish,
@@ -433,6 +517,247 @@ def run_study(base, cluster: ClusterSpec, study: Study, *,
         submit_ms=planes, msgs=msgs, policy=static_cfg.policy,
         seeds=seeds, configs=configs, scenarios=scenarios,
     )
+
+
+#: Sharded-study executables keyed on the static program knobs + layout
+#: flags (jit and pmap both keep per-shape compile caches underneath).
+_SHARD_CACHE: dict = {}
+
+
+def _sharded_study_fn(static_cfg: EngineConfig, n_c: int, num_types: int,
+                      use_kernel: bool, kernel_masked: bool, sub_ax: bool,
+                      win_ax: bool, pmapped: bool):
+    """The nested part×point program of the sharded planner: an outer map
+    over the k mini-cluster shards (each with its own task bodies, cluster
+    arrays, windows, and seeds) and an inner vmap over the P flattened
+    grid points.  On one device the part axis is a second vmap level; on a
+    multi-device host it is the ``pmap`` axis — every ``[n_c, …]`` operand
+    (the server table, ring buffers, ledgers) lives only on its shard's
+    device, which is the layout a ``jax.distributed`` fleet would use."""
+    key = (static_cfg, n_c, num_types, use_kernel, kernel_masked, sub_ax,
+           win_ax, pmapped)
+    fn = _SHARD_CACHE.get(key)
+    if fn is not None:
+        return fn
+
+    def core(xs_k, sub_kp, wins_kp, C_k, nt_k, mu_k, cp_k, dyn_p, ints_p,
+             seeds_kp):
+        def part(xs, sub_p, win_c, C, nt, mu, cp, seeds_p):
+            def point(sub_b, win, dyn_vec, dyn_ints, seed):
+                ids, r_sub, r_exec, d_est, d_act, sub0, tid, valid = xs
+                xs_p = (ids, r_sub, r_exec, d_est, d_act,
+                        sub_b if sub_ax else sub0, tid, valid)
+                return _simulate_batched_jax(
+                    xs_p, C, nt, mu, cp, dyn_vec, dyn_ints, win,
+                    static_cfg, n_c, num_types, seed, use_kernel,
+                    kernel_masked)
+
+            return jax.vmap(point, in_axes=(0 if sub_ax else None,
+                                            0 if win_ax else None,
+                                            0, 0, 0))(
+                sub_p, win_c, dyn_p, ints_p, seeds_p)
+
+        return jax.vmap(part, in_axes=(0, 0 if sub_ax else None, 0,
+                                       0, 0, 0, 0, 0))(
+            xs_k, sub_kp, wins_kp, C_k, nt_k, mu_k, cp_k, seeds_kp)
+
+    if pmapped:
+        fn = jax.pmap(core, in_axes=(0, 0 if sub_ax else None, 0, 0, 0,
+                                     0, 0, None, None, 0))
+    else:
+        fn = jax.jit(core)
+    _SHARD_CACHE[key] = fn
+    return fn
+
+
+def _run_study_sharded(base, cluster: ClusterSpec, seeds, configs,
+                       scenarios, static_cfg: EngineConfig,
+                       use_kernel: bool, kernel_masked: bool, k: int,
+                       shard: bool, point_chunk: int | None) -> StudyResult:
+    """``run_study``'s sharded-table execution strategy (see its
+    ``server_shards`` docs): k round-robin mini-clusters, each running the
+    engine over its own ``[n/k, …]`` server table, merged host-side into
+    full-fleet results with global server ids.  The split/merge arithmetic
+    is shared with :func:`simulate_hierarchical` — that per-run loop is
+    the parity oracle for every grid point."""
+    n = cluster.num_servers
+    if n % k:
+        raise ValueError(
+            f"server_shards={k} must divide num_servers={n}: equal-size "
+            "mini-clusters keep the part axis one compiled program")
+    parts = split_cluster(cluster, k)
+    n_c = n // k
+    num_types = cluster.num_types
+    b = static_cfg.b
+    m = base.r_submit.shape[0]
+    S, G, K = len(seeds), len(configs), len(scenarios)
+    P = S * G * K
+
+    # Restriction below silently drops out-of-part server ids, so validate
+    # against the full fleet here (same check as simulate_hierarchical).
+    for sc in scenarios:
+        for field in ("outages", "joins", "leaves", "slowdowns"):
+            for e in getattr(sc.dynamics, field):
+                if not 0 <= int(e[0]) < n:
+                    raise ValueError(
+                        f"dynamics server {int(e[0])} outside fleet of {n}")
+
+    # --- tasks round-robin across shards; per-part blocked bodies padded
+    #     on the block axis to the part maximum so the part axis stacks.
+    #     Padding blocks are all-invalid ⇒ inert: no commits, no flush
+    #     (``do_flush = … & valid``), no push (``valid[-1]`` is False), no
+    #     message counts — the part's state stops evolving, and the padded
+    #     rows' outputs are sliced away in the merge.
+    assign = np.arange(m) % k
+    sels = [np.flatnonzero(assign == c) for c in range(k)]
+    xs_parts = [_blocked_inputs(_take_tasks(base, sel), b) for sel in sels]
+    nb_max = max(x[0].shape[0] for x in xs_parts)
+
+    def pad_blocks(xs_c):
+        nbc = xs_c[0].shape[0]
+        if nbc == nb_max:
+            return xs_c
+        out = []
+        for i, a in enumerate(xs_c):
+            fill = (jnp.zeros((nb_max - nbc,) + a.shape[1:], a.dtype)
+                    if i == 7 else jnp.repeat(a[-1:], nb_max - nbc, axis=0))
+            out.append(jnp.concatenate([a, fill], axis=0))
+        return tuple(out)
+
+    xs_parts = [pad_blocks(x) for x in xs_parts]
+    xs_k = tuple(jnp.stack([x[i] for x in xs_parts]) for i in range(8))
+
+    arrs = [_cluster_arrays(spec, static_cfg.mem_units) for spec, _ in parts]
+    C_k, nt_k, cp_k, mu_k = (jnp.stack([a[i] for a in arrs])
+                             for i in range(4))
+
+    # --- per-axis operand planes (as the dense path, plus the part axis)
+    dyn_p = np.stack([np.asarray(_make_dyn(c)) for c in configs])   # [G,10]
+    ints_p = np.stack([np.asarray(_make_dyn_ints(c)) for c in configs])
+    seeds_np = np.asarray(seeds, np.int32)
+    p_idx = np.arange(P)
+    si_g = p_idx // (G * K)
+    gi_g = (p_idx // K) % G
+    ki_g = p_idx % K
+    dyn_p = dyn_p[gi_g]                                           # [P, 10]
+    ints_p = ints_p[gi_g]                                         # [P, 2]
+    # hierarchy's per-part seeds: seed + c (bit-parity with the oracle).
+    seeds_kp = np.stack([seeds_np[si_g] + c for c in range(k)])   # [k, P]
+
+    # Windows restrict per part (ids remapped to part-local numbering;
+    # global store outages pass through); widths align across the whole
+    # part × scenario grid so the axes stack — padding is inert.
+    win_ax = K > 1
+    restr = [[_restrict_dynamics(sc.dynamics, idx) for sc in scenarios]
+             for _, idx in parts]
+    raw = [[_lower_dynamics(d, n_c) for d in row] for row in restr]
+    widths = tuple(max(w.widths[i] for row in raw for w in row)
+                   for i in range(4))
+    wins = [[jax.device_get(_lower_dynamics(d, n_c, widths=widths))
+             for d in row] for row in restr]
+    if win_ax:
+        per_part = [jax.tree_util.tree_map(
+            lambda *ws: np.stack(ws), *[wins[c][ki] for ki in ki_g])
+            for c in range(k)]
+        wins_kp = jax.tree_util.tree_map(lambda *ws: np.stack(ws),
+                                         *per_part)       # [k, P, n_c, W]
+    else:
+        wins_kp = jax.tree_util.tree_map(
+            lambda *ws: np.stack(ws), *[wins[c][0] for c in range(k)])
+
+    # Submit planes: global per-(seed, scenario) arrival planes split by
+    # the task round-robin, blocked per part, padded to nb_max.
+    sub_ax = any(sc.arrivals is not None for sc in scenarios)
+    if sub_ax:
+        planes = np.stack([
+            np.stack([np.asarray(scenario_workload(base, sc, sd).submit_ms)
+                      for sc in scenarios])
+            for sd in seeds])                                   # [S, K, m]
+
+        def part_plane(c, p):
+            a = _block_plane(planes[si_g[p], ki_g[p]][sels[c]], b)
+            if a.shape[0] < nb_max:
+                a = np.concatenate(
+                    [a, np.repeat(a[-1:], nb_max - a.shape[0], axis=0)])
+            return a
+
+        sub_kp = np.stack([np.stack([part_plane(c, p) for p in range(P)])
+                           for c in range(k)])        # [k, P, nb_max, b]
+    else:
+        planes = np.broadcast_to(np.asarray(base.submit_ms), (S, K, m))
+        sub_kp = np.zeros((), np.float32)   # unused broadcast placeholder
+
+    ndev = jax.device_count() if shard else 1
+    if ndev > 1 and k > 1:
+        # --- pmap over the part axis, laid out [use_dev, kg]; the ragged
+        #     tail repeats the last part and is dropped before the merge
+        #     (so repeated parts never double-count messages).
+        run = _sharded_study_fn(static_cfg, n_c, num_types, use_kernel,
+                                kernel_masked, sub_ax, win_ax, True)
+        use_dev = min(ndev, k)
+        kg = -(-k // use_dev)
+        pad = use_dev * kg - k
+
+        def lay(a):
+            a = np.asarray(a)
+            a = np.concatenate([a, np.repeat(a[-1:], pad, axis=0)]) \
+                if pad else a
+            return a.reshape((use_dev, kg) + a.shape[1:])
+
+        xs_in = tuple(lay(jax.device_get(x)) for x in xs_k)
+        msgs_d, outs_d = jax.device_get(run(
+            xs_in, lay(sub_kp) if sub_ax else jnp.asarray(sub_kp),
+            jax.tree_util.tree_map(lay, wins_kp),
+            lay(jax.device_get(C_k)), lay(jax.device_get(nt_k)),
+            lay(jax.device_get(mu_k)), lay(jax.device_get(cp_k)),
+            dyn_p, ints_p, lay(seeds_kp)))
+        msgs_kp = msgs_d.reshape(use_dev * kg, P, 4)[:k]
+        outs_kp = tuple(o.reshape(use_dev * kg, P, nb_max * b)[:k]
+                        for o in outs_d)
+    else:
+        # --- single device: parts ride an outer vmap; chunk the point
+        #     axis under the same stacked-output budget as the dense path
+        #     (per point the k parts together hold ~m tasks).
+        run = _sharded_study_fn(static_cfg, n_c, num_types, use_kernel,
+                                kernel_masked, sub_ax, win_ax, False)
+        if point_chunk is None:
+            per_point_bytes = k * nb_max * b * 7 * 4
+            point_chunk = max(1, min(P, _CHUNK_BYTES // max(
+                1, per_point_bytes)))
+        msgs_parts, outs_parts = [], []
+        for lo in range(0, P, point_chunk):
+            sel = slice(lo, lo + point_chunk)
+            msgs_c, outs_c = run(
+                xs_k,
+                jnp.asarray(sub_kp[:, sel]) if sub_ax
+                else jnp.asarray(sub_kp),
+                jax.tree_util.tree_map(
+                    lambda a: jnp.asarray(a[:, sel]), wins_kp)
+                if win_ax else jax.tree_util.tree_map(jnp.asarray, wins_kp),
+                C_k, nt_k, mu_k, cp_k, jnp.asarray(dyn_p[sel]),
+                jnp.asarray(ints_p[sel]), jnp.asarray(seeds_kp[:, sel]))
+            msgs_parts.append(np.asarray(msgs_c))
+            outs_parts.append(tuple(
+                np.asarray(o).reshape(k, o.shape[1], nb_max * b)
+                for o in outs_c))
+        msgs_kp = np.concatenate(msgs_parts, axis=1)
+        outs_kp = tuple(np.concatenate([p[i] for p in outs_parts], axis=1)
+                        for i in range(7))
+
+    # --- merge: submission-order interleave with global server ids (the
+    #     simulate_hierarchical merge, vectorized over the point axis);
+    #     message counters sum across the k independent mini-clusters.
+    msgs = msgs_kp.astype(np.int64).sum(axis=0).astype(np.int32)  # [P, 4]
+    merged = [np.zeros((P, m), np.float32) for _ in range(7)]
+    for c in range(k):
+        sel, idxg = sels[c], parts[c][1]
+        m_c = sel.size
+        j_loc = outs_kp[0][c, :, :m_c].astype(np.int64)
+        merged[0][:, sel] = idxg[j_loc]
+        for f in range(1, 7):
+            merged[f][:, sel] = outs_kp[f][c, :, :m_c]
+    return _finish_study(tuple(merged), msgs, planes, static_cfg, seeds,
+                         configs, scenarios, S, G, K, m)
 
 
 def summarize_study(st: StudyResult) -> list:

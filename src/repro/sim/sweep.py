@@ -168,9 +168,10 @@ def summarize_sweep(sw: SweepResult) -> list:
 def simulate_many(workload, cluster: ClusterSpec,
                   configs: Sequence[EngineConfig] | EngineConfig,
                   seeds: Sequence[int] = (0,), *,
-                  use_kernel: bool = False,
+                  use_kernel: bool | str = "auto",
                   seed_chunk: int | None = None,
-                  shard: bool = True, dynamics=None) -> SweepResult:
+                  shard: bool = True, dynamics=None,
+                  server_shards: int | None = None) -> SweepResult:
     """Run a (seeds × configs) grid of batched-driver simulations in one
     compiled program — a thin wrapper over the unified study planner
     (:func:`repro.sim.study.run_study`) with a singleton scenario axis.
@@ -188,10 +189,13 @@ def simulate_many(workload, cluster: ClusterSpec,
         The grid's seed axis (python ints, as ``simulate(seed=...)``).
     use_kernel:
         Route dodoor/(1+β) decisions through the fused Pallas megakernel
-        (as ``simulate(use_kernel=True)``).  The kernel is vmapped over the
-        grid; on CPU it runs interpret-mode — leave False for large grids
-        there.  Timelines with down windows ride the masked-sampling
-        kernel variant (draw-for-draw identical to the two-stage path).
+        (as ``simulate(use_kernel=True)``).  The default ``"auto"``
+        resolves via :func:`repro.sim.resolve_use_kernel`: kernel only
+        where it compiles (TPU, or ``interpret`` forced off) — on CPU the
+        kernel would run interpret-mode emulation, strictly slower than
+        the two-stage path it mirrors.  Timelines with down windows ride
+        the masked-sampling kernel variant (draw-for-draw identical to
+        the two-stage path).
     seed_chunk:
         Single-device path only — max seeds per vmap dispatch.  Default
         sizes chunks so one dispatch's stacked outputs stay under ~256 MB;
@@ -207,6 +211,14 @@ def simulate_many(workload, cluster: ClusterSpec,
         scenario axis itself — or scenario × config jointly — use
         ``repro.sim.scenarios.run_scenario_grid`` or
         ``repro.sim.study.run_study``.
+    server_shards:
+        split the server table into k round-robin mini-clusters per grid
+        point instead of replicating the full fleet (see
+        :func:`repro.sim.study.run_study` — each point then matches
+        ``simulate_hierarchical(..., k, mode="batched", b=cfg.b)``
+        bit-exactly).  This is the big-``n`` path: per-block sampling
+        work drops k-fold and the ``[n/k, …]`` shards pmap across
+        devices.  Requires ``k | num_servers``.
 
     Returns a :class:`SweepResult`; ``point(si, gi)`` recovers any single
     run bit-identically to ``simulate(workload, cluster, configs[gi],
@@ -229,7 +241,7 @@ def simulate_many(workload, cluster: ClusterSpec,
     st = run_study(workload, cluster,
                    Study(seeds=seeds, configs=configs, scenarios=(scen,)),
                    use_kernel=use_kernel, point_chunk=point_chunk,
-                   shard=shard)
+                   shard=shard, server_shards=server_shards)
     return SweepResult(
         server=st.server[:, :, 0],
         enqueue_ms=st.enqueue_ms[:, :, 0], start_ms=st.start_ms[:, :, 0],

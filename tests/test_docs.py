@@ -10,8 +10,8 @@ REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 def test_required_docs_exist():
     for f in ("README.md", "docs/ARCHITECTURE.md", "docs/STUDIES.md",
-              "docs/SWEEPS.md", "docs/SCENARIOS.md", "ROADMAP.md",
-              "CHANGES.md"):
+              "docs/SWEEPS.md", "docs/SCENARIOS.md", "docs/SCALING.md",
+              "ROADMAP.md", "CHANGES.md"):
         assert os.path.exists(os.path.join(REPO, f)), f
 
 
@@ -92,7 +92,8 @@ def test_bench_schema_docs_match_written_files():
                 encoding="utf-8").read()
     for fname, required in (
             ("BENCH_engine.json", ("kernels_decisions_per_s", "engine")),
-            ("BENCH_scale.json", ("sweep_vs_loop", "scale_points"))):
+            ("BENCH_scale.json", ("sweep_vs_loop", "scale_points",
+                                  "meanfield_points"))):
         assert fname in arch
         path = os.path.join(REPO, fname)
         if os.path.exists(path):
@@ -100,3 +101,23 @@ def test_bench_schema_docs_match_written_files():
             for key in required + ("schema", "git_sha", "backend"):
                 assert key in doc, (fname, key)
                 assert key in arch, (fname, key)
+
+
+def test_bench_artifacts_share_one_envelope():
+    """Every committed BENCH_*.json carries the unified envelope written
+    by ``benchmarks.common.write_bench_json`` — and never the legacy
+    ``git`` key the pre-unification writers emitted (``git_sha`` is the
+    one spelling, so artifacts stay machine-comparable across benches)."""
+    import glob
+    import json
+    paths = sorted(glob.glob(os.path.join(REPO, "BENCH_*.json")))
+    assert paths, "no committed bench artifacts found"
+    for path in paths:
+        doc = json.load(open(path))
+        name = os.path.basename(path)
+        for key in ("schema", "bench", "git_sha", "backend", "devices"):
+            assert key in doc, (name, key)
+        assert "git" not in doc, f"{name}: legacy 'git' key"
+        assert doc["schema"] == 1, name
+        expected = name[len("BENCH_"):-len(".json")]
+        assert doc["bench"] == expected, (name, doc["bench"])

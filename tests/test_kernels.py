@@ -6,7 +6,9 @@ import numpy as np
 import pytest
 
 from repro.kernels.dodoor_choice import (dodoor_choice, dodoor_choice_ref,
-                                         dodoor_fused, dodoor_fused_ref)
+                                         dodoor_fused, dodoor_fused_ref,
+                                         dodoor_fused_sparse,
+                                         dodoor_fused_sparse_ref)
 from repro.kernels.flash_attention import attention_ref, flash_attention
 from repro.kernels.rl_score import rl_score_matrix, rl_score_matrix_ref
 from repro.kernels.ssd_chunk import ssd, ssd_ref
@@ -225,6 +227,121 @@ class TestDodoorFusedMaskedMegakernel:
         assert choice.shape == (T,)
         assert (np.asarray(cand) == np.asarray(rcand)).all()
         assert (np.asarray(choice) == np.asarray(rchoice)).all()
+
+
+class TestDodoorFusedSparseMegakernel:
+    """The sparse-candidate-gather megakernel (ISSUE 6 tentpole): the
+    dense per-task ``d [T, N]`` duration plane is replaced by the
+    factorized ``d_types [T, TT]`` + server→type map, with node_type
+    riding the server table as one extra column and each candidate's
+    duration resolved by a TT-wide one-hot pick after the row gather.
+    Draws stay bit-exact vs ``sample_feasible_batch``; choices and
+    candidates are exactly the dense megakernel's on the expanded d."""
+
+    def _inputs(self, T, N, TT=4, seed=0):
+        rng = np.random.RandomState(seed)
+        base = jax.random.PRNGKey(seed)
+        keys = jax.vmap(lambda i: jax.random.fold_in(base, i))(jnp.arange(T))
+        r = jnp.asarray(rng.rand(T, 2).astype(np.float32) * 8)
+        d_types = jnp.asarray(rng.rand(T, TT).astype(np.float32) * 1000)
+        node_type = jnp.asarray(rng.randint(0, TT, N), jnp.int32)
+        L = jnp.asarray(rng.rand(N, 2).astype(np.float32) * 50)
+        D = jnp.asarray(rng.rand(N).astype(np.float32) * 5000)
+        C = jnp.asarray(8.0 + rng.rand(N, 2).astype(np.float32) * 100)
+        avail = jnp.asarray(rng.rand(T, N) > 0.4)
+        return keys, r, d_types, node_type, L, D, C, avail
+
+    @pytest.mark.parametrize("T,N,alpha", [(16, 20, 0.5), (300, 100, 0.5),
+                                           (257, 64, 0.0), (64, 500, 1.0)])
+    def test_matches_sparse_ref(self, T, N, alpha):
+        """Candidates and choice bit-exact vs the jnp oracle (which
+        expands d and delegates to the dense reference); scores to the
+        documented 1-ulp FMA caveat."""
+        keys, r, dt, nt, L, D, C, _ = self._inputs(T, N, seed=T)
+        choice, cand, scores = dodoor_fused_sparse(keys, r, dt, nt, L, D, C,
+                                                   alpha, block_t=64)
+        rchoice, rcand, rscores = dodoor_fused_sparse_ref(keys, r, dt, nt,
+                                                          L, D, C, alpha)
+        assert (np.asarray(cand) == np.asarray(rcand)).all()
+        assert (np.asarray(choice) == np.asarray(rchoice)).all()
+        np.testing.assert_allclose(np.asarray(scores), np.asarray(rscores),
+                                   rtol=2e-5, atol=1e-6)
+
+    @pytest.mark.parametrize("T,N", [(64, 33), (300, 100)])
+    def test_matches_dense_megakernel_exactly(self, T, N):
+        """On the expanded ``d[t, j] = d_types[t, node_type[j]]`` plane
+        the dense and sparse kernels are the *same program* observationally
+        — candidates, choice, and scores all bit-identical (the gathered
+        duration is the same float either way)."""
+        keys, r, dt, nt, L, D, C, _ = self._inputs(T, N, seed=T + 1)
+        d = dt[:, nt]
+        c0, k0, s0 = dodoor_fused(keys, r, d, L, D, C, 0.5, block_t=64)
+        c1, k1, s1 = dodoor_fused_sparse(keys, r, dt, nt, L, D, C, 0.5,
+                                         block_t=64)
+        assert (np.asarray(k0) == np.asarray(k1)).all()
+        assert (np.asarray(c0) == np.asarray(c1)).all()
+        np.testing.assert_array_equal(np.asarray(s0), np.asarray(s1))
+
+    def test_draws_pinned_to_two_stage_sampler(self):
+        """The in-kernel draws ARE sample_feasible_batch's — the ISSUE 6
+        acceptance pin at n ≤ 10³."""
+        from repro.core.prefilter import feasible_mask, sample_feasible_batch
+        T, N = 128, 1000
+        keys, r, dt, nt, L, D, C, _ = self._inputs(T, N, seed=9)
+        _, cand, _ = dodoor_fused_sparse(keys, r, dt, nt, L, D, C, 0.5)
+        two_stage = sample_feasible_batch(keys, feasible_mask(r, C), 2)
+        assert (np.asarray(cand) == np.asarray(two_stage)).all()
+
+    @pytest.mark.parametrize("T", (1, 9, 137))
+    def test_partial_block_padding(self, T):
+        """T not a multiple of block_t: padded rows must not leak."""
+        keys, r, dt, nt, L, D, C, _ = self._inputs(T, 20, seed=T)
+        choice, cand, _ = dodoor_fused_sparse(keys, r, dt, nt, L, D, C, 0.5,
+                                              block_t=8)
+        rchoice, rcand, _ = dodoor_fused_sparse_ref(keys, r, dt, nt, L, D,
+                                                    C, 0.5)
+        assert choice.shape == (T,)
+        assert (np.asarray(cand) == np.asarray(rcand)).all()
+        assert (np.asarray(choice) == np.asarray(rchoice)).all()
+
+    def test_masked_variant_pinned_and_all_true_inert(self):
+        """The masked sparse kernel draws from the intersected mask
+        bit-exactly, and an all-true mask reproduces the unmasked program
+        (the study planner's static masked/unmasked selection relies on
+        this)."""
+        from repro.core.prefilter import feasible_mask, sample_feasible_batch
+        T, N = 137, 40
+        keys, r, dt, nt, L, D, C, avail = self._inputs(T, N, seed=6)
+        choice, cand, scores = dodoor_fused_sparse(keys, r, dt, nt, L, D, C,
+                                                   0.5, avail=avail,
+                                                   block_t=64)
+        rchoice, rcand, _ = dodoor_fused_sparse_ref(keys, r, dt, nt, L, D,
+                                                    C, 0.5, avail=avail)
+        two_stage = sample_feasible_batch(keys,
+                                          feasible_mask(r, C) & avail, 2)
+        assert (np.asarray(cand) == np.asarray(rcand)).all()
+        assert (np.asarray(cand) == np.asarray(two_stage)).all()
+        assert (np.asarray(choice) == np.asarray(rchoice)).all()
+        ones = jnp.ones((T, N), bool)
+        c0, k0, s0 = dodoor_fused_sparse(keys, r, dt, nt, L, D, C, 0.5)
+        c1, k1, s1 = dodoor_fused_sparse(keys, r, dt, nt, L, D, C, 0.5,
+                                         avail=ones)
+        assert (np.asarray(k0) == np.asarray(k1)).all()
+        assert (np.asarray(c0) == np.asarray(c1)).all()
+        np.testing.assert_array_equal(np.asarray(s0), np.asarray(s1))
+
+    def test_all_down_fallback_uniform(self):
+        """No available server → uniform-over-all substitution, exactly
+        the two-stage sampler's."""
+        from repro.core.prefilter import feasible_mask, sample_feasible_batch
+        T, N = 32, 9
+        keys, r, dt, nt, L, D, C, _ = self._inputs(T, N, seed=2)
+        none = jnp.zeros((T, N), bool)
+        _, cand, _ = dodoor_fused_sparse(keys, r, dt, nt, L, D, C, 0.5,
+                                         avail=none)
+        ref_cand = sample_feasible_batch(keys, feasible_mask(r, C) & none, 2)
+        assert (np.asarray(cand) == np.asarray(ref_cand)).all()
+        assert (np.asarray(cand) >= 0).all() and (np.asarray(cand) < N).all()
 
 
 class TestDodoorChoiceEnginePath:

@@ -273,3 +273,121 @@ print("study pmap fanout exact")
                              capture_output=True, text=True, timeout=420)
         assert out.returncode == 0, out.stdout + out.stderr
         assert "study pmap fanout exact" in out.stdout
+
+
+class TestKernelPathSelection:
+    """Satellite (ISSUE 6): ``use_kernel`` defaults to ``"auto"`` — the
+    fused megakernel only where it *compiles*.  On this suite's CPU
+    backend interpret-mode emulation would be strictly slower than the
+    two-stage path it mirrors, so auto must resolve to the two-stage
+    driver; an explicit True/False always wins."""
+
+    def test_resolution_rules(self):
+        from repro.sim import resolve_use_kernel
+        import jax
+        on_tpu = jax.default_backend() == "tpu"
+        # auto follows the backend (this suite runs CPU → two-stage)...
+        assert resolve_use_kernel("auto") is on_tpu
+        assert resolve_use_kernel("auto", None) is on_tpu
+        # ...unless interpret is forced: interpret=True can never compile,
+        # interpret=False promises a compiling backend.
+        assert resolve_use_kernel("auto", True) is False
+        assert resolve_use_kernel("auto", False) is True
+        # explicit booleans pass through untouched,
+        assert resolve_use_kernel(True, True) is True
+        assert resolve_use_kernel(False, False) is False
+        # and anything else is a loud error, not a silent fallback.
+        with pytest.raises(ValueError, match="auto"):
+            resolve_use_kernel("kernel")
+
+    def test_auto_default_matches_explicit_two_stage(self, small_testbed):
+        """On CPU the default-auto study is *the same program* as
+        ``use_kernel=False`` — placements, ledger, timestamps all
+        bit-identical (nothing silently routed through interpret mode)."""
+        wl = fb.synthesize(m=120, qps=40.0, seed=6)
+        cfg = EngineConfig(policy="dodoor", b=10)
+        spec = Study(seeds=(0, 1), configs=cfg)
+        auto = run_study(wl, small_testbed, spec)
+        explicit = run_study(wl, small_testbed, spec, use_kernel=False)
+        assert (auto.server == explicit.server).all()
+        assert np.array_equal(auto.finish_ms, explicit.finish_ms)
+        assert (auto.msgs == explicit.msgs).all()
+
+    def test_simulate_accepts_auto(self, small_testbed):
+        wl = fb.synthesize(m=80, qps=40.0, seed=6)
+        cfg = EngineConfig(policy="dodoor", b=10)
+        a = simulate(wl, small_testbed, cfg, seed=0, mode="batched",
+                     use_kernel="auto")
+        b = simulate(wl, small_testbed, cfg, seed=0, mode="batched",
+                     use_kernel=False)
+        assert (a.server == b.server).all()
+        with pytest.raises(ValueError, match="auto"):
+            simulate(wl, small_testbed, cfg, seed=0, mode="batched",
+                     use_kernel="fused")
+
+
+class TestServerShardedStudy:
+    """Tentpole (ISSUE 6): ``run_study(server_shards=k)`` splits the
+    server table into k round-robin mini-clusters — every point merged
+    bit-exactly to the §4.2 per-run oracle ``simulate_hierarchical(...,
+    mode="batched", b=cfg.b)``."""
+
+    @pytest.mark.parametrize("policy", ("dodoor", "pot"))
+    def test_sharded_matches_hierarchical_oracle(self, small_testbed,
+                                                 policy):
+        from repro.sim import simulate_hierarchical
+        # m=202, k=4, b=10 → part sizes 51/51/50/50 → block counts
+        # 6/6/5/5: the short parts run inert all-invalid padding blocks.
+        wl = fb.synthesize(m=202, qps=60.0, seed=7)
+        cfg = EngineConfig(policy=policy, b=10)
+        st = run_study(wl, small_testbed,
+                       Study(seeds=(0, 3), configs=cfg), server_shards=4,
+                       shard=False)
+        for si, sd in enumerate((0, 3)):
+            ref = simulate_hierarchical(wl, small_testbed, cfg, 4, seed=sd,
+                                        mode="batched", b=cfg.b)
+            assert_point_parity(ref, st.point(si, 0, 0))
+
+    def test_sharded_scenario_axes(self, small_testbed):
+        """Dynamics restrict per part (ids remapped) and arrival planes
+        split by the task round-robin — both axes stay bit-exact vs the
+        per-run hierarchical loop under the same global timeline."""
+        from repro.sim import simulate_hierarchical
+        from repro.sim.scenarios import scenario_workload
+        wl = fb.synthesize(m=202, qps=60.0, seed=8)
+        cfg = EngineConfig(policy="dodoor", b=10)
+        scens = (BURSTY, OUTAGE, STEADY)
+        st = run_study(wl, small_testbed,
+                       Study(seeds=(1,), configs=cfg, scenarios=scens),
+                       server_shards=2, shard=False)
+        for ki, sc in enumerate(scens):
+            w = scenario_workload(wl, sc, 1)
+            ref = simulate_hierarchical(w, small_testbed, cfg, 2, seed=1,
+                                        mode="batched", b=cfg.b,
+                                        dynamics=sc.dynamics)
+            assert_point_parity(ref, st.point(0, 0, ki))
+
+    def test_simulate_many_passthrough(self, small_testbed):
+        from repro.sim import simulate_hierarchical
+        wl = fb.synthesize(m=120, qps=40.0, seed=9)
+        cfg = EngineConfig(policy="dodoor", b=10)
+        sw = simulate_many(wl, small_testbed, cfg, (2,), shard=False,
+                           server_shards=4)
+        ref = simulate_hierarchical(wl, small_testbed, cfg, 4, seed=2,
+                                    mode="batched", b=cfg.b)
+        assert_point_parity(ref, sw.point(0, 0))
+
+    def test_indivisible_shards_raise(self, small_testbed, fb_small):
+        with pytest.raises(ValueError, match="divide"):
+            run_study(fb_small, small_testbed, Study(),
+                      server_shards=3)   # 20 servers, 3 ∤ 20
+
+    def test_one_shard_is_dense_path(self, small_testbed, fb_small):
+        """k=1 degenerates to the replicated-table planner (no split)."""
+        cfg = EngineConfig(policy="dodoor", b=10)
+        a = run_study(fb_small, small_testbed, Study(configs=cfg),
+                      server_shards=1, shard=False)
+        b = run_study(fb_small, small_testbed, Study(configs=cfg),
+                      shard=False)
+        assert (a.server == b.server).all()
+        assert np.array_equal(a.finish_ms, b.finish_ms)

@@ -18,8 +18,8 @@ LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
 REPO = Path(__file__).resolve().parent.parent
 
 DEFAULT_FILES = ["README.md", "docs/ARCHITECTURE.md", "docs/STUDIES.md",
-                 "docs/SWEEPS.md", "docs/SCENARIOS.md", "ROADMAP.md",
-                 "CHANGES.md", "PAPER.md"]
+                 "docs/SWEEPS.md", "docs/SCENARIOS.md", "docs/SCALING.md",
+                 "ROADMAP.md", "CHANGES.md", "PAPER.md"]
 
 
 def broken_links(md_path: Path) -> list:

@@ -1,0 +1,73 @@
+#!/usr/bin/env python
+"""CI perf-regression gate for the scheduling hot path.
+
+Compares a freshly-written smoke-mode ``BENCH_scale.json`` against the
+committed baseline (``benchmarks/baselines/BENCH_scale_smoke.json``) and
+fails if decisions/s at the **largest smoke point** — the sharded
+n = 10³ probe, the planner path ISSUE 6 exists to protect — dropped more
+than ``--tolerance`` (default 30%, sized for shared-runner noise; real
+planner regressions are integer factors, not percentages).
+
+    python tools/check_perf_regression.py [BENCH_scale.json]
+        [--baseline benchmarks/baselines/BENCH_scale_smoke.json]
+        [--tolerance 0.30]
+
+Largest point = max (n, server_shards or 1, m): smoke and baseline must
+agree on its identity, so shrinking the smoke grid without refreshing the
+baseline is itself an error.  Faster-than-baseline never fails; refresh
+the baseline (copy the new smoke artifact) when a speedup should become
+the new floor.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def largest_point(doc: dict) -> dict:
+    pts = doc.get("scale_points") or []
+    if not pts:
+        raise SystemExit("no scale_points in artifact")
+    return max(pts, key=lambda p: (p["n"], p.get("server_shards") or 1,
+                                   p["m"]))
+
+
+def point_id(p: dict) -> tuple:
+    return (p["n"], p["m"], p["b"], p.get("server_shards") or 1)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("current", nargs="?", default="BENCH_scale.json",
+                    help="freshly-written smoke artifact")
+    ap.add_argument("--baseline",
+                    default=os.path.join(
+                        REPO, "benchmarks", "baselines",
+                        "BENCH_scale_smoke.json"))
+    ap.add_argument("--tolerance", type=float, default=0.30,
+                    help="max allowed fractional drop in decisions/s")
+    args = ap.parse_args(argv)
+
+    cur = largest_point(json.load(open(args.current)))
+    base = largest_point(json.load(open(args.baseline)))
+    if point_id(cur) != point_id(base):
+        print(f"FAIL: largest smoke point changed — current {point_id(cur)}"
+              f" vs baseline {point_id(base)}; refresh "
+              f"{os.path.relpath(args.baseline, REPO)} alongside the grid")
+        return 1
+    ratio = cur["decisions_per_s"] / base["decisions_per_s"]
+    verdict = "ok" if ratio >= 1.0 - args.tolerance else "FAIL"
+    print(f"{verdict}: largest smoke point n={cur['n']} "
+          f"shards={cur.get('server_shards') or 1} m={cur['m']}: "
+          f"{cur['decisions_per_s']} vs baseline "
+          f"{base['decisions_per_s']} decisions/s "
+          f"({ratio:.2f}x, floor {1.0 - args.tolerance:.2f}x)")
+    return 0 if verdict == "ok" else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())
