@@ -1,0 +1,155 @@
+"""Failure-and-recovery benchmark — goodput, wasted work, and the paper's
+message-reduction claim re-measured under injected faults, persisted to
+``BENCH_faults.json``.
+
+Two sections:
+
+* **fault grid** — outage density × retry policy (none / default /
+  aggressive) × cache-update loss (0 / 0.5), dodoor on the testbed:
+  goodput (completed-first-attempt throughput), retries/task, wasted
+  (killed-execution) milliseconds, permanent-failure rate, msgs/task,
+  makespan, and time-to-recover after the last outage window closes.
+* **message reduction** — dodoor vs PoT vs Prequal at the densest outage
+  point under the default RetryPolicy: the Fig. 4/6 55–66% RPC-reduction
+  claim re-measured while every policy pays per-attempt message costs.
+
+The densest-outage × default-retry × no-cache-loss point doubles as the
+perf gate (``tools/check_perf_regression.py --faults``): its goodput must
+not regress >30% against the committed smoke baseline.
+
+    PYTHONPATH=src python -m benchmarks.bench_faults [--smoke]
+                                                     [--json PATH]
+"""
+from __future__ import annotations
+
+import argparse
+
+import numpy as np
+
+from benchmarks.common import write_bench_json
+from repro.sim import (CacheFaults, Dynamics, EngineConfig, RetryPolicy,
+                       fault_stats, make_testbed, random_outages, simulate,
+                       summarize, time_to_recover_ms)
+from repro.workloads import functionbench as fb
+
+#: retry-policy axis — ``None`` keeps the failure layer off (the engine's
+#: bit-identical legacy path: nothing kills, goodput == throughput).
+RETRY_AXIS = (
+    ("none", None),
+    ("default", RetryPolicy()),
+    ("aggressive", RetryPolicy(max_attempts=5, backoff_ms=50.0,
+                               backoff_mult=1.5)),
+)
+
+
+def point_id(policy: str, outages: int, retry: str, loss: float) -> str:
+    return f"{policy}/out{outages}/retry-{retry}/loss{loss:g}"
+
+
+def make_dynamics(n: int, outages: int, loss: float,
+                  horizon_ms: float) -> Dynamics | None:
+    """One grid cell's fault spec: ``outages`` servers knocked out inside
+    the first 60% of the horizon (so recovery is observable), plus an
+    optional iid cache-update loss rate."""
+    dyn = Dynamics()
+    if outages:
+        dyn = random_outages(n, outages, 0.6 * horizon_ms,
+                             mean_down_ms=0.15 * horizon_ms, seed=7)
+    if loss:
+        dyn = dyn.merge(Dynamics(cache_faults=CacheFaults(loss_rate=loss,
+                                                          seed=5)))
+    return dyn if (outages or loss) else None
+
+
+def run_point(base, cluster, cfg, dyn, seeds):
+    """Seed-averaged metrics dict for one grid cell."""
+    rows = []
+    for sd in seeds:
+        res = simulate(base, cluster, cfg, seed=sd, mode="batched",
+                       dynamics=dyn)
+        s = summarize(res)
+        st = fault_stats(res)
+        ttr = time_to_recover_ms(res, dyn) if dyn is not None else 0.0
+        rows.append(dict(goodput_tps=s.goodput_tps,
+                         throughput_tps=s.throughput_tps,
+                         retries_per_task=st["retries_per_task"],
+                         wasted_ms_total=st["wasted_ms_total"],
+                         failure_rate=st["failure_rate"],
+                         msgs_per_task=s.msgs_per_task,
+                         makespan_mean_ms=s.makespan_mean_ms,
+                         time_to_recover_ms=ttr,
+                         mean_attempts=1.0 + st["retries_per_task"]))
+    return {k: round(float(np.mean([r[k] for r in rows])), 4)
+            for k in rows[0]}
+
+
+def main(m: int = 3000, qps: float = 60.0, seeds=(0, 1), scale: float = 1.0,
+         json_path: str | None = "BENCH_faults.json", smoke: bool = False):
+    if smoke:
+        m, seeds, scale, qps = 600, (0,), 0.2, 30.0
+    cluster = make_testbed(scale=scale)
+    n = cluster.num_servers
+    base = fb.synthesize(m=m, qps=qps, seed=0)
+    horizon = float(base.submit_ms[-1])
+    cfg0 = EngineConfig(policy="dodoor", b=max(1, n // 2))
+    densities = (0, max(1, n // 8), max(2, n // 4))
+    losses = (0.0, 0.5)
+
+    print("bench,point,goodput_tps,tput_tps,retries,wasted_ms,fail_rate,"
+          "msgs_per_task,ttr_ms")
+    points = []
+    for outages in densities:
+        for rtag, rp in RETRY_AXIS:
+            for loss in losses:
+                dyn = make_dynamics(n, outages, loss, horizon)
+                row = run_point(base, cluster, cfg0._replace(retry=rp),
+                                dyn, seeds)
+                row.update(id=point_id("dodoor", outages, rtag, loss),
+                           policy="dodoor", n=n, m=m, outages=outages,
+                           retry=rtag, cache_loss=loss)
+                points.append(row)
+                print(f"faults,{row['id']},{row['goodput_tps']},"
+                      f"{row['throughput_tps']},{row['retries_per_task']},"
+                      f"{row['wasted_ms_total']},{row['failure_rate']},"
+                      f"{row['msgs_per_task']},"
+                      f"{row['time_to_recover_ms']}")
+
+    # -- message reduction under failure (densest outage, default retry) --
+    dense = densities[-1]
+    dyn = make_dynamics(n, dense, 0.0, horizon)
+    rp = dict(RETRY_AXIS)["default"]
+    msgs = {}
+    for policy in ("dodoor", "pot", "prequal"):
+        cfg = EngineConfig(policy=policy, b=max(1, n // 2), retry=rp)
+        row = run_point(base, cluster, cfg, dyn, seeds)
+        msgs[policy] = dict(msgs_per_task=row["msgs_per_task"],
+                            mean_attempts=row["mean_attempts"],
+                            goodput_tps=row["goodput_tps"])
+    reduction = {
+        f"vs_{p}": round(1.0 - msgs["dodoor"]["msgs_per_task"]
+                         / msgs[p]["msgs_per_task"], 4)
+        for p in ("pot", "prequal")}
+    print(f"# message reduction under failure (out={dense}, retry=default):"
+          f" {reduction} at per-policy attempts "
+          f"{ {p: v['mean_attempts'] for p, v in msgs.items()} }")
+
+    if json_path:
+        payload = dict(
+            smoke=smoke, n=n, m=m, qps=qps, seeds=list(seeds),
+            gate_point=point_id("dodoor", dense, "default", 0.0),
+            fault_points=points,
+            message_reduction=dict(outages=dense, retry="default",
+                                   per_policy=msgs, reduction=reduction),
+        )
+        write_bench_json(json_path, payload, bench="faults")
+    return points
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized: m=600, 1 seed, 20-node fleet")
+    ap.add_argument("--json", default="BENCH_faults.json",
+                    help="results file ('' disables)")
+    args = ap.parse_args()
+    main(smoke=args.smoke, json_path=args.json or None)

@@ -44,13 +44,15 @@ def main():
                     help="scenario-grid results file ('' disables)")
     ap.add_argument("--json-study", default="BENCH_study.json",
                     help="combined-study results file ('' disables)")
+    ap.add_argument("--json-faults", default="BENCH_faults.json",
+                    help="failure/recovery results file ('' disables)")
     args = ap.parse_args()
     q = args.quick
 
-    from . import (bench_azure, bench_functionbench, bench_gap,
-                   bench_kernels, bench_reliability, bench_roofline,
-                   bench_router, bench_scenarios, bench_sensitivity,
-                   bench_study)
+    from . import (bench_azure, bench_faults, bench_functionbench,
+                   bench_gap, bench_kernels, bench_reliability,
+                   bench_roofline, bench_router, bench_scenarios,
+                   bench_sensitivity, bench_study)
 
     sections = [
         ("Fig 3/4/5 — Azure VM placement (§6.2)",
@@ -81,6 +83,9 @@ def main():
                                    qps_list=(40,) if q else (20, 40, 80))),
         ("§4.2/§4.3 — store outage + hierarchical mini-clusters",
          lambda: bench_reliability.main(m=2000 if q else 4000)),
+        ("Failure & recovery — kill/retry, cache loss, goodput",
+         lambda: bench_faults.main(smoke=q,
+                                   json_path=args.json_faults or None)),
         ("§Roofline — fused-kernel bytes-touched model vs measurement",
          lambda: bench_roofline.main(smoke=q)),
     ]

@@ -92,6 +92,7 @@ compile-time constants — sweeping them reuses one compiled program per
 """
 from __future__ import annotations
 
+import warnings
 from functools import partial
 from typing import NamedTuple
 
@@ -107,6 +108,54 @@ from ..core.rl_score import load_score_batched
 from ..core.types import PrequalParams, SchedulerView
 from .cluster import CMAX, ClusterSpec
 from .messages import RpcModel
+
+
+class RetryPolicy(NamedTuple):
+    """Failure-and-recovery knobs (the re-entry layer).
+
+    With a policy set on :class:`EngineConfig`, two failure paths open up:
+
+    * **kill** — a task still running on a server when a freeze window
+      (outage/join gate) *opens* is killed at the window start and
+      resubmitted;
+    * **rejection** — when ``reject_queue_factor > 0``, a server whose
+      in-flight count has reached ``factor × cores`` rejects the placement
+      outright (hard capacity) instead of queueing it.
+
+    A killed or rejected task re-enters the decision stream as a fresh
+    submission at ``fail_time + backoff_ms · backoff_mult^(k-1)`` after its
+    k-th failure, until ``max_attempts`` total submissions have been spent —
+    then it fails permanently.  Retried decisions pay the full scheduling
+    path again (messages, probes, cache reads), which is how the message
+    ledger reflects failure cost."""
+
+    max_attempts: int = 3           # total submissions (first try included)
+    backoff_ms: float = 250.0       # delay before the first resubmission
+    backoff_mult: float = 2.0       # exponential backoff factor
+    reject_queue_factor: float = 0.0  # reject when rif ≥ factor·cores;
+                                      # ≤ 0 disables hard-capacity rejection
+
+
+class CacheFaults(NamedTuple):
+    """Cache-degradation injection for the data-store push channel
+    (attached to :class:`Dynamics` via ``cache_faults``).
+
+    Each batch push is delivered *per scheduler*; a delivery is lost with
+    probability ``loss_rate`` (iid per scheduler per push, seeded stream)
+    and lost for every scheduler while ``now`` is inside a
+    ``loss_windows`` entry.  A scheduler whose delivery is lost keeps its
+    previous view — dodoor's load scores go stale beyond the batch
+    cadence, while probing policies (PoT/Prequal) keep ground truth.
+    ``delay_ms`` lags the snapshot itself: the push carries truth as of
+    ``now − delay_ms`` (late ``overrideNodeState`` completion reports).
+
+    Unlike ``store_outages`` (which *suppress* the push — no messages
+    sent), a lost delivery was sent and is paid for in the ledger."""
+
+    loss_rate: float = 0.0          # per-scheduler iid delivery-loss prob
+    loss_windows: tuple = ()        # ((t0, t1), ...): all pushes lost inside
+    delay_ms: float = 0.0           # snapshot lag (truth as of now − delay)
+    seed: int = 0                   # loss-draw stream
 
 
 class EngineConfig(NamedTuple):
@@ -137,6 +186,12 @@ class EngineConfig(NamedTuple):
     block_t: int = 256              # fused-kernel tile size (use_kernel only)
     interpret: bool | None = None   # Pallas interpret mode; None = auto
                                     # (compiled on TPU, interpreter elsewhere)
+    retry: RetryPolicy | None = None  # failure semantics: None (default)
+                                      # keeps today's never-rejected,
+                                      # never-killed engine bit-identically;
+                                      # a RetryPolicy enables kill-and-retry
+                                      # (+ hard-capacity rejection when its
+                                      # reject_queue_factor > 0)
 
 
 class _Dyn(NamedTuple):
@@ -153,6 +208,8 @@ class _Dyn(NamedTuple):
     outage0: jnp.ndarray      # +inf when no outage is configured
     outage1: jnp.ndarray
     q_rif: jnp.ndarray
+    reject_cap: jnp.ndarray   # hard-capacity rejection threshold (rif ≥
+                              # cap·cores rejects); +inf when disabled
 
 
 class Dynamics(NamedTuple):
@@ -178,11 +235,15 @@ class Dynamics(NamedTuple):
     store_outages: ``((t0, t1), ...)`` — data-store outage windows
                    (generalizes ``EngineConfig.outage_ms`` to a timeline;
                    both are honored).
+    cache_faults:  optional :class:`CacheFaults` — per-scheduler push-loss
+                   rate/windows and snapshot delay (cache degradation, as
+                   opposed to ``store_outages``' full suppression).
 
     Semantics note: when every feasible server is unavailable the engine
     falls back to uniform placement over the whole fleet (same rule as an
-    all-infeasible task) — submission is never rejected, the task queues
-    until the node recovers.
+    all-infeasible task) — submission is never rejected by *availability*,
+    the task queues until the node recovers.  Hard-capacity rejection is a
+    separate, opt-in path (``EngineConfig.retry.reject_queue_factor``).
     """
 
     outages: tuple = ()
@@ -190,6 +251,7 @@ class Dynamics(NamedTuple):
     leaves: tuple = ()
     slowdowns: tuple = ()
     store_outages: tuple = ()
+    cache_faults: CacheFaults | None = None
 
     @property
     def has_down_windows(self) -> bool:
@@ -197,10 +259,23 @@ class Dynamics(NamedTuple):
 
     def merge(self, *others: "Dynamics") -> "Dynamics":
         """Concatenate timelines — composes builder outputs, e.g.
-        ``random_churn(...).merge(random_outages(...))``."""
+        ``random_churn(...).merge(random_outages(...))``.  ``cache_faults``
+        is not a timeline: the first non-None spec wins (merging two
+        distinct specs is ambiguous and raises)."""
         ds = (self,) + others
-        return Dynamics(*(tuple(w for d in ds for w in getattr(d, f))
-                          for f in self._fields))
+        vals = {}
+        for f in self._fields:
+            if f == "cache_faults":
+                cfs = [d.cache_faults for d in ds
+                       if d.cache_faults is not None]
+                if len(set(cfs)) > 1:
+                    raise ValueError(
+                        "merge() saw two distinct cache_faults specs — "
+                        "compose loss windows inside one CacheFaults")
+                vals[f] = cfs[0] if cfs else None
+            else:
+                vals[f] = tuple(w for d in ds for w in getattr(d, f))
+        return Dynamics(**vals)
 
 
 class _Win(NamedTuple):
@@ -222,11 +297,17 @@ class _Win(NamedTuple):
     slow_mult: jnp.ndarray  # [n, Ws] duration multipliers
     store0: jnp.ndarray     # [Wo] data-store outage starts
     store1: jnp.ndarray     # [Wo] ends
+    closs0: jnp.ndarray     # [Wc] cache-delivery loss window starts
+    closs1: jnp.ndarray     # [Wc] ends
+    cache_rate: jnp.ndarray   # [] per-scheduler iid push-loss probability
+    cache_delay: jnp.ndarray  # [] push snapshot lag (ms)
+    cache_seed: jnp.ndarray   # [] int32 loss-draw stream
 
     @property
     def widths(self) -> tuple:
         return (self.down0.shape[1], self.gate0.shape[1],
-                self.slow0.shape[1], self.store0.shape[0])
+                self.slow0.shape[1], self.store0.shape[0],
+                self.closs0.shape[0])
 
 
 def _avail_rows(win: _Win, now):
@@ -281,6 +362,28 @@ def _store_down(win: _Win, now):
     return jnp.any((win.store0 <= now) & (now < win.store1))
 
 
+def _suppress_push(win: _Win, dyn: _Dyn, now):
+    """True when a data-store batch push firing at ``now`` is suppressed —
+    the legacy scalar ``EngineConfig.outage_ms`` window OR any
+    ``Dynamics.store_outages`` timeline window covers ``now``.  One
+    predicate shared by both drivers (it used to be duplicated verbatim),
+    so the §4.3 graceful-degradation semantics cannot drift apart."""
+    legacy = (now >= dyn.outage0) & (now < dyn.outage1)
+    return legacy | _store_down(win, now)
+
+
+def _cache_lost(win: _Win, now, push_ord, S: int):
+    """Per-scheduler delivery-loss mask [S] for the push with cluster-wide
+    ordinal ``push_ord``: iid Bernoulli(cache_rate) draws from the
+    CacheFaults seed stream, OR-ed with the loss windows (inside which
+    every scheduler loses the delivery).  Keyed on the push ordinal — not
+    wall time — so the sequential and batched drivers draw identically."""
+    key = jax.random.fold_in(jax.random.PRNGKey(win.cache_seed), push_ord)
+    u = jax.random.uniform(key, (S,))
+    in_win = jnp.any((win.closs0 <= now) & (now < win.closs1))
+    return (u < win.cache_rate) | in_win
+
+
 class SimResult(NamedTuple):
     """Per-task outcomes (numpy, ms) + aggregate message ledger."""
 
@@ -297,6 +400,11 @@ class SimResult(NamedTuple):
     msgs_push: int
     msgs_flush: int
     policy: str
+    # Recovery accounting — populated only by runs with cfg.retry set
+    # (None otherwise, so retry-disabled results are byte-identical).
+    attempts: np.ndarray | None = None   # [m] int32 submissions per task
+    failed: np.ndarray | None = None     # [m] bool: permanently failed
+    wasted_ms: np.ndarray | None = None  # [m] killed-attempt execution ms
 
     @property
     def makespan_ms(self) -> np.ndarray:
@@ -338,6 +446,42 @@ class _Carry(NamedTuple):
     msgs: jnp.ndarray         # [4] int32: base, probe, push, flush
 
 
+def _init_carry(cfg: EngineConfig, n: int, cores_per,
+                faulted: bool) -> _Carry:
+    """The t=0 carry, shared by both drivers (it used to be duplicated
+    verbatim).  Under cache faults (``faulted``) the view planes grow a
+    leading scheduler axis — each scheduler holds its own, possibly
+    stale, copy of the store's pushes."""
+    S = cfg.num_schedulers
+    R = cfg.rbuf_slots
+    MU = cfg.mem_units
+    vs = (S, n) if faulted else (n,)
+    # Pad unavailable cores with +inf (never free).
+    core_init = jnp.where(jnp.arange(CMAX)[None, :] < cores_per[:, None],
+                          0.0, jnp.inf)
+    return _Carry(
+        core_free=core_init.astype(jnp.float32),
+        mem_free=jnp.zeros((n, MU), jnp.float32),
+        prev_start=jnp.zeros((n,), jnp.float32),
+        rb_release=jnp.zeros((n, R), jnp.float32),
+        rb_cpu=jnp.zeros((n, R), jnp.float32),
+        rb_mem=jnp.zeros((n, R), jnp.float32),
+        rb_dur=jnp.zeros((n, R), jnp.float32),
+        view_L=jnp.zeros(vs + (2,), jnp.float32),
+        view_D=jnp.zeros(vs, jnp.float32),
+        view_rif=jnp.zeros(vs, jnp.float32),
+        pending=jnp.zeros((S, n, 4), jnp.float32),
+        chan_free=jnp.zeros((n,), jnp.float32),
+        push_end=jnp.zeros((), jnp.float32),
+        pool_server=jnp.zeros((S, cfg.prequal.s_pool), jnp.int32),
+        pool_rif=jnp.full((S, cfg.prequal.s_pool), jnp.inf, jnp.float32),
+        pool_lat=jnp.full((S, cfg.prequal.s_pool), jnp.inf, jnp.float32),
+        pool_age=jnp.full((S, cfg.prequal.s_pool), -jnp.inf, jnp.float32),
+        pool_valid=jnp.zeros((S, cfg.prequal.s_pool), bool),
+        msgs=jnp.zeros((4,), jnp.int32),
+    )
+
+
 def _truth_rows(carry, rows: jnp.ndarray, now: jnp.ndarray):
     """Ground-truth (L, D, rif) for a set of servers, from the ring buffer."""
     rel = carry.rb_release[rows]                       # [k, R]
@@ -358,10 +502,44 @@ def _truth_all(carry, now: jnp.ndarray):
     return L, D, rif
 
 
+def _apply_push(carry: _Carry, now, dyn: _Dyn, win: _Win, S: int,
+                faulted: bool, push_ord):
+    """Apply one data-store batch push: the store's view is truth(now)
+    minus the deltas schedulers have not yet flushed (see the staleness
+    model in the module docstring).  Shared by both drivers — it used to
+    be duplicated as a closure in each.
+
+    Under cache faults (``faulted``) the snapshot is taken at
+    ``now − cache_delay`` (late completion reports) and each scheduler's
+    delivery may be lost (:func:`_cache_lost`) — a loser keeps its old
+    per-scheduler view.  The unfaulted branch is today's exact path."""
+    if not faulted:
+        L, D, rif = _truth_all(carry, now)
+        unflushed = jnp.sum(carry.pending, axis=0)     # [n, 4]
+        return carry._replace(
+            view_L=jnp.maximum(0.0, L - unflushed[:, :2]),
+            view_D=jnp.maximum(0.0, D - unflushed[:, 2]),
+            view_rif=jnp.maximum(0.0, rif - unflushed[:, 3]),
+            push_end=now + dyn.push_block_ms)
+    L, D, rif = _truth_all(carry, now - win.cache_delay)
+    unflushed = jnp.sum(carry.pending, axis=0)
+    store_L = jnp.maximum(0.0, L - unflushed[:, :2])
+    store_D = jnp.maximum(0.0, D - unflushed[:, 2])
+    store_rif = jnp.maximum(0.0, rif - unflushed[:, 3])
+    lost = _cache_lost(win, now, push_ord, S)          # [S]
+    return carry._replace(
+        view_L=jnp.where(lost[:, None, None], carry.view_L, store_L[None]),
+        view_D=jnp.where(lost[:, None], carry.view_D, store_D[None]),
+        view_rif=jnp.where(lost[:, None], carry.view_rif, store_rif[None]),
+        push_end=now + dyn.push_block_ms)
+
+
 def _select(policy: str, key, carry: _Carry, r_sub, d_est_srv, now, sched,
-            C, cfg: EngineConfig, dyn: _Dyn, win: _Win):
+            C, cfg: EngineConfig, dyn: _Dyn, win: _Win,
+            faulted: bool = False):
     """Dispatch the placement policy. Returns (server j, carry, extra_msgs,
-    extra latency ms)."""
+    extra latency ms).  ``faulted`` switches the cached-view policies onto
+    the per-scheduler view planes (cache-fault programs)."""
     avail = _avail_rows(win, now)                       # [n] bool
     mask = feasible_mask(r_sub, C) & avail
     zero = jnp.zeros((), jnp.float32)
@@ -380,8 +558,13 @@ def _select(policy: str, key, carry: _Carry, r_sub, d_est_srv, now, sched,
     if policy in ("dodoor", "one_plus_beta"):
         k_cand, k_beta = jax.random.split(key)
         cand = sample_feasible(k_cand, mask, 2)
-        L_ab = carry.view_L[cand]                       # stale cached view
-        D_ab = carry.view_D[cand] + d_est_srv[cand]     # D_j + d_ij
+        if faulted:
+            # This scheduler's own (possibly loss-degraded) cached view.
+            L_ab = carry.view_L[sched, cand]
+            D_ab = carry.view_D[sched, cand] + d_est_srv[cand]
+        else:
+            L_ab = carry.view_L[cand]                   # stale cached view
+            D_ab = carry.view_D[cand] + d_est_srv[cand]  # D_j + d_ij
         C_ab = C[cand]
         scores = load_score_batched(r_sub[None], L_ab[None], D_ab[None],
                                     C_ab[None], dyn.alpha)[0]
@@ -461,12 +644,20 @@ def _select(policy: str, key, carry: _Carry, r_sub, d_est_srv, now, sched,
 
 def _commit_one(carry, valid, now, j, cores, mem_mb, dur_raw, d_est_j,
                 extra_lat, dyn: _Dyn, win: _Win, cores_per, mem_unit,
-                MU: int):
+                MU: int, retry: bool = False):
     """Commit one placed task to server ``j``: channel contention, FCFS start,
     interference-stretched runtime, unit allocation, ring-buffer insert.
     Shared verbatim by the sequential driver and the batched PoT inner scan
     so the two are arithmetically identical. ``valid=False`` makes every
-    state write a no-op (padded block tails)."""
+    state write a no-op (padded block tails).
+
+    ``retry`` (static) adds the failure paths: hard-capacity rejection
+    (the enqueue RPC is answered — and paid for — but nothing is queued)
+    and kill-at-window-open (a gate window opening strictly inside
+    (start, finish) releases the task's units and rb slot at the window
+    start).  ``retry=False`` compiles today's arithmetic untouched, which
+    is what keeps retry-disabled runs bit-identical.  Returns a 4-tuple of
+    outputs, or a 6-tuple ending (killed, rejected) under ``retry``."""
     _, _, rif_j = _truth_rows(carry, j[None], now)
     occupancy = dyn.chan_ms * (1.0 + rif_j[0] / cores_per[j])
     chan_wait = jnp.maximum(0.0, carry.chan_free[j] - now)
@@ -476,6 +667,16 @@ def _commit_one(carry, valid, now, j, cores, mem_mb, dur_raw, d_est_j,
     carry = carry._replace(chan_free=carry.chan_free.at[j].set(
         jnp.where(valid, new_chan, carry.chan_free[j])))
     enqueue_t = now + sched_ms
+
+    if retry:
+        # Hard capacity: the server's in-flight count already fills its
+        # queue budget — the RPC reply is a rejection (channel time above
+        # was still spent; no units, no rb entry).
+        rejected = valid & (rif_j[0] >= dyn.reject_cap
+                            * cores_per[j].astype(jnp.float32))
+        w = valid & ~rejected
+    else:
+        w = valid
 
     c_eff = jnp.clip(cores, 1, cores_per[j]).astype(jnp.int32)
     mu_need = jnp.clip(jnp.ceil(mem_mb / mem_unit[j]), 1, MU).astype(jnp.int32)
@@ -499,72 +700,74 @@ def _commit_one(carry, valid, now, j, cores, mem_mb, dur_raw, d_est_j,
     dur = dur * _slow_stretch(win, j, start)  # straggler windows
     finish = start + dur
 
+    if retry:
+        # Kill: the earliest gate window *opening* strictly inside
+        # (start, finish) kills the task at the window start (post-gate,
+        # start itself is never inside a window, so strict > is exact).
+        g0 = win.gate0[j]
+        kt = jnp.full((), jnp.inf, jnp.float32)
+        for wi in range(g0.shape[0]):
+            opens = (g0[wi] > start) & (g0[wi] < finish)
+            kt = jnp.minimum(kt, jnp.where(opens, g0[wi], jnp.inf))
+        killed = w & jnp.isfinite(kt)
+        rel = jnp.where(killed, kt, finish)   # units/rb free at kill time
+    else:
+        rel = finish
+
     c_ranks = jnp.argsort(jnp.argsort(cf))
     m_ranks = jnp.argsort(jnp.argsort(mf))
-    cf_new = jnp.where(c_ranks < c_eff, finish, cf)
-    mf_new = jnp.where(m_ranks < mu_need, finish, mf)
+    cf_new = jnp.where(c_ranks < c_eff, rel, cf)
+    mf_new = jnp.where(m_ranks < mu_need, rel, mf)
     carry = carry._replace(
-        core_free=carry.core_free.at[j].set(jnp.where(valid, cf_new, cf)),
-        mem_free=carry.mem_free.at[j].set(jnp.where(valid, mf_new, mf)),
+        core_free=carry.core_free.at[j].set(jnp.where(w, cf_new, cf)),
+        mem_free=carry.mem_free.at[j].set(jnp.where(w, mf_new, mf)),
         prev_start=carry.prev_start.at[j].set(
-            jnp.where(valid, start, carry.prev_start[j])),
+            jnp.where(w, start, carry.prev_start[j])),
     )
 
     # In-flight ring buffer insert (slot with min release time).
     slot = jnp.argmin(carry.rb_release[j])
     carry = carry._replace(
         rb_release=carry.rb_release.at[j, slot].set(
-            jnp.where(valid, finish, carry.rb_release[j, slot])),
+            jnp.where(w, rel, carry.rb_release[j, slot])),
         rb_cpu=carry.rb_cpu.at[j, slot].set(
-            jnp.where(valid, cores, carry.rb_cpu[j, slot])),
+            jnp.where(w, cores, carry.rb_cpu[j, slot])),
         rb_mem=carry.rb_mem.at[j, slot].set(
-            jnp.where(valid, mem_mb, carry.rb_mem[j, slot])),
+            jnp.where(w, mem_mb, carry.rb_mem[j, slot])),
         rb_dur=carry.rb_dur.at[j, slot].set(
-            jnp.where(valid, d_est_j, carry.rb_dur[j, slot])),
+            jnp.where(w, d_est_j, carry.rb_dur[j, slot])),
     )
-    return carry, (start, finish, enqueue_t, sched_ms)
+    if not retry:
+        return carry, (start, finish, enqueue_t, sched_ms)
+    start_o = jnp.where(rejected, enqueue_t, start)
+    finish_o = jnp.where(rejected, enqueue_t, rel)
+    return carry, (start_o, finish_o, enqueue_t, sched_ms, killed, rejected)
 
 
-@partial(jax.jit, static_argnames=("cfg", "n", "num_types"))
+@partial(jax.jit, static_argnames=("cfg", "n", "num_types", "cache_faulted",
+                                   "return_carry"))
 def _simulate_jax(xs, C, node_type, mem_unit, cores_per, dyn_vec, dyn_ints,
-                  win, cfg: EngineConfig, n: int, num_types: int, seed: int):
+                  win, cfg: EngineConfig, n: int, num_types: int, seed: int,
+                  cache_faulted: bool = False, carry0=None,
+                  return_carry: bool = False):
     """The sequential scan. xs = (i [m], r_sub [m,2], r_exec [m,T,2],
     d_est [m,T], d_act [m,T], submit [m], task_id [m]).
 
     ``dyn_ints = [b, flush_every]`` are traced: neither shapes the scan
-    here, so b/flush sweeps share one compiled program."""
+    here, so b/flush sweeps share one compiled program.
+
+    ``cfg.retry`` (static presence) compiles the failure paths into the
+    commit; ``cache_faulted`` switches the store views per-scheduler;
+    ``carry0``/``return_carry`` let the retry wave loop continue one run's
+    cluster state into the next resubmission wave."""
     dyn = _Dyn(*dyn_vec)
     b_dyn, fe_dyn = dyn_ints[0], dyn_ints[1]
     S = cfg.num_schedulers
-    R = cfg.rbuf_slots
-    MU = cfg.mem_units
+    retry = cfg.retry is not None
     base_key = jax.random.PRNGKey(seed)
 
-    # Pad unavailable cores with +inf (never free).
-    core_init = jnp.where(jnp.arange(CMAX)[None, :] < cores_per[:, None],
-                          0.0, jnp.inf)
-
-    carry0 = _Carry(
-        core_free=core_init.astype(jnp.float32),
-        mem_free=jnp.zeros((n, MU), jnp.float32),
-        prev_start=jnp.zeros((n,), jnp.float32),
-        rb_release=jnp.zeros((n, R), jnp.float32),
-        rb_cpu=jnp.zeros((n, R), jnp.float32),
-        rb_mem=jnp.zeros((n, R), jnp.float32),
-        rb_dur=jnp.zeros((n, R), jnp.float32),
-        view_L=jnp.zeros((n, 2), jnp.float32),
-        view_D=jnp.zeros((n,), jnp.float32),
-        view_rif=jnp.zeros((n,), jnp.float32),
-        pending=jnp.zeros((S, n, 4), jnp.float32),
-        chan_free=jnp.zeros((n,), jnp.float32),
-        push_end=jnp.zeros((), jnp.float32),
-        pool_server=jnp.zeros((S, cfg.prequal.s_pool), jnp.int32),
-        pool_rif=jnp.full((S, cfg.prequal.s_pool), jnp.inf, jnp.float32),
-        pool_lat=jnp.full((S, cfg.prequal.s_pool), jnp.inf, jnp.float32),
-        pool_age=jnp.full((S, cfg.prequal.s_pool), -jnp.inf, jnp.float32),
-        pool_valid=jnp.zeros((S, cfg.prequal.s_pool), bool),
-        msgs=jnp.zeros((4,), jnp.int32),
-    )
+    if carry0 is None:
+        carry0 = _init_carry(cfg, n, cores_per, cache_faulted)
 
     def step(carry: _Carry, inp):
         i, r_sub, r_exec_t, d_est_t, d_act_t, submit, task_id = inp
@@ -578,7 +781,7 @@ def _simulate_jax(xs, C, node_type, mem_unit, cores_per, dyn_vec, dyn_ints,
 
         j, carry, extra_msgs, extra_lat = _select(
             cfg.policy, key, carry, r_sub, d_est_srv, now, sched, C, cfg,
-            dyn, win)
+            dyn, win, faulted=cache_faulted)
 
         # --- commit: scheduling latency (compute + channel contention +
         # placement hop; the enqueue RPC's service time grows with the
@@ -588,17 +791,27 @@ def _simulate_jax(xs, C, node_type, mem_unit, cores_per, dyn_vec, dyn_ints,
         cores = r_srv[j, 0]
         mem_mb = r_srv[j, 1]
         dur_raw = d_act_t[node_type[j]]
-        carry, (start, finish, enqueue_t, sched_ms) = _commit_one(
-            carry, jnp.bool_(True), now, j, cores, mem_mb, dur_raw,
-            d_est_srv[j], extra_lat, dyn, win, cores_per, mem_unit, MU)
+        if retry:
+            carry, (start, finish, enqueue_t, sched_ms, killed, rejected) = \
+                _commit_one(carry, jnp.bool_(True), now, j, cores, mem_mb,
+                            dur_raw, d_est_srv[j], extra_lat, dyn, win,
+                            cores_per, mem_unit, cfg.mem_units, retry=True)
+        else:
+            carry, (start, finish, enqueue_t, sched_ms) = _commit_one(
+                carry, jnp.bool_(True), now, j, cores, mem_mb, dur_raw,
+                d_est_srv[j], extra_lat, dyn, win, cores_per, mem_unit,
+                cfg.mem_units)
 
         msgs = carry.msgs.at[0].add(2).at[1].add(extra_msgs)
 
         # The data store (and its push/flush traffic) only exists for the
         # cached-view policies; probing policies carry no store at all.
         if cfg.policy in ("dodoor", "one_plus_beta"):
-            # --- scheduler delta accumulation (addNewLoad payload)
+            # --- scheduler delta accumulation (addNewLoad payload); a
+            #     rejected placement queued nothing, so reports no delta.
             delta = jnp.stack([cores, mem_mb, d_est_srv[j], 1.0])
+            if retry:
+                delta = delta * jnp.where(rejected, 0.0, 1.0)
             carry = carry._replace(pending=carry.pending.at[sched, j].add(delta))
 
             # --- addNewLoad flush (per-scheduler cadence)
@@ -610,28 +823,25 @@ def _simulate_jax(xs, C, node_type, mem_unit, cores_per, dyn_vec, dyn_ints,
             # --- data-store batch push (every b decisions cluster-wide);
             #     suppressed during a §4.3 store outage (stale views persist,
             #     scheduling continues — graceful degradation by design).
-            do_push = (i + 1) % b_dyn == 0
-            do_push = do_push & ~((now >= dyn.outage0) & (now < dyn.outage1))
-            do_push = do_push & ~_store_down(win, now)
-
-            def apply_push(carry):
-                L, D, rif = _truth_all(carry, now)
-                unflushed = jnp.sum(carry.pending, axis=0)     # [n, 4]
-                store_L = jnp.maximum(0.0, L - unflushed[:, :2])
-                store_D = jnp.maximum(0.0, D - unflushed[:, 2])
-                store_rif = jnp.maximum(0.0, rif - unflushed[:, 3])
-                return carry._replace(view_L=store_L, view_D=store_D,
-                                      view_rif=store_rif,
-                                      push_end=now + dyn.push_block_ms)
-
-            carry = jax.lax.cond(do_push, apply_push, lambda c: c, carry)
+            do_push = ((i + 1) % b_dyn == 0) & ~_suppress_push(win, dyn, now)
+            push_ord = (i + 1) // b_dyn if cache_faulted else None
+            carry = jax.lax.cond(
+                do_push,
+                lambda c: _apply_push(c, now, dyn, win, S, cache_faulted,
+                                      push_ord),
+                lambda c: c, carry)
             msgs = jnp.where(do_push, msgs.at[2].add(S), msgs)
         carry = carry._replace(msgs=msgs)
 
         out = (j, start, finish, enqueue_t, sched_ms, cores, mem_mb)
+        if retry:
+            out = out + (killed.astype(jnp.float32),
+                         rejected.astype(jnp.float32))
         return carry, out
 
     carry, outs = jax.lax.scan(step, carry0, xs)
+    if return_carry:
+        return carry, outs
     return carry.msgs, outs
 
 
@@ -653,7 +863,8 @@ def _sorted_fill(arr, k, value):
 
 def _commit_rounds(carry: _Carry, valid, now, j, cores, mem_mb, dur_raw,
                    d_est_j, extra_lat, dyn: _Dyn, win: _Win, cores_per,
-                   mem_unit, n: int, MU: int, outs0=None):
+                   mem_unit, n: int, MU: int, outs0=None,
+                   retry: bool = False):
     """Server-parallel commit of the ``valid``-masked tasks of a block —
     used directly by policies whose placements are known up front
     (random/dodoor/(1+β)) and as the inner commit step of the PoT
@@ -679,6 +890,14 @@ def _commit_rounds(carry: _Carry, valid, now, j, cores, mem_mb, dur_raw,
     last three feed Prequal's probe revert).  ``outs0`` seeds the
     accumulator so iterative callers (PoT/Prequal) merge commits from
     successive invocations.
+
+    ``retry`` (static) mirrors :func:`_commit_one`'s failure paths in
+    per-server-row form — same arithmetic in the same order, so the two
+    drivers stay bit-exact — and widens ``outs`` to ``[9, b]`` with killed
+    and rejected rows (f32 0/1).  A rejected task writes no units and no
+    rb entry; its outs record still carries (old_rel, old_dur, slot), and
+    Prequal's revert of that record is a no-op by construction (the slot
+    was never overwritten), keeping the telescoping exact.
     """
     bsz = j.shape[0]
     tt = jnp.arange(bsz, dtype=jnp.int32)
@@ -719,6 +938,15 @@ def _commit_rounds(carry: _Carry, valid, now, j, cores, mem_mb, dur_raw,
         chan_free = jnp.where(has, new_chan, carry.chan_free)
         enqueue_t = now_s + sched_ms
 
+        if retry:
+            # Hard capacity (mirrors _commit_one): the channel above was
+            # paid, but a full server queues nothing.
+            rejected = has & (rif >= dyn.reject_cap
+                              * cores_per.astype(jnp.float32))
+            has_w = has & ~rejected
+        else:
+            has_w = has
+
         c_eff = jnp.clip(cores_s, 1, cores_per).astype(jnp.int32)
         mu_need = jnp.clip(jnp.ceil(mem_s / mem_unit), 1, MU).astype(jnp.int32)
 
@@ -737,13 +965,26 @@ def _commit_rounds(carry: _Carry, valid, now, j, cores, mem_mb, dur_raw,
         dur = dur * _slow_stretch(win, None, start)     # straggler windows
         finish = start + dur
 
-        cf_new = _sorted_fill(cf, c_eff, finish)
-        mf_new = _sorted_fill(mf, mu_need, finish)
-        has_c = has[:, None]
+        if retry:
+            # Kill at window open (mirrors _commit_one; kt > start ≥ the
+            # unit gates, so the sorted-fill invariant still holds).
+            g0 = win.gate0                              # [n, Wg]
+            kt = jnp.full((n,), jnp.inf, jnp.float32)
+            for wi in range(g0.shape[1]):
+                opens = (g0[:, wi] > start) & (g0[:, wi] < finish)
+                kt = jnp.minimum(kt, jnp.where(opens, g0[:, wi], jnp.inf))
+            killed = has_w & jnp.isfinite(kt)
+            rel = jnp.where(killed, kt, finish)
+        else:
+            rel = finish
+
+        cf_new = _sorted_fill(cf, c_eff, rel)
+        mf_new = _sorted_fill(mf, mu_need, rel)
+        has_c = has_w[:, None]
         carry = carry._replace(
             core_free=jnp.where(has_c, cf_new, cf),
             mem_free=jnp.where(has_c, mf_new, mf),
-            prev_start=jnp.where(has, start, carry.prev_start),
+            prev_start=jnp.where(has_w, start, carry.prev_start),
             chan_free=chan_free,
         )
 
@@ -757,35 +998,45 @@ def _commit_rounds(carry: _Carry, valid, now, j, cores, mem_mb, dur_raw,
                                  carry.rb_release.shape[1]), axis=-1)
         old_rel = carry.rb_release[rows, slot]                  # pre-write
         old_dur = carry.rb_dur[rows, slot]
-        rows_h = jnp.where(has, rows, n)                        # drop no-task
+        rows_h = jnp.where(has_w, rows, n)                      # drop no-task
         carry = carry._replace(
             rb_release=carry.rb_release.at[rows_h, slot].set(
-                finish, mode="drop"),
+                rel, mode="drop"),
             rb_cpu=carry.rb_cpu.at[rows_h, slot].set(cores_s, mode="drop"),
             rb_mem=carry.rb_mem.at[rows_h, slot].set(mem_s, mode="drop"),
             rb_dur=carry.rb_dur.at[rows_h, slot].set(dest_s, mode="drop"),
         )
 
         t_out = jnp.where(has, t, bsz)                          # drop pads
-        outs = outs_prev.at[:, t_out].set(
-            jnp.stack([start, finish, enqueue_t, sched_ms,
-                       old_rel, old_dur, slot.astype(jnp.float32)]),
-            mode="drop")
+        if retry:
+            plane = jnp.stack([jnp.where(rejected, enqueue_t, start),
+                               jnp.where(rejected, enqueue_t, rel),
+                               enqueue_t, sched_ms, old_rel, old_dur,
+                               slot.astype(jnp.float32),
+                               killed.astype(jnp.float32),
+                               rejected.astype(jnp.float32)])
+        else:
+            plane = jnp.stack([start, finish, enqueue_t, sched_ms,
+                               old_rel, old_dur, slot.astype(jnp.float32)])
+        outs = outs_prev.at[:, t_out].set(plane, mode="drop")
         return (k + 1, carry, outs)
 
     if outs0 is None:
-        outs0 = jnp.zeros((7, bsz), jnp.float32)
+        outs0 = jnp.zeros((9 if retry else 7, bsz), jnp.float32)
     state = (jnp.int32(0), carry, outs0)
     _, carry, outs = jax.lax.while_loop(cond, body, state)
     return carry, outs
 
 
 @partial(jax.jit, static_argnames=("cfg", "n", "num_types", "use_kernel",
-                                   "kernel_masked"))
+                                   "kernel_masked", "cache_faulted",
+                                   "return_carry"))
 def _simulate_batched_jax(xs, C, node_type, mem_unit, cores_per, dyn_vec,
                           dyn_ints, win, cfg: EngineConfig, n: int,
                           num_types: int, seed: int, use_kernel: bool,
-                          kernel_masked: bool = False):
+                          kernel_masked: bool = False,
+                          cache_faulted: bool = False, carry0=None,
+                          return_carry: bool = False):
     """The block scan. xs fields are [nb, b, ...]: global index, r_sub,
     r_exec, d_est, d_act, submit, task_id, valid.
 
@@ -795,38 +1046,24 @@ def _simulate_batched_jax(xs, C, node_type, mem_unit, cores_per, dyn_vec,
     always ≥ 1, so the operand shapes cannot reveal whether down windows
     exist — and stays False on dynamics-free runs so they keep the
     cheaper unmasked program.  With an all-true mask both programs draw
-    identically, so the flag never changes results."""
+    identically, so the flag never changes results.
+
+    ``cfg.retry`` (static presence) compiles the kill/rejection paths and
+    widens the per-task outputs with killed/rejected planes;
+    ``cache_faulted`` switches the store views per-scheduler;
+    ``carry0``/``return_carry`` serve the retry wave loop exactly as in
+    :func:`_simulate_jax`."""
     dyn = _Dyn(*dyn_vec)
     fe_dyn = dyn_ints[1]                 # flush cadence is traced; b shapes
     S = cfg.num_schedulers               # the blocks and stays static
-    R = cfg.rbuf_slots
     MU = cfg.mem_units
     policy = cfg.policy
+    retry = cfg.retry is not None
+    orows = 9 if retry else 7
     base_key = jax.random.PRNGKey(seed)
 
-    core_init = jnp.where(jnp.arange(CMAX)[None, :] < cores_per[:, None],
-                          0.0, jnp.inf)
-    carry0 = _Carry(
-        core_free=core_init.astype(jnp.float32),
-        mem_free=jnp.zeros((n, MU), jnp.float32),
-        prev_start=jnp.zeros((n,), jnp.float32),
-        rb_release=jnp.zeros((n, R), jnp.float32),
-        rb_cpu=jnp.zeros((n, R), jnp.float32),
-        rb_mem=jnp.zeros((n, R), jnp.float32),
-        rb_dur=jnp.zeros((n, R), jnp.float32),
-        view_L=jnp.zeros((n, 2), jnp.float32),
-        view_D=jnp.zeros((n,), jnp.float32),
-        view_rif=jnp.zeros((n,), jnp.float32),
-        pending=jnp.zeros((S, n, 4), jnp.float32),
-        chan_free=jnp.zeros((n,), jnp.float32),
-        push_end=jnp.zeros((), jnp.float32),
-        pool_server=jnp.zeros((S, cfg.prequal.s_pool), jnp.int32),
-        pool_rif=jnp.full((S, cfg.prequal.s_pool), jnp.inf, jnp.float32),
-        pool_lat=jnp.full((S, cfg.prequal.s_pool), jnp.inf, jnp.float32),
-        pool_age=jnp.full((S, cfg.prequal.s_pool), -jnp.inf, jnp.float32),
-        pool_valid=jnp.zeros((S, cfg.prequal.s_pool), bool),
-        msgs=jnp.zeros((4,), jnp.int32),
-    )
+    if carry0 is None:
+        carry0 = _init_carry(cfg, n, cores_per, cache_faulted)
 
     def block_step(carry: _Carry, blk):
         idx, r_sub, r_exec_t, d_est_t, d_act_t, submit, task_id, valid = blk
@@ -864,6 +1101,19 @@ def _simulate_batched_jax(xs, C, node_type, mem_unit, cores_per, dyn_vec,
                     carry.view_D, C, alpha=cfg.alpha,
                     avail=avail if kernel_masked else None,
                     block_t=cfg.block_t, interpret=cfg.interpret)
+            elif cache_faulted:
+                # Per-scheduler degraded views: gather each task's own
+                # scheduler's copy, then the same Algorithm-1 arithmetic
+                # as dodoor_choice_batch (bit-exact vs the sequential
+                # faulted read).
+                cand2 = sample_feasible_batch(k_cand, mask, 2)  # [b, 2]
+                d_cand = d_est_t[tt[:, None], node_type[cand2]]
+                L_c = carry.view_L[sched[:, None], cand2]       # [b, 2, 2]
+                D_c = carry.view_D[sched[:, None], cand2] + d_cand
+                scores = load_score_batched(r_sub, L_c, D_c, C[cand2],
+                                            dyn.alpha)
+                two = jnp.where(scores[:, 0] > scores[:, 1],
+                                cand2[:, 1], cand2[:, 0])
             else:
                 cand2 = sample_feasible_batch(k_cand, mask, 2)  # [b, 2]
                 d_cand = d_est_t[tt[:, None], node_type[cand2]]
@@ -889,7 +1139,8 @@ def _simulate_batched_jax(xs, C, node_type, mem_unit, cores_per, dyn_vec,
             dest_t = d_est_t[tt, nt_j]
             carry, outs = _commit_rounds(
                 carry, valid, now, j, cores_t, mem_t, dur_t, dest_t,
-                extra_lat, dyn, win, cores_per, mem_unit, n, MU)
+                extra_lat, dyn, win, cores_per, mem_unit, n, MU,
+                retry=retry)
         elif policy == "pot":
             # Speculative commit + conflict replay.  Each iteration scores
             # every pending task against the *current* carry, commits the
@@ -934,12 +1185,12 @@ def _simulate_batched_jax(xs, C, node_type, mem_unit, cores_per, dyn_vec,
                     jnp.where(pick_b, dur_c[:, 1], dur_c[:, 0]),
                     jnp.where(pick_b, dest_c[:, 1], dest_c[:, 0]),
                     pot_lat, dyn, win, cores_per, mem_unit, n, MU,
-                    outs0=outs)
+                    outs0=outs, retry=retry)
                 j_acc = jnp.where(commit, j_spec, j_acc)
                 return (q, c, j_acc, outs)
 
             state = (jnp.int32(0), carry, jnp.zeros((bsz,), jnp.int32),
-                     jnp.zeros((7, bsz), jnp.float32))
+                     jnp.zeros((orows, bsz), jnp.float32))
             _, carry, j, outs = jax.lax.while_loop(spec_cond, spec_body,
                                                    state)
         else:  # prequal — scheduler-parallel segment scan over S-chunks
@@ -1012,7 +1263,7 @@ def _simulate_batched_jax(xs, C, node_type, mem_unit, cores_per, dyn_vec,
                     scat(r_exec_t[ic, nt_c, 1]), scat(d_act_t[ic, nt_c]),
                     scat(d_est_t[ic, nt_c]),
                     jnp.zeros((bsz,), jnp.float32), dyn, win, cores_per,
-                    mem_unit, n, MU, outs0=outs)
+                    mem_unit, n, MU, outs0=outs, retry=retry)
                 j_acc = jnp.where(commit, j_full, j_acc)
 
                 # -- post-scheduling async probes: each task reads ground
@@ -1067,7 +1318,7 @@ def _simulate_batched_jax(xs, C, node_type, mem_unit, cores_per, dyn_vec,
                 return (c, j_acc, outs)
 
             state = (carry, jnp.zeros((bsz,), jnp.int32),
-                     jnp.zeros((7, bsz), jnp.float32))
+                     jnp.zeros((orows, bsz), jnp.float32))
             carry, j, outs = jax.lax.fori_loop(0, nchunks, chunk_body,
                                                state)
 
@@ -1096,6 +1347,10 @@ def _simulate_batched_jax(xs, C, node_type, mem_unit, cores_per, dyn_vec,
                 (sched[None, :] == sched[:, None])
                 & (tt[None, :] >= tt[:, None]) & do_flush[None, :], axis=1)
             survives = valid & ~flushed_after
+            if retry:
+                # A rejected placement queued nothing → reports no delta
+                # (mirrors the sequential driver).
+                survives = survives & ~(outs[8] > 0.5)
             add = jnp.zeros_like(carry.pending).at[
                 sched, jnp.clip(j, 0, n - 1)].add(
                     delta * survives[:, None].astype(delta.dtype))
@@ -1110,28 +1365,25 @@ def _simulate_batched_jax(xs, C, node_type, mem_unit, cores_per, dyn_vec,
             # the b-th decision (the padded tail never pushes), matching the
             # sequential trigger (i+1) % b == 0 exactly.
             now_push = now[-1]
-            do_push = valid[-1]
-            do_push = do_push & ~((now_push >= dyn.outage0)
-                                  & (now_push < dyn.outage1))
-            do_push = do_push & ~_store_down(win, now_push)
-
-            def apply_push(c):
-                L, D, rif = _truth_all(c, now_push)
-                unflushed = jnp.sum(c.pending, axis=0)          # [n, 4]
-                return c._replace(
-                    view_L=jnp.maximum(0.0, L - unflushed[:, :2]),
-                    view_D=jnp.maximum(0.0, D - unflushed[:, 2]),
-                    view_rif=jnp.maximum(0.0, rif - unflushed[:, 3]),
-                    push_end=now_push + dyn.push_block_ms)
-
-            carry = jax.lax.cond(do_push, apply_push, lambda c: c, carry)
+            do_push = valid[-1] & ~_suppress_push(win, dyn, now_push)
+            push_ord = ((idx[-1] + 1) // dyn_ints[0]) if cache_faulted \
+                else None
+            carry = jax.lax.cond(
+                do_push,
+                lambda c: _apply_push(c, now_push, dyn, win, S,
+                                      cache_faulted, push_ord),
+                lambda c: c, carry)
             msgs = jnp.where(do_push, msgs.at[2].add(S), msgs)
         carry = carry._replace(msgs=msgs)
 
         out = (j, o_start, o_finish, o_enq, o_sched, cores_t, mem_t)
+        if retry:
+            out = out + (outs[7], outs[8])
         return carry, out
 
     carry, outs = jax.lax.scan(block_step, carry0, xs)
+    if return_carry:
+        return carry, outs
     return carry.msgs, outs
 
 
@@ -1159,14 +1411,17 @@ def _conv_cached(key, pins, builder):
 
 
 def _make_dyn(cfg: EngineConfig) -> jnp.ndarray:
-    """The traced-scalar parameters, packed as one [10] device array (a
+    """The traced-scalar parameters, packed as one [11] device array (a
     single transfer; unpacked into :class:`_Dyn` inside the jit)."""
     def build():
         o0, o1 = cfg.outage_ms if cfg.outage_ms else (np.inf, np.inf)
+        cap = np.inf
+        if cfg.retry is not None and cfg.retry.reject_queue_factor > 0:
+            cap = cfg.retry.reject_queue_factor
         return jnp.asarray(np.array(
             [cfg.alpha, cfg.beta, cfg.interference, cfg.rpc.hop_ms,
              cfg.rpc.chan_ms, cfg.rpc.push_block_ms, cfg.rpc.compute_ms,
-             o0, o1, cfg.prequal.q_rif], np.float32))
+             o0, o1, cfg.prequal.q_rif, cap], np.float32))
 
     return _conv_cached(("dyn", cfg), (), build)
 
@@ -1205,7 +1460,7 @@ def _lower_dynamics(dynamics, n: int,
                     widths: tuple | None = None) -> _Win:
     """Lower a :class:`Dynamics` spec to :class:`_Win` operand planes.
 
-    ``widths=(Wd, Wg, Ws, Wo)`` overrides the minimal pad widths — the
+    ``widths=(Wd, Wg, Ws, Wo, Wc)`` overrides the minimal pad widths — the
     scenario grid aligns every scenario to shared shapes (one compiled
     program); padding never changes results (empty windows are inert), so
     per-run and grid lowerings agree bit-exactly.  Cached per
@@ -1249,16 +1504,27 @@ def _lower_dynamics(dynamics, n: int,
                 raise ValueError("slowdown needs t1 > t0 and mult > 0")
         if any(t1 <= t0 for t0, t1 in dynamics.store_outages):
             raise ValueError("store outage needs t1 > t0")
+        cfault = dynamics.cache_faults
+        if cfault is not None:
+            if not isinstance(cfault, CacheFaults):
+                raise TypeError("cache_faults must be a CacheFaults spec")
+            if not 0.0 <= cfault.loss_rate <= 1.0:
+                raise ValueError("cache_faults.loss_rate must be in [0, 1]")
+            if cfault.delay_ms < 0.0:
+                raise ValueError("cache_faults.delay_ms must be ≥ 0")
+            if any(t1 <= t0 for t0, t1 in cfault.loss_windows):
+                raise ValueError("cache loss window needs t1 > t0")
 
         wd = max(1, max((len(v) for v in down.values()), default=0))
         wg = max(1, max((len(v) for v in gate.values()), default=0))
         ws = max(1, max((len(v) for v in slow.values()), default=0))
         wo = max(1, len(dynamics.store_outages))
+        wc = max(1, len(cfault.loss_windows) if cfault is not None else 0)
         if widths is not None:
-            need = (wd, wg, ws, wo)
+            need = (wd, wg, ws, wo, wc)
             if any(w < r for w, r in zip(widths, need)):
                 raise ValueError(f"widths {widths} < required {need}")
-            wd, wg, ws, wo = widths
+            wd, wg, ws, wo, wc = widths
 
         d0, d1 = _pack_windows(down, n, wd, (np.inf, np.inf))
         g0, g1 = _pack_windows(gate, n, wg, (np.inf, np.inf))
@@ -1267,8 +1533,20 @@ def _lower_dynamics(dynamics, n: int,
         o1 = np.full((wo,), np.inf, np.float32)
         for wi, (t0, t1) in enumerate(sorted(dynamics.store_outages)):
             o0[wi], o1[wi] = t0, t1
+        c0 = np.full((wc,), np.inf, np.float32)
+        c1 = np.full((wc,), np.inf, np.float32)
+        rate, delay, cseed = 0.0, 0.0, 0
+        if cfault is not None:
+            for wi, (t0, t1) in enumerate(sorted(cfault.loss_windows)):
+                c0[wi], c1[wi] = t0, t1
+            rate, delay, cseed = (cfault.loss_rate, cfault.delay_ms,
+                                  int(cfault.seed))
         return _Win(*(jnp.asarray(a)
-                      for a in (d0, d1, g0, g1, s0, s1, sm, o0, o1)))
+                      for a in (d0, d1, g0, g1, s0, s1, sm, o0, o1,
+                                c0, c1)),
+                    cache_rate=jnp.float32(rate),
+                    cache_delay=jnp.float32(delay),
+                    cache_seed=jnp.int32(cseed))
 
     return _conv_cached(("win", dynamics, n, widths), (), build)
 
@@ -1291,6 +1569,11 @@ def _static_cfg(cfg: EngineConfig, for_kernel: bool = False,
         prequal=cfg.prequal._replace(q_rif=0.84),
         block_t=cfg.block_t if for_kernel else 256,
         interpret=cfg.interpret if for_kernel else None,
+        # Only the *presence* of a RetryPolicy shapes the program (kill/
+        # reject arithmetic + widened outputs); its knobs are host-side
+        # (wave loop) or traced (reject_cap), so all retry settings share
+        # one compiled program per driver.
+        retry=None if cfg.retry is None else RetryPolicy(),
     )
 
 
@@ -1305,6 +1588,15 @@ def _validate_config(cfg: EngineConfig) -> None:
             raise ValueError(
                 f"flush_every={cfg.flush_every} violates the §4.1 mini-batch "
                 f"bound 2b/num_schedulers = {bound}")
+    if cfg.retry is not None:
+        rp = cfg.retry
+        if not isinstance(rp, RetryPolicy):
+            raise TypeError("EngineConfig.retry must be a RetryPolicy")
+        if rp.max_attempts < 1:
+            raise ValueError("retry.max_attempts must be ≥ 1")
+        if rp.backoff_ms < 0.0 or rp.backoff_mult <= 0.0:
+            raise ValueError(
+                "retry needs backoff_ms ≥ 0 and backoff_mult > 0")
 
 
 def _blocked_inputs(workload, b: int):
@@ -1363,6 +1655,129 @@ def resolve_use_kernel(use_kernel, interpret: bool | None = None) -> bool:
     return bool(use_kernel)
 
 
+def _simulate_with_retries(workload, cluster: ClusterSpec, cfg: EngineConfig,
+                           seed: int, mode: str, use_kernel: bool,
+                           dynamics, masked: bool,
+                           faulted: bool) -> SimResult:
+    """The re-entry queue: run the decision stream in *waves*.
+
+    Wave 1 is the full workload.  Tasks killed by a freeze window or
+    rejected at hard capacity re-enter as wave k+1, resubmitted at
+    ``fail_time + backoff_ms·mult^(k-1)`` (sorted by retry time, original
+    index as tie-break), with fresh decision randomness (task key
+    ``orig_index + (attempt-1)·m``).  The cluster carry — ring buffers,
+    unit clocks, channels, cached views, pools, message ledger — threads
+    from wave to wave, so retries contend with the load their first
+    attempts created.  Wave-local cadences (scheduler round-robin, flush,
+    push) restart per wave: a resubmission is a fresh decision to the
+    scheduling layer.  Tasks still failing after ``max_attempts``
+    submissions fail permanently (``SimResult.failed``); their recorded
+    finish is the last kill/reject time.
+
+    Both drivers run the same wave plan — the sequential oracle at exact
+    wave length, the batched driver padded to whole ``b``-blocks — so the
+    seq-vs-batched parity guarantee extends to every failure path."""
+    rp = cfg.retry
+    n = cluster.num_servers
+    C, node_type, cores_per, mem_unit = _cluster_arrays(cluster,
+                                                        cfg.mem_units)
+    dyn = _make_dyn(cfg)
+    dyn_i = _make_dyn_ints(cfg)
+    win = _lower_dynamics(dynamics, n)
+    m = workload.r_submit.shape[0]
+    batched = mode == "batched"
+    scfg = (_static_cfg(cfg, for_kernel=use_kernel, keep_b=True) if batched
+            else _static_cfg(cfg))
+    b = cfg.b
+
+    host = {f: np.ascontiguousarray(getattr(workload, f))
+            for f in ("r_submit", "r_exec", "d_est", "d_act", "submit_ms")}
+
+    server = np.zeros(m, np.int32)
+    fin = {k: np.zeros(m, np.float32)
+           for k in ("start", "finish", "enq", "sched", "cores", "mem")}
+    attempts = np.zeros(m, np.int32)
+    wasted = np.zeros(m, np.float64)
+
+    idx = np.arange(m)                       # original ids, this wave
+    submit_w = host["submit_ms"].astype(np.float32)
+    carry = None
+    for a in range(1, rp.max_attempts + 1):
+        mw = idx.shape[0]
+        task_id = (idx + (a - 1) * m).astype(np.int32)
+        if batched:
+            nb = -(-mw // b)
+            pad = nb * b - mw
+
+            def blk(arr):
+                arr = np.ascontiguousarray(arr)
+                if pad:
+                    arr = np.pad(arr, ((0, pad),) + ((0, 0),)
+                                 * (arr.ndim - 1), mode="edge")
+                return jnp.asarray(arr.reshape((nb, b) + arr.shape[1:]))
+
+            ids = np.arange(nb * b, dtype=np.int32)
+            xs = (jnp.asarray(ids.reshape(nb, b)),
+                  blk(host["r_submit"][idx]), blk(host["r_exec"][idx]),
+                  blk(host["d_est"][idx]), blk(host["d_act"][idx]),
+                  blk(submit_w), blk(task_id),
+                  jnp.asarray((ids < mw).reshape(nb, b)))
+            carry, outs = _simulate_batched_jax(
+                xs, C, node_type, mem_unit, cores_per, dyn, dyn_i, win,
+                scfg, n, cluster.num_types, seed, use_kernel, masked,
+                cache_faulted=faulted, carry0=carry, return_carry=True)
+            outs = [np.asarray(o).reshape(nb * b)[:mw] for o in outs]
+        else:
+            xs = (jnp.arange(mw, dtype=jnp.int32),
+                  jnp.asarray(host["r_submit"][idx]),
+                  jnp.asarray(host["r_exec"][idx]),
+                  jnp.asarray(host["d_est"][idx]),
+                  jnp.asarray(host["d_act"][idx]),
+                  jnp.asarray(submit_w), jnp.asarray(task_id))
+            carry, outs = _simulate_jax(
+                xs, C, node_type, mem_unit, cores_per, dyn, dyn_i, win,
+                scfg, n, cluster.num_types, seed,
+                cache_faulted=faulted, carry0=carry, return_carry=True)
+            outs = [np.asarray(o) for o in outs]
+
+        j_w, start_w, fin_w, enq_w, sch_w, cor_w, mem_w, k_w, r_w = outs
+        killed = k_w > 0.5
+        server[idx] = j_w
+        for k, v in (("start", start_w), ("finish", fin_w), ("enq", enq_w),
+                     ("sched", sch_w), ("cores", cor_w), ("mem", mem_w)):
+            fin[k][idx] = v
+        attempts[idx] = a
+        wasted[idx[killed]] += (fin_w - start_w)[killed].astype(np.float64)
+
+        fail_w = killed | (r_w > 0.5)
+        if not fail_w.any():
+            idx = idx[:0]
+            break
+        # Re-entry queue for the next wave: killed → resubmit from the
+        # kill time, rejected → from the reject reply, plus exponential
+        # backoff.  Sorted by retry time (original id breaks ties).
+        t_retry = fin_w[fail_w].astype(np.float64) \
+            + rp.backoff_ms * (rp.backoff_mult ** (a - 1))
+        idx = idx[fail_w]
+        order = np.lexsort((idx, t_retry))
+        idx = idx[order]
+        submit_w = t_retry[order].astype(np.float32)
+
+    failed = np.zeros(m, bool)
+    failed[idx] = True
+    msgs = np.asarray(carry.msgs)
+    return SimResult(
+        server=server, submit_ms=host["submit_ms"],
+        enqueue_ms=fin["enq"], start_ms=fin["start"],
+        finish_ms=fin["finish"], sched_ms=fin["sched"],
+        cores=fin["cores"], mem_mb=fin["mem"],
+        msgs_base=int(msgs[0]), msgs_probe=int(msgs[1]),
+        msgs_push=int(msgs[2]), msgs_flush=int(msgs[3]),
+        policy=cfg.policy, attempts=attempts, failed=failed,
+        wasted_ms=wasted.astype(np.float32),
+    )
+
+
 def simulate(workload, cluster: ClusterSpec, cfg: EngineConfig,
              seed: int = 0, *, mode: str = "sequential",
              use_kernel: bool | str = "auto", dynamics=None) -> SimResult:
@@ -1390,7 +1805,15 @@ def simulate(workload, cluster: ClusterSpec, cfg: EngineConfig,
         scenario engine, ``repro.sim.scenarios``).  Exact in both modes
         and on the kernel path: ``use_kernel=True`` routes the down-window
         availability plane into the megakernel's masked-sampling prefilter
-        (draw-for-draw identical to the two-stage masked path).
+        (draw-for-draw identical to the two-stage masked path).  A
+        ``cache_faults`` spec switches the cached-view policies onto
+        per-scheduler (possibly loss-degraded) views — this forces the
+        two-stage path (the megakernel reads only the shared view).
+
+    Failure semantics: with ``cfg.retry`` set, killed/rejected tasks ride
+    the re-entry wave loop (:func:`_simulate_with_retries`) and the result
+    carries ``attempts``/``failed``/``wasted_ms``; with ``retry=None``
+    results are bit-identical to the pre-failure-layer engine.
 
     ``workload`` and ``cluster`` are cached on device by object identity
     (they are frozen dataclasses): do not mutate their arrays in place
@@ -1400,6 +1823,30 @@ def simulate(workload, cluster: ClusterSpec, cfg: EngineConfig,
         raise ValueError(f"unknown mode {mode!r}")
     use_kernel = resolve_use_kernel(use_kernel, cfg.interpret)
     _validate_config(cfg)
+    if dynamics is not None and not isinstance(dynamics, Dynamics):
+        raise TypeError(f"dynamics must be a Dynamics spec, got "
+                        f"{type(dynamics).__name__}")
+    if cfg.outage_ms:
+        warnings.warn(
+            "EngineConfig.outage_ms is deprecated — use "
+            "Dynamics(store_outages=((t0, t1),)); simulate() routes the "
+            "scalar window through the store-outage timeline "
+            "(bit-identical suppression arithmetic).",
+            DeprecationWarning, stacklevel=2)
+        legacy = Dynamics(store_outages=(
+            (float(cfg.outage_ms[0]), float(cfg.outage_ms[1])),))
+        dynamics = legacy if dynamics is None else dynamics.merge(legacy)
+        cfg = cfg._replace(outage_ms=())
+    faulted = dynamics is not None and dynamics.cache_faults is not None
+    if faulted:
+        # Per-scheduler degraded views need the two-stage gather path;
+        # the fused megakernel only reads the shared store view.
+        use_kernel = False
+    masked = (use_kernel and dynamics is not None
+              and dynamics.has_down_windows)
+    if cfg.retry is not None:
+        return _simulate_with_retries(workload, cluster, cfg, seed, mode,
+                                      use_kernel, dynamics, masked, faulted)
     n = cluster.num_servers
     C, node_type, cores_per, mem_unit = _cluster_arrays(cluster,
                                                         cfg.mem_units)
@@ -1412,12 +1859,11 @@ def simulate(workload, cluster: ClusterSpec, cfg: EngineConfig,
         b = cfg.b
         nb = -(-m // b)
         xs = _blocked_inputs(workload, b)
-        masked = (use_kernel and dynamics is not None
-                  and dynamics.has_down_windows)
         msgs, outs = _simulate_batched_jax(
             xs, C, node_type, mem_unit, cores_per, dyn, _make_dyn_ints(cfg),
             win, _static_cfg(cfg, for_kernel=use_kernel, keep_b=True), n,
-            cluster.num_types, seed, use_kernel, masked)
+            cluster.num_types, seed, use_kernel, masked,
+            cache_faulted=faulted)
         outs = tuple(np.asarray(o).reshape(nb * b, *o.shape[2:])[:m]
                      for o in outs)
     else:
@@ -1437,7 +1883,8 @@ def simulate(workload, cluster: ClusterSpec, cfg: EngineConfig,
         msgs, outs = _simulate_jax(xs, C, node_type, mem_unit, cores_per,
                                    dyn, _make_dyn_ints(cfg), win,
                                    _static_cfg(cfg), n,
-                                   cluster.num_types, seed)
+                                   cluster.num_types, seed,
+                                   cache_faulted=faulted)
         outs = tuple(np.asarray(o) for o in outs)
     msgs = np.asarray(msgs)
     j, start, finish, enq, sched_ms, cores, mem_mb = outs

@@ -41,7 +41,10 @@ def _restrict_dynamics(dynamics: Dynamics, idx: np.ndarray) -> Dynamics:
                     joins=remap(dynamics.joins),
                     leaves=remap(dynamics.leaves),
                     slowdowns=remap(dynamics.slowdowns),
-                    store_outages=dynamics.store_outages)
+                    store_outages=dynamics.store_outages,
+                    # like store outages: each part's store/scheduler link
+                    # degrades under the one global fault spec.
+                    cache_faults=dynamics.cache_faults)
 
 
 def _take_tasks(workload, sel: np.ndarray):
@@ -136,13 +139,24 @@ def simulate_hierarchical(workload, cluster: ClusterSpec, cfg: EngineConfig,
               ("submit_ms", "enqueue_ms", "start_ms", "finish_ms",
                "sched_ms", "cores", "mem_mb")}
     msgs = np.zeros(4, np.int64)
+    # failure-layer planes interleave like the rest — each mini-cluster
+    # runs its own re-entry wave loop over its share of the round-robin.
+    retry = cfg.retry is not None
+    attempts = np.ones(m, np.int32) if retry else None
+    failed = np.zeros(m, bool) if retry else None
+    wasted = np.zeros(m, np.float32) if retry else None
     for res, sel, idx in results:
         server[sel] = idx[res.server]
         for f in arrays:
             arrays[f][sel] = getattr(res, f)
+        if retry:
+            attempts[sel] = res.attempts
+            failed[sel] = res.failed
+            wasted[sel] = res.wasted_ms
         msgs += [res.msgs_base, res.msgs_probe, res.msgs_push,
                  res.msgs_flush]
     return SimResult(server=server, msgs_base=int(msgs[0]),
                      msgs_probe=int(msgs[1]), msgs_push=int(msgs[2]),
                      msgs_flush=int(msgs[3]), policy=policies.pop(),
+                     attempts=attempts, failed=failed, wasted_ms=wasted,
                      **arrays)

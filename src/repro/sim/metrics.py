@@ -29,6 +29,15 @@ class Summary(NamedTuple):
     sched_p95_ms: float
     wait_mean_ms: float
     wall_time_s: float
+    #: recovery metrics (failure layer): goodput counts *first-attempt*
+    #: completions per wall second (== throughput_tps when the run carried
+    #: no RetryPolicy — nothing can fail), retries_per_task is mean
+    #: (attempts − 1), wasted is total killed-execution milliseconds,
+    #: failure_rate the permanently-failed fraction.
+    goodput_tps: float = 0.0
+    retries_per_task: float = 0.0
+    wasted_ms_total: float = 0.0
+    failure_rate: float = 0.0
 
     def row(self) -> str:
         return (f"{self.policy:>14s}  msgs/task={self.msgs_per_task:6.2f}  "
@@ -37,6 +46,29 @@ class Summary(NamedTuple):
                 f"mk_p95={self.makespan_p95_ms:9.1f}ms  "
                 f"sched_mean={self.sched_mean_ms:6.2f}ms  "
                 f"sched_p95={self.sched_p95_ms:6.2f}ms")
+
+
+def _recovery_metrics(res: SimResult, wall_s: float, sel=None) -> dict:
+    """The failure-layer Summary fields from a result's recovery arrays
+    (zeros when the run carried no RetryPolicy).  Goodput counts tasks
+    that completed on their *first* attempt — the completed-first-attempt
+    throughput the ISSUE's accounting names."""
+    if res.attempts is None:
+        m = res.server.shape[0] if sel is None else int(np.sum(sel))
+        return dict(goodput_tps=m / max(wall_s, 1e-9),
+                    retries_per_task=0.0, wasted_ms_total=0.0,
+                    failure_rate=0.0)
+    att = res.attempts if sel is None else res.attempts[sel]
+    fail = res.failed if sel is None else res.failed[sel]
+    waste = res.wasted_ms if sel is None else res.wasted_ms[sel]
+    m = att.shape[0]
+    first_try = int(((att == 1) & ~fail).sum())
+    return dict(
+        goodput_tps=first_try / max(wall_s, 1e-9),
+        retries_per_task=float((att - 1).mean()) if m else 0.0,
+        wasted_ms_total=float(waste.sum(dtype=np.float64)),
+        failure_rate=float(fail.mean()) if m else 0.0,
+    )
 
 
 def summarize(res: SimResult) -> Summary:
@@ -54,6 +86,7 @@ def summarize(res: SimResult) -> Summary:
         sched_p95_ms=float(np.percentile(res.sched_ms, 95)),
         wait_mean_ms=float(res.wait_ms.mean()),
         wall_time_s=wall_s,
+        **_recovery_metrics(res, wall_s),
     )
 
 
@@ -109,7 +142,9 @@ def summarize_window(res: SimResult, t0_ms: float, t1_ms: float) -> Summary:
                        msgs_per_task=0.0, throughput_tps=0.0,
                        makespan_mean_ms=0.0, makespan_p95_ms=0.0,
                        sched_mean_ms=0.0, sched_p95_ms=0.0,
-                       wait_mean_ms=0.0, wall_time_s=wall_s)
+                       wait_mean_ms=0.0, wall_time_s=wall_s,
+                       goodput_tps=0.0, retries_per_task=0.0,
+                       wasted_ms_total=0.0, failure_rate=0.0)
     mk = res.makespan_ms[sel]
     sched = res.sched_ms[sel]
     wait = res.wait_ms[sel]
@@ -126,6 +161,7 @@ def summarize_window(res: SimResult, t0_ms: float, t1_ms: float) -> Summary:
         sched_p95_ms=float(np.percentile(sched, 95)),
         wait_mean_ms=float(wait.mean()),
         wall_time_s=wall_s,
+        **_recovery_metrics(res, wall_s, sel),
     )
 
 
@@ -138,6 +174,38 @@ def phase_summaries(res: SimResult, edges_ms) -> list:
         raise ValueError("edges_ms must be ≥ 2 strictly increasing times")
     return [(a, b, summarize_window(res, a, b))
             for a, b in zip(edges, edges[1:])]
+
+
+def fault_stats(res: SimResult) -> dict:
+    """The failure layer's scalar accounting for one run: retry counts,
+    wasted (killed-execution) work, permanent failures, and goodput —
+    directly from the result's recovery arrays (degenerate zeros when the
+    run carried no RetryPolicy)."""
+    wall_s = float(res.finish_ms.max() - res.submit_ms.min()) / 1e3
+    out = _recovery_metrics(res, wall_s)
+    if res.attempts is None:
+        out.update(num_retried=0, num_failed=0, max_attempts=1)
+    else:
+        out.update(num_retried=int((res.attempts > 1).sum()),
+                   num_failed=int(res.failed.sum()),
+                   max_attempts=int(res.attempts.max()))
+    return out
+
+
+def time_to_recover_ms(res: SimResult, dynamics) -> float:
+    """Time from the last finite outage-window end until the last *retried*
+    task completes — how long the cluster takes to drain the re-entry
+    backlog an outage created.  0.0 when nothing was retried, no window
+    ended, or the backlog drained before the window closed."""
+    ends = [float(t1) for _, _, t1 in getattr(dynamics, "outages", ())
+            if np.isfinite(t1)]
+    if not ends or res.attempts is None:
+        return 0.0
+    retried = (res.attempts > 1) & ~res.failed
+    if not retried.any():
+        return 0.0
+    last_end = max(ends)
+    return float(max(0.0, res.finish_ms[retried].max() - last_end))
 
 
 def mean_in_system(res: SimResult, t0_ms: float, t1_ms: float) -> float:

@@ -121,6 +121,10 @@ class ScenarioSweep(NamedTuple):
     seeds: tuple
     scenarios: tuple          # length K, Scenario per grid column
     config: EngineConfig
+    #: recovery planes — present only when ``config`` carries a RetryPolicy.
+    attempts: np.ndarray | None = None
+    failed: np.ndarray | None = None
+    wasted_ms: np.ndarray | None = None
 
     @property
     def num_seeds(self) -> int:
@@ -148,6 +152,10 @@ class ScenarioSweep(NamedTuple):
             msgs_push=int(self.msgs[si, ki, 2]),
             msgs_flush=int(self.msgs[si, ki, 3]),
             policy=self.policy,
+            attempts=None if self.attempts is None else self.attempts[si, ki],
+            failed=None if self.failed is None else self.failed[si, ki],
+            wasted_ms=(None if self.wasted_ms is None
+                       else self.wasted_ms[si, ki]),
         )
 
 
@@ -202,6 +210,9 @@ def run_scenario_grid(base, cluster: ClusterSpec,
         # writable array) and is a no-copy pass-through otherwise.
         submit_ms=np.ascontiguousarray(st.submit_ms), msgs=st.msgs[:, 0],
         policy=st.policy, seeds=seeds, scenarios=scenarios, config=cfg,
+        attempts=None if st.attempts is None else st.attempts[:, 0],
+        failed=None if st.failed is None else st.failed[:, 0],
+        wasted_ms=None if st.wasted_ms is None else st.wasted_ms[:, 0],
     )
 
 
@@ -210,17 +221,45 @@ def run_scenario_grid(base, cluster: ClusterSpec,
 # complete Dynamics; compose them with ``a.merge(b, ...)``.
 # --------------------------------------------------------------------------
 
+def _union_per_server(draws):
+    """Union-merge per-server ``(srv, t0, t1)`` draws so no server carries
+    overlapping windows.  Safe on engine output: start gating already
+    resolves overlapping windows to the same gated start, and a running
+    task is killed at the *earliest* opening inside its span — which the
+    union preserves (a later overlapping opening can only strike a task
+    the earlier window already struck)."""
+    per: dict = {}
+    for s, t0, t1 in draws:
+        per.setdefault(int(s), []).append((float(t0), float(t1)))
+    out = []
+    for s in sorted(per):
+        merged: list = []
+        for t0, t1 in sorted(per[s]):
+            if merged and t0 <= merged[-1][1]:
+                merged[-1] = (merged[-1][0], max(merged[-1][1], t1))
+            else:
+                merged.append((t0, t1))
+        out.extend((s, t0, t1) for t0, t1 in merged)
+    return tuple(out)
+
+
 def random_outages(n: int, count: int, horizon_ms: float,
                    mean_down_ms: float = 5_000.0, seed: int = 0) -> Dynamics:
     """``count`` outage windows on uniformly drawn servers, exponential
     durations (mean ``mean_down_ms``), starts uniform in the horizon —
-    the §4.3 "servers fail at random" grid axis."""
+    the §4.3 "servers fail at random" grid axis.
+
+    Windows drawn on the same server are union-merged, so the returned
+    spec always satisfies the per-server non-overlap property (the
+    failure layer's kill/retry accounting attributes each kill to exactly
+    one window); fewer than ``count`` windows come back iff draws
+    collided on a server.
+    """
     rng = np.random.RandomState(seed)
     srv = rng.randint(0, n, size=count)
     t0 = rng.uniform(0.0, horizon_ms, size=count)
     dur = rng.exponential(mean_down_ms, size=count)
-    return Dynamics(outages=tuple((int(s), float(a), float(a + d))
-                                  for s, a, d in zip(srv, t0, dur)))
+    return Dynamics(outages=_union_per_server(zip(srv, t0, t0 + dur)))
 
 
 def rolling_restart(n: int, down_ms: float, stagger_ms: float,
@@ -255,11 +294,25 @@ def random_stragglers(n: int, count: int, horizon_ms: float,
                       mean_slow_ms: float = 10_000.0, mult: float = 4.0,
                       seed: int = 0) -> Dynamics:
     """``count`` transient slowdown windows (tasks starting inside run
-    ``mult``× longer) on uniform servers/starts."""
+    ``mult``× longer) on uniform servers/starts.
+
+    Same-server windows are truncated at the next window's start (never
+    union-merged: overlapping slowdowns *compound* multiplicatively in the
+    engine, so a union would change the stretch), keeping the per-server
+    non-overlap property without altering the single-window multiplier.
+    """
     rng = np.random.RandomState(seed)
     srv = rng.randint(0, n, size=count)
     t0 = rng.uniform(0.0, horizon_ms, size=count)
     dur = rng.exponential(mean_slow_ms, size=count)
-    return Dynamics(slowdowns=tuple((int(s), float(a), float(a + d),
-                                     float(mult))
-                                    for s, a, d in zip(srv, t0, dur)))
+    per: dict = {}
+    for s, a, d in zip(srv, t0, dur):
+        per.setdefault(int(s), []).append((float(a), float(a + d)))
+    wins = []
+    for s in sorted(per):
+        spans = sorted(per[s])
+        for i, (a, b) in enumerate(spans):
+            end = min(b, spans[i + 1][0]) if i + 1 < len(spans) else b
+            if end > a:
+                wins.append((s, a, end, float(mult)))
+    return Dynamics(slowdowns=tuple(wins))

@@ -56,7 +56,7 @@ from .cluster import ClusterSpec
 from .engine import (EngineConfig, SimResult, _blocked_inputs,
                      _cluster_arrays, _lower_dynamics, _make_dyn,
                      _make_dyn_ints, _simulate_batched_jax, _static_cfg,
-                     _validate_config, resolve_use_kernel)
+                     _validate_config, resolve_use_kernel, simulate)
 from .hierarchy import _restrict_dynamics, _take_tasks, split_cluster
 from .metrics import summarize
 from .scenarios import Scenario, scenario_workload
@@ -123,6 +123,11 @@ class StudyResult(NamedTuple):
     seeds: tuple              # length S
     configs: tuple            # length G
     scenarios: tuple          # length K
+    #: recovery planes — present only when the configs carry a RetryPolicy
+    #: (the per-point failure-layer fallback); ``[S, G, K, m]``.
+    attempts: np.ndarray | None = None
+    failed: np.ndarray | None = None
+    wasted_ms: np.ndarray | None = None
 
     @property
     def num_seeds(self) -> int:
@@ -155,6 +160,11 @@ class StudyResult(NamedTuple):
             msgs_push=int(self.msgs[si, gi, ki, 2]),
             msgs_flush=int(self.msgs[si, gi, ki, 3]),
             policy=self.policy,
+            attempts=(None if self.attempts is None
+                      else self.attempts[si, gi, ki]),
+            failed=None if self.failed is None else self.failed[si, gi, ki],
+            wasted_ms=(None if self.wasted_ms is None
+                       else self.wasted_ms[si, gi, ki]),
         )
 
 
@@ -190,10 +200,11 @@ def _block_plane(a: np.ndarray, b: int) -> np.ndarray:
 
 
 @partial(jax.jit, static_argnames=("cfg", "n", "num_types", "use_kernel",
-                                   "kernel_masked"))
+                                   "kernel_masked", "cache_faulted"))
 def _study_jax(xs, submit_pt, wins, C, node_type, mem_unit, cores_per,
                dyn_pt, ints_pt, seeds_pt, cfg: EngineConfig, n: int,
-               num_types: int, use_kernel: bool, kernel_masked: bool):
+               num_types: int, use_kernel: bool, kernel_masked: bool,
+               cache_faulted: bool = False):
     """vmap the batched block scan over the flattened point axis.  Whether
     the submit plane and the window operands ride the point axis or
     broadcast is read off their ranks (``[P, nb, b]`` vs ``[nb, b]``;
@@ -208,7 +219,8 @@ def _study_jax(xs, submit_pt, wins, C, node_type, mem_unit, cores_per,
         return _simulate_batched_jax(xs_p, C, node_type, mem_unit,
                                      cores_per, dyn_vec, dyn_ints, win,
                                      cfg, n, num_types, seed, use_kernel,
-                                     kernel_masked)
+                                     kernel_masked,
+                                     cache_faulted=cache_faulted)
 
     return jax.vmap(point, in_axes=(sub_ax, win_ax, 0, 0, 0))(
         submit_pt, wins, dyn_pt, ints_pt, seeds_pt)
@@ -222,12 +234,12 @@ _PMAP_CACHE: dict = {}
 
 def _pmap_shard(static_cfg: EngineConfig, n: int, num_types: int,
                 use_kernel: bool, kernel_masked: bool, sub_ax: bool,
-                win_ax: bool):
+                win_ax: bool, cache_faulted: bool = False):
     """One dispatch for the whole grid: each device ``lax.map``s its chunk
     of points sequentially (the unvmapped single-run program per point),
     so the broadcast operands ship once, not once per round."""
     key = (static_cfg, n, num_types, use_kernel, kernel_masked, sub_ax,
-           win_ax)
+           win_ax, cache_faulted)
     fn = _PMAP_CACHE.get(key)
     if fn is None:
         def shard(xs, C, node_type, mem_unit, cores_per, submit, wins,
@@ -244,7 +256,7 @@ def _pmap_shard(static_cfg: EngineConfig, n: int, num_types: int,
                 return _simulate_batched_jax(
                     xs_p, C, node_type, mem_unit, cores_per, dyn_i, ints_i,
                     win_i, static_cfg, n, num_types, seed_i, use_kernel,
-                    kernel_masked)
+                    kernel_masked, cache_faulted=cache_faulted)
 
             mapped = (dyn, ints, seed)
             if sub_ax:
@@ -337,6 +349,30 @@ def run_study(base, cluster: ClusterSpec, study: Study, *,
         if not isinstance(sc, Scenario):
             raise TypeError(f"expected Scenario, got {type(sc).__name__}")
     use_kernel = resolve_use_kernel(use_kernel, configs[0].interpret)
+
+    # Cache-faultedness is program-shaping on the *scenario* axis (the
+    # cached-view planes grow a scheduler axis), so the grid requires the
+    # scenarios to agree — mirroring the config-axis knob rule.
+    faulted_axis = [sc.dynamics.cache_faults is not None for sc in scenarios]
+    cache_faulted = any(faulted_axis)
+    if cache_faulted and not all(faulted_axis):
+        raise ValueError(
+            "study scenarios must agree on cache-faultedness (the "
+            "CacheFaults spec switches the cached-view operand shapes — "
+            "program-shaping); split the study, or give every scenario a "
+            "CacheFaults (loss_rate=0.0 is inert).")
+    if cache_faulted:
+        use_kernel = False     # the megakernel reads only the shared view
+
+    if any(c.retry is not None for c in configs):
+        if server_shards is not None and int(server_shards) > 1:
+            raise NotImplementedError(
+                "server_shards with a RetryPolicy: the re-entry wave loop "
+                "is host-side per run — shard the fleet without retries, "
+                "or drop server_shards.")
+        return _run_study_retry(base, cluster, seeds, configs, scenarios,
+                                use_kernel)
+
     static_cfg = _grid_static(configs, use_kernel)
 
     # The masked megakernel program is selected statically from the
@@ -349,7 +385,8 @@ def run_study(base, cluster: ClusterSpec, study: Study, *,
     if server_shards is not None and int(server_shards) > 1:
         return _run_study_sharded(base, cluster, seeds, configs, scenarios,
                                   static_cfg, use_kernel, kernel_masked,
-                                  int(server_shards), shard, point_chunk)
+                                  int(server_shards), shard, point_chunk,
+                                  cache_faulted)
 
     n = cluster.num_servers
     C, node_type, cores_per, mem_unit = _cluster_arrays(cluster,
@@ -372,7 +409,8 @@ def run_study(base, cluster: ClusterSpec, study: Study, *,
     win_ax = K > 1
     if win_ax:
         per_scen = [_lower_dynamics(sc.dynamics, n) for sc in scenarios]
-        widths = tuple(max(w.widths[i] for w in per_scen) for i in range(4))
+        widths = tuple(max(w.widths[i] for w in per_scen)
+                       for i in range(len(per_scen[0].widths)))
         wins_np = [jax.device_get(_lower_dynamics(sc.dynamics, n,
                                                   widths=widths))
                    for sc in scenarios]
@@ -415,7 +453,7 @@ def run_study(base, cluster: ClusterSpec, study: Study, *,
         #     k sequential points).  Per-point operands stay host-side
         #     numpy and pmap shards them on dispatch.
         run = _pmap_shard(static_cfg, n, cluster.num_types, use_kernel,
-                          kernel_masked, sub_ax, win_ax)
+                          kernel_masked, sub_ax, win_ax, cache_faulted)
         use_dev = min(ndev, P)
         k = -(-P // use_dev)
         pad = use_dev * k - P
@@ -469,7 +507,7 @@ def run_study(base, cluster: ClusterSpec, study: Study, *,
                     xs_p, C, node_type, mem_unit, cores_per, dyn_dev[gi],
                     ints_dev[gi], wins_run[ki if win_ax else 0],
                     static_cfg, n, cluster.num_types, seeds_np[si],
-                    use_kernel, masked_p)
+                    use_kernel, masked_p, cache_faulted=cache_faulted)
                 msgs_parts.append(np.asarray(msgs_c)[None])
                 outs_parts.append(tuple(
                     np.asarray(o).reshape(1, nb * b) for o in outs_c))
@@ -491,7 +529,8 @@ def run_study(base, cluster: ClusterSpec, study: Study, *,
                 jnp.asarray(dyn_g[gi_g[sel]]),
                 jnp.asarray(ints_g[gi_g[sel]]),
                 jnp.asarray(seeds_np[si_g[sel]]), static_cfg, n,
-                cluster.num_types, use_kernel, kernel_masked)
+                cluster.num_types, use_kernel, kernel_masked,
+                cache_faulted)
             msgs_parts.append(np.asarray(msgs_c))
             outs_parts.append(tuple(
                 np.asarray(o).reshape(o.shape[0], nb * b) for o in outs_c))
@@ -519,6 +558,65 @@ def _finish_study(outs, msgs, planes, static_cfg, seeds, configs, scenarios,
     )
 
 
+def _run_study_retry(base, cluster: ClusterSpec, seeds, configs, scenarios,
+                     use_kernel: bool) -> StudyResult:
+    """``run_study``'s failure-layer execution strategy: when any config
+    carries a :class:`~repro.sim.engine.RetryPolicy`, every grid point runs
+    the per-run re-entry wave loop (``simulate`` — host-side resubmission
+    rounds can't ride one fused point axis), and the result grows the
+    ``attempts``/``failed``/``wasted_ms`` recovery planes.  Each point is
+    *definitionally* identical to its standalone ``run_scenario`` — the
+    fallback loops over the same calls.  Unlike the dense planner, the
+    retry spec itself may vary per config column (it is host-side wave
+    control, not program-shaping), so retry-policy sweeps — including a
+    no-retry column — are one study."""
+    static_cfg = _grid_static(tuple(c._replace(retry=None) for c in configs),
+                              use_kernel)
+    S, G, K = len(seeds), len(configs), len(scenarios)
+    m = base.r_submit.shape[0]
+    sub_ax = any(sc.arrivals is not None for sc in scenarios)
+    if sub_ax:
+        planes = np.stack([
+            np.stack([np.asarray(scenario_workload(base, sc, sd).submit_ms)
+                      for sc in scenarios])
+            for sd in seeds])                                   # [S, K, m]
+    else:
+        planes = np.broadcast_to(np.asarray(base.submit_ms), (S, K, m))
+
+    shape = (S, G, K, m)
+    out_f = {f: np.zeros(shape, np.float32)
+             for f in ("server", "enqueue_ms", "start_ms", "finish_ms",
+                       "sched_ms", "cores", "mem_mb", "wasted_ms")}
+    attempts = np.ones(shape, np.int32)
+    failed = np.zeros(shape, bool)
+    msgs = np.zeros((S, G, K, 4), np.int32)
+    for si, sd in enumerate(seeds):
+        for gi, cfg in enumerate(configs):
+            for ki, sc in enumerate(scenarios):
+                wl = scenario_workload(base, sc, sd)
+                r = simulate(wl, cluster, cfg, sd, mode="batched",
+                             use_kernel=use_kernel, dynamics=sc.dynamics)
+                for f in ("server", "enqueue_ms", "start_ms", "finish_ms",
+                          "sched_ms", "cores", "mem_mb"):
+                    out_f[f][si, gi, ki] = getattr(r, f)
+                if r.attempts is not None:
+                    attempts[si, gi, ki] = r.attempts
+                    failed[si, gi, ki] = r.failed
+                    out_f["wasted_ms"][si, gi, ki] = r.wasted_ms
+                msgs[si, gi, ki] = (r.msgs_base, r.msgs_probe, r.msgs_push,
+                                    r.msgs_flush)
+    return StudyResult(
+        server=out_f["server"].astype(np.int32),
+        enqueue_ms=out_f["enqueue_ms"], start_ms=out_f["start_ms"],
+        finish_ms=out_f["finish_ms"], sched_ms=out_f["sched_ms"],
+        cores=out_f["cores"], mem_mb=out_f["mem_mb"],
+        submit_ms=planes, msgs=msgs, policy=static_cfg.policy,
+        seeds=tuple(seeds), configs=tuple(configs),
+        scenarios=tuple(scenarios),
+        attempts=attempts, failed=failed, wasted_ms=out_f["wasted_ms"],
+    )
+
+
 #: Sharded-study executables keyed on the static program knobs + layout
 #: flags (jit and pmap both keep per-shape compile caches underneath).
 _SHARD_CACHE: dict = {}
@@ -526,7 +624,8 @@ _SHARD_CACHE: dict = {}
 
 def _sharded_study_fn(static_cfg: EngineConfig, n_c: int, num_types: int,
                       use_kernel: bool, kernel_masked: bool, sub_ax: bool,
-                      win_ax: bool, pmapped: bool):
+                      win_ax: bool, pmapped: bool,
+                      cache_faulted: bool = False):
     """The nested part×point program of the sharded planner: an outer map
     over the k mini-cluster shards (each with its own task bodies, cluster
     arrays, windows, and seeds) and an inner vmap over the P flattened
@@ -535,7 +634,7 @@ def _sharded_study_fn(static_cfg: EngineConfig, n_c: int, num_types: int,
     (the server table, ring buffers, ledgers) lives only on its shard's
     device, which is the layout a ``jax.distributed`` fleet would use."""
     key = (static_cfg, n_c, num_types, use_kernel, kernel_masked, sub_ax,
-           win_ax, pmapped)
+           win_ax, pmapped, cache_faulted)
     fn = _SHARD_CACHE.get(key)
     if fn is not None:
         return fn
@@ -550,7 +649,7 @@ def _sharded_study_fn(static_cfg: EngineConfig, n_c: int, num_types: int,
                 return _simulate_batched_jax(
                     xs_p, C, nt, mu, cp, dyn_vec, dyn_ints, win,
                     static_cfg, n_c, num_types, seed, use_kernel,
-                    kernel_masked)
+                    kernel_masked, cache_faulted=cache_faulted)
 
             return jax.vmap(point, in_axes=(0 if sub_ax else None,
                                             0 if win_ax else None,
@@ -573,7 +672,8 @@ def _sharded_study_fn(static_cfg: EngineConfig, n_c: int, num_types: int,
 def _run_study_sharded(base, cluster: ClusterSpec, seeds, configs,
                        scenarios, static_cfg: EngineConfig,
                        use_kernel: bool, kernel_masked: bool, k: int,
-                       shard: bool, point_chunk: int | None) -> StudyResult:
+                       shard: bool, point_chunk: int | None,
+                       cache_faulted: bool = False) -> StudyResult:
     """``run_study``'s sharded-table execution strategy (see its
     ``server_shards`` docs): k round-robin mini-clusters, each running the
     engine over its own ``[n/k, …]`` server table, merged host-side into
@@ -652,7 +752,7 @@ def _run_study_sharded(base, cluster: ClusterSpec, seeds, configs,
              for _, idx in parts]
     raw = [[_lower_dynamics(d, n_c) for d in row] for row in restr]
     widths = tuple(max(w.widths[i] for row in raw for w in row)
-                   for i in range(4))
+                   for i in range(len(raw[0][0].widths)))
     wins = [[jax.device_get(_lower_dynamics(d, n_c, widths=widths))
              for d in row] for row in restr]
     if win_ax:
@@ -693,7 +793,8 @@ def _run_study_sharded(base, cluster: ClusterSpec, seeds, configs,
         #     tail repeats the last part and is dropped before the merge
         #     (so repeated parts never double-count messages).
         run = _sharded_study_fn(static_cfg, n_c, num_types, use_kernel,
-                                kernel_masked, sub_ax, win_ax, True)
+                                kernel_masked, sub_ax, win_ax, True,
+                                cache_faulted)
         use_dev = min(ndev, k)
         kg = -(-k // use_dev)
         pad = use_dev * kg - k
@@ -719,7 +820,8 @@ def _run_study_sharded(base, cluster: ClusterSpec, seeds, configs,
         #     axis under the same stacked-output budget as the dense path
         #     (per point the k parts together hold ~m tasks).
         run = _sharded_study_fn(static_cfg, n_c, num_types, use_kernel,
-                                kernel_masked, sub_ax, win_ax, False)
+                                kernel_masked, sub_ax, win_ax, False,
+                                cache_faulted)
         if point_chunk is None:
             per_point_bytes = k * nb_max * b * 7 * 4
             point_chunk = max(1, min(P, _CHUNK_BYTES // max(

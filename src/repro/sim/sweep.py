@@ -76,6 +76,10 @@ class SweepResult(NamedTuple):
     policy: str
     seeds: tuple              # length S
     configs: tuple            # length G, EngineConfig per grid column
+    #: recovery planes — present only when configs carry a RetryPolicy.
+    attempts: np.ndarray | None = None
+    failed: np.ndarray | None = None
+    wasted_ms: np.ndarray | None = None
 
     @property
     def num_seeds(self) -> int:
@@ -102,6 +106,10 @@ class SweepResult(NamedTuple):
             msgs_push=int(self.msgs[si, gi, 2]),
             msgs_flush=int(self.msgs[si, gi, 3]),
             policy=self.policy,
+            attempts=None if self.attempts is None else self.attempts[si, gi],
+            failed=None if self.failed is None else self.failed[si, gi],
+            wasted_ms=(None if self.wasted_ms is None
+                       else self.wasted_ms[si, gi]),
         )
 
 
@@ -124,6 +132,10 @@ class SummaryCI(NamedTuple):
     sched_p95_ms: float
     wait_mean_ms: float
     wall_time_s: float
+    goodput_tps: float
+    retries_per_task: float
+    wasted_ms_total: float
+    failure_rate: float
     ci95: dict
 
     def row(self) -> str:
@@ -138,7 +150,9 @@ class SummaryCI(NamedTuple):
 
 _CI_METRICS = ("msgs_total", "msgs_per_task", "throughput_tps",
                "makespan_mean_ms", "makespan_p95_ms", "sched_mean_ms",
-               "sched_p95_ms", "wait_mean_ms", "wall_time_s")
+               "sched_p95_ms", "wait_mean_ms", "wall_time_s",
+               "goodput_tps", "retries_per_task", "wasted_ms_total",
+               "failure_rate")
 
 
 def aggregate_summaries(per_seed: Sequence[Summary]) -> SummaryCI:
@@ -250,4 +264,7 @@ def simulate_many(workload, cluster: ClusterSpec,
         submit_ms=np.asarray(workload.submit_ms),
         msgs=st.msgs[:, :, 0], policy=st.policy, seeds=seeds,
         configs=configs,
+        attempts=None if st.attempts is None else st.attempts[:, :, 0],
+        failed=None if st.failed is None else st.failed[:, :, 0],
+        wasted_ms=None if st.wasted_ms is None else st.wasted_ms[:, :, 0],
     )

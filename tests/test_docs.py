@@ -93,7 +93,9 @@ def test_bench_schema_docs_match_written_files():
     for fname, required in (
             ("BENCH_engine.json", ("kernels_decisions_per_s", "engine")),
             ("BENCH_scale.json", ("sweep_vs_loop", "scale_points",
-                                  "meanfield_points"))):
+                                  "meanfield_points")),
+            ("BENCH_faults.json", ("gate_point", "fault_points",
+                                   "message_reduction"))):
         assert fname in arch
         path = os.path.join(REPO, fname)
         if os.path.exists(path):

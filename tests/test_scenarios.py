@@ -158,11 +158,11 @@ class TestDynamicsLowering:
                        slowdowns=((5, 0.0, 4000.0, 2.0),),
                        store_outages=((1000.0, 3000.0),))
         n = small_testbed.num_servers
-        assert _lower_dynamics(dyn, n).widths == (1, 1, 1, 1)
-        assert _lower_dynamics(dyn, n, widths=(3, 2, 2, 4)).widths == \
-            (3, 2, 2, 4)
+        assert _lower_dynamics(dyn, n).widths == (1, 1, 1, 1, 1)
+        assert _lower_dynamics(dyn, n, widths=(3, 2, 2, 4, 2)).widths == \
+            (3, 2, 2, 4, 2)
         with pytest.raises(ValueError):
-            _lower_dynamics(dyn, n, widths=(1, 1, 0, 1))  # too narrow
+            _lower_dynamics(dyn, n, widths=(1, 1, 0, 1, 1))  # too narrow
         cfg = EngineConfig(policy="dodoor", b=10)
         a = simulate(fb_small, small_testbed, cfg, mode="batched",
                      dynamics=dyn)

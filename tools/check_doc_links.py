@@ -1,12 +1,16 @@
 #!/usr/bin/env python
 """Docs link-check: every relative markdown link in README.md / docs/*.md
-must point at a file or directory that exists, so renames and deletions
-cannot silently rot the docs.
+must point at a file or directory that exists, and every ``#anchor``
+(same-page or ``path#anchor``) must match a heading in the target markdown
+file — so renames, deletions, and section retitles cannot silently rot
+the docs.
 
     python tools/check_doc_links.py [files...]
 
-Exits non-zero listing every broken link. External (http/mailto) links and
-pure anchors are ignored; `path#anchor` checks only the path part.
+Exits non-zero listing every broken link. External (http/mailto) links are
+ignored; anchors are resolved with GitHub's heading-slug rules (lowercase,
+punctuation stripped, spaces to hyphens, ``-1``/``-2`` suffixes for
+duplicates).
 """
 from __future__ import annotations
 
@@ -15,6 +19,8 @@ import sys
 from pathlib import Path
 
 LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+HEADING_RE = re.compile(r"^#{1,6}\s+(.+?)\s*$", re.M)
+CODE_FENCE_RE = re.compile(r"^```.*?^```", re.M | re.S)
 REPO = Path(__file__).resolve().parent.parent
 
 DEFAULT_FILES = ["README.md", "docs/ARCHITECTURE.md", "docs/STUDIES.md",
@@ -22,17 +28,50 @@ DEFAULT_FILES = ["README.md", "docs/ARCHITECTURE.md", "docs/STUDIES.md",
                  "ROADMAP.md", "CHANGES.md", "PAPER.md"]
 
 
+def github_slugs(md_path: Path) -> set:
+    """The set of anchor slugs GitHub generates for a markdown file's
+    headings (fenced code blocks excluded — ``# comment`` lines inside
+    them are not headings)."""
+    text = CODE_FENCE_RE.sub("", md_path.read_text(encoding="utf-8"))
+    seen: dict = {}
+    out = set()
+    for heading in HEADING_RE.findall(text):
+        heading = re.sub(r"`([^`]*)`", r"\1", heading)        # code ticks
+        heading = re.sub(r"\[([^\]]*)\]\([^)]*\)", r"\1", heading)  # links
+        slug = re.sub(r"[^\w\- ]", "", heading.lower()).replace(" ", "-")
+        n = seen.get(slug, 0)
+        seen[slug] = n + 1
+        out.add(slug if n == 0 else f"{slug}-{n}")
+    return out
+
+
+def _rel(md_path: Path) -> str:
+    try:
+        return str(md_path.relative_to(REPO))
+    except ValueError:
+        return str(md_path)
+
+
 def broken_links(md_path: Path) -> list:
     out = []
     text = md_path.read_text(encoding="utf-8")
     for target in LINK_RE.findall(text):
-        if target.startswith(("http://", "https://", "mailto:", "#")):
+        if target.startswith(("http://", "https://", "mailto:")):
             continue
-        rel = target.split("#", 1)[0]
-        if not rel:
-            continue
-        if not (md_path.parent / rel).exists() and not (REPO / rel).exists():
-            out.append((str(md_path.relative_to(REPO)), target))
+        rel, _, anchor = target.partition("#")
+        if rel:
+            dest = md_path.parent / rel
+            if not dest.exists():
+                dest = REPO / rel
+            if not dest.exists():
+                out.append((_rel(md_path), target))
+                continue
+        else:
+            dest = md_path
+        if anchor and dest.is_file() and dest.suffix == ".md" \
+                and anchor not in github_slugs(dest):
+            out.append((_rel(md_path),
+                        f"{target} (no such heading)"))
     return out
 
 
@@ -45,7 +84,8 @@ def main(argv) -> int:
     for src, target in bad:
         print(f"BROKEN {src}: ({target})")
     if not bad:
-        print(f"ok: {len(files)} file(s), all relative links resolve")
+        print(f"ok: {len(files)} file(s), all relative links and anchors "
+              f"resolve")
     return 1 if bad else 0
 
 

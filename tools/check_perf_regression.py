@@ -1,22 +1,34 @@
 #!/usr/bin/env python
-"""CI perf-regression gate for the scheduling hot path.
+"""CI perf-regression gates for the scheduling hot path and the failure
+layer.
 
-Compares a freshly-written smoke-mode ``BENCH_scale.json`` against the
-committed baseline (``benchmarks/baselines/BENCH_scale_smoke.json``) and
-fails if decisions/s at the **largest smoke point** — the sharded
-n = 10³ probe, the planner path ISSUE 6 exists to protect — dropped more
-than ``--tolerance`` (default 30%, sized for shared-runner noise; real
-planner regressions are integer factors, not percentages).
+Default mode compares a freshly-written smoke-mode ``BENCH_scale.json``
+against the committed baseline (``benchmarks/baselines/
+BENCH_scale_smoke.json``) and fails if decisions/s at the **largest smoke
+point** — the sharded n = 10³ probe, the planner path ISSUE 6 exists to
+protect — dropped more than ``--tolerance`` (default 30%, sized for
+shared-runner noise; real planner regressions are integer factors, not
+percentages).
 
     python tools/check_perf_regression.py [BENCH_scale.json]
         [--baseline benchmarks/baselines/BENCH_scale_smoke.json]
         [--tolerance 0.30]
 
-Largest point = max (n, server_shards or 1, m): smoke and baseline must
-agree on its identity, so shrinking the smoke grid without refreshing the
-baseline is itself an error.  Faster-than-baseline never fails; refresh
-the baseline (copy the new smoke artifact) when a speedup should become
-the new floor.
+``--faults`` switches the artifact schema to ``BENCH_faults.json`` and
+gates **goodput under failure** instead: the densest-outage ×
+default-retry point named by the artifact's ``gate_point`` must keep its
+completed-first-attempt throughput within ``--tolerance`` of the
+committed ``BENCH_faults_smoke.json`` baseline — a scheduling change that
+recovers from kills 30% slower is a robustness regression even when the
+healthy-path numbers hold.
+
+    python tools/check_perf_regression.py BENCH_faults.json --faults
+        [--baseline benchmarks/baselines/BENCH_faults_smoke.json]
+
+Largest/gate point: smoke and baseline must agree on its identity, so
+shrinking the smoke grid without refreshing the baseline is itself an
+error.  Faster-than-baseline never fails; refresh the baseline (copy the
+new smoke artifact) when a speedup should become the new floor.
 """
 from __future__ import annotations
 
@@ -40,18 +52,20 @@ def point_id(p: dict) -> tuple:
     return (p["n"], p["m"], p["b"], p.get("server_shards") or 1)
 
 
-def main(argv=None) -> int:
-    ap = argparse.ArgumentParser()
-    ap.add_argument("current", nargs="?", default="BENCH_scale.json",
-                    help="freshly-written smoke artifact")
-    ap.add_argument("--baseline",
-                    default=os.path.join(
-                        REPO, "benchmarks", "baselines",
-                        "BENCH_scale_smoke.json"))
-    ap.add_argument("--tolerance", type=float, default=0.30,
-                    help="max allowed fractional drop in decisions/s")
-    args = ap.parse_args(argv)
+def gate_point(doc: dict) -> dict:
+    """The fault artifact's self-declared gate cell (densest outage ×
+    default retry × no cache loss)."""
+    gid = doc.get("gate_point")
+    pts = doc.get("fault_points") or []
+    if not gid or not pts:
+        raise SystemExit("no gate_point/fault_points in faults artifact")
+    for p in pts:
+        if p.get("id") == gid:
+            return p
+    raise SystemExit(f"gate point {gid!r} missing from fault_points")
 
+
+def check_scale(args) -> int:
     cur = largest_point(json.load(open(args.current)))
     base = largest_point(json.load(open(args.baseline)))
     if point_id(cur) != point_id(base):
@@ -67,6 +81,49 @@ def main(argv=None) -> int:
           f"{base['decisions_per_s']} decisions/s "
           f"({ratio:.2f}x, floor {1.0 - args.tolerance:.2f}x)")
     return 0 if verdict == "ok" else 1
+
+
+def check_faults(args) -> int:
+    cur_doc = json.load(open(args.current))
+    base_doc = json.load(open(args.baseline))
+    cur, base = gate_point(cur_doc), gate_point(base_doc)
+    if cur["id"] != base["id"]:
+        print(f"FAIL: fault gate point changed — current {cur['id']!r} vs "
+              f"baseline {base['id']!r}; refresh "
+              f"{os.path.relpath(args.baseline, REPO)} alongside the grid")
+        return 1
+    if base["goodput_tps"] <= 0:
+        print(f"FAIL: baseline goodput at {base['id']!r} is "
+              f"{base['goodput_tps']} — gate has no floor; regenerate the "
+              f"baseline")
+        return 1
+    ratio = cur["goodput_tps"] / base["goodput_tps"]
+    verdict = "ok" if ratio >= 1.0 - args.tolerance else "FAIL"
+    print(f"{verdict}: fault gate {cur['id']}: goodput "
+          f"{cur['goodput_tps']} vs baseline {base['goodput_tps']} tps "
+          f"({ratio:.2f}x, floor {1.0 - args.tolerance:.2f}x); "
+          f"retries/task {cur['retries_per_task']} "
+          f"(baseline {base['retries_per_task']})")
+    return 0 if verdict == "ok" else 1
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("current", nargs="?", default="BENCH_scale.json",
+                    help="freshly-written smoke artifact")
+    ap.add_argument("--baseline", default=None,
+                    help="committed smoke baseline (defaults per mode)")
+    ap.add_argument("--tolerance", type=float, default=0.30,
+                    help="max allowed fractional drop in the gated metric")
+    ap.add_argument("--faults", action="store_true",
+                    help="gate goodput in a BENCH_faults.json artifact "
+                         "instead of scale-sweep decisions/s")
+    args = ap.parse_args(argv)
+    if args.baseline is None:
+        name = ("BENCH_faults_smoke.json" if args.faults
+                else "BENCH_scale_smoke.json")
+        args.baseline = os.path.join(REPO, "benchmarks", "baselines", name)
+    return check_faults(args) if args.faults else check_scale(args)
 
 
 if __name__ == "__main__":
