@@ -1,0 +1,138 @@
+"""Task-graph benchmark — the frontier loop and the locality term measured
+end-to-end, persisted to ``BENCH_dags.json``.
+
+One section: **dag grid** — DAG shape (serverless chain / fan-out /
+map-reduce) × locality weight γ ∈ {0, 0.5, 2}, dodoor on the testbed:
+critical-path and DAG makespan milliseconds, frontier width, bytes of
+parent output moved across servers vs kept local (the LocalityModel's
+objective), plus the engine's decisions/s through the wave loop (waves
+re-form decision blocks per frontier, so this is the DAG tax over the
+independent-task driver).
+
+The fan-out × γ=0 point doubles as the perf gate
+(``tools/check_perf_regression.py --dags``): its decisions/s must not
+regress >30% (and its bytes_moved must not grow >10%) against the
+committed smoke baseline.
+
+    PYTHONPATH=src python -m benchmarks.bench_dags [--smoke] [--json PATH]
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+from benchmarks.common import write_bench_json
+from repro.sim import (EngineConfig, LocalityModel, make_testbed, simulate,
+                       summarize_dag)
+from repro.workloads import (ChainDAG, FanOutDAG, MapReduceDAG, dag_plan)
+from repro.workloads import functionbench as fb
+
+GAMMAS = (0.0, 0.5, 2.0)
+
+
+def dag_axis(m: int):
+    """The DAG-shape axis, sized so each shape exercises a different
+    frontier profile: width-1 (chain), shallow-wide (fan-out), barriered
+    (map-reduce)."""
+    return (
+        ("chain", ChainDAG(edge_delay_ms=0.2, edge_bytes_mb=4.0)),
+        ("fanout", FanOutDAG(width=8, edge_delay_ms=0.5, edge_bytes_mb=8.0)),
+        ("mapreduce", MapReduceDAG(mappers=8, reducers=2,
+                                   edge_delay_ms=0.5, edge_bytes_mb=8.0)),
+    )
+
+
+def point_id(shape: str, gamma: float) -> str:
+    return f"dodoor/{shape}/gamma{gamma:g}"
+
+
+def run_point(base, cluster, cfg, spec, seeds, reps: int = 3):
+    """Seed-averaged DAG metrics + decisions/s for one grid cell.  After
+    a warm-up pass, the timed run repeats ``reps`` times and keeps the
+    best, so decisions/s measures the steady wave loop (not compilation
+    or a shared-runner hiccup — this number backs the CI gate)."""
+    m = base.r_submit.shape[0]
+    plan = dag_plan(spec, m)
+    rows = []
+    for sd in seeds:
+        simulate(base, cluster, cfg, seed=sd, mode="batched",
+                 use_kernel=False, dag=plan)            # warm-up/compile
+        dt = float("inf")
+        for _ in range(reps):
+            t0 = time.perf_counter()
+            res = simulate(base, cluster, cfg, seed=sd, mode="batched",
+                           use_kernel=False, dag=plan)
+            dt = min(dt, time.perf_counter() - t0)
+        s = summarize_dag(res, plan)
+        rows.append(dict(
+            decisions_per_s=m / dt,
+            critical_path_ms=s["critical_path_ms"],
+            dag_makespan_ms=s["dag_makespan_ms"],
+            frontier_width_mean=s["frontier_width_mean"],
+            frontier_width_max=float(s["frontier_width_max"]),
+            bytes_moved_mb=s["bytes_moved_mb"],
+            locality_frac=s["locality_frac"],
+            makespan_mean_ms=s["makespan_mean_ms"],
+            msgs_per_task=s["msgs_per_task"],
+        ))
+    return {k: round(float(np.mean([r[k] for r in rows])), 4)
+            for k in rows[0]}
+
+
+def main(m: int = 2400, qps: float = 60.0, seeds=(0, 1), scale: float = 1.0,
+         json_path: str | None = "BENCH_dags.json", smoke: bool = False):
+    if smoke:
+        m, seeds, scale, qps = 240, (0,), 0.2, 30.0
+    cluster = make_testbed(scale=scale)
+    n = cluster.num_servers
+    base = fb.synthesize(m=m, qps=qps, seed=0)
+    cfg0 = EngineConfig(policy="dodoor", b=max(1, n // 2))
+
+    print("bench,point,decisions_per_s,critical_path_ms,dag_makespan_ms,"
+          "frontier_mean,bytes_moved_mb,locality_frac")
+    points = []
+    for shape, spec in dag_axis(m):
+        for gamma in GAMMAS:
+            cfg = (cfg0 if gamma == 0.0
+                   else cfg0._replace(locality=LocalityModel(gamma=gamma)))
+            row = run_point(base, cluster, cfg, spec, seeds)
+            row.update(id=point_id(shape, gamma), policy="dodoor", n=n,
+                       m=m, shape=shape, gamma=gamma)
+            points.append(row)
+            print(f"dags,{row['id']},{row['decisions_per_s']},"
+                  f"{row['critical_path_ms']},{row['dag_makespan_ms']},"
+                  f"{row['frontier_width_mean']},{row['bytes_moved_mb']},"
+                  f"{row['locality_frac']}")
+
+    by_id = {p["id"]: p for p in points}
+    for shape, _ in dag_axis(m):
+        g0 = by_id[point_id(shape, 0.0)]
+        gh = by_id[point_id(shape, GAMMAS[-1])]
+        if g0["bytes_moved_mb"] > 0:
+            saved = 1.0 - gh["bytes_moved_mb"] / g0["bytes_moved_mb"]
+            print(f"# {shape}: γ={GAMMAS[-1]:g} moves "
+                  f"{saved * 100:.1f}% fewer MB than γ=0 "
+                  f"(critical path {gh['critical_path_ms']:.0f} vs "
+                  f"{g0['critical_path_ms']:.0f} ms)")
+
+    if json_path:
+        payload = dict(
+            smoke=smoke, n=n, m=m, qps=qps, seeds=list(seeds),
+            gammas=list(GAMMAS),
+            gate_point=point_id("fanout", 0.0),
+            dag_points=points,
+        )
+        write_bench_json(json_path, payload, bench="dags")
+    return points
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized: m=240, 1 seed, 20-node fleet")
+    ap.add_argument("--json", default="BENCH_dags.json",
+                    help="results file ('' disables)")
+    args = ap.parse_args()
+    main(smoke=args.smoke, json_path=args.json or None)

@@ -46,13 +46,15 @@ def main():
                     help="combined-study results file ('' disables)")
     ap.add_argument("--json-faults", default="BENCH_faults.json",
                     help="failure/recovery results file ('' disables)")
+    ap.add_argument("--json-dags", default="BENCH_dags.json",
+                    help="task-graph results file ('' disables)")
     args = ap.parse_args()
     q = args.quick
 
-    from . import (bench_azure, bench_faults, bench_functionbench,
-                   bench_gap, bench_kernels, bench_reliability,
-                   bench_roofline, bench_router, bench_scenarios,
-                   bench_sensitivity, bench_study)
+    from . import (bench_azure, bench_dags, bench_faults,
+                   bench_functionbench, bench_gap, bench_kernels,
+                   bench_reliability, bench_roofline, bench_router,
+                   bench_scenarios, bench_sensitivity, bench_study)
 
     sections = [
         ("Fig 3/4/5 — Azure VM placement (§6.2)",
@@ -86,6 +88,9 @@ def main():
         ("Failure & recovery — kill/retry, cache loss, goodput",
          lambda: bench_faults.main(smoke=q,
                                    json_path=args.json_faults or None)),
+        ("Task graphs — frontier loop × locality weight",
+         lambda: bench_dags.main(smoke=q,
+                                 json_path=args.json_dags or None)),
         ("§Roofline — fused-kernel bytes-touched model vs measurement",
          lambda: bench_roofline.main(smoke=q)),
     ]

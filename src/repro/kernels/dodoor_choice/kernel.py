@@ -347,22 +347,30 @@ def dodoor_fused_masked_pallas(keys, r, d, avail, tbl, *, alpha: float,
     )(keys, r, d, avail, tbl)
 
 
-def _fused_sparse_kernel(alpha, k, masked, *refs):
+def _fused_sparse_kernel(alpha, k, masked, gamma_bw, locality, *refs):
     # key_ref:  [block_t, 2]   per-task uint32 PRNG key (k_cand)
     # r_ref:    [block_t, K]   task demands
     # dt_ref:   [block_t, TT]  per-*type* estimated durations (TT = node
     #                          types) — replaces the dense [block_t, N]
     #                          per-server plane
     # avail_ref:[block_t, N]   (masked form only) 0/1 availability plane
+    # psrv_ref: [block_t, P]   (locality form only) parent servers (i32,
+    #                          -1 where absent)
+    # pbytes_ref:[block_t, P]  (locality form only) parent output MB (0
+    #                          where absent — an absent parent is inert)
     # tbl_ref:  [N, 2K+3]      server table: [L | D | 1/ΣC² | C | node_type]
     # outputs:  choice [bt] i32, cand [bt, 2] i32, scores [bt, 2] f32
+    refs = list(refs)
+    key_ref, r_ref, dt_ref = refs[:3]
+    pos = 3
+    avail_ref = psrv_ref = pbytes_ref = None
     if masked:
-        (key_ref, r_ref, dt_ref, avail_ref, tbl_ref, out_choice_ref,
-         out_cand_ref, out_scores_ref) = refs
-    else:
-        (key_ref, r_ref, dt_ref, tbl_ref, out_choice_ref, out_cand_ref,
-         out_scores_ref) = refs
-        avail_ref = None
+        avail_ref = refs[pos]
+        pos += 1
+    if locality:
+        psrv_ref, pbytes_ref = refs[pos], refs[pos + 1]
+        pos += 2
+    tbl_ref, out_choice_ref, out_cand_ref, out_scores_ref = refs[pos:]
     tbl = tbl_ref[...]
     n = tbl.shape[0]
     r = r_ref[...]
@@ -418,6 +426,21 @@ def _fused_sparse_kernel(alpha, k, masked, *refs):
     row_b, d_b = gather(cand1)
     score_a, score_b = _pair_scores(alpha, k, r, row_a, row_b, d_a, d_b)
 
+    if locality:
+        # Data-locality penalty (Algorithm 1 + LocalityModel): each
+        # candidate is charged gamma/bandwidth per MB of parent output it
+        # would have to pull remotely.  Same reduction order as the
+        # two-stage path; gamma_bw = 0 adds +0.0 and reproduces the
+        # locality-free scores bit-exactly.
+        psrv = psrv_ref[...]                               # [bt, P] i32
+        pb = pbytes_ref[...]                               # [bt, P] f32
+        rem_a = jnp.sum(
+            pb * (psrv != cand0[:, None]).astype(jnp.float32), axis=-1)
+        rem_b = jnp.sum(
+            pb * (psrv != cand1[:, None]).astype(jnp.float32), axis=-1)
+        score_a = score_a + gamma_bw * rem_a
+        score_b = score_b + gamma_bw * rem_b
+
     out_cand_ref[:, 0] = cand0.astype(jnp.int32)
     out_cand_ref[:, 1] = cand1.astype(jnp.int32)
     out_scores_ref[:, 0] = score_a
@@ -427,27 +450,46 @@ def _fused_sparse_kernel(alpha, k, masked, *refs):
 
 
 @functools.partial(jax.jit,
-                   static_argnames=("alpha", "block_t", "interpret"))
-def dodoor_fused_sparse_pallas(keys, r, d_types, tbl, *, alpha: float,
-                               block_t: int = 256,
+                   static_argnames=("alpha", "gamma_bw", "block_t",
+                                    "interpret"))
+def dodoor_fused_sparse_pallas(keys, r, d_types, tbl, psrv=None,
+                               pbytes=None, *, alpha: float,
+                               gamma_bw: float = 0.0, block_t: int = 256,
                                interpret: bool | None = None):
     """keys [T,2] uint32, r [T,K], d_types [T,TT], tbl [N, 2K+3] →
     (choice [T], cand [T,2], scores [T,2]).  T must be a multiple of
-    block_t (ops.py pads)."""
+    block_t (ops.py pads).
+
+    ``psrv [T, P]`` (int32 parent servers, −1 padded) and ``pbytes
+    [T, P]`` (parent output MB, 0 padded) stream the locality gather:
+    each candidate's score is charged ``gamma_bw`` per MB of parent
+    output held on a different server.  ``None`` (the default) keeps the
+    locality-free program; ``gamma_bw = 0`` with planes present is
+    bit-identical to it."""
     T, K = r.shape
     N = tbl.shape[0]
     TT = d_types.shape[1]
     grid = (T // block_t,)
-    kern = functools.partial(_fused_sparse_kernel, alpha, K, False)
+    locality = psrv is not None
+    kern = functools.partial(_fused_sparse_kernel, alpha, K, False,
+                             gamma_bw, locality)
+    in_specs = [
+        pl.BlockSpec((block_t, 2), lambda i: (i, 0)),
+        pl.BlockSpec((block_t, K), lambda i: (i, 0)),
+        pl.BlockSpec((block_t, TT), lambda i: (i, 0)),
+    ]
+    operands = [keys, r, d_types]
+    if locality:
+        P = psrv.shape[1]
+        in_specs += [pl.BlockSpec((block_t, P), lambda i: (i, 0)),
+                     pl.BlockSpec((block_t, P), lambda i: (i, 0))]
+        operands += [psrv, pbytes]
+    in_specs.append(pl.BlockSpec((N, 2 * K + 3), lambda i: (0, 0)))
+    operands.append(tbl)
     return pl.pallas_call(
         kern,
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((block_t, 2), lambda i: (i, 0)),
-            pl.BlockSpec((block_t, K), lambda i: (i, 0)),
-            pl.BlockSpec((block_t, TT), lambda i: (i, 0)),
-            pl.BlockSpec((N, 2 * K + 3), lambda i: (0, 0)),
-        ],
+        in_specs=in_specs,
         out_specs=[
             pl.BlockSpec((block_t,), lambda i: (i,)),
             pl.BlockSpec((block_t, 2), lambda i: (i, 0)),
@@ -459,33 +501,48 @@ def dodoor_fused_sparse_pallas(keys, r, d_types, tbl, *, alpha: float,
             jax.ShapeDtypeStruct((T, 2), jnp.float32),
         ],
         interpret=_resolve_interpret(interpret),
-    )(keys, r, d_types, tbl)
+    )(*operands)
 
 
 @functools.partial(jax.jit,
-                   static_argnames=("alpha", "block_t", "interpret"))
-def dodoor_fused_sparse_masked_pallas(keys, r, d_types, avail, tbl, *,
-                                      alpha: float, block_t: int = 256,
+                   static_argnames=("alpha", "gamma_bw", "block_t",
+                                    "interpret"))
+def dodoor_fused_sparse_masked_pallas(keys, r, d_types, avail, tbl,
+                                      psrv=None, pbytes=None, *,
+                                      alpha: float, gamma_bw: float = 0.0,
+                                      block_t: int = 256,
                                       interpret: bool | None = None):
     """Masked-sampling form of :func:`dodoor_fused_sparse_pallas`: the
     ``avail [T, N]`` 0/1 plane is ANDed into the in-kernel prefilter
     exactly as in :func:`dodoor_fused_masked_pallas` — draws stay
-    bit-identical to ``sample_feasible_batch`` on the intersected mask."""
+    bit-identical to ``sample_feasible_batch`` on the intersected mask.
+    Locality planes (``psrv``/``pbytes``/``gamma_bw``) compose as in the
+    unmasked form."""
     T, K = r.shape
     N = tbl.shape[0]
     TT = d_types.shape[1]
     grid = (T // block_t,)
-    kern = functools.partial(_fused_sparse_kernel, alpha, K, True)
+    locality = psrv is not None
+    kern = functools.partial(_fused_sparse_kernel, alpha, K, True,
+                             gamma_bw, locality)
+    in_specs = [
+        pl.BlockSpec((block_t, 2), lambda i: (i, 0)),
+        pl.BlockSpec((block_t, K), lambda i: (i, 0)),
+        pl.BlockSpec((block_t, TT), lambda i: (i, 0)),
+        pl.BlockSpec((block_t, N), lambda i: (i, 0)),
+    ]
+    operands = [keys, r, d_types, avail]
+    if locality:
+        P = psrv.shape[1]
+        in_specs += [pl.BlockSpec((block_t, P), lambda i: (i, 0)),
+                     pl.BlockSpec((block_t, P), lambda i: (i, 0))]
+        operands += [psrv, pbytes]
+    in_specs.append(pl.BlockSpec((N, 2 * K + 3), lambda i: (0, 0)))
+    operands.append(tbl)
     return pl.pallas_call(
         kern,
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((block_t, 2), lambda i: (i, 0)),
-            pl.BlockSpec((block_t, K), lambda i: (i, 0)),
-            pl.BlockSpec((block_t, TT), lambda i: (i, 0)),
-            pl.BlockSpec((block_t, N), lambda i: (i, 0)),
-            pl.BlockSpec((N, 2 * K + 3), lambda i: (0, 0)),
-        ],
+        in_specs=in_specs,
         out_specs=[
             pl.BlockSpec((block_t,), lambda i: (i,)),
             pl.BlockSpec((block_t, 2), lambda i: (i, 0)),
@@ -497,4 +554,4 @@ def dodoor_fused_sparse_masked_pallas(keys, r, d_types, avail, tbl, *,
             jax.ShapeDtypeStruct((T, 2), jnp.float32),
         ],
         interpret=_resolve_interpret(interpret),
-    )(keys, r, d_types, avail, tbl)
+    )(*operands)

@@ -105,6 +105,9 @@ def dodoor_fused_sparse(keys: jnp.ndarray, r: jnp.ndarray,
                         L: jnp.ndarray, D: jnp.ndarray, C: jnp.ndarray,
                         alpha: float = 0.5, *,
                         avail: jnp.ndarray | None = None,
+                        psrv: jnp.ndarray | None = None,
+                        pbytes: jnp.ndarray | None = None,
+                        gamma_bw: float = 0.0,
                         block_t: int = 256,
                         interpret: bool | None = None):
     """Sparse-candidate-gather megakernel: like :func:`dodoor_fused` but
@@ -123,6 +126,13 @@ def dodoor_fused_sparse(keys: jnp.ndarray, r: jnp.ndarray,
     choices/scores are exactly the dense megakernel's on the factorized
     ``d`` — the gathered duration is the same float.
 
+    psrv [T, P] / pbytes [T, P] (optional, together): the locality
+    gather — each task's parent servers (int32, −1 padded) and their
+    output sizes in MB (0 padded).  With ``gamma_bw > 0`` every
+    candidate's score is charged ``gamma_bw · Σ_p pbytes[p] ·
+    [psrv[p] ≠ candidate]`` (the LocalityModel penalty); ``gamma_bw = 0``
+    is bit-identical to running without the planes.
+
     Returns (choice [T] int32, cand [T, 2] int32, scores [T, 2] f32).
     """
     T, K = r.shape
@@ -134,6 +144,8 @@ def dodoor_fused_sparse(keys: jnp.ndarray, r: jnp.ndarray,
                            D.astype(jnp.float32)[:, None], inv, Cf, nt],
                           axis=-1)
     keys = _key_data(keys)
+    if (psrv is None) != (pbytes is None):
+        raise ValueError("psrv and pbytes must be given together")
     pad = (-T) % block_t
     if pad:
         # Same inert-padding argument as dodoor_fused: zero demand is
@@ -141,10 +153,21 @@ def dodoor_fused_sparse(keys: jnp.ndarray, r: jnp.ndarray,
         keys = jnp.pad(keys, ((0, pad), (0, 0)))
         r = jnp.pad(r, ((0, pad), (0, 0)))
         d_types = jnp.pad(d_types, ((0, pad), (0, 0)))
+    loc = ()
+    if psrv is not None:
+        psrv = psrv.astype(jnp.int32)
+        pbytes = pbytes.astype(jnp.float32)
+        if pad:
+            # Padded tasks get no parents (-1 ids, zero bytes → zero
+            # penalty), like the zero-demand rows above.
+            psrv = jnp.pad(psrv, ((0, pad), (0, 0)), constant_values=-1)
+            pbytes = jnp.pad(pbytes, ((0, pad), (0, 0)))
+        loc = (psrv, pbytes)
     if avail is None:
         choice, cand, scores = dodoor_fused_sparse_pallas(
             keys, r.astype(jnp.float32), d_types.astype(jnp.float32), tbl,
-            alpha=alpha, block_t=block_t, interpret=interpret)
+            *loc, alpha=alpha, gamma_bw=float(gamma_bw), block_t=block_t,
+            interpret=interpret)
     else:
         avail = avail.astype(jnp.float32)
         if pad:
@@ -152,5 +175,6 @@ def dodoor_fused_sparse(keys: jnp.ndarray, r: jnp.ndarray,
                             constant_values=1.0)
         choice, cand, scores = dodoor_fused_sparse_masked_pallas(
             keys, r.astype(jnp.float32), d_types.astype(jnp.float32),
-            avail, tbl, alpha=alpha, block_t=block_t, interpret=interpret)
+            avail, tbl, *loc, alpha=alpha, gamma_bw=float(gamma_bw),
+            block_t=block_t, interpret=interpret)
     return choice[:T], cand[:T], scores[:T]

@@ -32,7 +32,10 @@ def dodoor_choice_ref(r: jnp.ndarray, cand: jnp.ndarray, d_cand: jnp.ndarray,
 
 def dodoor_fused_ref(keys: jnp.ndarray, r: jnp.ndarray, d: jnp.ndarray,
                      L: jnp.ndarray, D: jnp.ndarray, C: jnp.ndarray,
-                     alpha: float, avail: jnp.ndarray | None = None):
+                     alpha: float, avail: jnp.ndarray | None = None,
+                     psrv: jnp.ndarray | None = None,
+                     pbytes: jnp.ndarray | None = None,
+                     gamma_bw: float = 0.0):
     """jnp oracle for the fused megakernel.
 
     Candidate draws delegate to :func:`sample_feasible_batch` (whose uniforms
@@ -47,6 +50,10 @@ def dodoor_fused_ref(keys: jnp.ndarray, r: jnp.ndarray, d: jnp.ndarray,
     keys [T, 2] uint32 (or typed) per-task keys; r [T, K]; d [T, N];
     ``avail`` [T, N] optional availability mask (the masked-sampling
     variant — intersected with the capacity prefilter before the draws).
+    ``psrv``/``pbytes`` [T, P] + ``gamma_bw`` mirror the kernel's
+    locality gather: each candidate's score is charged ``gamma_bw`` per
+    MB of parent output on a different server, in the kernel's reduction
+    order.
     Returns (choice [T] int32, cand [T, 2] int32, scores [T, 2] f32).
     """
     Cf = C.astype(jnp.float32)
@@ -70,6 +77,15 @@ def dodoor_fused_ref(keys: jnp.ndarray, r: jnp.ndarray, d: jnp.ndarray,
     d_fb = jnp.where(d_sum > _EPS, D_ab[:, 1] / (d_sum + _EPS), 0.5)
     score_a = rl_fa * (1.0 - alpha) + d_fa * alpha
     score_b = rl_fb * (1.0 - alpha) + d_fb * alpha
+    if psrv is not None:
+        psrv = psrv.astype(jnp.int32)
+        pb = pbytes.astype(jnp.float32)
+        rem_a = jnp.sum(
+            pb * (psrv != cand[:, 0][:, None]).astype(jnp.float32), axis=-1)
+        rem_b = jnp.sum(
+            pb * (psrv != cand[:, 1][:, None]).astype(jnp.float32), axis=-1)
+        score_a = score_a + gamma_bw * rem_a
+        score_b = score_b + gamma_bw * rem_b
     scores = jnp.stack([score_a, score_b], axis=1)
     choice = jnp.where(score_a > score_b, cand[:, 1],
                        cand[:, 0]).astype(jnp.int32)
@@ -79,7 +95,10 @@ def dodoor_fused_ref(keys: jnp.ndarray, r: jnp.ndarray, d: jnp.ndarray,
 def dodoor_fused_sparse_ref(keys: jnp.ndarray, r: jnp.ndarray,
                             d_types: jnp.ndarray, node_type: jnp.ndarray,
                             L: jnp.ndarray, D: jnp.ndarray, C: jnp.ndarray,
-                            alpha: float, avail: jnp.ndarray | None = None):
+                            alpha: float, avail: jnp.ndarray | None = None,
+                            psrv: jnp.ndarray | None = None,
+                            pbytes: jnp.ndarray | None = None,
+                            gamma_bw: float = 0.0):
     """jnp oracle for the sparse-candidate-gather megakernel.
 
     The sparse kernel consumes the factorized duration model — ``d_types
@@ -91,4 +110,5 @@ def dodoor_fused_sparse_ref(keys: jnp.ndarray, r: jnp.ndarray,
     caveat) unchanged.
     """
     d = d_types.astype(jnp.float32)[:, node_type]          # [T, N]
-    return dodoor_fused_ref(keys, r, d, L, D, C, alpha, avail=avail)
+    return dodoor_fused_ref(keys, r, d, L, D, C, alpha, avail=avail,
+                            psrv=psrv, pbytes=pbytes, gamma_bw=gamma_bw)

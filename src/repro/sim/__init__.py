@@ -5,8 +5,8 @@ compiled program per seeds × configs × scenarios grid) with its sweep and
 scenario wrappers, and the mean-field predictor."""
 from .cluster import (NODE_TYPES, TESTBED_TYPES, ClusterSpec,
                       make_homogeneous, make_scaled, make_testbed)
-from .engine import (CacheFaults, Dynamics, EngineConfig, RetryPolicy,
-                     SimResult, resolve_use_kernel, simulate)
+from .engine import (CacheFaults, Dynamics, EngineConfig, LocalityModel,
+                     RetryPolicy, SimResult, resolve_use_kernel, simulate)
 from .hierarchy import simulate_hierarchical, split_cluster
 from .meanfield import (MeanFieldPrediction, het_pod_equilibrium,
                         make_service_workload, measured_mean_queue,
@@ -16,10 +16,10 @@ from .meanfield import (MeanFieldPrediction, het_pod_equilibrium,
 from .messages import (RpcModel, cache_messages_per_decision,
                        expected_messages_per_task, per_decision_messages,
                        sync_hops)
-from .metrics import (Summary, fault_stats, mean_in_system, phase_summaries,
-                      resource_violations, summarize, summarize_window,
-                      time_to_recover_ms, utilization_stats,
-                      utilization_timeline)
+from .metrics import (Summary, dag_stats, fault_stats, mean_in_system,
+                      phase_summaries, resource_violations, summarize,
+                      summarize_dag, summarize_window, time_to_recover_ms,
+                      utilization_stats, utilization_timeline)
 from .scenarios import (Scenario, ScenarioSweep, random_churn,
                         random_outages, random_stragglers, rolling_restart,
                         run_scenario, run_scenario_grid, scenario_workload)
@@ -30,13 +30,13 @@ from .sweep import (SummaryCI, SweepResult, aggregate_summaries,
 __all__ = [
     "NODE_TYPES", "TESTBED_TYPES", "ClusterSpec", "make_homogeneous",
     "make_scaled", "make_testbed", "CacheFaults", "Dynamics", "EngineConfig",
-    "RetryPolicy", "SimResult",
+    "LocalityModel", "RetryPolicy", "SimResult",
     "simulate", "resolve_use_kernel", "simulate_hierarchical",
     "split_cluster", "RpcModel", "cache_messages_per_decision",
     "expected_messages_per_task", "per_decision_messages", "sync_hops",
-    "Summary", "fault_stats", "mean_in_system", "phase_summaries",
-    "resource_violations", "summarize", "summarize_window",
-    "time_to_recover_ms",
+    "Summary", "dag_stats", "fault_stats", "mean_in_system",
+    "phase_summaries", "resource_violations", "summarize", "summarize_dag",
+    "summarize_window", "time_to_recover_ms",
     "utilization_stats", "utilization_timeline", "SummaryCI", "SweepResult",
     "aggregate_summaries", "simulate_many", "summarize_sweep",
     "MeanFieldPrediction", "het_pod_equilibrium", "make_service_workload",

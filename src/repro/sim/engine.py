@@ -158,6 +158,31 @@ class CacheFaults(NamedTuple):
     seed: int = 0                   # loss-draw stream
 
 
+class LocalityModel(NamedTuple):
+    """Data-locality term for Algorithm 1 (DAG runs only; docs/DAGS.md).
+
+    With a model set on :class:`EngineConfig`, the dodoor/(1+β) score of
+    a candidate server ``j`` gains
+
+        + gamma · bytes_remote(task, j) / bandwidth_mb_per_ms
+
+    where ``bytes_remote`` sums the task's parent-output MB held on
+    servers other than ``j`` — the transfer-time cost of pulling inputs
+    across the network.  ``gamma = 0`` is bit-identical to today's score
+    (the penalty term is ``+0.0``), which is the pinned contract that
+    lets the locality-threaded programs share every parity test with
+    the locality-free ones.  The term only exists where parents exist:
+    ``simulate`` requires a ``dag`` whenever a model is set."""
+
+    gamma: float = 1.0              # penalty weight (score units per ms)
+    bandwidth_mb_per_ms: float = 1.0  # effective network bandwidth
+
+    @property
+    def gamma_bw(self) -> float:
+        """The fused per-MB coefficient the score actually uses."""
+        return float(self.gamma) / float(self.bandwidth_mb_per_ms)
+
+
 class EngineConfig(NamedTuple):
     """Cluster-level knobs (Require line of Algorithm 1 + §6.1 RPC setup)."""
 
@@ -192,6 +217,10 @@ class EngineConfig(NamedTuple):
                                       # a RetryPolicy enables kill-and-retry
                                       # (+ hard-capacity rejection when its
                                       # reject_queue_factor > 0)
+    locality: LocalityModel | None = None  # data-locality score term —
+                                           # DAG runs only; None keeps
+                                           # Algorithm 1 untouched and
+                                           # gamma=0 is bit-identical
 
 
 class _Dyn(NamedTuple):
@@ -210,6 +239,9 @@ class _Dyn(NamedTuple):
     q_rif: jnp.ndarray
     reject_cap: jnp.ndarray   # hard-capacity rejection threshold (rif ≥
                               # cap·cores rejects); +inf when disabled
+    gamma_bw: jnp.ndarray     # locality penalty per remote MB
+                              # (gamma / bandwidth); 0.0 when no
+                              # LocalityModel is configured
 
 
 class Dynamics(NamedTuple):
@@ -536,10 +568,14 @@ def _apply_push(carry: _Carry, now, dyn: _Dyn, win: _Win, S: int,
 
 def _select(policy: str, key, carry: _Carry, r_sub, d_est_srv, now, sched,
             C, cfg: EngineConfig, dyn: _Dyn, win: _Win,
-            faulted: bool = False):
+            faulted: bool = False, loc=None):
     """Dispatch the placement policy. Returns (server j, carry, extra_msgs,
     extra latency ms).  ``faulted`` switches the cached-view policies onto
-    the per-scheduler view planes (cache-fault programs)."""
+    the per-scheduler view planes (cache-fault programs).  ``loc``, when
+    given, is the ``(psrv [P], pbytes [P])`` locality operand pair of a
+    DAG run: dodoor/(1+β) scores gain ``dyn.gamma_bw`` per MB of parent
+    output the candidate would pull remotely (same reduction order as
+    the batched path and the fused kernel)."""
     avail = _avail_rows(win, now)                       # [n] bool
     mask = feasible_mask(r_sub, C) & avail
     zero = jnp.zeros((), jnp.float32)
@@ -568,6 +604,13 @@ def _select(policy: str, key, carry: _Carry, r_sub, d_est_srv, now, sched,
         C_ab = C[cand]
         scores = load_score_batched(r_sub[None], L_ab[None], D_ab[None],
                                     C_ab[None], dyn.alpha)[0]
+        if loc is not None:
+            psrv, pbytes = loc                          # [P] each
+            rem = jnp.sum(
+                pbytes[None, :]
+                * (psrv[None, :] != cand[:, None]).astype(jnp.float32),
+                axis=-1)                                # [2]
+            scores = scores + dyn.gamma_bw * rem
         two = jnp.where(scores[0] > scores[1], cand[1], cand[0])
         if policy == "one_plus_beta":
             use_two = jax.random.uniform(k_beta) < dyn.beta
@@ -745,13 +788,16 @@ def _commit_one(carry, valid, now, j, cores, mem_mb, dur_raw, d_est_j,
 
 
 @partial(jax.jit, static_argnames=("cfg", "n", "num_types", "cache_faulted",
-                                   "return_carry"))
+                                   "return_carry", "locality"))
 def _simulate_jax(xs, C, node_type, mem_unit, cores_per, dyn_vec, dyn_ints,
                   win, cfg: EngineConfig, n: int, num_types: int, seed: int,
                   cache_faulted: bool = False, carry0=None,
-                  return_carry: bool = False):
+                  return_carry: bool = False, locality: bool = False):
     """The sequential scan. xs = (i [m], r_sub [m,2], r_exec [m,T,2],
-    d_est [m,T], d_act [m,T], submit [m], task_id [m]).
+    d_est [m,T], d_act [m,T], submit [m], task_id [m]) — plus
+    (psrv [m,P], pbytes [m,P]) when ``locality`` (DAG waves with a
+    LocalityModel; the flag is static because the extra leaves shape the
+    scan).
 
     ``dyn_ints = [b, flush_every]`` are traced: neither shapes the scan
     here, so b/flush sweeps share one compiled program.
@@ -770,7 +816,13 @@ def _simulate_jax(xs, C, node_type, mem_unit, cores_per, dyn_vec, dyn_ints,
         carry0 = _init_carry(cfg, n, cores_per, cache_faulted)
 
     def step(carry: _Carry, inp):
-        i, r_sub, r_exec_t, d_est_t, d_act_t, submit, task_id = inp
+        if locality:
+            (i, r_sub, r_exec_t, d_est_t, d_act_t, submit, task_id,
+             psrv_t, pbytes_t) = inp
+            loc = (psrv_t, pbytes_t)
+        else:
+            i, r_sub, r_exec_t, d_est_t, d_act_t, submit, task_id = inp
+            loc = None
         now = submit
         sched = (i % S).astype(jnp.int32)
         key = jax.random.fold_in(base_key, task_id)    # §5: task-id seeding
@@ -781,7 +833,7 @@ def _simulate_jax(xs, C, node_type, mem_unit, cores_per, dyn_vec, dyn_ints,
 
         j, carry, extra_msgs, extra_lat = _select(
             cfg.policy, key, carry, r_sub, d_est_srv, now, sched, C, cfg,
-            dyn, win, faulted=cache_faulted)
+            dyn, win, faulted=cache_faulted, loc=loc)
 
         # --- commit: scheduling latency (compute + channel contention +
         # placement hop; the enqueue RPC's service time grows with the
@@ -1030,15 +1082,17 @@ def _commit_rounds(carry: _Carry, valid, now, j, cores, mem_mb, dur_raw,
 
 @partial(jax.jit, static_argnames=("cfg", "n", "num_types", "use_kernel",
                                    "kernel_masked", "cache_faulted",
-                                   "return_carry"))
+                                   "return_carry", "locality"))
 def _simulate_batched_jax(xs, C, node_type, mem_unit, cores_per, dyn_vec,
                           dyn_ints, win, cfg: EngineConfig, n: int,
                           num_types: int, seed: int, use_kernel: bool,
                           kernel_masked: bool = False,
                           cache_faulted: bool = False, carry0=None,
-                          return_carry: bool = False):
+                          return_carry: bool = False, locality: bool = False):
     """The block scan. xs fields are [nb, b, ...]: global index, r_sub,
-    r_exec, d_est, d_act, submit, task_id, valid.
+    r_exec, d_est, d_act, submit, task_id, valid — plus (psrv [nb, b, P],
+    pbytes [nb, b, P]) when ``locality`` (DAG waves under a LocalityModel;
+    static, the extra leaves shape the scan).
 
     ``kernel_masked`` selects the megakernel's masked-sampling program
     (the avail plane streamed into the in-kernel prefilter).  It is a
@@ -1066,7 +1120,13 @@ def _simulate_batched_jax(xs, C, node_type, mem_unit, cores_per, dyn_vec,
         carry0 = _init_carry(cfg, n, cores_per, cache_faulted)
 
     def block_step(carry: _Carry, blk):
-        idx, r_sub, r_exec_t, d_est_t, d_act_t, submit, task_id, valid = blk
+        if locality:
+            (idx, r_sub, r_exec_t, d_est_t, d_act_t, submit, task_id, valid,
+             psrv, pbytes) = blk
+        else:
+            idx, r_sub, r_exec_t, d_est_t, d_act_t, submit, task_id, valid \
+                = blk
+            psrv = pbytes = None
         bsz = idx.shape[0]
         tt = jnp.arange(bsz, dtype=jnp.int32)
         now = submit                                            # [b]
@@ -1100,6 +1160,10 @@ def _simulate_batched_jax(xs, C, node_type, mem_unit, cores_per, dyn_vec,
                     k_cand, r_sub, d_est_t, node_type, carry.view_L,
                     carry.view_D, C, alpha=cfg.alpha,
                     avail=avail if kernel_masked else None,
+                    psrv=psrv, pbytes=pbytes,
+                    gamma_bw=(cfg.locality.gamma_bw
+                              if locality and cfg.locality is not None
+                              else 0.0),
                     block_t=cfg.block_t, interpret=cfg.interpret)
             elif cache_faulted:
                 # Per-scheduler degraded views: gather each task's own
@@ -1112,6 +1176,29 @@ def _simulate_batched_jax(xs, C, node_type, mem_unit, cores_per, dyn_vec,
                 D_c = carry.view_D[sched[:, None], cand2] + d_cand
                 scores = load_score_batched(r_sub, L_c, D_c, C[cand2],
                                             dyn.alpha)
+                if locality:
+                    rem = jnp.sum(
+                        pbytes[:, None, :]
+                        * (psrv[:, None, :] != cand2[:, :, None]
+                           ).astype(jnp.float32), axis=-1)      # [b, 2]
+                    scores = scores + dyn.gamma_bw * rem
+                two = jnp.where(scores[:, 0] > scores[:, 1],
+                                cand2[:, 1], cand2[:, 0])
+            elif locality:
+                # Same arithmetic as dodoor_choice_batch, inlined so the
+                # locality penalty lands between scoring and selection —
+                # order-identical to the sequential _select path.
+                cand2 = sample_feasible_batch(k_cand, mask, 2)  # [b, 2]
+                d_cand = d_est_t[tt[:, None], node_type[cand2]]
+                L_c = carry.view_L[cand2]                       # [b, 2, 2]
+                D_c = carry.view_D[cand2] + d_cand
+                scores = load_score_batched(r_sub, L_c, D_c, C[cand2],
+                                            dyn.alpha)
+                rem = jnp.sum(
+                    pbytes[:, None, :]
+                    * (psrv[:, None, :] != cand2[:, :, None]
+                       ).astype(jnp.float32), axis=-1)          # [b, 2]
+                scores = scores + dyn.gamma_bw * rem
                 two = jnp.where(scores[:, 0] > scores[:, 1],
                                 cand2[:, 1], cand2[:, 0])
             else:
@@ -1411,17 +1498,18 @@ def _conv_cached(key, pins, builder):
 
 
 def _make_dyn(cfg: EngineConfig) -> jnp.ndarray:
-    """The traced-scalar parameters, packed as one [11] device array (a
+    """The traced-scalar parameters, packed as one [12] device array (a
     single transfer; unpacked into :class:`_Dyn` inside the jit)."""
     def build():
         o0, o1 = cfg.outage_ms if cfg.outage_ms else (np.inf, np.inf)
         cap = np.inf
         if cfg.retry is not None and cfg.retry.reject_queue_factor > 0:
             cap = cfg.retry.reject_queue_factor
+        gbw = cfg.locality.gamma_bw if cfg.locality is not None else 0.0
         return jnp.asarray(np.array(
             [cfg.alpha, cfg.beta, cfg.interference, cfg.rpc.hop_ms,
              cfg.rpc.chan_ms, cfg.rpc.push_block_ms, cfg.rpc.compute_ms,
-             o0, o1, cfg.prequal.q_rif, cap], np.float32))
+             o0, o1, cfg.prequal.q_rif, cap, gbw], np.float32))
 
     return _conv_cached(("dyn", cfg), (), build)
 
@@ -1574,6 +1662,11 @@ def _static_cfg(cfg: EngineConfig, for_kernel: bool = False,
         # (wave loop) or traced (reject_cap), so all retry settings share
         # one compiled program per driver.
         retry=None if cfg.retry is None else RetryPolicy(),
+        # LocalityModel: presence gates the two-stage penalty (whose
+        # gamma_bw rides traced in _Dyn), but the fused kernel bakes
+        # gamma_bw into its program like alpha — retain it for_kernel.
+        locality=(None if cfg.locality is None
+                  else (cfg.locality if for_kernel else LocalityModel())),
     )
 
 
@@ -1597,6 +1690,14 @@ def _validate_config(cfg: EngineConfig) -> None:
         if rp.backoff_ms < 0.0 or rp.backoff_mult <= 0.0:
             raise ValueError(
                 "retry needs backoff_ms ≥ 0 and backoff_mult > 0")
+    if cfg.locality is not None:
+        lm = cfg.locality
+        if not isinstance(lm, LocalityModel):
+            raise TypeError("EngineConfig.locality must be a LocalityModel")
+        if lm.gamma < 0.0:
+            raise ValueError("locality.gamma must be ≥ 0")
+        if lm.bandwidth_mb_per_ms <= 0.0:
+            raise ValueError("locality.bandwidth_mb_per_ms must be > 0")
 
 
 def _blocked_inputs(workload, b: int):
@@ -1778,9 +1879,143 @@ def _simulate_with_retries(workload, cluster: ClusterSpec, cfg: EngineConfig,
     )
 
 
+def _simulate_dag(workload, cluster: ClusterSpec, cfg: EngineConfig,
+                  seed: int, mode: str, use_kernel: bool, dynamics,
+                  masked: bool, faulted: bool, plan) -> SimResult:
+    """The frontier loop: run a task graph level by level.
+
+    Waves are the plan's longest-path topological levels, so every task's
+    parents have finished — and their placements are known to the
+    locality gather — before it is submitted.  A task's *effective*
+    submit time is ``max(trace submit, max_p(finish[p] + edge_delay))``
+    (the ready-set rule); within a wave, decisions run in ready-time
+    order (original index breaks ties).  The cluster carry threads from
+    wave to wave exactly as in :func:`_simulate_with_retries`, and
+    wave-local cadences (scheduler round-robin, flush, push) restart per
+    wave — a newly-ready frontier is a fresh decision stream to the
+    scheduling layer.
+
+    With ``cfg.locality`` set, each wave streams its tasks' parent
+    placements/payloads (``psrv``/``pbytes``, −1/0 padded) into the
+    decision: Algorithm 1's score gains ``gamma_bw · Σ_p bytes_p ·
+    [server_p ≠ candidate]`` on both candidates.  ``gamma = 0`` adds
+    ``+0.0`` and is bit-identical to running without a LocalityModel.
+
+    Both drivers consume the identical wave plan — the sequential oracle
+    at exact wave length, the batched driver edge-padded to whole
+    ``b``-blocks — so finish planes (hence every later wave's ready
+    times) inherit the engine's seq-vs-batched bit-exactness inductively.
+
+    Returns a :class:`SimResult` whose ``submit_ms`` holds the
+    *effective* submit times (``summarize`` latency is then queueing +
+    service past readiness, not past the trace timestamp)."""
+    n = cluster.num_servers
+    C, node_type, cores_per, mem_unit = _cluster_arrays(cluster,
+                                                        cfg.mem_units)
+    dyn = _make_dyn(cfg)
+    dyn_i = _make_dyn_ints(cfg)
+    win = _lower_dynamics(dynamics, n)
+    m = workload.r_submit.shape[0]
+    batched = mode == "batched"
+    scfg = (_static_cfg(cfg, for_kernel=use_kernel, keep_b=True) if batched
+            else _static_cfg(cfg))
+    b = cfg.b
+    loc_on = cfg.locality is not None and plan.max_parents > 0
+
+    host = {f: np.ascontiguousarray(getattr(workload, f))
+            for f in ("r_submit", "r_exec", "d_est", "d_act", "submit_ms")}
+
+    server = np.zeros(m, np.int32)
+    fin = {k: np.zeros(m, np.float32)
+           for k in ("start", "finish", "enq", "sched", "cores", "mem")}
+    eff_submit = np.zeros(m, np.float32)
+    submit0 = host["submit_ms"].astype(np.float64)
+
+    carry = None
+    psrv_w = pbytes_w = None
+    for lv in range(plan.num_levels):
+        sel = np.flatnonzero(plan.level == lv)
+        par = plan.parents_pad[sel]                          # [w, P]
+        fin_par = np.where(
+            par >= 0, fin["finish"][np.maximum(par, 0)].astype(np.float64),
+            -np.inf)
+        ready = np.maximum(
+            submit0[sel],
+            np.max(fin_par + plan.pdelay_pad[sel], axis=1, initial=-np.inf))
+        order = np.lexsort((sel, ready))
+        idx = sel[order]
+        submit_w = ready[order].astype(np.float32)
+        mw = idx.shape[0]
+        task_id = idx.astype(np.int32)
+        if loc_on:
+            pidx = plan.parents_pad[idx]
+            psrv_w = np.where(pidx >= 0, server[np.maximum(pidx, 0)],
+                              -1).astype(np.int32)
+            pbytes_w = np.ascontiguousarray(plan.pbytes_pad[idx])
+        if batched:
+            nb = -(-mw // b)
+            pad = nb * b - mw
+
+            def blk(arr):
+                arr = np.ascontiguousarray(arr)
+                if pad:
+                    arr = np.pad(arr, ((0, pad),) + ((0, 0),)
+                                 * (arr.ndim - 1), mode="edge")
+                return jnp.asarray(arr.reshape((nb, b) + arr.shape[1:]))
+
+            ids = np.arange(nb * b, dtype=np.int32)
+            xs = (jnp.asarray(ids.reshape(nb, b)),
+                  blk(host["r_submit"][idx]), blk(host["r_exec"][idx]),
+                  blk(host["d_est"][idx]), blk(host["d_act"][idx]),
+                  blk(submit_w), blk(task_id),
+                  jnp.asarray((ids < mw).reshape(nb, b)))
+            if loc_on:
+                xs = xs + (blk(psrv_w), blk(pbytes_w))
+            carry, outs = _simulate_batched_jax(
+                xs, C, node_type, mem_unit, cores_per, dyn, dyn_i, win,
+                scfg, n, cluster.num_types, seed, use_kernel, masked,
+                cache_faulted=faulted, carry0=carry, return_carry=True,
+                locality=loc_on)
+            outs = [np.asarray(o).reshape(nb * b)[:mw] for o in outs]
+        else:
+            xs = (jnp.arange(mw, dtype=jnp.int32),
+                  jnp.asarray(host["r_submit"][idx]),
+                  jnp.asarray(host["r_exec"][idx]),
+                  jnp.asarray(host["d_est"][idx]),
+                  jnp.asarray(host["d_act"][idx]),
+                  jnp.asarray(submit_w), jnp.asarray(task_id))
+            if loc_on:
+                xs = xs + (jnp.asarray(psrv_w), jnp.asarray(pbytes_w))
+            carry, outs = _simulate_jax(
+                xs, C, node_type, mem_unit, cores_per, dyn, dyn_i, win,
+                scfg, n, cluster.num_types, seed,
+                cache_faulted=faulted, carry0=carry, return_carry=True,
+                locality=loc_on)
+            outs = [np.asarray(o) for o in outs]
+
+        j_w, start_w, fin_w, enq_w, sch_w, cor_w, mem_w = outs
+        server[idx] = j_w
+        for k, v in (("start", start_w), ("finish", fin_w), ("enq", enq_w),
+                     ("sched", sch_w), ("cores", cor_w), ("mem", mem_w)):
+            fin[k][idx] = v
+        eff_submit[idx] = submit_w
+
+    msgs = np.asarray(carry.msgs)
+    return SimResult(
+        server=server, submit_ms=eff_submit,
+        enqueue_ms=fin["enq"], start_ms=fin["start"],
+        finish_ms=fin["finish"], sched_ms=fin["sched"],
+        cores=fin["cores"], mem_mb=fin["mem"],
+        msgs_base=int(msgs[0]), msgs_probe=int(msgs[1]),
+        msgs_push=int(msgs[2]), msgs_flush=int(msgs[3]),
+        policy=cfg.policy,
+    )
+
+
 def simulate(workload, cluster: ClusterSpec, cfg: EngineConfig,
              seed: int = 0, *, mode: str = "sequential",
-             use_kernel: bool | str = "auto", dynamics=None) -> SimResult:
+             use_kernel: bool | str = "auto", dynamics=None,
+             dag=None) -> SimResult:
     """Run a full experiment: one workload trace through one policy.
 
     mode:
@@ -1815,6 +2050,20 @@ def simulate(workload, cluster: ClusterSpec, cfg: EngineConfig,
     carries ``attempts``/``failed``/``wasted_ms``; with ``retry=None``
     results are bit-identical to the pre-failure-layer engine.
 
+    dag:
+        optional task graph — a spec from ``repro.workloads.dags`` (or a
+        prebuilt :class:`~repro.workloads.dags.DagPlan`).  Tasks then run
+        through the frontier loop (:func:`_simulate_dag`): a task becomes
+        submittable at ``max(trace submit, max_p(finish[p] +
+        edge_delay))``, and the result's ``submit_ms`` holds those
+        *effective* submit times.  An edgeless DAG falls through to the
+        independent-task path and is bit-identical to ``dag=None``.
+        ``cfg.locality`` (a :class:`LocalityModel`) requires a dag — it
+        charges Algorithm 1 for each candidate's remote parent bytes —
+        and ``gamma = 0`` is bit-identical to no LocalityModel at all.
+        DAGs do not yet compose with ``cfg.retry`` (both own the
+        host-side wave loop) — that combination raises.
+
     ``workload`` and ``cluster`` are cached on device by object identity
     (they are frozen dataclasses): do not mutate their arrays in place
     between calls — derive a new object with ``dataclasses.replace``.
@@ -1826,6 +2075,19 @@ def simulate(workload, cluster: ClusterSpec, cfg: EngineConfig,
     if dynamics is not None and not isinstance(dynamics, Dynamics):
         raise TypeError(f"dynamics must be a Dynamics spec, got "
                         f"{type(dynamics).__name__}")
+    plan = None
+    if dag is not None:
+        from ..workloads.dags import dag_plan
+        plan = dag_plan(dag, workload.r_submit.shape[0])
+        if cfg.retry is not None:
+            raise NotImplementedError(
+                "dag together with a RetryPolicy: both own the host-side "
+                "wave loop — run task-graph workloads without retries, or "
+                "retries without a dag.")
+    elif cfg.locality is not None:
+        raise ValueError(
+            "EngineConfig.locality needs a dag: the penalty reads parent "
+            "placements, which only task-graph workloads carry.")
     if cfg.outage_ms:
         warnings.warn(
             "EngineConfig.outage_ms is deprecated — use "
@@ -1844,6 +2106,9 @@ def simulate(workload, cluster: ClusterSpec, cfg: EngineConfig,
         use_kernel = False
     masked = (use_kernel and dynamics is not None
               and dynamics.has_down_windows)
+    if plan is not None and plan.num_edges:
+        return _simulate_dag(workload, cluster, cfg, seed, mode, use_kernel,
+                             dynamics, masked, faulted, plan)
     if cfg.retry is not None:
         return _simulate_with_retries(workload, cluster, cfg, seed, mode,
                                       use_kernel, dynamics, masked, faulted)

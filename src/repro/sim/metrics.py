@@ -192,6 +192,63 @@ def fault_stats(res: SimResult) -> dict:
     return out
 
 
+def dag_stats(res: SimResult, plan) -> dict:
+    """Task-graph accounting for one run against its :class:`DagPlan`.
+
+    critical_path_ms — the realized longest chain: ``cp[v] = (finish[v] −
+    start[v]) + max_p(cp[p] + edge_delay)``, maximized over sinks.  This
+    is the DAG-aware makespan floor the frontier loop cannot beat.
+    dag_makespan_ms — last finish minus first trace submit.
+    frontier_width_mean/max — tasks per topological level (how much
+    parallelism each wave offered the scheduler).
+    bytes_moved_mb — Σ edge payload over edges whose endpoints landed on
+    *different* servers (what the LocalityModel charges for);
+    locality_frac — the fraction of edge payload that stayed local
+    (1.0 for an edgeless plan — nothing had to move).
+    """
+    m = res.server.shape[0]
+    if plan.m != m:
+        raise ValueError(f"plan built for m={plan.m}, result has {m}")
+    dur = (res.finish_ms - res.start_ms).astype(np.float64)
+    cp = np.zeros(m, np.float64)
+    # level order: parents are always in strictly lower levels.
+    for t in np.argsort(plan.level, kind="stable"):
+        lo, hi = plan.par_indptr[t], plan.par_indptr[t + 1]
+        best = 0.0
+        if hi > lo:
+            best = float(
+                (cp[plan.par_idx[lo:hi]] + plan.par_delay[lo:hi]).max())
+        cp[t] = dur[t] + best
+    widths = np.bincount(plan.level, minlength=plan.num_levels)
+    if plan.num_edges:
+        u = plan.par_idx
+        v = np.repeat(np.arange(m), np.diff(plan.par_indptr))
+        remote = res.server[u] != res.server[v]
+        total = float(plan.par_bytes.sum(dtype=np.float64))
+        moved = float(plan.par_bytes[remote].sum(dtype=np.float64))
+    else:
+        total = moved = 0.0
+    return dict(
+        critical_path_ms=float(cp.max()) if m else 0.0,
+        dag_makespan_ms=float(res.finish_ms.max() - res.submit_ms.min()),
+        frontier_width_mean=float(widths.mean()) if plan.num_levels else 0.0,
+        frontier_width_max=int(widths.max()) if plan.num_levels else 0,
+        num_levels=int(plan.num_levels),
+        num_edges=int(plan.num_edges),
+        bytes_moved_mb=moved,
+        bytes_total_mb=total,
+        locality_frac=1.0 - (moved / total if total > 0.0 else 0.0),
+    )
+
+
+def summarize_dag(res: SimResult, plan) -> dict:
+    """:func:`summarize` as a dict, widened with :func:`dag_stats` — the
+    one-call per-run record ``bench_dags``/studies emit."""
+    out = summarize(res)._asdict()
+    out.update(dag_stats(res, plan))
+    return out
+
+
 def time_to_recover_ms(res: SimResult, dynamics) -> float:
     """Time from the last finite outage-window end until the last *retried*
     task completes — how long the cluster takes to drain the re-entry

@@ -57,6 +57,13 @@ class Scenario(NamedTuple):
         ``None`` keeps the base workload's trace.
     dynamics:
         the server/store timeline (:class:`repro.sim.engine.Dynamics`).
+    dag:
+        optional task-graph spec (``repro.workloads.dags``) — the
+        scenario's tasks then run through the engine's frontier loop
+        (ready at ``max(submit, max_p(finish[p] + edge_delay))``), and
+        ``EngineConfig.locality`` charges Algorithm 1 for remote parent
+        bytes.  ``None`` (and any edgeless spec) keeps the independent-
+        task engine bit-identically.
 
     The spec is a NamedTuple of NamedTuples/tuples — hashable, usable as a
     cache key, comparable across runs.
@@ -65,6 +72,7 @@ class Scenario(NamedTuple):
     name: str = "steady"
     arrivals: object = None
     dynamics: Dynamics = Dynamics()
+    dag: object = None
 
 
 def scenario_workload(base, scenario: Scenario, seed: int = 0):
@@ -98,7 +106,8 @@ def run_scenario(base, cluster: ClusterSpec, scenario: Scenario,
     with the scenario's dynamics lowered to window operands."""
     wl = scenario_workload(base, scenario, seed)
     return simulate(wl, cluster, cfg, seed, mode=mode,
-                    use_kernel=use_kernel, dynamics=scenario.dynamics)
+                    use_kernel=use_kernel, dynamics=scenario.dynamics,
+                    dag=scenario.dag)
 
 
 class ScenarioSweep(NamedTuple):

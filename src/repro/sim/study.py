@@ -57,7 +57,8 @@ from .engine import (EngineConfig, SimResult, _blocked_inputs,
                      _cluster_arrays, _lower_dynamics, _make_dyn,
                      _make_dyn_ints, _simulate_batched_jax, _static_cfg,
                      _validate_config, resolve_use_kernel, simulate)
-from .hierarchy import _restrict_dynamics, _take_tasks, split_cluster
+from .hierarchy import (_restrict_dynamics, _take_tasks,
+                        simulate_hierarchical, split_cluster)
 from .metrics import summarize
 from .scenarios import Scenario, scenario_workload
 
@@ -108,7 +109,9 @@ class StudyResult(NamedTuple):
     scenario); ``submit_ms`` is ``[S, K, m]`` (configs share each
     scenario's arrival plane; when no scenario resamples arrivals it is
     a read-only broadcast view of the base trace — copy before
-    mutating); ``msgs`` is ``[S, G, K, 4]``."""
+    mutating) — except DAG studies, which store per-config *effective*
+    submit planes ``[S, G, K, m]`` (readiness depends on placements);
+    ``msgs`` is ``[S, G, K, 4]``."""
 
     server: np.ndarray
     enqueue_ms: np.ndarray
@@ -117,7 +120,7 @@ class StudyResult(NamedTuple):
     sched_ms: np.ndarray
     cores: np.ndarray
     mem_mb: np.ndarray
-    submit_ms: np.ndarray     # [S, K, m]
+    submit_ms: np.ndarray     # [S, K, m] ([S, G, K, m] on the DAG path)
     msgs: np.ndarray          # [S, G, K, 4] int32
     policy: str
     seeds: tuple              # length S
@@ -148,7 +151,12 @@ class StudyResult(NamedTuple):
         seeds[si], mode="batched")`` return."""
         return SimResult(
             server=self.server[si, gi, ki],
-            submit_ms=self.submit_ms[si, ki],
+            # DAG studies carry per-config *effective* submit planes
+            # ([S, G, K, m]); everywhere else configs share each
+            # scenario's arrival plane ([S, K, m]).
+            submit_ms=(self.submit_ms[si, gi, ki]
+                       if self.submit_ms.ndim == 4
+                       else self.submit_ms[si, ki]),
             enqueue_ms=self.enqueue_ms[si, gi, ki],
             start_ms=self.start_ms[si, gi, ki],
             finish_ms=self.finish_ms[si, gi, ki],
@@ -364,14 +372,31 @@ def run_study(base, cluster: ClusterSpec, study: Study, *,
     if cache_faulted:
         use_kernel = False     # the megakernel reads only the shared view
 
-    if any(c.retry is not None for c in configs):
+    dag_axis = any(sc.dag is not None for sc in scenarios)
+    if dag_axis:
         if server_shards is not None and int(server_shards) > 1:
             raise NotImplementedError(
-                "server_shards with a RetryPolicy: the re-entry wave loop "
-                "is host-side per run — shard the fleet without retries, "
-                "or drop server_shards.")
+                "server_shards on a DAG study: the frontier loop re-forms "
+                "decision blocks per wave, which does not compose with the "
+                "round-robin task split — shard DAG-free studies only.")
+        if any(c.retry is not None for c in configs):
+            raise NotImplementedError(
+                "dag scenarios with a RetryPolicy: both own the host-side "
+                "wave loop — run task-graph studies without retries.")
+        return _run_study_dag(base, cluster, seeds, configs, scenarios,
+                              use_kernel)
+    if any(c.locality is not None for c in configs):
+        raise ValueError(
+            "study configs carry a LocalityModel but no scenario has a "
+            "dag: the penalty reads parent placements, which only "
+            "task-graph scenarios carry.")
+
+    if any(c.retry is not None for c in configs):
+        shards = (int(server_shards)
+                  if server_shards is not None and int(server_shards) > 1
+                  else None)
         return _run_study_retry(base, cluster, seeds, configs, scenarios,
-                                use_kernel)
+                                use_kernel, server_shards=shards)
 
     static_cfg = _grid_static(configs, use_kernel)
 
@@ -399,7 +424,7 @@ def run_study(base, cluster: ClusterSpec, study: Study, *,
     P = S * G * K
 
     # --- per-axis operand planes (unique values; points gather into them)
-    dyn_g = np.stack([np.asarray(_make_dyn(c)) for c in configs])   # [G,10]
+    dyn_g = np.stack([np.asarray(_make_dyn(c)) for c in configs])   # [G,12]
     ints_g = np.stack([np.asarray(_make_dyn_ints(c))
                        for c in configs])                           # [G, 2]
     seeds_np = np.asarray(seeds, np.int32)                          # [S]
@@ -559,7 +584,8 @@ def _finish_study(outs, msgs, planes, static_cfg, seeds, configs, scenarios,
 
 
 def _run_study_retry(base, cluster: ClusterSpec, seeds, configs, scenarios,
-                     use_kernel: bool) -> StudyResult:
+                     use_kernel: bool,
+                     server_shards: int | None = None) -> StudyResult:
     """``run_study``'s failure-layer execution strategy: when any config
     carries a :class:`~repro.sim.engine.RetryPolicy`, every grid point runs
     the per-run re-entry wave loop (``simulate`` — host-side resubmission
@@ -569,7 +595,14 @@ def _run_study_retry(base, cluster: ClusterSpec, seeds, configs, scenarios,
     fallback loops over the same calls.  Unlike the dense planner, the
     retry spec itself may vary per config column (it is host-side wave
     control, not program-shaping), so retry-policy sweeps — including a
-    no-retry column — are one study."""
+    no-retry column — are one study.
+
+    ``server_shards``: retry × shards composes here per point — each point
+    runs :func:`repro.sim.simulate_hierarchical` (the §4.2 round-robin
+    fleet split, per-part seeds ``seed + c``, ``cfg.b`` per mini-cluster),
+    whose merged result is the sharded planner's own bit-identity oracle,
+    so a retry study point equals the dag-free sharded study's semantics
+    exactly."""
     static_cfg = _grid_static(tuple(c._replace(retry=None) for c in configs),
                               use_kernel)
     S, G, K = len(seeds), len(configs), len(scenarios)
@@ -594,8 +627,15 @@ def _run_study_retry(base, cluster: ClusterSpec, seeds, configs, scenarios,
         for gi, cfg in enumerate(configs):
             for ki, sc in enumerate(scenarios):
                 wl = scenario_workload(base, sc, sd)
-                r = simulate(wl, cluster, cfg, sd, mode="batched",
-                             use_kernel=use_kernel, dynamics=sc.dynamics)
+                if server_shards is not None:
+                    r = simulate_hierarchical(
+                        wl, cluster, cfg, server_shards, sd,
+                        mode="batched", b=cfg.b, dynamics=sc.dynamics,
+                        use_kernel=use_kernel)
+                else:
+                    r = simulate(wl, cluster, cfg, sd, mode="batched",
+                                 use_kernel=use_kernel,
+                                 dynamics=sc.dynamics)
                 for f in ("server", "enqueue_ms", "start_ms", "finish_ms",
                           "sched_ms", "cores", "mem_mb"):
                     out_f[f][si, gi, ki] = getattr(r, f)
@@ -614,6 +654,50 @@ def _run_study_retry(base, cluster: ClusterSpec, seeds, configs, scenarios,
         seeds=tuple(seeds), configs=tuple(configs),
         scenarios=tuple(scenarios),
         attempts=attempts, failed=failed, wasted_ms=out_f["wasted_ms"],
+    )
+
+
+def _run_study_dag(base, cluster: ClusterSpec, seeds, configs, scenarios,
+                   use_kernel: bool) -> StudyResult:
+    """``run_study``'s task-graph execution strategy: when any scenario
+    carries a ``dag``, every grid point runs the engine's host-side
+    frontier loop (``simulate(dag=...)`` — wave boundaries depend on each
+    point's own finish times, so points can't ride one fused axis), each
+    point bit-identical to its standalone ``run_scenario``.  The
+    ``LocalityModel`` (like the retry spec) may vary per config column —
+    a γ sweep is one study.  The result's ``submit_ms`` is ``[S, G, K,
+    m]``: *effective* submit times (readiness), which vary per config
+    because they depend on parent placements."""
+    static_cfg = _grid_static(
+        tuple(c._replace(locality=None) for c in configs), use_kernel)
+    S, G, K = len(seeds), len(configs), len(scenarios)
+    m = base.r_submit.shape[0]
+
+    shape = (S, G, K, m)
+    out_f = {f: np.zeros(shape, np.float32)
+             for f in ("server", "enqueue_ms", "start_ms", "finish_ms",
+                       "sched_ms", "cores", "mem_mb", "submit_ms")}
+    msgs = np.zeros((S, G, K, 4), np.int32)
+    for si, sd in enumerate(seeds):
+        for gi, cfg in enumerate(configs):
+            for ki, sc in enumerate(scenarios):
+                wl = scenario_workload(base, sc, sd)
+                r = simulate(wl, cluster, cfg, sd, mode="batched",
+                             use_kernel=use_kernel, dynamics=sc.dynamics,
+                             dag=sc.dag)
+                for f in ("server", "enqueue_ms", "start_ms", "finish_ms",
+                          "sched_ms", "cores", "mem_mb", "submit_ms"):
+                    out_f[f][si, gi, ki] = getattr(r, f)
+                msgs[si, gi, ki] = (r.msgs_base, r.msgs_probe, r.msgs_push,
+                                    r.msgs_flush)
+    return StudyResult(
+        server=out_f["server"].astype(np.int32),
+        enqueue_ms=out_f["enqueue_ms"], start_ms=out_f["start_ms"],
+        finish_ms=out_f["finish_ms"], sched_ms=out_f["sched_ms"],
+        cores=out_f["cores"], mem_mb=out_f["mem_mb"],
+        submit_ms=out_f["submit_ms"], msgs=msgs, policy=static_cfg.policy,
+        seeds=tuple(seeds), configs=tuple(configs),
+        scenarios=tuple(scenarios),
     )
 
 
@@ -732,7 +816,7 @@ def _run_study_sharded(base, cluster: ClusterSpec, seeds, configs,
                              for i in range(4))
 
     # --- per-axis operand planes (as the dense path, plus the part axis)
-    dyn_p = np.stack([np.asarray(_make_dyn(c)) for c in configs])   # [G,10]
+    dyn_p = np.stack([np.asarray(_make_dyn(c)) for c in configs])   # [G,12]
     ints_p = np.stack([np.asarray(_make_dyn_ints(c)) for c in configs])
     seeds_np = np.asarray(seeds, np.int32)
     p_idx = np.arange(P)

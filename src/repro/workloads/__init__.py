@@ -1,12 +1,17 @@
 """repro.workloads — Azure VM trace synthesis (§6.2), FunctionBench (§6.3,
-Tables 3-4 embedded), and the arrival-process module (Poisson + the
-scenario engine's bursty/diurnal/batch processes)."""
+Tables 3-4 embedded), the arrival-process module (Poisson + the scenario
+engine's bursty/diurnal/batch processes), and task-graph (DAG) specs for
+dependent workloads."""
 from . import azure, functionbench
 from .arrivals import (BatchArrivals, DiurnalArrivals, OnOffArrivals,
                        PoissonArrivals, arrival_times, arrival_times_grid,
                        mean_qps, poisson_arrivals, round_robin_scheduler)
+from .dags import (DAG_SPECS, ChainDAG, DagPlan, ExplicitDAG, FanOutDAG,
+                   LayeredDAG, MapReduceDAG, dag_edges, dag_plan)
 
 __all__ = ["azure", "functionbench", "poisson_arrivals",
            "round_robin_scheduler", "PoissonArrivals", "OnOffArrivals",
            "DiurnalArrivals", "BatchArrivals", "arrival_times",
-           "arrival_times_grid", "mean_qps"]
+           "arrival_times_grid", "mean_qps",
+           "DAG_SPECS", "ChainDAG", "DagPlan", "ExplicitDAG", "FanOutDAG",
+           "LayeredDAG", "MapReduceDAG", "dag_edges", "dag_plan"]

@@ -1,0 +1,413 @@
+"""The DAG property wall (ISSUE 8): task-graph specs pinned acyclic, the
+frontier loop's ready-set/monotonicity invariants, the chain→FCFS collapse,
+the edgeless and γ=0 bit-identity contracts, the five-policy seq-vs-batched
+parity matrix over DAG workloads × dynamics, the DAG study axis, the
+retry × server_shards regression (PR 7 gap), and the mixed
+cache-faultedness ValueError contract."""
+import numpy as np
+import pytest
+from hypothesis_compat import given, settings, st
+
+from repro.sim import (Dynamics, EngineConfig, LocalityModel, Scenario,
+                       Study, dag_stats, make_testbed, run_scenario,
+                       run_study, simulate, simulate_hierarchical,
+                       summarize_dag)
+from repro.sim.engine import CacheFaults, RetryPolicy
+from repro.workloads import (ChainDAG, DagPlan, ExplicitDAG, FanOutDAG,
+                             LayeredDAG, MapReduceDAG, dag_edges, dag_plan)
+from repro.workloads import functionbench as fb
+
+POLICIES = ("random", "pot", "dodoor", "prequal", "one_plus_beta")
+
+_delays = st.floats(0.0, 5.0)
+_bytes = st.floats(0.0, 8.0)
+_specs = st.one_of(
+    st.builds(ChainDAG, edge_delay_ms=_delays, edge_bytes_mb=_bytes),
+    st.builds(FanOutDAG, width=st.integers(1, 9), edge_delay_ms=_delays,
+              edge_bytes_mb=_bytes),
+    st.builds(MapReduceDAG, mappers=st.integers(1, 6),
+              reducers=st.integers(1, 3), edge_delay_ms=_delays,
+              edge_bytes_mb=_bytes),
+    st.builds(LayeredDAG, width=st.integers(1, 10),
+              density=st.floats(0.0, 1.0), edge_delay_ms=_delays,
+              edge_bytes_mb=_bytes, seed=st.integers(0, 7)),
+)
+
+
+@pytest.fixture(scope="module")
+def tb():
+    return make_testbed(scale=0.2)
+
+
+@pytest.fixture(scope="module")
+def wl240():
+    return fb.synthesize(m=240, qps=60.0, seed=0)
+
+
+class TestDagSpecs:
+    """Structural properties of the generators and the lowered plan."""
+
+    @given(spec=_specs, m=st.integers(1, 120))
+    @settings(max_examples=60, deadline=None)
+    def test_generators_topologically_numbered(self, spec, m):
+        """Every generated edge points forward (u < v) within bounds with
+        non-negative annotations — the generators cannot encode a cycle."""
+        edges = dag_edges(spec, m)
+        if edges.shape[0]:
+            assert (edges[:, 0] < edges[:, 1]).all()
+            assert (edges[:, 0] >= 0).all() and (edges[:, 1] < m).all()
+            assert (edges[:, 2] >= 0).all() and (edges[:, 3] >= 0).all()
+
+    @given(spec=_specs, m=st.integers(1, 120))
+    @settings(max_examples=60, deadline=None)
+    def test_plan_levels_and_pads(self, spec, m):
+        """Kahn longest-path levels: every edge climbs at least one level,
+        every level-l>0 task has a parent exactly one level below, and the
+        padded parent planes agree with the CSR planes."""
+        plan = dag_plan(spec, m)
+        lvl = plan.level
+        for t in range(m):
+            lo, hi = plan.par_indptr[t], plan.par_indptr[t + 1]
+            ps = plan.par_idx[lo:hi]
+            if lvl[t] > 0:
+                assert (lvl[ps] < lvl[t]).all()
+                assert (lvl[ps] == lvl[t] - 1).any()
+            else:
+                assert hi == lo
+            k = hi - lo
+            assert (plan.parents_pad[t, :k] == ps).all()
+            assert (plan.parents_pad[t, k:] == -1).all()
+            np.testing.assert_array_equal(plan.pdelay_pad[t, :k],
+                                          plan.par_delay[lo:hi])
+            np.testing.assert_array_equal(plan.pbytes_pad[t, :k],
+                                          plan.par_bytes[lo:hi])
+            assert (plan.pbytes_pad[t, k:] == 0).all()
+        assert plan.num_levels == (int(lvl.max()) + 1 if m else 0)
+        assert plan.num_edges == plan.par_idx.shape[0]
+
+    def test_cycle_raises(self):
+        with pytest.raises(ValueError, match="cycle"):
+            dag_plan(ExplicitDAG(edges=((0, 1), (1, 2), (2, 0))), 4)
+
+    def test_self_edge_and_bounds_raise(self):
+        with pytest.raises(ValueError, match="self-edge"):
+            dag_edges(ExplicitDAG(edges=((3, 3),)), 8)
+        with pytest.raises(ValueError, match="outside"):
+            dag_edges(ExplicitDAG(edges=((0, 9),)), 8)
+
+    def test_plan_memoized_and_passthrough(self):
+        spec = FanOutDAG(width=4)
+        p1 = dag_plan(spec, 60)
+        assert dag_plan(spec, 60) is p1
+        assert dag_plan(p1, 60) is p1
+        with pytest.raises(ValueError, match="m=60"):
+            dag_plan(p1, 61)
+        assert not p1.level.flags.writeable
+
+
+class TestDagEngine:
+    """The frontier loop against the real engine."""
+
+    CFG = EngineConfig(policy="dodoor", b=16)
+
+    @pytest.mark.parametrize("spec", [
+        FanOutDAG(width=6, edge_delay_ms=1.0, edge_bytes_mb=2.0),
+        MapReduceDAG(mappers=6, reducers=2, edge_delay_ms=0.5),
+        LayeredDAG(width=48, density=0.3, edge_delay_ms=2.0, seed=1),
+    ])
+    def test_ready_set_invariant(self, wl240, tb, spec):
+        """No task starts before every parent's finish + edge delay, and
+        the recorded submit_ms is exactly the ready-set rule's value."""
+        res = simulate(wl240, tb, self.CFG, 0, mode="sequential", dag=spec)
+        plan = dag_plan(spec, 240)
+        for t in range(240):
+            lo, hi = plan.par_indptr[t], plan.par_indptr[t + 1]
+            if hi == lo:
+                assert res.submit_ms[t] == np.float32(wl240.submit_ms[t])
+                continue
+            gate = (res.finish_ms[plan.par_idx[lo:hi]]
+                    + plan.par_delay[lo:hi]).max()
+            ready = np.float32(max(np.float64(wl240.submit_ms[t]),
+                                   np.float64(gate)))
+            assert res.submit_ms[t] == pytest.approx(ready, rel=1e-6)
+            assert res.start_ms[t] >= gate - 1e-3
+
+    def test_frontier_monotone(self, wl240, tb):
+        """Effective submit times strictly climb along every edge (child
+        readiness is gated by the parent's finish)."""
+        spec = MapReduceDAG(mappers=8, reducers=2, edge_delay_ms=0.0)
+        res = simulate(wl240, tb, self.CFG, 0, mode="sequential", dag=spec)
+        plan = dag_plan(spec, 240)
+        v = np.repeat(np.arange(240), np.diff(plan.par_indptr))
+        u = plan.par_idx
+        assert (res.submit_ms[v] >= res.submit_ms[u]).all()
+        assert (plan.level[v] > plan.level[u]).all()
+
+    def test_chain_collapses_to_sequential_fcfs(self, wl240, tb):
+        """A chain DAG admits exactly one ready task at a time: execution
+        is sequential FCFS with the edge delay between neighbours."""
+        res = simulate(wl240, tb, self.CFG, 0, mode="sequential",
+                       dag=ChainDAG(edge_delay_ms=0.5))
+        assert (res.start_ms[1:] >= res.finish_ms[:-1] + 0.5 - 1e-3).all()
+        plan = dag_plan(ChainDAG(edge_delay_ms=0.5), 240)
+        assert plan.num_levels == 240
+
+    @pytest.mark.parametrize("policy", POLICIES)
+    def test_edgeless_dag_bit_identical(self, wl240, tb, policy):
+        """dag=ExplicitDAG() (no edges) is the independent-task engine,
+        bitwise, on all five policies."""
+        cfg = EngineConfig(policy=policy, b=16)
+        r0 = simulate(wl240, tb, cfg, 0, mode="batched", use_kernel=False)
+        r1 = simulate(wl240, tb, cfg, 0, mode="batched", use_kernel=False,
+                      dag=ExplicitDAG())
+        for f in ("server", "submit_ms", "start_ms", "finish_ms",
+                  "sched_ms"):
+            np.testing.assert_array_equal(getattr(r0, f), getattr(r1, f))
+
+
+SPEC_MATRIX = LayeredDAG(width=48, density=0.3, edge_delay_ms=1.0,
+                         edge_bytes_mb=4.0, seed=2)
+DYNAMICS_MATRIX = (
+    ("none", None),
+    ("outage", Dynamics(outages=((0, 500.0, 3000.0), (5, 1000.0, 4000.0)))),
+    ("churn", Dynamics(joins=((2, 2000.0),), leaves=((7, 3000.0),))),
+)
+
+
+class TestDagParityMatrix:
+    """Satellite 2: seq-vs-batched bit-exactness on DAG workloads for all
+    five policies × {none, outage, churn} dynamics."""
+
+    @pytest.mark.parametrize("policy", POLICIES)
+    @pytest.mark.parametrize("dyn_name,dyn",
+                             DYNAMICS_MATRIX, ids=[d[0] for d in
+                                                   DYNAMICS_MATRIX])
+    def test_seq_vs_batched(self, wl240, tb, policy, dyn_name, dyn):
+        cfg = EngineConfig(policy=policy, b=16)
+        rs = simulate(wl240, tb, cfg, 0, mode="sequential", dag=SPEC_MATRIX,
+                      dynamics=dyn)
+        rb = simulate(wl240, tb, cfg, 0, mode="batched", use_kernel=False,
+                      dag=SPEC_MATRIX, dynamics=dyn)
+        for f in ("server", "submit_ms", "start_ms", "finish_ms",
+                  "sched_ms", "cores", "mem_mb"):
+            np.testing.assert_array_equal(getattr(rs, f), getattr(rb, f),
+                                          err_msg=f"{policy}/{dyn_name}/{f}")
+
+
+class TestLocality:
+    """The γ pins: γ=0 bit-identical to no LocalityModel on the two-stage
+    path AND both fused megakernel variants; γ>0 stays seq-vs-batched
+    exact and actually moves placements toward parents."""
+
+    SPEC = FanOutDAG(width=6, edge_delay_ms=1.0, edge_bytes_mb=16.0)
+
+    def test_gamma_zero_two_stage_bit_identical(self, wl240, tb):
+        cfg = EngineConfig(policy="dodoor", b=16)
+        r0 = simulate(wl240, tb, cfg, 0, mode="batched", use_kernel=False,
+                      dag=self.SPEC)
+        r1 = simulate(wl240, tb, cfg._replace(locality=LocalityModel(
+            gamma=0.0)), 0, mode="batched", use_kernel=False, dag=self.SPEC)
+        for f in ("server", "submit_ms", "start_ms", "finish_ms"):
+            np.testing.assert_array_equal(getattr(r0, f), getattr(r1, f))
+
+    @pytest.mark.parametrize("dyn", (None, DYNAMICS_MATRIX[1][1]),
+                             ids=("unmasked", "masked"))
+    def test_gamma_zero_kernel_bit_identical(self, wl240, tb, dyn):
+        """γ=0 through the fused sparse megakernel (interpret mode) — both
+        the unmasked and the masked-sampling variant — reproduces the
+        no-LocalityModel kernel run bitwise."""
+        cfg = EngineConfig(policy="dodoor", b=16, interpret=True)
+        r0 = simulate(wl240, tb, cfg, 0, mode="batched", use_kernel=True,
+                      dag=self.SPEC, dynamics=dyn)
+        r1 = simulate(wl240, tb, cfg._replace(locality=LocalityModel(
+            gamma=0.0)), 0, mode="batched", use_kernel=True, dag=self.SPEC,
+            dynamics=dyn)
+        for f in ("server", "submit_ms", "start_ms", "finish_ms"):
+            np.testing.assert_array_equal(getattr(r0, f), getattr(r1, f))
+
+    def test_gamma_positive_parity_and_effect(self, wl240, tb):
+        cfg = EngineConfig(policy="dodoor", b=16,
+                           locality=LocalityModel(gamma=5.0))
+        rs = simulate(wl240, tb, cfg, 0, mode="sequential", dag=self.SPEC)
+        rb = simulate(wl240, tb, cfg, 0, mode="batched", use_kernel=False,
+                      dag=self.SPEC)
+        for f in ("server", "submit_ms", "start_ms", "finish_ms"):
+            np.testing.assert_array_equal(getattr(rs, f), getattr(rb, f))
+        base = simulate(wl240, tb, cfg._replace(locality=None), 0,
+                        mode="batched", use_kernel=False, dag=self.SPEC)
+        assert (rb.server != base.server).any()
+        plan = dag_plan(self.SPEC, 240)
+        assert (dag_stats(rb, plan)["bytes_moved_mb"]
+                <= dag_stats(base, plan)["bytes_moved_mb"])
+
+    def test_kernel_two_stage_same_placements(self, wl240, tb):
+        """γ>0 through the kernel path lands the same placements as the
+        two-stage path (the kernel bakes γ_bw statically; draws and
+        Algorithm-1 arithmetic are the pinned bit-exact pair)."""
+        cfg = EngineConfig(policy="dodoor", b=16, interpret=True,
+                           locality=LocalityModel(gamma=5.0))
+        rk = simulate(wl240, tb, cfg, 0, mode="batched", use_kernel=True,
+                      dag=self.SPEC)
+        rt = simulate(wl240, tb, cfg, 0, mode="batched", use_kernel=False,
+                      dag=self.SPEC)
+        np.testing.assert_array_equal(rk.server, rt.server)
+        np.testing.assert_array_equal(rk.finish_ms, rt.finish_ms)
+
+    def test_locality_without_dag_raises(self, wl240, tb):
+        cfg = EngineConfig(policy="dodoor",
+                           locality=LocalityModel(gamma=1.0))
+        with pytest.raises(ValueError, match="needs a dag"):
+            simulate(wl240, tb, cfg, 0)
+
+    def test_locality_validation(self, wl240, tb):
+        with pytest.raises(ValueError, match="gamma"):
+            simulate(wl240, tb, EngineConfig(
+                locality=LocalityModel(gamma=-1.0)), 0, dag=ExplicitDAG())
+        with pytest.raises(ValueError, match="bandwidth"):
+            simulate(wl240, tb, EngineConfig(locality=LocalityModel(
+                bandwidth_mb_per_ms=0.0)), 0, dag=ExplicitDAG())
+        with pytest.raises(TypeError, match="LocalityModel"):
+            simulate(wl240, tb, EngineConfig(locality=1.0), 0,
+                     dag=ExplicitDAG())
+        assert LocalityModel(gamma=3.0,
+                             bandwidth_mb_per_ms=2.0).gamma_bw == 1.5
+
+
+class TestDagMetrics:
+    def test_chain_critical_path(self, wl240, tb):
+        """On a chain the critical path is the whole realized execution:
+        Σ durations + Σ delays."""
+        spec = ChainDAG(edge_delay_ms=0.5)
+        res = simulate(wl240, tb, EngineConfig(policy="dodoor", b=16), 0,
+                       mode="sequential", dag=spec)
+        plan = dag_plan(spec, 240)
+        d = dag_stats(res, plan)
+        dur = (res.finish_ms - res.start_ms).astype(np.float64)
+        assert d["critical_path_ms"] == pytest.approx(
+            dur.sum() + 0.5 * 239, rel=1e-6)
+        assert d["frontier_width_max"] == 1
+        assert d["num_levels"] == 240
+
+    def test_bytes_accounting(self, tb, wl240):
+        """bytes_moved counts exactly the edges whose endpoints landed on
+        different servers."""
+        spec = ExplicitDAG(edges=((0, 1, 0.0, 10.0), (1, 2, 0.0, 6.0)))
+        res = simulate(wl240, tb, EngineConfig(policy="dodoor", b=16), 0,
+                       mode="sequential", dag=spec)
+        plan = dag_plan(spec, 240)
+        d = dag_stats(res, plan)
+        expect = (10.0 * (res.server[1] != res.server[0])
+                  + 6.0 * (res.server[2] != res.server[1]))
+        assert d["bytes_moved_mb"] == pytest.approx(float(expect))
+        assert d["bytes_total_mb"] == pytest.approx(16.0)
+        assert d["locality_frac"] == pytest.approx(1.0 - expect / 16.0)
+
+    def test_summarize_dag_merges(self, wl240, tb):
+        spec = FanOutDAG(width=6, edge_bytes_mb=1.0)
+        res = simulate(wl240, tb, EngineConfig(policy="dodoor", b=16), 0,
+                       mode="sequential", dag=spec)
+        s = summarize_dag(res, dag_plan(spec, 240))
+        assert "critical_path_ms" in s and "makespan_mean_ms" in s
+        assert s["num_tasks"] == 240
+
+    def test_plan_result_mismatch_raises(self, wl240, tb):
+        res = simulate(wl240, tb, EngineConfig(policy="dodoor", b=16), 0)
+        with pytest.raises(ValueError, match="plan built for"):
+            dag_stats(res, dag_plan(ChainDAG(), 100))
+
+
+class TestDagStudy:
+    """The study's DAG axis: per-point parity, effective-submit planes,
+    and the composition restrictions."""
+
+    SPEC = FanOutDAG(width=6, edge_delay_ms=1.0, edge_bytes_mb=8.0)
+
+    def test_dag_axis_matches_per_run(self, wl240, tb):
+        cfg = EngineConfig(policy="dodoor", b=16)
+        cfg_loc = cfg._replace(locality=LocalityModel(gamma=2.0))
+        sc = Scenario(name="dag", dag=self.SPEC)
+        stv = run_study(wl240, tb, Study(seeds=(0, 1),
+                                         configs=(cfg, cfg_loc),
+                                         scenarios=(sc,)))
+        assert stv.submit_ms.shape == (2, 2, 1, 240)
+        for si, sd in enumerate((0, 1)):
+            for gi, c in enumerate((cfg, cfg_loc)):
+                r = run_scenario(wl240, tb, sc, c, sd, mode="batched",
+                                 use_kernel=False)
+                p = stv.point(si, gi, 0)
+                np.testing.assert_array_equal(p.server, r.server)
+                np.testing.assert_array_equal(p.submit_ms, r.submit_ms)
+                np.testing.assert_array_equal(p.finish_ms, r.finish_ms)
+
+    def test_dag_with_server_shards_raises(self, wl240, tb):
+        with pytest.raises(NotImplementedError, match="frontier loop"):
+            run_study(wl240, tb,
+                      Study(scenarios=(Scenario(dag=self.SPEC),)),
+                      server_shards=2)
+
+    def test_dag_with_retry_raises(self, wl240, tb):
+        cfg = EngineConfig(retry=RetryPolicy())
+        with pytest.raises(NotImplementedError, match="wave loop"):
+            run_study(wl240, tb,
+                      Study(configs=(cfg,),
+                            scenarios=(Scenario(dag=self.SPEC),)))
+        with pytest.raises(NotImplementedError, match="wave loop"):
+            simulate(wl240, tb, cfg, 0, dag=self.SPEC)
+
+    def test_locality_without_dag_scenario_raises(self, wl240, tb):
+        cfg = EngineConfig(locality=LocalityModel())
+        with pytest.raises(ValueError, match="no scenario has a\n?\\s*dag"):
+            run_study(wl240, tb, Study(configs=(cfg,)))
+
+
+class TestRetryShardsStudy:
+    """Satellite 3 regression: PR 7 raised NotImplementedError on
+    retry × server_shards; the study now runs that combination per point
+    via ``simulate_hierarchical`` (the sharded planner's own bit-identity
+    oracle), DAG-free."""
+
+    def test_matches_hierarchical_oracle(self, wl240, tb):
+        cfg = EngineConfig(policy="dodoor", b=16, retry=RetryPolicy())
+        dyn = Dynamics(outages=((0, 100.0, 2000.0), (3, 500.0, 2500.0)))
+        stv = run_study(wl240, tb,
+                        Study(seeds=(0, 1), configs=(cfg,),
+                              scenarios=(Scenario(name="out",
+                                                  dynamics=dyn),)),
+                        server_shards=2)
+        assert stv.attempts is not None
+        for si, sd in enumerate((0, 1)):
+            ref = simulate_hierarchical(wl240, tb, cfg, 2, sd,
+                                        mode="batched", b=cfg.b,
+                                        dynamics=dyn, use_kernel=False)
+            p = stv.point(si, 0, 0)
+            np.testing.assert_array_equal(p.server, ref.server)
+            np.testing.assert_array_equal(p.finish_ms, ref.finish_ms)
+            np.testing.assert_array_equal(p.attempts, ref.attempts)
+            np.testing.assert_array_equal(p.failed, ref.failed)
+            np.testing.assert_array_equal(p.wasted_ms, ref.wasted_ms)
+
+
+class TestMixedFaultednessContract:
+    """Satellite 4: the exact ValueError a mixed cache-faultedness grid
+    must raise (the CacheFaults spec is program-shaping on the scenario
+    axis — see docs/SCENARIOS.md)."""
+
+    def test_exact_error(self, wl240, tb):
+        scs = (Scenario(name="clean"),
+               Scenario(name="faulty",
+                        dynamics=Dynamics(cache_faults=CacheFaults(
+                            loss_rate=0.2))))
+        with pytest.raises(ValueError) as ei:
+            run_study(wl240, tb, Study(scenarios=scs))
+        msg = str(ei.value)
+        assert "cache-faultedness" in msg
+        assert "program-shaping" in msg
+        assert "loss_rate=0.0 is inert" in msg
+
+    def test_all_faulted_allowed(self, wl240, tb):
+        scs = (Scenario(name="a", dynamics=Dynamics(
+                   cache_faults=CacheFaults(loss_rate=0.0))),
+               Scenario(name="b", dynamics=Dynamics(
+                   cache_faults=CacheFaults(loss_rate=0.3))))
+        stv = run_study(wl240, tb, Study(scenarios=scs))
+        assert stv.server.shape == (1, 1, 2, 240)

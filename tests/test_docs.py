@@ -11,7 +11,7 @@ REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 def test_required_docs_exist():
     for f in ("README.md", "docs/ARCHITECTURE.md", "docs/STUDIES.md",
               "docs/SWEEPS.md", "docs/SCENARIOS.md", "docs/SCALING.md",
-              "ROADMAP.md", "CHANGES.md"):
+              "docs/DAGS.md", "ROADMAP.md", "CHANGES.md"):
         assert os.path.exists(os.path.join(REPO, f)), f
 
 
@@ -72,6 +72,26 @@ def test_studies_doc_api_matches_code():
     assert "avail" in inspect.signature(dodoor_fused).parameters
 
 
+def test_dags_doc_api_matches_code():
+    """Every symbol DAGS.md leans on actually exists, and the engine takes
+    the documented ``dag=`` keyword."""
+    from repro import sim, workloads
+    text = open(os.path.join(REPO, "docs", "DAGS.md"),
+                encoding="utf-8").read()
+    for name in ("dag_plan", "ChainDAG", "FanOutDAG", "MapReduceDAG",
+                 "LayeredDAG", "ExplicitDAG"):
+        assert name in text, name
+        assert hasattr(workloads, name), name
+    for name in ("LocalityModel", "summarize_dag", "dag_stats"):
+        assert name in text, name
+        assert hasattr(sim, name), name
+    import inspect
+    assert "dag" in inspect.signature(sim.simulate).parameters
+    params = inspect.signature(sim.LocalityModel).parameters
+    for kw in ("gamma", "bandwidth_mb_per_ms"):
+        assert kw in params, kw
+
+
 def test_engine_docstring_matches_shipped_drivers():
     """Doc-drift guard: the engine module docstring describes the shipped
     batched drivers (speculative PoT, segment-scan Prequal, unified
@@ -95,7 +115,8 @@ def test_bench_schema_docs_match_written_files():
             ("BENCH_scale.json", ("sweep_vs_loop", "scale_points",
                                   "meanfield_points")),
             ("BENCH_faults.json", ("gate_point", "fault_points",
-                                   "message_reduction"))):
+                                   "message_reduction")),
+            ("BENCH_dags.json", ("gate_point", "dag_points"))):
         assert fname in arch
         path = os.path.join(REPO, fname)
         if os.path.exists(path):

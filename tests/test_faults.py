@@ -362,12 +362,17 @@ class TestStudyIntegration:
                            Scenario("b", dynamics=Dynamics(
                                cache_faults=CacheFaults(loss_rate=0.5))))))
 
-    def test_study_retry_rejects_server_shards(self, small_testbed, fb_small):
-        with pytest.raises(NotImplementedError):
-            run_study(fb_small, small_testbed, Study(
-                seeds=(0,),
-                configs=(EngineConfig(policy="dodoor", b=10, retry=RETRY),)),
-                server_shards=2)
+    def test_study_retry_composes_with_server_shards(self, small_testbed,
+                                                     fb_small):
+        """Retry configs now ride the sharded planner (per-point via the
+        hierarchical oracle) instead of raising — the deep parity pin
+        lives in tests/test_dags.py::TestRetryShardsStudy."""
+        st = run_study(fb_small, small_testbed, Study(
+            seeds=(0,),
+            configs=(EngineConfig(policy="dodoor", b=10, retry=RETRY),)),
+            server_shards=2)
+        assert st.attempts is not None
+        assert st.attempts.shape == (1, 1, 1, fb_small.r_submit.shape[0])
 
     def test_simulate_many_carries_recovery_planes(self, small_testbed, fb_small):
         cfg = EngineConfig(policy="dodoor", b=10, retry=RETRY)

@@ -344,6 +344,115 @@ class TestDodoorFusedSparseMegakernel:
         assert (np.asarray(cand) >= 0).all() and (np.asarray(cand) < N).all()
 
 
+class TestDodoorFusedSparseLocality:
+    """The locality gather (ISSUE 8): ``psrv``/``pbytes`` per-task parent
+    planes stream into the sparse megakernel and each candidate's score is
+    charged ``gamma_bw`` per MB of parent output on a *different* server.
+    ``gamma_bw = 0`` must be bit-identical to running without the planes
+    (the frontier loop's pinned contract), and γ > 0 must match the jnp
+    oracle, which applies the same penalty in the same reduction order."""
+
+    def _inputs(self, T, N, P=3, TT=4, seed=0):
+        rng = np.random.RandomState(seed)
+        base = jax.random.PRNGKey(seed)
+        keys = jax.vmap(lambda i: jax.random.fold_in(base, i))(jnp.arange(T))
+        r = jnp.asarray(rng.rand(T, 2).astype(np.float32) * 8)
+        d_types = jnp.asarray(rng.rand(T, TT).astype(np.float32) * 1000)
+        node_type = jnp.asarray(rng.randint(0, TT, N), jnp.int32)
+        L = jnp.asarray(rng.rand(N, 2).astype(np.float32) * 50)
+        D = jnp.asarray(rng.rand(N).astype(np.float32) * 5000)
+        C = jnp.asarray(8.0 + rng.rand(N, 2).astype(np.float32) * 100)
+        avail = jnp.asarray(rng.rand(T, N) > 0.4)
+        # Parent planes with −1 padding holes, like a real DagPlan wave.
+        psrv = rng.randint(-1, N, size=(T, P)).astype(np.int32)
+        pbytes = np.where(psrv >= 0,
+                          rng.rand(T, P) * 64.0, 0.0).astype(np.float32)
+        return (keys, r, d_types, node_type, L, D, C, avail,
+                jnp.asarray(psrv), jnp.asarray(pbytes))
+
+    @pytest.mark.parametrize("masked", (False, True))
+    def test_gamma_zero_bitwise_inert(self, masked):
+        """γ = 0 with the locality planes present reproduces the
+        plane-free program bitwise — choice, candidates, AND scores —
+        for both the unmasked and masked-sampling variants."""
+        T, N = 137, 40
+        keys, r, dt, nt, L, D, C, avail, psrv, pbytes = self._inputs(
+            T, N, seed=11)
+        av = avail if masked else None
+        c0, k0, s0 = dodoor_fused_sparse(keys, r, dt, nt, L, D, C, 0.5,
+                                         avail=av, block_t=64)
+        c1, k1, s1 = dodoor_fused_sparse(keys, r, dt, nt, L, D, C, 0.5,
+                                         avail=av, psrv=psrv, pbytes=pbytes,
+                                         gamma_bw=0.0, block_t=64)
+        assert (np.asarray(k0) == np.asarray(k1)).all()
+        assert (np.asarray(c0) == np.asarray(c1)).all()
+        np.testing.assert_array_equal(np.asarray(s0), np.asarray(s1))
+
+    @pytest.mark.parametrize("T,N,gamma", [(64, 33, 0.25), (300, 100, 2.0),
+                                           (137, 40, 0.5)])
+    def test_matches_ref_with_penalty(self, T, N, gamma):
+        """γ > 0: candidates/choice bit-exact vs the jnp oracle carrying
+        the same penalty; scores to the 1-ulp FMA caveat."""
+        keys, r, dt, nt, L, D, C, _, psrv, pbytes = self._inputs(
+            T, N, seed=T)
+        choice, cand, scores = dodoor_fused_sparse(
+            keys, r, dt, nt, L, D, C, 0.5, psrv=psrv, pbytes=pbytes,
+            gamma_bw=gamma, block_t=64)
+        rchoice, rcand, rscores = dodoor_fused_sparse_ref(
+            keys, r, dt, nt, L, D, C, 0.5, psrv=psrv, pbytes=pbytes,
+            gamma_bw=gamma)
+        assert (np.asarray(cand) == np.asarray(rcand)).all()
+        assert (np.asarray(choice) == np.asarray(rchoice)).all()
+        np.testing.assert_allclose(np.asarray(scores), np.asarray(rscores),
+                                   rtol=2e-5, atol=1e-4)
+
+    def test_masked_variant_with_penalty(self):
+        """Penalty and masked sampling compose: draws from the intersected
+        mask, scores carrying the γ charge, all pinned to the oracle."""
+        T, N = 96, 30
+        keys, r, dt, nt, L, D, C, avail, psrv, pbytes = self._inputs(
+            T, N, seed=5)
+        choice, cand, scores = dodoor_fused_sparse(
+            keys, r, dt, nt, L, D, C, 0.5, avail=avail, psrv=psrv,
+            pbytes=pbytes, gamma_bw=1.5, block_t=32)
+        rchoice, rcand, rscores = dodoor_fused_sparse_ref(
+            keys, r, dt, nt, L, D, C, 0.5, avail=avail, psrv=psrv,
+            pbytes=pbytes, gamma_bw=1.5)
+        assert (np.asarray(cand) == np.asarray(rcand)).all()
+        assert (np.asarray(choice) == np.asarray(rchoice)).all()
+        np.testing.assert_allclose(np.asarray(scores), np.asarray(rscores),
+                                   rtol=2e-5, atol=1e-4)
+
+    def test_manual_penalty(self):
+        """One hand-checked row: the penalty is exactly γ_bw · Σ bytes of
+        parents on a different server than the candidate."""
+        T, N = 8, 12
+        keys, r, dt, nt, L, D, C, _, _, _ = self._inputs(T, N, seed=3)
+        _, cand, s_plain = dodoor_fused_sparse(keys, r, dt, nt, L, D, C,
+                                               0.5, block_t=8)
+        cand = np.asarray(cand)
+        # Parent 0 sits on candidate A's server (local for A, remote for
+        # B); parent 1 is a padding hole (−1, zero bytes).
+        psrv = np.stack([cand[:, 0], np.full(T, -1)], axis=1).astype(np.int32)
+        pbytes = np.stack([np.full(T, 10.0), np.zeros(T)],
+                          axis=1).astype(np.float32)
+        gamma = 0.75
+        _, _, s_loc = dodoor_fused_sparse(
+            keys, r, dt, nt, L, D, C, 0.5, psrv=jnp.asarray(psrv),
+            pbytes=jnp.asarray(pbytes), gamma_bw=gamma, block_t=8)
+        s_plain, s_loc = np.asarray(s_plain), np.asarray(s_loc)
+        remote_b = (cand[:, 1] != cand[:, 0]).astype(np.float32)
+        np.testing.assert_allclose(s_loc[:, 0], s_plain[:, 0], rtol=1e-6)
+        np.testing.assert_allclose(
+            s_loc[:, 1], s_plain[:, 1] + gamma * 10.0 * remote_b, rtol=1e-5)
+
+    def test_psrv_without_pbytes_raises(self):
+        T, N = 8, 12
+        keys, r, dt, nt, L, D, C, _, psrv, _ = self._inputs(T, N, seed=4)
+        with pytest.raises(ValueError, match="together"):
+            dodoor_fused_sparse(keys, r, dt, nt, L, D, C, 0.5, psrv=psrv)
+
+
 class TestDodoorChoiceEnginePath:
     """The kernel as the batched engine consumes it (ISSUE 1 satellite):
     Algorithm-1 tie-breaking, the padded tail of a partial decision block,

@@ -25,6 +25,16 @@ healthy-path numbers hold.
     python tools/check_perf_regression.py BENCH_faults.json --faults
         [--baseline benchmarks/baselines/BENCH_faults_smoke.json]
 
+``--dags`` gates the task-graph wave loop in ``BENCH_dags.json``: at the
+artifact's ``gate_point`` (fan-out × γ=0), decisions/s through the
+frontier loop must stay within ``--tolerance`` of the committed
+``BENCH_dags_smoke.json`` baseline, and bytes moved across servers must
+not grow more than 10% — a placement change that silently forfeits
+locality is a regression even when it is not slower.
+
+    python tools/check_perf_regression.py BENCH_dags.json --dags
+        [--baseline benchmarks/baselines/BENCH_dags_smoke.json]
+
 Largest/gate point: smoke and baseline must agree on its identity, so
 shrinking the smoke grid without refreshing the baseline is itself an
 error.  Faster-than-baseline never fails; refresh the baseline (copy the
@@ -52,17 +62,17 @@ def point_id(p: dict) -> tuple:
     return (p["n"], p["m"], p["b"], p.get("server_shards") or 1)
 
 
-def gate_point(doc: dict) -> dict:
-    """The fault artifact's self-declared gate cell (densest outage ×
-    default retry × no cache loss)."""
+def gate_point(doc: dict, points_key: str = "fault_points") -> dict:
+    """An artifact's self-declared gate cell (``gate_point`` id looked up
+    in its points list)."""
     gid = doc.get("gate_point")
-    pts = doc.get("fault_points") or []
+    pts = doc.get(points_key) or []
     if not gid or not pts:
-        raise SystemExit("no gate_point/fault_points in faults artifact")
+        raise SystemExit(f"no gate_point/{points_key} in artifact")
     for p in pts:
         if p.get("id") == gid:
             return p
-    raise SystemExit(f"gate point {gid!r} missing from fault_points")
+    raise SystemExit(f"gate point {gid!r} missing from {points_key}")
 
 
 def check_scale(args) -> int:
@@ -107,6 +117,37 @@ def check_faults(args) -> int:
     return 0 if verdict == "ok" else 1
 
 
+def check_dags(args) -> int:
+    cur_doc = json.load(open(args.current))
+    base_doc = json.load(open(args.baseline))
+    cur = gate_point(cur_doc, "dag_points")
+    base = gate_point(base_doc, "dag_points")
+    if cur["id"] != base["id"]:
+        print(f"FAIL: dag gate point changed — current {cur['id']!r} vs "
+              f"baseline {base['id']!r}; refresh "
+              f"{os.path.relpath(args.baseline, REPO)} alongside the grid")
+        return 1
+    if base["decisions_per_s"] <= 0:
+        print(f"FAIL: baseline decisions/s at {base['id']!r} is "
+              f"{base['decisions_per_s']} — gate has no floor; regenerate "
+              f"the baseline")
+        return 1
+    ratio = cur["decisions_per_s"] / base["decisions_per_s"]
+    speed_ok = ratio >= 1.0 - args.tolerance
+    # Bytes moved may only grow 10%: a placement drift that forfeits
+    # locality is a regression independent of wall-clock.
+    bytes_ok = (base["bytes_moved_mb"] <= 0
+                or cur["bytes_moved_mb"] <= base["bytes_moved_mb"] * 1.10)
+    verdict = "ok" if speed_ok and bytes_ok else "FAIL"
+    print(f"{verdict}: dag gate {cur['id']}: "
+          f"{cur['decisions_per_s']} vs baseline "
+          f"{base['decisions_per_s']} decisions/s "
+          f"({ratio:.2f}x, floor {1.0 - args.tolerance:.2f}x); "
+          f"bytes moved {cur['bytes_moved_mb']} MB "
+          f"(baseline {base['bytes_moved_mb']}, ceiling 1.10x)")
+    return 0 if verdict == "ok" else 1
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("current", nargs="?", default="BENCH_scale.json",
@@ -118,11 +159,19 @@ def main(argv=None) -> int:
     ap.add_argument("--faults", action="store_true",
                     help="gate goodput in a BENCH_faults.json artifact "
                          "instead of scale-sweep decisions/s")
+    ap.add_argument("--dags", action="store_true",
+                    help="gate wave-loop decisions/s + bytes moved in a "
+                         "BENCH_dags.json artifact")
     args = ap.parse_args(argv)
+    if args.faults and args.dags:
+        raise SystemExit("--faults and --dags are mutually exclusive")
     if args.baseline is None:
         name = ("BENCH_faults_smoke.json" if args.faults
+                else "BENCH_dags_smoke.json" if args.dags
                 else "BENCH_scale_smoke.json")
         args.baseline = os.path.join(REPO, "benchmarks", "baselines", name)
+    if args.dags:
+        return check_dags(args)
     return check_faults(args) if args.faults else check_scale(args)
 
 
