@@ -1,0 +1,206 @@
+"""Observability benchmark — the cost of decision tracing and the §3.2
+staleness picture, persisted to ``BENCH_obs.json``.
+
+Three sections:
+
+* **trace overhead** — the batched dodoor driver timed with
+  ``EngineConfig(trace=False)`` vs ``trace=True`` (same workload, same
+  seed; order-alternating interleaved pairs after a compile warm-up,
+  gated on the lower quartile of the paired ratios — see
+  :func:`_time_pair` for why).  The scan only records the cached-view
+  reads; ground truth is rebuilt in the ``repro.sim.decision_trace``
+  post-pass, so the ratio — the *whole* price of always-on
+  observability — measures ~1.0–1.1×; the gate
+  (``tools/check_perf_regression.py --obs``) holds it under an absolute
+  1.15× ceiling.
+* **staleness grid** — cache-snapshot age, view error, and misplacement
+  rate over batch size ``b`` × score exponent α (the §3.2 tradeoff:
+  bigger decision batches amortize messages but age the cached view and
+  misroute more tasks).  Each b is its own compiled program (b is
+  program-shaping); the α axis rides the study planner's config axis.
+* **message ledger** — per-policy ``msgs_base/probe/push/flush`` per
+  task, decomposing the paper's 55–66% RPC-reduction claim into probe
+  traffic avoided vs push/flush traffic added.
+
+``--trace-out`` additionally writes one Perfetto-loadable Chrome trace
+of the gate point's traced run (CI uploads it as an artifact).
+
+    PYTHONPATH=src python -m benchmarks.bench_obs [--smoke]
+        [--json PATH] [--trace-out PATH]
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+from benchmarks.common import write_bench_json
+from repro.obs import decision_stats
+from repro.obs.trace import to_chrome_trace
+from repro.sim import (EngineConfig, make_testbed, simulate, simulate_many,
+                       summarize)
+from repro.workloads import functionbench as fb
+
+
+def _time_pair(wl, cluster, cfg_plain, cfg_trace, *, repeats: int):
+    """Time the plain and traced batched runs as interleaved pairs with
+    **alternating order** (plain→trace, trace→plain, …; first calls
+    compile and are discarded) and return ``(median plain s, median
+    trace s, p25 of the paired per-repeat ratios)``.
+
+    The gated statistic is the *lower quartile* of the paired ratios.
+    This is a ceiling gate on a shared CI runner, and contention is
+    one-sided: a preemption or sustained-load window lands in one half
+    of a pair and inflates (or deflates) that pair's ratio by ±15%,
+    which no symmetric estimator survives — the median of 30 pairs was
+    measured swinging 1.07→1.20 across back-to-back trials of identical
+    code.  The lower quartile tracks the contention-free pairs (measured
+    0.97–1.06 across the same trials) while still catching the failure
+    mode the gate exists for: reading ground-truth rings *inside* the
+    scan costs 1.5–2× and shifts every pair, p25 included.  Alternating
+    the in-pair order cancels drift bias (cache/frequency state trending
+    across the loop)."""
+    simulate(wl, cluster, cfg_plain, seed=0, mode="batched")
+    simulate(wl, cluster, cfg_trace, seed=0, mode="batched")
+
+    def _one(cfg):
+        t0 = time.perf_counter()
+        simulate(wl, cluster, cfg, seed=0, mode="batched")
+        return time.perf_counter() - t0
+
+    tp, tt = [], []
+    for k in range(repeats):
+        if k % 2 == 0:
+            tp.append(_one(cfg_plain))
+            tt.append(_one(cfg_trace))
+        else:
+            tt.append(_one(cfg_trace))
+            tp.append(_one(cfg_plain))
+    tp, tt = np.asarray(tp), np.asarray(tt)
+    return (float(np.median(tp)), float(np.median(tt)),
+            float(np.percentile(tt / tp, 25.0)))
+
+
+def point_id(n: int, m: int, b: int) -> str:
+    return f"dodoor/trace-overhead/n{n}/m{m}/b{b}"
+
+
+def main(m: int = 3000, qps: float = 60.0, scale: float = 1.0,
+         repeats: int = 30, json_path: str | None = "BENCH_obs.json",
+         trace_out: str | None = None, smoke: bool = False):
+    # The overhead gate point keeps the full-size shape even under
+    # --smoke: at tiny m the ~10 ms run is dominated by per-block fixed
+    # costs and the ratio is dispatch noise, not trace cost.  Only the
+    # staleness grid and seed axis shrink in smoke mode.
+    cluster = make_testbed(scale=scale)
+    n = cluster.num_servers
+    wl = fb.synthesize(m=m, qps=qps, seed=0)
+    b0 = max(1, n // 2)
+
+    # -- trace overhead ---------------------------------------------------
+    cfg_plain = EngineConfig(policy="dodoor", b=b0)
+    cfg_trace = cfg_plain._replace(trace=True)
+    t_plain, t_trace, ratio = _time_pair(wl, cluster, cfg_plain, cfg_trace,
+                                         repeats=repeats)
+    res = simulate(wl, cluster, cfg_trace, seed=0, mode="batched")
+    stats = decision_stats(res)
+    overhead = dict(
+        id=point_id(n, m, b0), n=n, m=m, b=b0, policy="dodoor",
+        t_plain_ms=round(t_plain * 1e3, 3),
+        t_trace_ms=round(t_trace * 1e3, 3),
+        overhead_ratio=round(ratio, 4),
+        decisions_per_s=round(m / t_trace, 1),
+        **{k: round(float(v), 4) for k, v in stats.items()})
+    print("bench,point,t_plain_ms,t_trace_ms,overhead_ratio,"
+          "staleness_mean_ms,misplacement_rate")
+    print(f"obs,{overhead['id']},{overhead['t_plain_ms']},"
+          f"{overhead['t_trace_ms']},{overhead['overhead_ratio']},"
+          f"{overhead['staleness_mean_ms']},"
+          f"{overhead['misplacement_rate']}", flush=True)
+
+    if trace_out:
+        to_chrome_trace(res, cluster, trace_out)
+        print(f"# wrote perfetto trace {trace_out}")
+
+    # -- staleness vs b × α grid (§3.2) -----------------------------------
+    if smoke:
+        cluster = make_testbed(scale=0.2)
+        n_g = cluster.num_servers
+        wl = fb.synthesize(m=600, qps=30.0, seed=0)
+        m = 600
+        b0 = max(1, n_g // 2)
+    else:
+        n_g = n
+    bs = (max(1, n_g // 4), b0, n_g) if not smoke else (max(1, n_g // 4), b0)
+    alphas = (0.5, 1.0, 2.0) if not smoke else (0.5, 1.0)
+    seeds = (0,) if smoke else (0, 1)
+    grid = []
+    print("bench,b,alpha,staleness_mean_ms,staleness_p99_ms,view_err_mean,"
+          "misplacement_rate,msgs_per_task,makespan_mean_ms")
+    for b in bs:
+        cfgs = tuple(EngineConfig(policy="dodoor", b=b, trace=True,
+                                  alpha=a) for a in alphas)
+        sw = simulate_many(wl, cluster, cfgs, seeds=seeds)
+        for gi, a in enumerate(alphas):
+            st = [decision_stats(sw.point(si, gi))
+                  for si in range(len(seeds))]
+            s = [summarize(sw.point(si, gi)) for si in range(len(seeds))]
+            row = dict(
+                b=b, alpha=a,
+                staleness_mean_ms=round(float(np.mean(
+                    [x["staleness_mean_ms"] for x in st])), 3),
+                staleness_p99_ms=round(float(np.mean(
+                    [x["staleness_p99_ms"] for x in st])), 3),
+                view_err_mean=round(float(np.mean(
+                    [x["view_err_mean"] for x in st])), 4),
+                misplacement_rate=round(float(np.mean(
+                    [x["misplacement_rate"] for x in st])), 4),
+                msgs_per_task=round(float(np.mean(
+                    [x.msgs_per_task for x in s])), 3),
+                makespan_mean_ms=round(float(np.mean(
+                    [x.makespan_mean_ms for x in s])), 1))
+            grid.append(row)
+            print(f"obs,{b},{a},{row['staleness_mean_ms']},"
+                  f"{row['staleness_p99_ms']},{row['view_err_mean']},"
+                  f"{row['misplacement_rate']},{row['msgs_per_task']},"
+                  f"{row['makespan_mean_ms']}", flush=True)
+
+    # -- per-policy message ledger ----------------------------------------
+    ledger = {}
+    for policy in ("random", "pot", "prequal", "dodoor"):
+        r = simulate(wl, cluster, EngineConfig(policy=policy, b=b0),
+                     seed=0, mode="batched")
+        total = (r.msgs_base + r.msgs_probe + r.msgs_push + r.msgs_flush)
+        ledger[policy] = dict(
+            msgs_base=int(r.msgs_base), msgs_probe=int(r.msgs_probe),
+            msgs_push=int(r.msgs_push), msgs_flush=int(r.msgs_flush),
+            msgs_total=int(total),
+            msgs_per_task=round(total / m, 3))
+    print(f"# message ledger: "
+          f"{ {p: v['msgs_per_task'] for p, v in ledger.items()} }")
+
+    if json_path:
+        payload = dict(
+            smoke=smoke, n=overhead["n"], m=overhead["m"], qps=qps,
+            gate_point=overhead["id"],
+            obs_points=[overhead],
+            staleness_grid=grid,
+            message_ledger=ledger,
+        )
+        write_bench_json(json_path, payload, bench="obs")
+    return overhead
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized: m=600, 20-node fleet, 1 seed")
+    ap.add_argument("--json", default="BENCH_obs.json",
+                    help="results file ('' disables)")
+    ap.add_argument("--trace-out", default="",
+                    help="also write a Perfetto-loadable Chrome trace of "
+                         "the gate point's traced run ('' disables)")
+    args = ap.parse_args()
+    main(smoke=args.smoke, json_path=args.json or None,
+         trace_out=args.trace_out or None)

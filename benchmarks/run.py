@@ -48,13 +48,16 @@ def main():
                     help="failure/recovery results file ('' disables)")
     ap.add_argument("--json-dags", default="BENCH_dags.json",
                     help="task-graph results file ('' disables)")
+    ap.add_argument("--json-obs", default="BENCH_obs.json",
+                    help="observability results file ('' disables)")
     args = ap.parse_args()
     q = args.quick
 
     from . import (bench_azure, bench_dags, bench_faults,
                    bench_functionbench, bench_gap, bench_kernels,
-                   bench_reliability, bench_roofline, bench_router,
-                   bench_scenarios, bench_sensitivity, bench_study)
+                   bench_obs, bench_reliability, bench_roofline,
+                   bench_router, bench_scenarios, bench_sensitivity,
+                   bench_study)
 
     sections = [
         ("Fig 3/4/5 — Azure VM placement (§6.2)",
@@ -91,6 +94,9 @@ def main():
         ("Task graphs — frontier loop × locality weight",
          lambda: bench_dags.main(smoke=q,
                                  json_path=args.json_dags or None)),
+        ("Observability — trace overhead, §3.2 staleness, message ledger",
+         lambda: bench_obs.main(smoke=q,
+                                json_path=args.json_obs or None)),
         ("§Roofline — fused-kernel bytes-touched model vs measurement",
          lambda: bench_roofline.main(smoke=q)),
     ]

@@ -1,0 +1,26 @@
+"""repro.obs — decision-trace observability (see docs/OBSERVABILITY.md).
+
+Three pillars:
+
+* in-engine decision telemetry (``EngineConfig.trace``): per-decision
+  cache-snapshot age, view error, misplacement, and push planes on
+  :class:`repro.sim.SimResult`;
+* :func:`repro.obs.stats.decision_stats` — numpy roll-up into staleness /
+  misplacement / scheduling-latency percentiles;
+* :func:`repro.obs.trace.to_chrome_trace` — Chrome trace-event JSON
+  (viewable in Perfetto / ``chrome://tracing``) of task lifecycles, one
+  track per server plus scheduler tracks.
+
+Everything here is numpy-only post-processing: importing ``repro.obs``
+never touches JAX, so it is safe from host-side tooling (the bench
+dashboard, CI scripts) without pulling in a device runtime.
+"""
+from .stats import TRACE_STAT_FIELDS, decision_stats, latency_stats
+from .trace import to_chrome_trace
+
+__all__ = [
+    "TRACE_STAT_FIELDS",
+    "decision_stats",
+    "latency_stats",
+    "to_chrome_trace",
+]

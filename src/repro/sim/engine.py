@@ -107,6 +107,7 @@ from ..kernels.dodoor_choice.kernel import _resolve_interpret
 from ..core.rl_score import load_score_batched
 from ..core.types import PrequalParams, SchedulerView
 from .cluster import CMAX, ClusterSpec
+from .decision_trace import finish_trace
 from .messages import RpcModel
 
 
@@ -221,6 +222,12 @@ class EngineConfig(NamedTuple):
                                            # DAG runs only; None keeps
                                            # Algorithm 1 untouched and
                                            # gamma=0 is bit-identical
+    trace: bool = False             # opt-in decision telemetry: per-decision
+                                    # cache-snapshot age, view error, and
+                                    # misplacement planes on SimResult.
+                                    # False keeps every program textually
+                                    # unchanged (the trace carry leaf is an
+                                    # absent pytree node, like retry=None)
 
 
 class _Dyn(NamedTuple):
@@ -437,6 +444,20 @@ class SimResult(NamedTuple):
     attempts: np.ndarray | None = None   # [m] int32 submissions per task
     failed: np.ndarray | None = None     # [m] bool: permanently failed
     wasted_ms: np.ndarray | None = None  # [m] killed-attempt execution ms
+    # Decision-trace telemetry — populated only by runs with cfg.trace set
+    # (None otherwise; see docs/OBSERVABILITY.md for definitions).
+    view_age_ms: np.ndarray | None = None  # [m] cache-snapshot age at the
+                                           # decision (CacheFaults-aware)
+    view_err: np.ndarray | None = None     # [m] L1 gap between the cached
+                                           # rif column and ground truth,
+                                           # averaged over the candidates
+    misplaced: np.ndarray | None = None    # [m] bool: ground truth would
+                                           # have picked a different server
+    cache_push: np.ndarray | None = None   # [m] bool: a store push fired
+                                           # at this decision's step
+    sched_id: np.ndarray | None = None     # [m] int32 deciding scheduler
+    decision_ms: np.ndarray | None = None  # [m] decision wall time (the
+                                           # attempt's submit instant)
 
     @property
     def makespan_ms(self) -> np.ndarray:
@@ -476,6 +497,10 @@ class _Carry(NamedTuple):
     pool_age: jnp.ndarray
     pool_valid: jnp.ndarray
     msgs: jnp.ndarray         # [4] int32: base, probe, push, flush
+    push_at: jnp.ndarray | None = None  # [S] content timestamp of each
+                                        # scheduler's view (cfg.trace only;
+                                        # None is an absent pytree leaf, so
+                                        # trace=False programs are unchanged)
 
 
 def _init_carry(cfg: EngineConfig, n: int, cores_per,
@@ -511,6 +536,7 @@ def _init_carry(cfg: EngineConfig, n: int, cores_per,
         pool_age=jnp.full((S, cfg.prequal.s_pool), -jnp.inf, jnp.float32),
         pool_valid=jnp.zeros((S, cfg.prequal.s_pool), bool),
         msgs=jnp.zeros((4,), jnp.int32),
+        push_at=jnp.zeros((S,), jnp.float32) if cfg.trace else None,
     )
 
 
@@ -548,48 +574,64 @@ def _apply_push(carry: _Carry, now, dyn: _Dyn, win: _Win, S: int,
     if not faulted:
         L, D, rif = _truth_all(carry, now)
         unflushed = jnp.sum(carry.pending, axis=0)     # [n, 4]
+        kw = {}
+        if carry.push_at is not None:
+            kw["push_at"] = jnp.full_like(carry.push_at, now)
         return carry._replace(
             view_L=jnp.maximum(0.0, L - unflushed[:, :2]),
             view_D=jnp.maximum(0.0, D - unflushed[:, 2]),
             view_rif=jnp.maximum(0.0, rif - unflushed[:, 3]),
-            push_end=now + dyn.push_block_ms)
+            push_end=now + dyn.push_block_ms, **kw)
     L, D, rif = _truth_all(carry, now - win.cache_delay)
     unflushed = jnp.sum(carry.pending, axis=0)
     store_L = jnp.maximum(0.0, L - unflushed[:, :2])
     store_D = jnp.maximum(0.0, D - unflushed[:, 2])
     store_rif = jnp.maximum(0.0, rif - unflushed[:, 3])
     lost = _cache_lost(win, now, push_ord, S)          # [S]
+    kw = {}
+    if carry.push_at is not None:
+        # A lost delivery keeps the scheduler's old snapshot; a delivered
+        # one carries content as of now − cache_delay (late reports age
+        # the view even when delivery succeeds).
+        kw["push_at"] = jnp.where(lost, carry.push_at,
+                                  now - win.cache_delay)
     return carry._replace(
         view_L=jnp.where(lost[:, None, None], carry.view_L, store_L[None]),
         view_D=jnp.where(lost[:, None], carry.view_D, store_D[None]),
         view_rif=jnp.where(lost[:, None], carry.view_rif, store_rif[None]),
-        push_end=now + dyn.push_block_ms)
+        push_end=now + dyn.push_block_ms, **kw)
 
 
 def _select(policy: str, key, carry: _Carry, r_sub, d_est_srv, now, sched,
             C, cfg: EngineConfig, dyn: _Dyn, win: _Win,
             faulted: bool = False, loc=None):
     """Dispatch the placement policy. Returns (server j, carry, extra_msgs,
-    extra latency ms).  ``faulted`` switches the cached-view policies onto
-    the per-scheduler view planes (cache-fault programs).  ``loc``, when
-    given, is the ``(psrv [P], pbytes [P])`` locality operand pair of a
-    DAG run: dodoor/(1+β) scores gain ``dyn.gamma_bw`` per MB of parent
-    output the candidate would pull remotely (same reduction order as
-    the batched path and the fused kernel)."""
+    extra latency ms, trace extras).  The trace extras are a
+    ``(view_age_ms, v_rif [2], cand [2], use_two)`` capture when
+    ``cfg.trace`` is set and the policy schedules off the cached view,
+    else ``None`` (probing policies have no snapshot to be stale); view
+    error and misplacement are derived post-scan by
+    :mod:`repro.sim.decision_trace`.  ``faulted`` switches
+    the cached-view policies onto the per-scheduler view planes
+    (cache-fault programs).  ``loc``, when given, is the ``(psrv [P],
+    pbytes [P])`` locality operand pair of a DAG run: dodoor/(1+β) scores
+    gain ``dyn.gamma_bw`` per MB of parent output the candidate would pull
+    remotely (same reduction order as the batched path and the fused
+    kernel)."""
     avail = _avail_rows(win, now)                       # [n] bool
     mask = feasible_mask(r_sub, C) & avail
     zero = jnp.zeros((), jnp.float32)
 
     if policy == "random":
         j = sample_feasible(key, mask, 1)[0]
-        return j, carry, 0, zero
+        return j, carry, 0, zero, None
 
     if policy == "pot":
         cand = sample_feasible(key, mask, 2)
         _, _, rif = _truth_rows(carry, cand, now)       # synchronous probes
         j = jnp.where(rif[1] < rif[0], cand[1], cand[0]).astype(jnp.int32)
         # 2 probe sends + 2 replies; probes fly in parallel → +1 RTT latency.
-        return j, carry, 4, 2.0 * dyn.hop_ms
+        return j, carry, 4, 2.0 * dyn.hop_ms, None
 
     if policy in ("dodoor", "one_plus_beta"):
         k_cand, k_beta = jax.random.split(key)
@@ -617,11 +659,23 @@ def _select(policy: str, key, carry: _Carry, r_sub, d_est_srv, now, sched,
             j = jnp.where(use_two, two, cand[0]).astype(jnp.int32)
         else:
             j = two.astype(jnp.int32)
+        tr = None
+        if cfg.trace:
+            # Capture the cached-rif reads and sampled candidates; ground
+            # truth is rebuilt post-scan (repro.sim.decision_trace), so
+            # tracing adds no per-step ring scans.  No extra RNG is
+            # consumed — placements are unchanged.
+            v_rif = (carry.view_rif[sched, cand] if faulted
+                     else carry.view_rif[cand])
+            use_two_f = (use_two.astype(jnp.float32)
+                         if policy == "one_plus_beta"
+                         else jnp.ones((), jnp.float32))
+            tr = (now - carry.push_at[sched], v_rif, cand, use_two_f)
         # Cache-update blocking: a decision landing inside the push transfer
         # window waits for it to complete (§6.2's "blocking during cache
         # updates"; amortizes to ~push_block/b per decision).
         block = jnp.maximum(0.0, carry.push_end - now)
-        return j, carry, 0, block
+        return j, carry, 0, block, tr
 
     if policy == "prequal":
         k_sel, k_rand, k_probe = jax.random.split(key, 3)
@@ -680,7 +734,7 @@ def _select(policy: str, key, carry: _Carry, r_sub, d_est_srv, now, sched,
             pool_age=carry.pool_age.at[s].set(page),
             pool_valid=carry.pool_valid.at[s].set(pv),
         )
-        return j, carry, 2 * cfg.prequal.r_probe, zero
+        return j, carry, 2 * cfg.prequal.r_probe, zero, None
 
     raise ValueError(f"unknown policy {policy!r}")
 
@@ -831,7 +885,7 @@ def _simulate_jax(xs, C, node_type, mem_unit, cores_per, dyn_vec, dyn_ints,
         r_srv = r_exec_t[node_type]                    # [n, 2]
         d_est_srv = d_est_t[node_type]                 # [n]
 
-        j, carry, extra_msgs, extra_lat = _select(
+        j, carry, extra_msgs, extra_lat, tr = _select(
             cfg.policy, key, carry, r_sub, d_est_srv, now, sched, C, cfg,
             dyn, win, faulted=cache_faulted, loc=loc)
 
@@ -889,6 +943,16 @@ def _simulate_jax(xs, C, node_type, mem_unit, cores_per, dyn_vec, dyn_ints,
         if retry:
             out = out + (killed.astype(jnp.float32),
                          rejected.astype(jnp.float32))
+        if cfg.trace:
+            if tr is not None:
+                age, v_rif, cand, use_two_f = tr
+                out = out + (age, v_rif[0], v_rif[1],
+                             cand[0].astype(jnp.float32),
+                             cand[1].astype(jnp.float32), use_two_f,
+                             do_push.astype(jnp.float32))
+            else:
+                zero = jnp.zeros((), jnp.float32)
+                out = out + (zero,) * 7
         return carry, out
 
     carry, outs = jax.lax.scan(step, carry0, xs)
@@ -1061,15 +1125,16 @@ def _commit_rounds(carry: _Carry, valid, now, j, cores, mem_mb, dur_raw,
 
         t_out = jnp.where(has, t, bsz)                          # drop pads
         if retry:
-            plane = jnp.stack([jnp.where(rejected, enqueue_t, start),
-                               jnp.where(rejected, enqueue_t, rel),
-                               enqueue_t, sched_ms, old_rel, old_dur,
-                               slot.astype(jnp.float32),
-                               killed.astype(jnp.float32),
-                               rejected.astype(jnp.float32)])
+            plane_rows = [jnp.where(rejected, enqueue_t, start),
+                          jnp.where(rejected, enqueue_t, rel),
+                          enqueue_t, sched_ms, old_rel, old_dur,
+                          slot.astype(jnp.float32),
+                          killed.astype(jnp.float32),
+                          rejected.astype(jnp.float32)]
         else:
-            plane = jnp.stack([start, finish, enqueue_t, sched_ms,
-                               old_rel, old_dur, slot.astype(jnp.float32)])
+            plane_rows = [start, finish, enqueue_t, sched_ms,
+                          old_rel, old_dur, slot.astype(jnp.float32)]
+        plane = jnp.stack(plane_rows)
         outs = outs_prev.at[:, t_out].set(plane, mode="drop")
         return (k + 1, carry, outs)
 
@@ -1114,6 +1179,7 @@ def _simulate_batched_jax(xs, C, node_type, mem_unit, cores_per, dyn_vec,
     policy = cfg.policy
     retry = cfg.retry is not None
     orows = 9 if retry else 7
+    trace = cfg.trace
     base_key = jax.random.PRNGKey(seed)
 
     if carry0 is None:
@@ -1214,6 +1280,19 @@ def _simulate_batched_jax(xs, C, node_type, mem_unit, cores_per, dyn_vec,
             else:
                 j = two.astype(jnp.int32)
             extra_lat = jnp.maximum(0.0, carry.push_end - now)
+            if trace:
+                # Capture only what the scan alone knows — the cached-rif
+                # reads and the sampled candidates.  Ground truth is
+                # rebuilt post-scan from the commit history
+                # (repro.sim.decision_trace), so tracing adds no per-step
+                # gather/reduce work.  No extra RNG is consumed —
+                # placements are unchanged.
+                v_rif = (carry.view_rif[sched[:, None], cand2]
+                         if cache_faulted else carry.view_rif[cand2])
+                age_t = now - carry.push_at[sched]          # [b]
+                use_two_t = ((u < dyn.beta).astype(jnp.float32)
+                             if policy == "one_plus_beta"
+                             else jnp.ones((bsz,), jnp.float32))
         elif policy not in ("pot", "prequal"):
             raise ValueError(f"policy {policy!r} has no batched driver")
 
@@ -1466,6 +1545,17 @@ def _simulate_batched_jax(xs, C, node_type, mem_unit, cores_per, dyn_vec,
         out = (j, o_start, o_finish, o_enq, o_sched, cores_t, mem_t)
         if retry:
             out = out + (outs[7], outs[8])
+        if trace:
+            if policy in ("dodoor", "one_plus_beta"):
+                push_p = jnp.zeros((bsz,), jnp.float32).at[-1].set(
+                    do_push.astype(jnp.float32))
+                out = out + (age_t, v_rif[:, 0], v_rif[:, 1],
+                             cand2[:, 0].astype(jnp.float32),
+                             cand2[:, 1].astype(jnp.float32),
+                             use_two_t, push_p)
+            else:
+                z = jnp.zeros((bsz,), jnp.float32)
+                out = out + (z,) * 7
         return carry, out
 
     carry, outs = jax.lax.scan(block_step, carry0, xs)
@@ -1799,6 +1889,13 @@ def _simulate_with_retries(workload, cluster: ClusterSpec, cfg: EngineConfig,
            for k in ("start", "finish", "enq", "sched", "cores", "mem")}
     attempts = np.zeros(m, np.int32)
     wasted = np.zeros(m, np.float64)
+    trace = cfg.trace
+    if trace:
+        # A retried task's record is its *final* attempt's decision.
+        tr_pl = {k: np.zeros(m, np.float32)
+                 for k in ("age", "verr", "misp", "push")}
+        sched_id = np.zeros(m, np.int32)
+        decision_ms = np.zeros(m, np.float32)
 
     idx = np.arange(m)                       # original ids, this wave
     submit_w = host["submit_ms"].astype(np.float32)
@@ -1806,6 +1903,13 @@ def _simulate_with_retries(workload, cluster: ClusterSpec, cfg: EngineConfig,
     for a in range(1, rp.max_attempts + 1):
         mw = idx.shape[0]
         task_id = (idx + (a - 1) * m).astype(np.int32)
+        # Wave-entry ring state: the trace post-pass folds the live load
+        # the earlier waves left behind into this wave's ground truth.
+        ring0 = None
+        if trace and carry is not None:
+            ring0 = tuple(np.asarray(p) for p in
+                          (carry.rb_release, carry.rb_cpu,
+                           carry.rb_mem, carry.rb_dur))
         if batched:
             nb = -(-mw // b)
             pad = nb * b - mw
@@ -1841,7 +1945,8 @@ def _simulate_with_retries(workload, cluster: ClusterSpec, cfg: EngineConfig,
                 cache_faulted=faulted, carry0=carry, return_carry=True)
             outs = [np.asarray(o) for o in outs]
 
-        j_w, start_w, fin_w, enq_w, sch_w, cor_w, mem_w, k_w, r_w = outs
+        j_w, start_w, fin_w, enq_w, sch_w, cor_w, mem_w = outs[:7]
+        k_w, r_w = outs[7], outs[8]
         killed = k_w > 0.5
         server[idx] = j_w
         for k, v in (("start", start_w), ("finish", fin_w), ("enq", enq_w),
@@ -1849,6 +1954,23 @@ def _simulate_with_retries(workload, cluster: ClusterSpec, cfg: EngineConfig,
             fin[k][idx] = v
         attempts[idx] = a
         wasted[idx[killed]] += (fin_w - start_w)[killed].astype(np.float64)
+        if trace:
+            age_w, vr0_w, vr1_w, c0_w, c1_w, u2_w, push_w = outs[9:16]
+            verr_w, misp_w = finish_trace(
+                j=j_w, finish=fin_w, cores=cor_w, mem=mem_w,
+                now=submit_w, v_rif=(vr0_w, vr1_w), cand=(c0_w, c1_w),
+                use_two=u2_w, r_sub=host["r_submit"][idx],
+                d_est=host["d_est"][idx], node_type=np.asarray(node_type),
+                C=np.asarray(C), alpha=cfg.alpha, policy=cfg.policy,
+                R=cfg.rbuf_slots, rejected=(r_w > 0.5), init_ring=ring0)
+            tr_pl["age"][idx] = age_w
+            tr_pl["verr"][idx] = verr_w
+            tr_pl["misp"][idx] = misp_w
+            tr_pl["push"][idx] = push_w
+            # Wave-local round-robin: the wave restarts cadences, so the
+            # deciding scheduler is the wave-local index mod S.
+            sched_id[idx] = np.arange(mw) % cfg.num_schedulers
+            decision_ms[idx] = submit_w
 
         fail_w = killed | (r_w > 0.5)
         if not fail_w.any():
@@ -1876,6 +1998,11 @@ def _simulate_with_retries(workload, cluster: ClusterSpec, cfg: EngineConfig,
         msgs_push=int(msgs[2]), msgs_flush=int(msgs[3]),
         policy=cfg.policy, attempts=attempts, failed=failed,
         wasted_ms=wasted.astype(np.float32),
+        **({"view_age_ms": tr_pl["age"], "view_err": tr_pl["verr"],
+            "misplaced": tr_pl["misp"] > 0.5,
+            "cache_push": tr_pl["push"] > 0.5,
+            "sched_id": sched_id, "decision_ms": decision_ms}
+           if trace else {}),
     )
 
 
@@ -1930,6 +2057,11 @@ def _simulate_dag(workload, cluster: ClusterSpec, cfg: EngineConfig,
            for k in ("start", "finish", "enq", "sched", "cores", "mem")}
     eff_submit = np.zeros(m, np.float32)
     submit0 = host["submit_ms"].astype(np.float64)
+    trace = cfg.trace
+    if trace:
+        tr_pl = {k: np.zeros(m, np.float32)
+                 for k in ("age", "verr", "misp", "push")}
+        sched_id = np.zeros(m, np.int32)
 
     carry = None
     psrv_w = pbytes_w = None
@@ -1947,6 +2079,13 @@ def _simulate_dag(workload, cluster: ClusterSpec, cfg: EngineConfig,
         submit_w = ready[order].astype(np.float32)
         mw = idx.shape[0]
         task_id = idx.astype(np.int32)
+        # Wave-entry ring state: earlier levels' still-running tasks are
+        # part of this wave's ground truth (see _simulate_with_retries).
+        ring0 = None
+        if trace and carry is not None:
+            ring0 = tuple(np.asarray(p) for p in
+                          (carry.rb_release, carry.rb_cpu,
+                           carry.rb_mem, carry.rb_dur))
         if loc_on:
             pidx = plan.parents_pad[idx]
             psrv_w = np.where(pidx >= 0, server[np.maximum(pidx, 0)],
@@ -1993,12 +2132,29 @@ def _simulate_dag(workload, cluster: ClusterSpec, cfg: EngineConfig,
                 locality=loc_on)
             outs = [np.asarray(o) for o in outs]
 
-        j_w, start_w, fin_w, enq_w, sch_w, cor_w, mem_w = outs
+        j_w, start_w, fin_w, enq_w, sch_w, cor_w, mem_w = outs[:7]
         server[idx] = j_w
         for k, v in (("start", start_w), ("finish", fin_w), ("enq", enq_w),
                      ("sched", sch_w), ("cores", cor_w), ("mem", mem_w)):
             fin[k][idx] = v
         eff_submit[idx] = submit_w
+        if trace:
+            age_w, vr0_w, vr1_w, c0_w, c1_w, u2_w, push_w = outs[7:14]
+            verr_w, misp_w = finish_trace(
+                j=j_w, finish=fin_w, cores=cor_w, mem=mem_w,
+                now=submit_w, v_rif=(vr0_w, vr1_w), cand=(c0_w, c1_w),
+                use_two=u2_w, r_sub=host["r_submit"][idx],
+                d_est=host["d_est"][idx], node_type=np.asarray(node_type),
+                C=np.asarray(C), alpha=cfg.alpha, policy=cfg.policy,
+                R=cfg.rbuf_slots,
+                gamma_bw=(cfg.locality.gamma_bw if loc_on else 0.0),
+                psrv=psrv_w if loc_on else None,
+                pbytes=pbytes_w if loc_on else None, init_ring=ring0)
+            tr_pl["age"][idx] = age_w
+            tr_pl["verr"][idx] = verr_w
+            tr_pl["misp"][idx] = misp_w
+            tr_pl["push"][idx] = push_w
+            sched_id[idx] = np.arange(mw) % cfg.num_schedulers
 
     msgs = np.asarray(carry.msgs)
     return SimResult(
@@ -2009,6 +2165,11 @@ def _simulate_dag(workload, cluster: ClusterSpec, cfg: EngineConfig,
         msgs_base=int(msgs[0]), msgs_probe=int(msgs[1]),
         msgs_push=int(msgs[2]), msgs_flush=int(msgs[3]),
         policy=cfg.policy,
+        **({"view_age_ms": tr_pl["age"], "view_err": tr_pl["verr"],
+            "misplaced": tr_pl["misp"] > 0.5,
+            "cache_push": tr_pl["push"] > 0.5,
+            "sched_id": sched_id, "decision_ms": eff_submit}
+           if trace else {}),
     )
 
 
@@ -2152,7 +2313,24 @@ def simulate(workload, cluster: ClusterSpec, cfg: EngineConfig,
                                    cache_faulted=faulted)
         outs = tuple(np.asarray(o) for o in outs)
     msgs = np.asarray(msgs)
-    j, start, finish, enq, sched_ms, cores, mem_mb = outs
+    j, start, finish, enq, sched_ms, cores, mem_mb = outs[:7]
+    trace_kw = {}
+    if cfg.trace:
+        age, vr0, vr1, c0, c1, u2, pushf = outs[7:14]
+        submit = np.asarray(workload.submit_ms, np.float32)
+        verr, misp = finish_trace(
+            j=j, finish=finish, cores=cores, mem=mem_mb, now=submit,
+            v_rif=(vr0, vr1), cand=(c0, c1), use_two=u2,
+            r_sub=np.asarray(workload.r_submit),
+            d_est=np.asarray(workload.d_est),
+            node_type=np.asarray(node_type), C=np.asarray(C),
+            alpha=cfg.alpha, policy=cfg.policy, R=cfg.rbuf_slots)
+        trace_kw = {
+            "view_age_ms": age, "view_err": verr, "misplaced": misp,
+            "cache_push": pushf > 0.5,
+            "sched_id": (np.arange(m) % cfg.num_schedulers).astype(np.int32),
+            "decision_ms": submit,
+        }
     return SimResult(
         server=j.astype(np.int32),
         submit_ms=np.asarray(workload.submit_ms),
@@ -2160,5 +2338,5 @@ def simulate(workload, cluster: ClusterSpec, cfg: EngineConfig,
         cores=cores, mem_mb=mem_mb,
         msgs_base=int(msgs[0]), msgs_probe=int(msgs[1]),
         msgs_push=int(msgs[2]), msgs_flush=int(msgs[3]),
-        policy=cfg.policy,
+        policy=cfg.policy, **trace_kw,
     )

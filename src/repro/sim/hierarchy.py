@@ -145,6 +145,15 @@ def simulate_hierarchical(workload, cluster: ClusterSpec, cfg: EngineConfig,
     attempts = np.ones(m, np.int32) if retry else None
     failed = np.zeros(m, bool) if retry else None
     wasted = np.zeros(m, np.float32) if retry else None
+    # decision-trace planes interleave the same way — each mini-cluster
+    # traces its own share (part-local scheduler round-robin).
+    trace = cfg.trace
+    tr = ({"view_age_ms": np.zeros(m, np.float32),
+           "view_err": np.zeros(m, np.float32),
+           "misplaced": np.zeros(m, bool),
+           "cache_push": np.zeros(m, bool),
+           "sched_id": np.zeros(m, np.int32),
+           "decision_ms": np.zeros(m, np.float32)} if trace else {})
     for res, sel, idx in results:
         server[sel] = idx[res.server]
         for f in arrays:
@@ -153,10 +162,12 @@ def simulate_hierarchical(workload, cluster: ClusterSpec, cfg: EngineConfig,
             attempts[sel] = res.attempts
             failed[sel] = res.failed
             wasted[sel] = res.wasted_ms
+        for f in tr:
+            tr[f][sel] = getattr(res, f)
         msgs += [res.msgs_base, res.msgs_probe, res.msgs_push,
                  res.msgs_flush]
     return SimResult(server=server, msgs_base=int(msgs[0]),
                      msgs_probe=int(msgs[1]), msgs_push=int(msgs[2]),
                      msgs_flush=int(msgs[3]), policy=policies.pop(),
                      attempts=attempts, failed=failed, wasted_ms=wasted,
-                     **arrays)
+                     **arrays, **tr)

@@ -53,6 +53,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from .cluster import ClusterSpec
+from .decision_trace import finish_trace
 from .engine import (EngineConfig, SimResult, _blocked_inputs,
                      _cluster_arrays, _lower_dynamics, _make_dyn,
                      _make_dyn_ints, _simulate_batched_jax, _static_cfg,
@@ -131,6 +132,14 @@ class StudyResult(NamedTuple):
     attempts: np.ndarray | None = None
     failed: np.ndarray | None = None
     wasted_ms: np.ndarray | None = None
+    #: decision-trace planes — present only when the configs set ``trace``
+    #: (program-shaping, so the grid agrees); ``[S, G, K, m]``.
+    view_age_ms: np.ndarray | None = None
+    view_err: np.ndarray | None = None
+    misplaced: np.ndarray | None = None
+    cache_push: np.ndarray | None = None
+    sched_id: np.ndarray | None = None
+    decision_ms: np.ndarray | None = None
 
     @property
     def num_seeds(self) -> int:
@@ -173,6 +182,10 @@ class StudyResult(NamedTuple):
             failed=None if self.failed is None else self.failed[si, gi, ki],
             wasted_ms=(None if self.wasted_ms is None
                        else self.wasted_ms[si, gi, ki]),
+            **({f: getattr(self, f)[si, gi, ki]
+                for f in ("view_age_ms", "view_err", "misplaced",
+                          "cache_push", "sched_id", "decision_ms")}
+               if self.view_age_ms is not None else {}),
         )
 
 
@@ -503,7 +516,8 @@ def run_study(base, cluster: ClusterSpec, study: Study, *,
         #     (vmap lock-step on one device loses below ~2 dozen points —
         #     see _SMALL_GRID_POINTS).
         if point_chunk is None:
-            per_point_bytes = nb * b * 7 * 4
+            n_out = 14 if static_cfg.trace else 7
+            per_point_bytes = nb * b * n_out * 4
             point_chunk = max(1, min(P, _CHUNK_BYTES // max(
                 1, per_point_bytes)))
             if P <= _SMALL_GRID_POINTS:
@@ -538,7 +552,9 @@ def run_study(base, cluster: ClusterSpec, study: Study, *,
                     np.asarray(o).reshape(1, nb * b) for o in outs_c))
             msgs = np.concatenate(msgs_parts, axis=0)
             outs = tuple(np.concatenate([p[i] for p in outs_parts], axis=0)
-                         for i in range(7))
+                         for i in range(len(outs_parts[0])))
+            outs = _resolve_trace(outs, planes, si_g, gi_g, ki_g, configs,
+                                  cluster, base, static_cfg, m)
             return _finish_study(outs, msgs, planes, static_cfg, seeds,
                                  configs, scenarios, S, G, K, m)
         msgs_parts, outs_parts = [], []
@@ -561,26 +577,96 @@ def run_study(base, cluster: ClusterSpec, study: Study, *,
                 np.asarray(o).reshape(o.shape[0], nb * b) for o in outs_c))
         msgs = np.concatenate(msgs_parts, axis=0)
         outs = tuple(np.concatenate([p[i] for p in outs_parts], axis=0)
-                     for i in range(7))
+                     for i in range(len(outs_parts[0])))
 
+    outs = _resolve_trace(outs, planes, si_g, gi_g, ki_g, configs, cluster,
+                          base, static_cfg, m)
     return _finish_study(outs, msgs, planes, static_cfg, seeds, configs,
                          scenarios, S, G, K, m)
 
 
+def _resolve_trace(outs, planes, si_g, gi_g, ki_g, configs, cluster, base,
+                   static_cfg, m):
+    """Resolve the scan's 7 raw trace rows — ``(view_age, v_rif×2,
+    cand×2, use_two, push)`` at ``outs[7:14]`` — into the 4 planes
+    ``(age, verr, misp, push)`` that :func:`_finish_study` folds, one
+    :func:`~repro.sim.decision_trace.finish_trace` post-pass per grid
+    point (α is the only trace-relevant scalar that varies per config).
+    No-op passthrough on untraced grids."""
+    if not static_cfg.trace:
+        return outs
+    P = outs[0].shape[0]
+    core = tuple(np.asarray(o)[:, :m] for o in outs[:7])
+    j, _, fin, _, _, cores, mem = core
+    age, vr0, vr1, c0, c1, u2, push = (np.asarray(o)[:, :m]
+                                       for o in outs[7:14])
+    C = np.asarray(cluster.C)
+    node_type = np.asarray(cluster.node_type)
+    r_sub = np.asarray(base.r_submit)
+    d_est = np.asarray(base.d_est)
+    planes_f = np.asarray(planes, np.float32)
+    verr = np.zeros((P, m), np.float32)
+    misp = np.zeros((P, m), np.float32)
+    for p in range(P):
+        si, gi, ki = int(si_g[p]), int(gi_g[p]), int(ki_g[p])
+        v, ms = finish_trace(
+            j=j[p], finish=fin[p], cores=cores[p], mem=mem[p],
+            now=planes_f[si, ki], v_rif=(vr0[p], vr1[p]),
+            cand=(c0[p], c1[p]), use_two=u2[p], r_sub=r_sub,
+            d_est=d_est, node_type=node_type, C=C,
+            alpha=configs[gi].alpha, policy=static_cfg.policy,
+            R=static_cfg.rbuf_slots)
+        verr[p] = v
+        misp[p] = ms
+    return core + (age, verr, misp, push)
+
+
 def _finish_study(outs, msgs, planes, static_cfg, seeds, configs, scenarios,
-                  S, G, K, m) -> StudyResult:
-    """Fold the flattened-point outputs ``outs`` (7 leaves ``[P, ≥m]``) and
-    ``msgs [P, 4]`` back into the ``[S, G, K, …]`` grid."""
+                  S, G, K, m, sched_id=None) -> StudyResult:
+    """Fold the flattened-point outputs ``outs`` (7 core leaves ``[P, ≥m]``,
+    plus 4 trace leaves when ``static_cfg.trace``) and ``msgs [P, 4]`` back
+    into the ``[S, G, K, …]`` grid.  ``sched_id`` overrides the default
+    global round-robin scheduler attribution (the sharded planner passes
+    the part-interleaved plane)."""
     msgs = np.asarray(msgs).reshape(S, G, K, 4)
     j, start, finish, enq, sched_ms, cores, mem_mb = (
-        np.asarray(o)[:, :m].reshape(S, G, K, m) for o in outs)
+        np.asarray(o)[:, :m].reshape(S, G, K, m) for o in outs[:7])
+    tr = {}
+    if static_cfg.trace:
+        age, verr, misp, push = (
+            np.asarray(o)[:, :m].reshape(S, G, K, m) for o in outs[7:11])
+        if sched_id is None:
+            sched_id = (np.arange(m) % static_cfg.num_schedulers) \
+                .astype(np.int32)
+        tr = {"view_age_ms": age, "view_err": verr,
+              "misplaced": misp > 0.5, "cache_push": push > 0.5,
+              "sched_id": np.broadcast_to(sched_id, (S, G, K, m)),
+              # decisions happen at submission on the block-scan drivers,
+              # so the decision plane is the arrival plane broadcast over
+              # the config axis.
+              "decision_ms": np.broadcast_to(
+                  np.asarray(planes, np.float32)[:, None], (S, G, K, m))}
     return StudyResult(
         server=j.astype(np.int32),
         enqueue_ms=enq, start_ms=start, finish_ms=finish,
         sched_ms=sched_ms, cores=cores, mem_mb=mem_mb,
         submit_ms=planes, msgs=msgs, policy=static_cfg.policy,
-        seeds=seeds, configs=configs, scenarios=scenarios,
+        seeds=seeds, configs=configs, scenarios=scenarios, **tr,
     )
+
+
+def _alloc_trace(static_cfg: EngineConfig, shape) -> dict:
+    """Host-side allocation of the ``[S, G, K, m]`` decision-trace planes
+    (empty dict when the grid is untraced) — the per-point host loops fill
+    them by copying each run's SimResult planes."""
+    if not static_cfg.trace:
+        return {}
+    return {"view_age_ms": np.zeros(shape, np.float32),
+            "view_err": np.zeros(shape, np.float32),
+            "misplaced": np.zeros(shape, bool),
+            "cache_push": np.zeros(shape, bool),
+            "sched_id": np.zeros(shape, np.int32),
+            "decision_ms": np.zeros(shape, np.float32)}
 
 
 def _run_study_retry(base, cluster: ClusterSpec, seeds, configs, scenarios,
@@ -623,6 +709,7 @@ def _run_study_retry(base, cluster: ClusterSpec, seeds, configs, scenarios,
     attempts = np.ones(shape, np.int32)
     failed = np.zeros(shape, bool)
     msgs = np.zeros((S, G, K, 4), np.int32)
+    tr = _alloc_trace(static_cfg, shape)
     for si, sd in enumerate(seeds):
         for gi, cfg in enumerate(configs):
             for ki, sc in enumerate(scenarios):
@@ -643,6 +730,8 @@ def _run_study_retry(base, cluster: ClusterSpec, seeds, configs, scenarios,
                     attempts[si, gi, ki] = r.attempts
                     failed[si, gi, ki] = r.failed
                     out_f["wasted_ms"][si, gi, ki] = r.wasted_ms
+                for f in tr:
+                    tr[f][si, gi, ki] = getattr(r, f)
                 msgs[si, gi, ki] = (r.msgs_base, r.msgs_probe, r.msgs_push,
                                     r.msgs_flush)
     return StudyResult(
@@ -654,6 +743,7 @@ def _run_study_retry(base, cluster: ClusterSpec, seeds, configs, scenarios,
         seeds=tuple(seeds), configs=tuple(configs),
         scenarios=tuple(scenarios),
         attempts=attempts, failed=failed, wasted_ms=out_f["wasted_ms"],
+        **tr,
     )
 
 
@@ -678,6 +768,7 @@ def _run_study_dag(base, cluster: ClusterSpec, seeds, configs, scenarios,
              for f in ("server", "enqueue_ms", "start_ms", "finish_ms",
                        "sched_ms", "cores", "mem_mb", "submit_ms")}
     msgs = np.zeros((S, G, K, 4), np.int32)
+    tr = _alloc_trace(static_cfg, shape)
     for si, sd in enumerate(seeds):
         for gi, cfg in enumerate(configs):
             for ki, sc in enumerate(scenarios):
@@ -688,6 +779,8 @@ def _run_study_dag(base, cluster: ClusterSpec, seeds, configs, scenarios,
                 for f in ("server", "enqueue_ms", "start_ms", "finish_ms",
                           "sched_ms", "cores", "mem_mb", "submit_ms"):
                     out_f[f][si, gi, ki] = getattr(r, f)
+                for f in tr:
+                    tr[f][si, gi, ki] = getattr(r, f)
                 msgs[si, gi, ki] = (r.msgs_base, r.msgs_probe, r.msgs_push,
                                     r.msgs_flush)
     return StudyResult(
@@ -697,7 +790,7 @@ def _run_study_dag(base, cluster: ClusterSpec, seeds, configs, scenarios,
         cores=out_f["cores"], mem_mb=out_f["mem_mb"],
         submit_ms=out_f["submit_ms"], msgs=msgs, policy=static_cfg.policy,
         seeds=tuple(seeds), configs=tuple(configs),
-        scenarios=tuple(scenarios),
+        scenarios=tuple(scenarios), **tr,
     )
 
 
@@ -907,7 +1000,8 @@ def _run_study_sharded(base, cluster: ClusterSpec, seeds, configs,
                                 kernel_masked, sub_ax, win_ax, False,
                                 cache_faulted)
         if point_chunk is None:
-            per_point_bytes = k * nb_max * b * 7 * 4
+            n_out = 14 if static_cfg.trace else 7
+            per_point_bytes = k * nb_max * b * n_out * 4
             point_chunk = max(1, min(P, _CHUNK_BYTES // max(
                 1, per_point_bytes)))
         msgs_parts, outs_parts = [], []
@@ -928,13 +1022,20 @@ def _run_study_sharded(base, cluster: ClusterSpec, seeds, configs,
                 for o in outs_c))
         msgs_kp = np.concatenate(msgs_parts, axis=1)
         outs_kp = tuple(np.concatenate([p[i] for p in outs_parts], axis=1)
-                        for i in range(7))
+                        for i in range(len(outs_parts[0])))
 
     # --- merge: submission-order interleave with global server ids (the
     #     simulate_hierarchical merge, vectorized over the point axis);
     #     message counters sum across the k independent mini-clusters.
     msgs = msgs_kp.astype(np.int64).sum(axis=0).astype(np.int32)  # [P, 4]
-    merged = [np.zeros((P, m), np.float32) for _ in range(7)]
+    n_out = 11 if static_cfg.trace else 7
+    merged = [np.zeros((P, m), np.float32) for _ in range(n_out)]
+    # Each part attributes decisions to its own scheduler round-robin
+    # (part-local submission order) — as simulate_hierarchical's merge.
+    sched_id = (np.zeros(m, np.int32) if static_cfg.trace else None)
+    r_sub_h = np.asarray(base.r_submit)
+    d_est_h = np.asarray(base.d_est)
+    planes_f = np.asarray(planes, np.float32)
     for c in range(k):
         sel, idxg = sels[c], parts[c][1]
         m_c = sel.size
@@ -942,8 +1043,33 @@ def _run_study_sharded(base, cluster: ClusterSpec, seeds, configs,
         merged[0][:, sel] = idxg[j_loc]
         for f in range(1, 7):
             merged[f][:, sel] = outs_kp[f][c, :, :m_c]
+        if static_cfg.trace:
+            # Resolve truth part-locally — each mini-cluster is its own
+            # engine invocation (part-local ring state, server ids, submit
+            # stream) — then interleave into the global planes.
+            spec_c = parts[c][0]
+            age_c, vr0_c, vr1_c, c0_c, c1_c, u2_c, push_c = (
+                outs_kp[f][c, :, :m_c] for f in range(7, 14))
+            merged[7][:, sel] = age_c
+            merged[10][:, sel] = push_c
+            for p in range(P):
+                si, gi, ki = int(si_g[p]), int(gi_g[p]), int(ki_g[p])
+                v, ms = finish_trace(
+                    j=j_loc[p], finish=outs_kp[2][c, p, :m_c],
+                    cores=outs_kp[5][c, p, :m_c],
+                    mem=outs_kp[6][c, p, :m_c],
+                    now=planes_f[si, ki][sel],
+                    v_rif=(vr0_c[p], vr1_c[p]), cand=(c0_c[p], c1_c[p]),
+                    use_two=u2_c[p], r_sub=r_sub_h[sel],
+                    d_est=d_est_h[sel], node_type=np.asarray(
+                        spec_c.node_type), C=np.asarray(spec_c.C),
+                    alpha=configs[gi].alpha, policy=static_cfg.policy,
+                    R=static_cfg.rbuf_slots)
+                merged[8][p, sel] = v
+                merged[9][p, sel] = ms
+            sched_id[sel] = np.arange(m_c) % static_cfg.num_schedulers
     return _finish_study(tuple(merged), msgs, planes, static_cfg, seeds,
-                         configs, scenarios, S, G, K, m)
+                         configs, scenarios, S, G, K, m, sched_id=sched_id)
 
 
 def summarize_study(st: StudyResult) -> list:

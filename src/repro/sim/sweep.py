@@ -80,6 +80,13 @@ class SweepResult(NamedTuple):
     attempts: np.ndarray | None = None
     failed: np.ndarray | None = None
     wasted_ms: np.ndarray | None = None
+    #: decision-trace planes — present only when configs set ``trace``.
+    view_age_ms: np.ndarray | None = None
+    view_err: np.ndarray | None = None
+    misplaced: np.ndarray | None = None
+    cache_push: np.ndarray | None = None
+    sched_id: np.ndarray | None = None
+    decision_ms: np.ndarray | None = None
 
     @property
     def num_seeds(self) -> int:
@@ -110,6 +117,10 @@ class SweepResult(NamedTuple):
             failed=None if self.failed is None else self.failed[si, gi],
             wasted_ms=(None if self.wasted_ms is None
                        else self.wasted_ms[si, gi]),
+            **({f: getattr(self, f)[si, gi]
+                for f in ("view_age_ms", "view_err", "misplaced",
+                          "cache_push", "sched_id", "decision_ms")}
+               if self.view_age_ms is not None else {}),
         )
 
 
@@ -136,6 +147,13 @@ class SummaryCI(NamedTuple):
     retries_per_task: float
     wasted_ms_total: float
     failure_rate: float
+    #: message-ledger breakdown (means over seeds, same categories as
+    #: ``SimResult.msgs_*``) — decomposes ``msgs_total`` so the paper's
+    #: 55–66% reduction claim can be attributed to probe vs push traffic.
+    msgs_base: float
+    msgs_probe: float
+    msgs_push: float
+    msgs_flush: float
     ci95: dict
 
     def row(self) -> str:
@@ -152,7 +170,8 @@ _CI_METRICS = ("msgs_total", "msgs_per_task", "throughput_tps",
                "makespan_mean_ms", "makespan_p95_ms", "sched_mean_ms",
                "sched_p95_ms", "wait_mean_ms", "wall_time_s",
                "goodput_tps", "retries_per_task", "wasted_ms_total",
-               "failure_rate")
+               "failure_rate", "msgs_base", "msgs_probe", "msgs_push",
+               "msgs_flush")
 
 
 def aggregate_summaries(per_seed: Sequence[Summary]) -> SummaryCI:
@@ -267,4 +286,8 @@ def simulate_many(workload, cluster: ClusterSpec,
         attempts=None if st.attempts is None else st.attempts[:, :, 0],
         failed=None if st.failed is None else st.failed[:, :, 0],
         wasted_ms=None if st.wasted_ms is None else st.wasted_ms[:, :, 0],
+        **({f: getattr(st, f)[:, :, 0]
+            for f in ("view_age_ms", "view_err", "misplaced",
+                      "cache_push", "sched_id", "decision_ms")}
+           if st.view_age_ms is not None else {}),
     )

@@ -11,7 +11,8 @@ REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 def test_required_docs_exist():
     for f in ("README.md", "docs/ARCHITECTURE.md", "docs/STUDIES.md",
               "docs/SWEEPS.md", "docs/SCENARIOS.md", "docs/SCALING.md",
-              "docs/DAGS.md", "ROADMAP.md", "CHANGES.md"):
+              "docs/DAGS.md", "docs/OBSERVABILITY.md", "ROADMAP.md",
+              "CHANGES.md"):
         assert os.path.exists(os.path.join(REPO, f)), f
 
 
@@ -92,6 +93,37 @@ def test_dags_doc_api_matches_code():
         assert kw in params, kw
 
 
+def test_observability_doc_api_matches_code():
+    """Every symbol OBSERVABILITY.md leans on actually exists: the
+    ``repro.obs`` surface, the engine's ``trace`` knob, the traced
+    SimResult planes, and the documented stat fields."""
+    from repro import sim
+    from repro import obs
+    text = open(os.path.join(REPO, "docs", "OBSERVABILITY.md"),
+                encoding="utf-8").read()
+    for name in ("decision_stats", "latency_stats", "to_chrome_trace",
+                 "TRACE_STAT_FIELDS"):
+        assert name in text, name
+        assert hasattr(obs, name), name
+    assert "trace" in sim.EngineConfig._fields
+    for plane in ("view_age_ms", "view_err", "misplaced", "cache_push",
+                  "sched_id", "decision_ms"):
+        assert plane in text, plane
+        assert plane in sim.SimResult._fields, plane
+    for field in obs.TRACE_STAT_FIELDS:
+        assert f"`{field}`" in text, field
+    # importing repro.obs must not pull in JAX (host-side tooling runs
+    # without a device runtime)
+    out = subprocess.run(
+        [sys.executable, "-c",
+         "import repro.obs, sys; "
+         "sys.exit(1 if 'jax' in sys.modules else 0)"],
+        capture_output=True, text=True, timeout=60,
+        env={**os.environ,
+             "PYTHONPATH": os.path.join(REPO, "src")})
+    assert out.returncode == 0, out.stdout + out.stderr
+
+
 def test_engine_docstring_matches_shipped_drivers():
     """Doc-drift guard: the engine module docstring describes the shipped
     batched drivers (speculative PoT, segment-scan Prequal, unified
@@ -116,7 +148,9 @@ def test_bench_schema_docs_match_written_files():
                                   "meanfield_points")),
             ("BENCH_faults.json", ("gate_point", "fault_points",
                                    "message_reduction")),
-            ("BENCH_dags.json", ("gate_point", "dag_points"))):
+            ("BENCH_dags.json", ("gate_point", "dag_points")),
+            ("BENCH_obs.json", ("gate_point", "obs_points",
+                                "staleness_grid", "message_ledger"))):
         assert fname in arch
         path = os.path.join(REPO, fname)
         if os.path.exists(path):

@@ -1,0 +1,417 @@
+"""Decision-trace observability (ISSUE 9): the ``EngineConfig.trace``
+telemetry planes, their post-scan ground-truth reconstruction, and the
+``repro.obs`` consumers.
+
+The contracts pinned here:
+
+* ``trace=True`` never perturbs a run — every non-trace plane (placements,
+  timestamps, message ledger) stays bit-identical to the ``trace=False``
+  run, for all five policies in both drivers;
+* sequential and batched drivers produce **bit-identical trace planes**
+  (they share one post-pass — parity is by construction, pinned anyway),
+  including under retry, dynamics, cache faults, and DAG workloads;
+* ``decision_stats`` on a hand-computable 2-server fixture: staleness
+  ages and push counts derived from the engine's ``(i+1) % b`` cadence by
+  hand, view error cross-checked against a brute-force in-flight replay;
+* a ``CacheFaults`` run where total push loss provably pins the view age
+  to the decision clock (and raises it above the clean run's);
+* ``to_chrome_trace``: schema-valid trace-event JSON, exact event counts,
+  byte-deterministic round-trip, retry/kill markers;
+* ``Summary``/``SummaryCI`` carry the ``msgs_base/probe/push/flush``
+  decomposition (the bench-artifact message ledger);
+* the ``_pf_sums`` prefix/finished decomposition against a brute-force
+  oracle, including wave-entry pseudo-commits at position 0.
+"""
+import json
+
+import numpy as np
+import pytest
+
+from repro.obs import TRACE_STAT_FIELDS, decision_stats, latency_stats
+from repro.obs.trace import to_chrome_trace
+from repro.sim import (CacheFaults, Dynamics, EngineConfig, RetryPolicy,
+                       Study, aggregate_summaries, make_testbed, run_study,
+                       simulate, simulate_many, summarize)
+from repro.sim.cluster import ClusterSpec
+from repro.sim.decision_trace import _pf_sums, finish_trace
+from repro.workloads import FanOutDAG
+from repro.workloads import functionbench as fb
+from repro.workloads.functionbench import FBWorkload
+
+POLICIES = ("random", "pot", "dodoor", "prequal", "one_plus_beta")
+TRACE_PLANES = ("view_age_ms", "view_err", "misplaced", "cache_push",
+                "sched_id", "decision_ms")
+#: every plane that exists without tracing — must be unperturbed by it
+BASE_PLANES = ("server", "enqueue_ms", "start_ms", "finish_ms", "sched_ms",
+               "cores", "mem_mb")
+
+
+@pytest.fixture(scope="module")
+def tb():
+    return make_testbed(scale=0.2)
+
+
+@pytest.fixture(scope="module")
+def wl(tb):
+    return fb.synthesize(m=200, qps=40.0, seed=0)
+
+
+def assert_planes_equal(a, b, planes, ctx=""):
+    for f in planes:
+        x, y = getattr(a, f), getattr(b, f)
+        if x is None:
+            assert y is None, f"{ctx}{f}: None vs array"
+        else:
+            assert np.array_equal(np.asarray(x), np.asarray(y)), \
+                f"{ctx}{f} not bit-identical"
+
+
+class TestTraceDoesNotPerturb:
+    """trace=True must be a pure observer; trace=False must not carry
+    the planes at all."""
+
+    @pytest.mark.parametrize("policy", POLICIES)
+    @pytest.mark.parametrize("mode", ("sequential", "batched"))
+    def test_bit_identical_placements(self, tb, wl, policy, mode):
+        cfg = EngineConfig(policy=policy, b=10)
+        plain = simulate(wl, tb, cfg, seed=0, mode=mode)
+        traced = simulate(wl, tb, cfg._replace(trace=True), seed=0,
+                          mode=mode)
+        assert_planes_equal(plain, traced, BASE_PLANES,
+                            ctx=f"{policy}/{mode}: ")
+        ledger = lambda r: (r.msgs_base, r.msgs_probe, r.msgs_push,
+                            r.msgs_flush)
+        assert ledger(plain) == ledger(traced)
+
+    def test_untraced_planes_are_none(self, tb, wl):
+        res = simulate(wl, tb, EngineConfig(b=10), seed=0, mode="batched")
+        for f in TRACE_PLANES:
+            assert getattr(res, f) is None, f
+
+    def test_traced_planes_present(self, tb, wl):
+        res = simulate(wl, tb, EngineConfig(b=10, trace=True), seed=0,
+                       mode="batched")
+        m = res.server.shape[0]
+        for f in TRACE_PLANES:
+            assert getattr(res, f) is not None, f
+            assert np.asarray(getattr(res, f)).shape == (m,), f
+
+    def test_probing_policies_zero_staleness(self, tb, wl):
+        """Probing policies read truth — no snapshot, no staleness."""
+        res = simulate(wl, tb, EngineConfig(policy="pot", b=10, trace=True),
+                       seed=0, mode="batched")
+        st = decision_stats(res)
+        assert st["staleness_mean_ms"] == 0.0
+        assert st["view_err_mean"] == 0.0
+        assert st["misplacement_rate"] == 0.0
+
+
+class TestSeqBatchedTraceParity:
+    """Both drivers feed identical history through one post-pass; the
+    resulting planes are pinned bit-identical anyway."""
+
+    @pytest.mark.parametrize("policy", POLICIES)
+    def test_plain(self, tb, wl, policy):
+        cfg = EngineConfig(policy=policy, b=10, trace=True)
+        seq = simulate(wl, tb, cfg, seed=0, mode="sequential")
+        bat = simulate(wl, tb, cfg, seed=0, mode="batched")
+        assert_planes_equal(seq, bat, TRACE_PLANES, ctx=f"{policy}: ")
+
+    @pytest.mark.parametrize("extra", ("retry", "dynamics", "cache_faults",
+                                       "dag"))
+    def test_failure_and_dag_layers(self, tb, wl, extra):
+        cfg = EngineConfig(policy="dodoor", b=10, trace=True)
+        kw = {}
+        if extra == "retry":
+            cfg = cfg._replace(retry=RetryPolicy(max_attempts=3,
+                                                 backoff_ms=50.0))
+            kw["dynamics"] = Dynamics(
+                outages=tuple((s, 500.0, 1500.0) for s in range(4)))
+        elif extra == "dynamics":
+            kw["dynamics"] = Dynamics(
+                outages=((0, 0.0, 2000.0), (3, 100.0, 900.0)),
+                slowdowns=((1, 0.0, 4000.0, 2.0),))
+        elif extra == "cache_faults":
+            kw["dynamics"] = Dynamics(
+                cache_faults=CacheFaults(loss_rate=0.5, seed=3))
+        elif extra == "dag":
+            kw["dag"] = FanOutDAG(width=6, edge_delay_ms=2.0)
+        seq = simulate(wl, tb, cfg, seed=0, mode="sequential", **kw)
+        bat = simulate(wl, tb, cfg, seed=0, mode="batched", **kw)
+        assert_planes_equal(seq, bat, TRACE_PLANES, ctx=f"{extra}: ")
+        assert_planes_equal(seq, bat, BASE_PLANES, ctx=f"{extra}: ")
+
+
+def _hand_fixture():
+    """Two identical servers, one scheduler, six tasks arriving every
+    100 ms, 50 ms profiled durations — small enough to replay by hand."""
+    m, T = 6, 1
+    cluster = ClusterSpec(C=np.asarray([[16, 64000]] * 2, np.float32),
+                          node_type=np.zeros(2, np.int32),
+                          type_names=("box",))
+    wl = FBWorkload(
+        r_submit=np.full((m, 2), [1.0, 100.0], np.float32),
+        r_exec=np.full((m, T, 2), [1.0, 100.0], np.float32),
+        d_est=np.full((m, T), 50.0, np.float32),
+        d_act=np.full((m, T), 50.0, np.float32),
+        task_type=np.zeros(m, np.int64),
+        submit_ms=(np.arange(m, dtype=np.float64) * 100.0))
+    return wl, cluster
+
+
+class TestHandFixture:
+    """b=2, one scheduler, submits at 0,100,…,500: pushes fire after
+    decisions 1, 3, 5 (content time = that decision's clock), so the ages
+    are exactly [0, 100, 100, 200, 100, 200]."""
+
+    EXPECT_AGE = np.asarray([0.0, 100.0, 100.0, 200.0, 100.0, 200.0])
+    EXPECT_PUSH = np.asarray([False, True, False, True, False, True])
+
+    @pytest.fixture(scope="class")
+    def res(self):
+        wl, cluster = _hand_fixture()
+        cfg = EngineConfig(policy="dodoor", b=2, num_schedulers=1,
+                           flush_every=2, trace=True)
+        return simulate(wl, cluster, cfg, seed=0, mode="sequential")
+
+    def test_ages_and_pushes(self, res):
+        assert np.array_equal(np.asarray(res.view_age_ms, np.float64),
+                              self.EXPECT_AGE)
+        assert np.array_equal(np.asarray(res.cache_push), self.EXPECT_PUSH)
+
+    def test_decision_stats_by_hand(self, res):
+        st = decision_stats(res)
+        assert st["decisions"] == 6
+        assert st["cache_pushes"] == 3
+        assert np.isclose(st["staleness_mean_ms"],
+                          self.EXPECT_AGE.mean())
+        assert np.isclose(st["staleness_p99_ms"],
+                          np.percentile(self.EXPECT_AGE, 99.0))
+        assert set(st) == set(TRACE_STAT_FIELDS)
+
+    def test_view_err_against_replay(self, res):
+        """Brute-force replay.  With 50 ms tasks and 100 ms gaps nothing
+        is in flight at any *decision* (premise pinned below), so truth
+        rif ≡ 0.  But each push (after decisions 1/3/5) snapshots while
+        that decision's own task still runs, so the cached view is
+        one-hot on that task's server with value 1.  Hence: decisions 0–1
+        see the all-zero t=0 view (error 0); later decisions see error
+        0.5 per sampled candidate equal to the stale server — view_err ∈
+        {0, ½, 1}, and view_err = 1 forces both candidates (hence the
+        chosen server) onto the stale server."""
+        finish = np.asarray(res.finish_ms, np.float64)
+        submit = np.asarray(res.decision_ms, np.float64)
+        assert (finish[:-1] <= submit[1:]).all()      # replay premise
+        verr = np.asarray(res.view_err, np.float64)
+        server = np.asarray(res.server)
+        assert verr[0] == 0.0 and verr[1] == 0.0
+        assert set(np.unique(2.0 * verr)) <= {0.0, 1.0, 2.0}
+        stale = {2: 1, 3: 1, 4: 3, 5: 3}    # last push decision before i
+        for i, p in stale.items():
+            if verr[i] == 1.0:
+                assert server[i] == server[p]
+
+    def test_latency_stats_match(self, res):
+        s = np.asarray(res.sched_ms, np.float64)
+        ls = latency_stats(res)
+        assert np.isclose(ls["sched_p50_ms"], np.percentile(s, 50.0))
+        assert np.isclose(ls["sched_p99_ms"], np.percentile(s, 99.0))
+
+
+class TestCacheFaultsRaiseAge:
+    def test_total_loss_pins_age_to_clock(self):
+        """loss_rate=1: every push delivery is lost, every scheduler
+        keeps its t=0 snapshot, so the view age *is* the decision clock."""
+        wl, cluster = _hand_fixture()
+        cfg = EngineConfig(policy="dodoor", b=2, num_schedulers=1,
+                           flush_every=2, trace=True)
+        res = simulate(wl, cluster, cfg, seed=0, mode="sequential",
+                       dynamics=Dynamics(
+                           cache_faults=CacheFaults(loss_rate=1.0)))
+        assert np.array_equal(np.asarray(res.view_age_ms, np.float64),
+                              np.asarray(res.decision_ms, np.float64))
+
+    def test_loss_raises_mean_age(self, tb, wl):
+        cfg = EngineConfig(policy="dodoor", b=10, trace=True)
+        clean = simulate(wl, tb, cfg, seed=0, mode="batched")
+        lossy = simulate(wl, tb, cfg, seed=0, mode="batched",
+                         dynamics=Dynamics(
+                             cache_faults=CacheFaults(loss_rate=0.7,
+                                                      seed=1)))
+        a0 = decision_stats(clean)["staleness_mean_ms"]
+        a1 = decision_stats(lossy)["staleness_mean_ms"]
+        assert a1 > a0
+
+
+class TestChromeTrace:
+    @pytest.fixture(scope="class")
+    def traced(self, tb, wl):
+        return simulate(wl, tb, EngineConfig(b=10, trace=True), seed=0,
+                        mode="batched")
+
+    def test_schema_and_counts(self, tb, wl, traced, tmp_path):
+        path = tmp_path / "trace.json"
+        doc = to_chrome_trace(traced, tb, path)
+        reread = json.loads(path.read_text())
+        assert reread == doc
+        ev = doc["traceEvents"]
+        assert doc["displayTimeUnit"] == "ms"
+        assert doc["otherData"]["tasks"] == 200
+        assert doc["otherData"]["servers"] == tb.num_servers
+        assert all({"ph", "pid"} <= set(e) for e in ev)
+        m = 200
+        assert sum(e["ph"] == "X" and e["cat"] == "exec"
+                   for e in ev if "cat" in e) == m
+        assert sum(e["ph"] == "X" and e["cat"] == "sched"
+                   for e in ev if "cat" in e) == m
+        assert sum(e["ph"] == "C" for e in ev) == m
+        n_push = int(np.asarray(traced.cache_push).sum())
+        assert sum(e.get("cat") == "push" for e in ev) == n_push
+
+    def test_byte_deterministic(self, tb, wl, traced, tmp_path):
+        p1, p2 = tmp_path / "a.json", tmp_path / "b.json"
+        to_chrome_trace(traced, tb, p1)
+        to_chrome_trace(traced, tb, p2)
+        assert p1.read_bytes() == p2.read_bytes()
+
+    def test_retry_markers(self, tb, wl, tmp_path):
+        cfg = EngineConfig(policy="dodoor", b=10, trace=True,
+                           retry=RetryPolicy(max_attempts=3,
+                                             backoff_ms=50.0))
+        dyn = Dynamics(outages=tuple((s, 500.0, 1500.0) for s in range(4)))
+        res = simulate(wl, tb, cfg, seed=0, mode="batched", dynamics=dyn)
+        doc = to_chrome_trace(res, tb, tmp_path / "retry.json")
+        ev = doc["traceEvents"]
+        att = np.asarray(res.attempts)
+        assert att.max() > 1                      # the fixture retries
+        assert sum(e.get("cat") == "retry" for e in ev) == \
+            int((att > 1).sum())
+        assert sum(e.get("cat") == "kill" for e in ev) == \
+            int((np.asarray(res.wasted_ms) > 0).sum())
+
+    def test_untraced_run_still_renders(self, tb, wl, tmp_path):
+        res = simulate(wl, tb, EngineConfig(b=10), seed=0, mode="batched")
+        doc = to_chrome_trace(res, tb, tmp_path / "plain.json")
+        ev = doc["traceEvents"]
+        assert sum(e["ph"] == "C" for e in ev) == 0
+        assert sum(e.get("cat") == "exec" for e in ev) == 200
+
+
+class TestSummaryMessageLedger:
+    """Satellite 1: the per-channel RPC decomposition must survive the
+    Summary / SummaryCI roll-ups (it feeds the bench message ledger)."""
+
+    def test_summary_fields(self, tb, wl):
+        res = simulate(wl, tb, EngineConfig(b=10), seed=0, mode="batched")
+        s = summarize(res)
+        parts = (s.msgs_base, s.msgs_probe, s.msgs_push, s.msgs_flush)
+        assert parts == (res.msgs_base, res.msgs_probe, res.msgs_push,
+                         res.msgs_flush)
+        assert sum(parts) == s.msgs_total
+
+    def test_summary_ci_fields(self, tb, wl):
+        cfg = EngineConfig(policy="dodoor", b=10)
+        per_seed = [summarize(simulate(wl, tb, cfg, seed=s,
+                                       mode="batched"))
+                    for s in (0, 1)]
+        ci = aggregate_summaries(per_seed)
+        for f in ("msgs_base", "msgs_probe", "msgs_push", "msgs_flush"):
+            want = np.mean([getattr(s, f) for s in per_seed])
+            assert np.isclose(getattr(ci, f), want), f
+
+
+class TestSweepAndStudyTrace:
+    def test_sweep_points_match_simulate(self, tb, wl):
+        # α is a traced scalar — the grid stays one compiled program
+        cfgs = (EngineConfig(policy="dodoor", b=10, trace=True, alpha=0.5),
+                EngineConfig(policy="dodoor", b=10, trace=True, alpha=2.0))
+        sw = simulate_many(wl, tb, cfgs, seeds=(0,))
+        for gi, cfg in enumerate(cfgs):
+            oracle = simulate(wl, tb, cfg, seed=0, mode="batched")
+            assert_planes_equal(sw.point(0, gi), oracle, TRACE_PLANES,
+                                ctx=f"cfg{gi}: ")
+
+    def test_sharded_study_matches_hierarchical(self, tb, wl):
+        """The sharded planner resolves trace planes per mini-cluster
+        part; the hierarchical per-shard loop is its oracle."""
+        from repro.sim import simulate_hierarchical
+        cfg = EngineConfig(policy="dodoor", b=10, trace=True)
+        sw = simulate_many(wl, tb, (cfg,), seeds=(0,), server_shards=4)
+        oracle = simulate_hierarchical(wl, tb, cfg, k=4, seed=0,
+                                       mode="batched", b=cfg.b)
+        assert_planes_equal(sw.point(0, 0), oracle, TRACE_PLANES,
+                            ctx="sharded: ")
+
+    def test_study_point_matches_simulate(self, tb, wl):
+        study = Study(seeds=(0, 1),
+                      configs=(EngineConfig(policy="dodoor", b=10,
+                                            trace=True),))
+        sr = run_study(wl, tb, study, use_kernel=False)
+        for si in (0, 1):
+            oracle = simulate(wl, tb, study.configs[0], seed=si,
+                              mode="batched")
+            assert_planes_equal(sr.point(si, 0, 0), oracle, TRACE_PLANES,
+                                ctx=f"seed{si}: ")
+
+
+def _pf_oracle(cj, crel, cx, cpos, qsrv, qnow, qpos):
+    out = np.zeros((qsrv.shape[0], cx.shape[1]))
+    for q in range(qsrv.shape[0]):
+        sel = (cj == qsrv[q]) & (cpos < qpos[q]) & (crel > qnow[q])
+        out[q] = cx[sel].sum(axis=0)
+    return out
+
+
+class TestPfSumsOracle:
+    @pytest.mark.parametrize("seed", range(8))
+    def test_matches_bruteforce(self, seed):
+        rng = np.random.RandomState(seed)
+        mc, nq, n = rng.randint(0, 60), rng.randint(1, 80), 5
+        cj = rng.randint(0, n, mc).astype(np.int32)
+        crel = rng.uniform(0, 100, mc)
+        cx = rng.uniform(0, 3, (mc, 4))
+        # commit order: nondecreasing positions, some at 0 (wave-entry
+        # pseudo-commits, as finish_trace emits them)
+        cpos = np.sort(np.concatenate(
+            [np.zeros(min(mc, 5), np.int64),
+             rng.randint(1, 50, max(0, mc - 5)).astype(np.int64)]))[:mc]
+        qsrv = rng.randint(0, n, nq).astype(np.int32)
+        qnow = rng.uniform(0, 100, nq)
+        qpos = rng.randint(1, 50, nq).astype(np.int64)
+        # the engine's contract: a commit releases strictly after its
+        # decision, so rel ≤ now ⟹ pos < qpos.  Enforce it on the random
+        # instance by lifting violating releases above every query time.
+        for c in range(mc):
+            bad = (crel[c] <= qnow) & (cpos[c] >= qpos) & (cj[c] == qsrv)
+            if bad.any():
+                crel[c] = 101.0
+        got = _pf_sums(cj, crel, cx, cpos, qsrv, qnow, qpos)
+        want = _pf_oracle(cj, crel, cx, cpos, qsrv, qnow, qpos)
+        np.testing.assert_allclose(got, want, atol=1e-9)
+
+
+class TestFinishTraceEdges:
+    def test_non_cached_policy_returns_zeros(self):
+        verr, misp = finish_trace(
+            j=np.zeros(3, np.int32), finish=np.ones(3), cores=np.ones(3),
+            mem=np.ones(3), now=np.zeros(3),
+            v_rif=(np.zeros(3), np.zeros(3)),
+            cand=(np.zeros(3), np.ones(3)), use_two=np.ones(3),
+            r_sub=np.ones((3, 2)), d_est=np.ones((3, 1)),
+            node_type=np.zeros(2, np.int32), C=np.ones((2, 2)),
+            alpha=0.5, policy="pot", R=4)
+        assert not verr.any() and not misp.any()
+
+    def test_ring_overflow_warns(self):
+        """5 simultaneous eternal tasks on one 4-slot server: the engine's
+        ring would evict a live entry — the post-pass must warn."""
+        m, R = 5, 4
+        with pytest.warns(RuntimeWarning, match="rbuf_slots"):
+            finish_trace(
+                j=np.zeros(m, np.int32), finish=np.full(m, 1e9),
+                cores=np.ones(m), mem=np.ones(m), now=np.zeros(m),
+                v_rif=(np.zeros(m), np.zeros(m)),
+                cand=(np.zeros(m, np.int32), np.ones(m, np.int32)),
+                use_two=np.ones(m), r_sub=np.ones((m, 2)),
+                d_est=np.ones((m, 1)), node_type=np.zeros(2, np.int32),
+                C=np.ones((2, 2)), alpha=0.5, policy="dodoor", R=R)

@@ -1,0 +1,244 @@
+#!/usr/bin/env python
+"""Bench dashboard: every committed ``BENCH_*.json`` → one self-contained
+static HTML page.
+
+Reads the machine-readable bench artifacts (the ``write_bench_json``
+envelope: ``schema``/``bench``/``git_sha``/``backend``/``devices`` plus
+bench-specific sections), and renders:
+
+* a **gate summary** — the declarative gate table from
+  ``tools/check_perf_regression.py`` evaluated current-vs-baseline, one
+  row per metric check (the same verdicts CI enforces);
+* one section per artifact — list-of-dict sections become tables whose
+  numeric column headers carry inline SVG sparklines (the value's shape
+  across rows at a glance), dict-of-dict sections (e.g. the per-policy
+  message ledger) become keyed tables, and scalar envelope fields render
+  as a chip line.
+
+Pure stdlib — no JAX, no numpy — so CI can build the page from committed
+artifacts without a device runtime; output is a single file with inline
+CSS/SVG (no external assets), uploadable as an artifact and viewable
+offline.
+
+    python tools/bench_dashboard.py [--dir .]
+        [--baselines benchmarks/baselines] [--out dashboard.html]
+
+``--dir`` is scanned for fresh ``BENCH_*.json`` (CI writes them at the
+repo root); ``--baselines`` supplies the committed smoke baselines, which
+are both compared against (gate summary) and rendered as sections when no
+fresh artifact of the same bench exists.
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import html
+import json
+import os
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, os.path.join(REPO, "tools"))
+
+from check_perf_regression import GATES  # noqa: E402
+
+_CSS = """
+body { font: 14px/1.5 system-ui, sans-serif; margin: 2em auto;
+       max-width: 72em; color: #1a1a2e; padding: 0 1em; }
+h1 { font-size: 1.5em; } h2 { font-size: 1.15em; margin-top: 2em;
+     border-bottom: 2px solid #e0e0ef; padding-bottom: .2em; }
+table { border-collapse: collapse; margin: .8em 0; font-size: 13px; }
+th, td { border: 1px solid #d8d8e8; padding: .25em .6em;
+         text-align: right; }
+th { background: #f4f4fb; font-weight: 600; text-align: center; }
+td:first-child, th:first-child { text-align: left; }
+.chips span { display: inline-block; background: #eef;
+              border-radius: 1em; padding: .1em .7em; margin: 0 .3em
+              .3em 0; font-size: 12px; }
+.ok { color: #0a7a2f; font-weight: 600; }
+.fail { color: #c0182b; font-weight: 600; }
+svg.spark { vertical-align: middle; margin-left: .4em; }
+.note { color: #667; font-size: 12px; }
+"""
+
+
+def _fmt(v):
+    if isinstance(v, bool):
+        return str(v)
+    if isinstance(v, float):
+        return f"{v:,.4g}" if abs(v) < 1e6 else f"{v:,.0f}"
+    if isinstance(v, int):
+        return f"{v:,}"
+    return html.escape(str(v))
+
+
+def _spark(values, w=90, h=16):
+    """Inline SVG sparkline of a numeric series (≥ 2 points)."""
+    vals = [float(v) for v in values]
+    lo, hi = min(vals), max(vals)
+    span = (hi - lo) or 1.0
+    pts = " ".join(
+        f"{i * w / (len(vals) - 1):.1f},"
+        f"{h - 2 - (v - lo) / span * (h - 4):.1f}"
+        for i, v in enumerate(vals))
+    return (f'<svg class="spark" width="{w}" height="{h}">'
+            f'<polyline points="{pts}" fill="none" stroke="#5560c0" '
+            f'stroke-width="1.5"/></svg>')
+
+
+def _table(rows, key_col=None):
+    """Render a list of dicts as an HTML table.  Numeric columns with ≥ 2
+    distinct rows get a sparkline in the header."""
+    if not rows:
+        return ""
+    cols = list(dict.fromkeys(k for r in rows for k in r))
+    if key_col and key_col in cols:
+        cols.remove(key_col)
+        cols.insert(0, key_col)
+    heads = []
+    for c in cols:
+        vals = [r[c] for r in rows if isinstance(r.get(c), (int, float))
+                and not isinstance(r.get(c), bool)]
+        sp = _spark(vals) if len(vals) == len(rows) >= 2 else ""
+        heads.append(f"<th>{html.escape(c)}{sp}</th>")
+    body = "".join(
+        "<tr>" + "".join(f"<td>{_fmt(r.get(c, ''))}</td>" for c in cols)
+        + "</tr>" for r in rows)
+    return (f"<table><thead><tr>{''.join(heads)}</tr></thead>"
+            f"<tbody>{body}</tbody></table>")
+
+
+def _render_section(name, doc):
+    """One artifact → envelope chips + a table per structured section."""
+    out = [f"<h2>{html.escape(name)}</h2>"]
+    chips = []
+    tables = []
+    for k in sorted(doc):
+        v = doc[k]
+        if isinstance(v, list) and v and all(isinstance(r, dict)
+                                             for r in v):
+            tables.append(f"<h3>{html.escape(k)}</h3>" + _table(v))
+        elif isinstance(v, dict) and v and all(isinstance(r, dict)
+                                               for r in v.values()):
+            rows = [{k + "_key": rk, **rv} for rk, rv in v.items()]
+            tables.append(f"<h3>{html.escape(k)}</h3>"
+                          + _table(rows, key_col=k + "_key"))
+        elif isinstance(v, (str, int, float, bool)):
+            chips.append(f"<span>{html.escape(k)}: {_fmt(v)}</span>")
+    out.append(f'<div class="chips">{"".join(chips)}</div>')
+    out.extend(tables)
+    return "".join(out)
+
+
+def _eval_check(ch, cur, base, tolerance=0.30):
+    """Mirror of check_perf_regression's metric rules, returning
+    (ok, detail) instead of printing."""
+    c = float(cur[ch.metric])
+    if ch.kind == "ceiling_abs":
+        return c <= ch.limit, f"{c:g} ≤ {ch.limit:g}"
+    b = float(base[ch.metric])
+    if ch.kind == "ceiling_rel":
+        return (b <= 0 or c <= b * ch.limit), \
+            f"{c:g} vs {b:g} (ceiling {ch.limit:.2f}×)"
+    tol = tolerance if ch.limit is None else ch.limit
+    if b <= 0:
+        return False, f"baseline {b:g} — no floor"
+    return c / b >= 1.0 - tol, \
+        f"{c:g} vs {b:g} ({c / b:.2f}×, floor {1.0 - tol:.2f}×)"
+
+
+def _gate_summary(cur_dir, base_dir):
+    rows = []
+    for gate in GATES.values():
+        cur_path = os.path.join(cur_dir, gate.artifact)
+        base_path = os.path.join(base_dir, gate.baseline)
+        if not (os.path.exists(cur_path) and os.path.exists(base_path)):
+            continue
+        try:
+            cur_doc = json.load(open(cur_path))
+            base_doc = json.load(open(base_path))
+            cur = gate.point(cur_doc)
+            base = gate.point(base_doc)
+        except SystemExit as e:
+            rows.append({"gate": gate.name, "check": "artifact",
+                         "verdict": "FAIL", "detail": str(e)})
+            continue
+        if cur_doc.get("smoke") != base_doc.get("smoke"):
+            # A full-mode artifact at a smoke baseline's point id is a
+            # different workload scale — relative checks mean nothing.
+            rows.append({"gate": gate.name, "check": "smoke mode",
+                         "verdict": "skip",
+                         "detail": f"artifact smoke={cur_doc.get('smoke')}"
+                                   f" vs baseline smoke="
+                                   f"{base_doc.get('smoke')}"})
+            continue
+        if gate.identity(cur) != gate.identity(base):
+            # Not a verdict: the smoke baselines only gate smoke-mode
+            # artifacts — a full-mode artifact sits at a different point.
+            # CI enforces real identity drift via check_perf_regression.
+            rows.append({"gate": gate.name, "check": "gate-point identity",
+                         "verdict": "skip",
+                         "detail": f"{gate.identity(cur)!r} is not the "
+                                   f"baseline point "
+                                   f"{gate.identity(base)!r} — "
+                                   f"full-mode artifact?"})
+            continue
+        for ch in gate.checks:
+            ok, detail = _eval_check(ch, cur, base)
+            rows.append({"gate": gate.name, "check": ch.metric,
+                         "verdict": "ok" if ok else "FAIL",
+                         "detail": detail})
+    if not rows:
+        return ("<h2>perf gates</h2><p class='note'>no current/baseline "
+                "artifact pairs found — gate summary skipped</p>")
+    body = "".join(
+        f"<tr><td>{html.escape(r['gate'])}</td>"
+        f"<td>{html.escape(r['check'])}</td>"
+        f"<td class=\"{ {'ok': 'ok', 'skip': 'note'}.get(r['verdict'], 'fail') }\">"
+        f"{r['verdict']}</td>"
+        f"<td style='text-align:left'>{html.escape(r['detail'])}</td></tr>"
+        for r in rows)
+    return ("<h2>perf gates</h2><table><thead><tr><th>gate</th>"
+            "<th>check</th><th>verdict</th><th>detail</th></tr></thead>"
+            f"<tbody>{body}</tbody></table>")
+
+
+def build(cur_dir, base_dir, out_path):
+    arts = {}
+    for d in (base_dir, cur_dir):   # fresh artifacts shadow baselines
+        for p in sorted(glob.glob(os.path.join(d, "BENCH_*.json"))):
+            doc = json.load(open(p))
+            arts[doc.get("bench") or os.path.basename(p)] = \
+                (os.path.basename(p), doc)
+    sha = next((doc.get("git_sha") for _, doc in arts.values()
+                if doc.get("git_sha")), "unknown")
+    parts = ["<!doctype html><meta charset='utf-8'>",
+             f"<title>bench dashboard @ {html.escape(sha)}</title>",
+             f"<style>{_CSS}</style>",
+             f"<h1>bench dashboard <span class='note'>git "
+             f"{html.escape(sha)}</span></h1>",
+             _gate_summary(cur_dir, base_dir)]
+    for bench in sorted(arts):
+        fname, doc = arts[bench]
+        parts.append(_render_section(fname, doc))
+    with open(out_path, "w") as f:
+        f.write("".join(parts))
+    print(f"# wrote {out_path} ({len(arts)} artifacts, git {sha})")
+    return len(arts)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default=REPO,
+                    help="directory holding fresh BENCH_*.json artifacts")
+    ap.add_argument("--baselines",
+                    default=os.path.join(REPO, "benchmarks", "baselines"),
+                    help="directory of committed smoke baselines")
+    ap.add_argument("--out", default="dashboard.html")
+    args = ap.parse_args(argv)
+    n = build(args.dir, args.baselines, args.out)
+    return 0 if n else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -25,7 +25,8 @@ REPO = Path(__file__).resolve().parent.parent
 
 DEFAULT_FILES = ["README.md", "docs/ARCHITECTURE.md", "docs/STUDIES.md",
                  "docs/SWEEPS.md", "docs/SCENARIOS.md", "docs/SCALING.md",
-                 "docs/DAGS.md", "ROADMAP.md", "CHANGES.md", "PAPER.md"]
+                 "docs/DAGS.md", "docs/OBSERVABILITY.md", "ROADMAP.md",
+                 "CHANGES.md", "PAPER.md"]
 
 
 def github_slugs(md_path: Path) -> set:

@@ -1,41 +1,36 @@
 #!/usr/bin/env python
-"""CI perf-regression gates for the scheduling hot path and the failure
-layer.
+"""CI perf-regression gates for the scheduling hot path, the failure
+layer, the task-graph wave loop, and decision-trace observability.
 
-Default mode compares a freshly-written smoke-mode ``BENCH_scale.json``
-against the committed baseline (``benchmarks/baselines/
-BENCH_scale_smoke.json``) and fails if decisions/s at the **largest smoke
-point** — the sharded n = 10³ probe, the planner path ISSUE 6 exists to
-protect — dropped more than ``--tolerance`` (default 30%, sized for
-shared-runner noise; real planner regressions are integer factors, not
-percentages).
+One declarative gate table (:data:`GATES`) drives every mode: a gate
+names the smoke artifact it reads, the committed baseline it compares
+against, how to locate its gate point, and the metric checks to apply.
+Adding a gate is one table entry, not a new ``check_*`` function.
 
-    python tools/check_perf_regression.py [BENCH_scale.json]
-        [--baseline benchmarks/baselines/BENCH_scale_smoke.json]
-        [--tolerance 0.30]
+Modes (mutually exclusive; default is the scale gate):
 
-``--faults`` switches the artifact schema to ``BENCH_faults.json`` and
-gates **goodput under failure** instead: the densest-outage ×
-default-retry point named by the artifact's ``gate_point`` must keep its
-completed-first-attempt throughput within ``--tolerance`` of the
-committed ``BENCH_faults_smoke.json`` baseline — a scheduling change that
-recovers from kills 30% slower is a robustness regression even when the
-healthy-path numbers hold.
+* *(default)* — compares a freshly-written smoke-mode ``BENCH_scale.json``
+  against ``benchmarks/baselines/BENCH_scale_smoke.json`` at the
+  **largest smoke point** (the sharded n = 10³ probe): decisions/s may
+  not drop more than ``--tolerance`` (default 30%, sized for
+  shared-runner noise; real planner regressions are integer factors).
+* ``--faults`` — gates **goodput under failure** in ``BENCH_faults.json``
+  at the artifact's ``gate_point``: completed-first-attempt throughput
+  within ``--tolerance`` of the committed baseline.
+* ``--dags`` — gates the task-graph wave loop in ``BENCH_dags.json``:
+  decisions/s within ``--tolerance`` AND bytes moved across servers
+  grown at most 10% — forfeiting locality is a regression even when it
+  is not slower.
+* ``--obs`` — gates decision-trace overhead in ``BENCH_obs.json``: at
+  the gate point, a traced run (``EngineConfig(trace=True)``) must stay
+  within an **absolute 1.15×** of the untraced run (the telemetry's
+  whole price), and traced decisions/s within ``--tolerance`` of the
+  committed ``BENCH_obs_smoke.json`` baseline.
 
-    python tools/check_perf_regression.py BENCH_faults.json --faults
-        [--baseline benchmarks/baselines/BENCH_faults_smoke.json]
+    python tools/check_perf_regression.py [ARTIFACT] [--faults|--dags|
+        --obs] [--baseline PATH] [--tolerance 0.30]
 
-``--dags`` gates the task-graph wave loop in ``BENCH_dags.json``: at the
-artifact's ``gate_point`` (fan-out × γ=0), decisions/s through the
-frontier loop must stay within ``--tolerance`` of the committed
-``BENCH_dags_smoke.json`` baseline, and bytes moved across servers must
-not grow more than 10% — a placement change that silently forfeits
-locality is a regression even when it is not slower.
-
-    python tools/check_perf_regression.py BENCH_dags.json --dags
-        [--baseline benchmarks/baselines/BENCH_dags_smoke.json]
-
-Largest/gate point: smoke and baseline must agree on its identity, so
+Gate-point identity: smoke and baseline must agree on the gate point, so
 shrinking the smoke grid without refreshing the baseline is itself an
 error.  Faster-than-baseline never fails; refresh the baseline (copy the
 new smoke artifact) when a speedup should become the new floor.
@@ -46,6 +41,7 @@ import argparse
 import json
 import os
 import sys
+from typing import Callable, NamedTuple, Optional
 
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
@@ -58,121 +54,143 @@ def largest_point(doc: dict) -> dict:
                                    p["m"]))
 
 
-def point_id(p: dict) -> tuple:
-    return (p["n"], p["m"], p["b"], p.get("server_shards") or 1)
-
-
-def gate_point(doc: dict, points_key: str = "fault_points") -> dict:
+def declared_gate_point(points_key: str) -> Callable[[dict], dict]:
     """An artifact's self-declared gate cell (``gate_point`` id looked up
-    in its points list)."""
-    gid = doc.get("gate_point")
-    pts = doc.get(points_key) or []
-    if not gid or not pts:
-        raise SystemExit(f"no gate_point/{points_key} in artifact")
-    for p in pts:
-        if p.get("id") == gid:
-            return p
-    raise SystemExit(f"gate point {gid!r} missing from {points_key}")
+    in its ``points_key`` list)."""
+    def pick(doc: dict) -> dict:
+        gid = doc.get("gate_point")
+        pts = doc.get(points_key) or []
+        if not gid or not pts:
+            raise SystemExit(f"no gate_point/{points_key} in artifact")
+        for p in pts:
+            if p.get("id") == gid:
+                return p
+        raise SystemExit(f"gate point {gid!r} missing from {points_key}")
+    return pick
 
 
-def check_scale(args) -> int:
-    cur = largest_point(json.load(open(args.current)))
-    base = largest_point(json.load(open(args.baseline)))
-    if point_id(cur) != point_id(base):
-        print(f"FAIL: largest smoke point changed — current {point_id(cur)}"
-              f" vs baseline {point_id(base)}; refresh "
-              f"{os.path.relpath(args.baseline, REPO)} alongside the grid")
+class Check(NamedTuple):
+    """One metric rule at the gate point.
+
+    kind:
+        ``floor_rel``   — cur/base ≥ 1 − tolerance (regression floor);
+        ``ceiling_rel`` — cur ≤ base · limit (growth ceiling);
+        ``ceiling_abs`` — cur ≤ limit, baseline ignored (hard ceiling).
+    ``limit`` is the multiplier/threshold; ``None`` on a floor_rel means
+    "use ``--tolerance``".
+    """
+    metric: str
+    kind: str
+    limit: Optional[float] = None
+
+
+class Gate(NamedTuple):
+    name: str
+    artifact: str            # default current-artifact filename
+    baseline: str            # committed baseline under benchmarks/baselines
+    point: Callable[[dict], dict]
+    identity: Callable[[dict], object]   # gate-point identity for drift
+    checks: tuple
+
+
+#: The gate table — every CI perf gate, declaratively.
+GATES = {
+    "scale": Gate(
+        name="scale", artifact="BENCH_scale.json",
+        baseline="BENCH_scale_smoke.json", point=largest_point,
+        identity=lambda p: (p["n"], p["m"], p["b"],
+                            p.get("server_shards") or 1),
+        checks=(Check("decisions_per_s", "floor_rel"),)),
+    "faults": Gate(
+        name="faults", artifact="BENCH_faults.json",
+        baseline="BENCH_faults_smoke.json",
+        point=declared_gate_point("fault_points"),
+        identity=lambda p: p["id"],
+        checks=(Check("goodput_tps", "floor_rel"),)),
+    "dags": Gate(
+        name="dags", artifact="BENCH_dags.json",
+        baseline="BENCH_dags_smoke.json",
+        point=declared_gate_point("dag_points"),
+        identity=lambda p: p["id"],
+        checks=(Check("decisions_per_s", "floor_rel"),
+                # bytes moved may only grow 10%: a placement drift that
+                # forfeits locality is a regression independent of speed.
+                Check("bytes_moved_mb", "ceiling_rel", 1.10))),
+    "obs": Gate(
+        name="obs", artifact="BENCH_obs.json",
+        baseline="BENCH_obs_smoke.json",
+        point=declared_gate_point("obs_points"),
+        identity=lambda p: p["id"],
+        checks=(
+            # The whole price of always-on telemetry: trace=True within
+            # an absolute 1.15× of trace=False at the gate point.
+            Check("overhead_ratio", "ceiling_abs", 1.15),
+            Check("decisions_per_s", "floor_rel"))),
+}
+
+
+def run_checks(gate: Gate, cur: dict, base: dict, tolerance: float,
+               baseline_path: str) -> int:
+    if gate.identity(cur) != gate.identity(base):
+        print(f"FAIL: {gate.name} gate point changed — current "
+              f"{gate.identity(cur)!r} vs baseline {gate.identity(base)!r};"
+              f" refresh {os.path.relpath(baseline_path, REPO)} alongside"
+              f" the grid")
         return 1
-    ratio = cur["decisions_per_s"] / base["decisions_per_s"]
-    verdict = "ok" if ratio >= 1.0 - args.tolerance else "FAIL"
-    print(f"{verdict}: largest smoke point n={cur['n']} "
-          f"shards={cur.get('server_shards') or 1} m={cur['m']}: "
-          f"{cur['decisions_per_s']} vs baseline "
-          f"{base['decisions_per_s']} decisions/s "
-          f"({ratio:.2f}x, floor {1.0 - args.tolerance:.2f}x)")
-    return 0 if verdict == "ok" else 1
-
-
-def check_faults(args) -> int:
-    cur_doc = json.load(open(args.current))
-    base_doc = json.load(open(args.baseline))
-    cur, base = gate_point(cur_doc), gate_point(base_doc)
-    if cur["id"] != base["id"]:
-        print(f"FAIL: fault gate point changed — current {cur['id']!r} vs "
-              f"baseline {base['id']!r}; refresh "
-              f"{os.path.relpath(args.baseline, REPO)} alongside the grid")
-        return 1
-    if base["goodput_tps"] <= 0:
-        print(f"FAIL: baseline goodput at {base['id']!r} is "
-              f"{base['goodput_tps']} — gate has no floor; regenerate the "
-              f"baseline")
-        return 1
-    ratio = cur["goodput_tps"] / base["goodput_tps"]
-    verdict = "ok" if ratio >= 1.0 - args.tolerance else "FAIL"
-    print(f"{verdict}: fault gate {cur['id']}: goodput "
-          f"{cur['goodput_tps']} vs baseline {base['goodput_tps']} tps "
-          f"({ratio:.2f}x, floor {1.0 - args.tolerance:.2f}x); "
-          f"retries/task {cur['retries_per_task']} "
-          f"(baseline {base['retries_per_task']})")
-    return 0 if verdict == "ok" else 1
-
-
-def check_dags(args) -> int:
-    cur_doc = json.load(open(args.current))
-    base_doc = json.load(open(args.baseline))
-    cur = gate_point(cur_doc, "dag_points")
-    base = gate_point(base_doc, "dag_points")
-    if cur["id"] != base["id"]:
-        print(f"FAIL: dag gate point changed — current {cur['id']!r} vs "
-              f"baseline {base['id']!r}; refresh "
-              f"{os.path.relpath(args.baseline, REPO)} alongside the grid")
-        return 1
-    if base["decisions_per_s"] <= 0:
-        print(f"FAIL: baseline decisions/s at {base['id']!r} is "
-              f"{base['decisions_per_s']} — gate has no floor; regenerate "
-              f"the baseline")
-        return 1
-    ratio = cur["decisions_per_s"] / base["decisions_per_s"]
-    speed_ok = ratio >= 1.0 - args.tolerance
-    # Bytes moved may only grow 10%: a placement drift that forfeits
-    # locality is a regression independent of wall-clock.
-    bytes_ok = (base["bytes_moved_mb"] <= 0
-                or cur["bytes_moved_mb"] <= base["bytes_moved_mb"] * 1.10)
-    verdict = "ok" if speed_ok and bytes_ok else "FAIL"
-    print(f"{verdict}: dag gate {cur['id']}: "
-          f"{cur['decisions_per_s']} vs baseline "
-          f"{base['decisions_per_s']} decisions/s "
-          f"({ratio:.2f}x, floor {1.0 - args.tolerance:.2f}x); "
-          f"bytes moved {cur['bytes_moved_mb']} MB "
-          f"(baseline {base['bytes_moved_mb']}, ceiling 1.10x)")
-    return 0 if verdict == "ok" else 1
+    failures = 0
+    for ch in gate.checks:
+        c = float(cur[ch.metric])
+        if ch.kind == "ceiling_abs":
+            ok = c <= ch.limit
+            detail = f"{c} (hard ceiling {ch.limit})"
+        elif ch.kind == "ceiling_rel":
+            b = float(base[ch.metric])
+            ok = b <= 0 or c <= b * ch.limit
+            detail = f"{c} vs baseline {b} (ceiling {ch.limit:.2f}x)"
+        elif ch.kind == "floor_rel":
+            b = float(base[ch.metric])
+            if b <= 0:
+                print(f"FAIL: {gate.name}:{ch.metric} baseline is {b} — "
+                      f"gate has no floor; regenerate the baseline")
+                failures += 1
+                continue
+            tol = tolerance if ch.limit is None else ch.limit
+            ok = c / b >= 1.0 - tol
+            detail = (f"{c} vs baseline {b} ({c / b:.2f}x, floor "
+                      f"{1.0 - tol:.2f}x)")
+        else:  # pragma: no cover - table typo guard
+            raise SystemExit(f"unknown check kind {ch.kind!r}")
+        print(f"{'ok' if ok else 'FAIL'}: {gate.name} gate "
+              f"[{gate.identity(cur)}] {ch.metric}: {detail}")
+        failures += 0 if ok else 1
+    return 1 if failures else 0
 
 
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
-    ap.add_argument("current", nargs="?", default="BENCH_scale.json",
-                    help="freshly-written smoke artifact")
+    ap.add_argument("current", nargs="?", default=None,
+                    help="freshly-written smoke artifact (defaults to the "
+                         "gate's artifact name)")
     ap.add_argument("--baseline", default=None,
                     help="committed smoke baseline (defaults per mode)")
     ap.add_argument("--tolerance", type=float, default=0.30,
-                    help="max allowed fractional drop in the gated metric")
-    ap.add_argument("--faults", action="store_true",
-                    help="gate goodput in a BENCH_faults.json artifact "
-                         "instead of scale-sweep decisions/s")
-    ap.add_argument("--dags", action="store_true",
-                    help="gate wave-loop decisions/s + bytes moved in a "
-                         "BENCH_dags.json artifact")
+                    help="max allowed fractional drop in floor_rel metrics")
+    for g in ("faults", "dags", "obs"):
+        ap.add_argument(f"--{g}", action="store_true",
+                        help=f"run the {g!r} gate from the table instead "
+                             f"of the scale gate")
     args = ap.parse_args(argv)
-    if args.faults and args.dags:
-        raise SystemExit("--faults and --dags are mutually exclusive")
-    if args.baseline is None:
-        name = ("BENCH_faults_smoke.json" if args.faults
-                else "BENCH_dags_smoke.json" if args.dags
-                else "BENCH_scale_smoke.json")
-        args.baseline = os.path.join(REPO, "benchmarks", "baselines", name)
-    if args.dags:
-        return check_dags(args)
-    return check_faults(args) if args.faults else check_scale(args)
+    picked = [g for g in ("faults", "dags", "obs") if getattr(args, g)]
+    if len(picked) > 1:
+        raise SystemExit(f"--{picked[0]} and --{picked[1]} are mutually "
+                         f"exclusive")
+    gate = GATES[picked[0] if picked else "scale"]
+    current = args.current or gate.artifact
+    baseline = args.baseline or os.path.join(REPO, "benchmarks",
+                                             "baselines", gate.baseline)
+    cur = gate.point(json.load(open(current)))
+    base = gate.point(json.load(open(baseline)))
+    return run_checks(gate, cur, base, args.tolerance, baseline)
 
 
 if __name__ == "__main__":
