@@ -26,8 +26,9 @@ import numpy as np
 
 from benchmarks.common import write_bench_json
 from repro.core import DodoorParams, SchedulerView, dodoor_select, task_key
-from repro.kernels.dodoor_choice import (dodoor_choice, dodoor_choice_ref,
-                                         dodoor_fused, dodoor_fused_ref)
+from repro.kernels.dodoor_choice import (autotune_block_t, dodoor_choice,
+                                         dodoor_choice_ref, dodoor_fused,
+                                         dodoor_fused_ref)
 from repro.kernels.rl_score import rl_score_matrix, rl_score_matrix_ref
 
 ENGINE_POLICIES = ("dodoor", "random", "pot", "prequal")
@@ -150,14 +151,29 @@ def bench_hotpath(T: int = 2048, N: int = 100, reps: int = 7):
     return out
 
 
+def bench_block_t_autotune(T: int, N: int, reps: int = 3) -> dict:
+    """Sweep megakernel tile sizes at the bench gate point's batch shape
+    and report the winner + full curve (persisted so tile-choice
+    regressions show up in the BENCH_engine.json diff)."""
+    tuned = autotune_block_t(T, N, reps=reps)
+    print("bench,block_t,effective_block_t,ms")
+    for row in tuned["curve"]:
+        print(f"block_t,{row['block_t']},{row['effective_block_t']},"
+              f"{row['ms']:.3f}")
+    print(f"# best block_t at (T={T}, N={N}): {tuned['best_block_t']} "
+          f"({tuned['best_ms']:.3f} ms)", flush=True)
+    return tuned
+
+
 def write_json(path: str, kernels: dict, engine_rows: dict,
-               trace: dict) -> None:
+               trace: dict, block_t_autotune: dict | None = None) -> None:
     """Persist machine-readable perf results (per-policy seq/batched ms,
     speedup, decisions/s) for cross-PR tracking, through the shared
     envelope writer."""
     write_bench_json(path, {
         "trace": trace,
         "kernels_decisions_per_s": {k: round(v) for k, v in kernels.items()},
+        "block_t_autotune": block_t_autotune or {},
         "engine": {
             policy: {
                 "rows": rows,
@@ -179,6 +195,9 @@ def main(T: int = 2048, N: int = 100, *, smoke: bool = False,
 
     kernels = bench_hotpath(T, N, reps=reps)
 
+    # megakernel tile sweep at the same gate-point shape
+    tuned = bench_block_t_autotune(T, N, reps=min(reps, 3))
+
     # end-to-end engine: batched decision blocks vs the sequential oracle,
     # every policy on the batched path (PoT speculative commit, Prequal
     # segment scan included)
@@ -191,7 +210,8 @@ def main(T: int = 2048, N: int = 100, *, smoke: bool = False,
     if json_path:
         write_json(json_path, kernels, engine_rows,
                    {"name": "fb_small" if not smoke else "fb_smoke",
-                    "m": m, "qps": 60.0, "T": T, "N": N})
+                    "m": m, "qps": 60.0, "T": T, "N": N},
+                   block_t_autotune=tuned)
     return engine_rows
 
 

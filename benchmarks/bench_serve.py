@@ -1,0 +1,151 @@
+"""Streaming decision-service benchmark — per-decision and per-step
+latency of the donated-buffer step engine, persisted to
+``BENCH_serve.json``.
+
+Three sections:
+
+* **serve grid** — policy × block size ``b`` × loop discipline.  Each
+  point streams the trace through :func:`repro.serve.serve_workload` and
+  reports the per-decision (enqueue→placement) and per-step wall-clock
+  latency summaries (p50/p95/p99) plus steady-state decisions/s.  The
+  **closed loop** drains every block as it forms (per-decision latency ≈
+  one step); the **open loop** submits the whole trace first, so later
+  tasks queue behind earlier blocks and the decision-latency tail grows
+  with queue depth — placements are bit-identical either way (pinned by
+  ``tests/test_serve.py``), only the clocks differ.
+* **gate repeats** — the gate point re-run ``repeats`` times; the gated
+  statistic is the **best (minimum) per-run step p99**.  This is a
+  ceiling gate on a shared CI runner and contention is one-sided: a
+  preemption window inflates one run's tail but never deflates it, so
+  min-of-runs tracks the contention-free p99 (the same reasoning as the
+  lower-quartile ratio in ``bench_obs._time_pair``) while a real
+  regression — extra recompiles, a lost donation, host copies on the hot
+  path — shifts every run, minimum included.
+* **latency histograms** — log-spaced decision + step histograms at the
+  gate point (the dashboard's latency panel renders these).
+
+The per-step p99 is the PR's gated artifact: steady-state steps reuse
+one compiled program with donated carry buffers, so the tail should sit
+a small factor above the median — recompiles or fresh allocations show
+up as a p99 cliff long before they move the mean.
+
+    PYTHONPATH=src python -m benchmarks.bench_serve [--smoke] [--json PATH]
+"""
+from __future__ import annotations
+
+import argparse
+
+import numpy as np
+
+from benchmarks.common import write_bench_json
+from repro.serve import serve_workload
+from repro.sim import EngineConfig, make_testbed
+from repro.workloads import functionbench as fb
+
+POLICIES = ("random", "pot", "dodoor", "prequal", "one_plus_beta")
+GATE_POLICY, GATE_B = "dodoor", 50
+
+
+def point_id(policy: str, b: int, loop: str, n: int, m: int) -> str:
+    return f"serve/{policy}/b{b}/{loop}/n{n}/m{m}"
+
+
+def run_point(wl, cluster, policy: str, b: int, *, open_loop: bool,
+              seed: int = 0) -> dict:
+    """Stream the trace once and summarize both latency recorders.
+
+    A throwaway warmup run over the first two blocks populates the
+    shared compile cache first, so the measured run is steady-state
+    wall clock — compile time would otherwise land in the first step's
+    sample and dominate the p99 this benchmark gates."""
+    m = wl.r_submit.shape[0]
+    serve_workload(fb.synthesize(m=min(m, 2 * b), qps=60.0, seed=seed),
+                   cluster, EngineConfig(policy=policy, b=b), seed=seed)
+    svc, _ = serve_workload(wl, cluster, EngineConfig(policy=policy, b=b),
+                            seed=seed, open_loop=open_loop,
+                            publish_snapshots=True)
+    dec = svc.decision_latency.summary()
+    step = svc.step_wall.summary()
+    wall_s = float(np.sum(svc.step_wall.samples())) * 1e-3
+    return dict(
+        id=point_id(policy, b, "open" if open_loop else "closed",
+                    cluster.num_servers, m),
+        policy=policy, b=b, loop="open" if open_loop else "closed",
+        n=cluster.num_servers, m=m, steps=step.get("count", 0),
+        decisions_per_s=round(m / wall_s, 1),
+        decision=dec, step=step)
+
+
+def main(m: int = 3000, qps: float = 60.0, scale: float = 0.2,
+         repeats: int = 5, smoke: bool = False,
+         json_path: str | None = "BENCH_serve.json"):
+    if smoke:        # CI-sized: gate policy only, two block sizes
+        m, policies, bs = 600, (GATE_POLICY,), (25, GATE_B)
+    else:
+        policies, bs = POLICIES, (25, 50, 100)
+    cluster = make_testbed(scale=scale)
+    n = cluster.num_servers
+    wl = fb.synthesize(m=m, qps=qps, seed=0)
+
+    # -- serve grid: policy × b × loop discipline -------------------------
+    points = []
+    print("bench,point,decision_p50_ms,decision_p99_ms,step_p50_ms,"
+          "step_p99_ms,decisions_per_s")
+    for policy in policies:
+        for b in bs:
+            for open_loop in (False, True):
+                row = run_point(wl, cluster, policy, b, open_loop=open_loop)
+                points.append(row)
+                print(f"serve,{row['id']},{row['decision']['p50_ms']},"
+                      f"{row['decision']['p99_ms']},{row['step']['p50_ms']},"
+                      f"{row['step']['p99_ms']},{row['decisions_per_s']}",
+                      flush=True)
+
+    # -- gate repeats: best-of-runs step p99 at the gate point ------------
+    gid = point_id(GATE_POLICY, GATE_B, "closed", n, m)
+    gate_row = next(p for p in points if p["id"] == gid)
+    p99_runs = [gate_row["step"]["p99_ms"]]
+    dps_runs = [gate_row["decisions_per_s"]]
+    hist_svc = None
+    for k in range(repeats - 1):
+        svc, _ = serve_workload(wl, cluster,
+                                EngineConfig(policy=GATE_POLICY, b=GATE_B),
+                                seed=0)
+        p99_runs.append(svc.step_wall.summary()["p99_ms"])
+        dps_runs.append(round(
+            m / (float(np.sum(svc.step_wall.samples())) * 1e-3), 1))
+        hist_svc = svc
+    gate_row["step_p99_ms_best"] = min(p99_runs)
+    gate_row["decisions_per_s"] = max(dps_runs)
+    print(f"# gate point {gid}: step p99 best-of-{repeats} = "
+          f"{gate_row['step_p99_ms_best']} ms "
+          f"(runs: {sorted(p99_runs)})", flush=True)
+
+    # -- latency histograms at the gate point (dashboard panel) -----------
+    hist_svc = hist_svc or serve_workload(
+        wl, cluster, EngineConfig(policy=GATE_POLICY, b=GATE_B), seed=0)[0]
+    histograms = {"decision": hist_svc.decision_latency.histogram(),
+                  "step": hist_svc.step_wall.histogram()}
+
+    if json_path:
+        payload = dict(
+            smoke=smoke, n=n, m=m, qps=qps,
+            gate_point=gid,
+            gate_repeats=dict(repeats=repeats,
+                              step_p99_ms_runs=sorted(p99_runs),
+                              step_p99_ms_best=gate_row["step_p99_ms_best"]),
+            serve_points=points,
+            latency_histograms=histograms,
+        )
+        write_bench_json(json_path, payload, bench="serve")
+    return gate_row
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized: m=600, gate policy only")
+    ap.add_argument("--json", default="BENCH_serve.json",
+                    help="results file ('' disables)")
+    args = ap.parse_args()
+    main(smoke=args.smoke, json_path=args.json or None)

@@ -50,6 +50,8 @@ def main():
                     help="task-graph results file ('' disables)")
     ap.add_argument("--json-obs", default="BENCH_obs.json",
                     help="observability results file ('' disables)")
+    ap.add_argument("--json-serve", default="BENCH_serve.json",
+                    help="streaming-service results file ('' disables)")
     args = ap.parse_args()
     q = args.quick
 
@@ -57,7 +59,7 @@ def main():
                    bench_functionbench, bench_gap, bench_kernels,
                    bench_obs, bench_reliability, bench_roofline,
                    bench_router, bench_scenarios, bench_sensitivity,
-                   bench_study)
+                   bench_serve, bench_study)
 
     sections = [
         ("Fig 3/4/5 — Azure VM placement (§6.2)",
@@ -97,6 +99,9 @@ def main():
         ("Observability — trace overhead, §3.2 staleness, message ledger",
          lambda: bench_obs.main(smoke=q,
                                 json_path=args.json_obs or None)),
+        ("Streaming service — per-decision/step latency, donated steps",
+         lambda: bench_serve.main(smoke=q,
+                                  json_path=args.json_serve or None)),
         ("§Roofline — fused-kernel bytes-touched model vs measurement",
          lambda: bench_roofline.main(smoke=q)),
     ]

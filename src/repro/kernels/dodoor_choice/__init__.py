@@ -1,7 +1,8 @@
 from .ops import dodoor_choice, dodoor_fused, dodoor_fused_sparse
 from .ref import (dodoor_choice_ref, dodoor_fused_ref,
                   dodoor_fused_sparse_ref)
+from .tune import autotune_block_t
 
 __all__ = ["dodoor_choice", "dodoor_fused", "dodoor_fused_sparse",
            "dodoor_choice_ref", "dodoor_fused_ref",
-           "dodoor_fused_sparse_ref"]
+           "dodoor_fused_sparse_ref", "autotune_block_t"]

@@ -1,0 +1,18 @@
+"""repro.serve — the streaming decision service.
+
+Everything else in the repo replays a pre-materialized arrival plane
+offline; this package is the online mode: arrival chunks flow through a
+host-side ring buffer, are re-blocked into ``b``-task decision blocks,
+and drive one compiled donated-buffer step per block.  The step is the
+factored-out single-block body of the batched scan
+(``repro.sim.engine._make_block_step``), so replaying the same arrival
+plane through the service is bit-exact with ``simulate(mode="batched")``
+for every policy — the offline engine is the online engine's
+correctness oracle.  See ``docs/SERVING.md``.
+"""
+from .latency import LatencyRecorder
+from .ring import ArrivalRing
+from .service import DecisionService, serve_workload
+
+__all__ = ["ArrivalRing", "DecisionService", "LatencyRecorder",
+           "serve_workload"]

@@ -1145,33 +1145,22 @@ def _commit_rounds(carry: _Carry, valid, now, j, cores, mem_mb, dur_raw,
     return carry, outs
 
 
-@partial(jax.jit, static_argnames=("cfg", "n", "num_types", "use_kernel",
-                                   "kernel_masked", "cache_faulted",
-                                   "return_carry", "locality"))
-def _simulate_batched_jax(xs, C, node_type, mem_unit, cores_per, dyn_vec,
-                          dyn_ints, win, cfg: EngineConfig, n: int,
-                          num_types: int, seed: int, use_kernel: bool,
-                          kernel_masked: bool = False,
-                          cache_faulted: bool = False, carry0=None,
-                          return_carry: bool = False, locality: bool = False):
-    """The block scan. xs fields are [nb, b, ...]: global index, r_sub,
-    r_exec, d_est, d_act, submit, task_id, valid — plus (psrv [nb, b, P],
-    pbytes [nb, b, P]) when ``locality`` (DAG waves under a LocalityModel;
-    static, the extra leaves shape the scan).
+def _make_block_step(C, node_type, mem_unit, cores_per, dyn_vec, dyn_ints,
+                     win, base_key, cfg: EngineConfig, n: int,
+                     use_kernel: bool, kernel_masked: bool = False,
+                     cache_faulted: bool = False, locality: bool = False):
+    """Build the single-block decision body ``block_step(carry, blk) →
+    (carry, out)`` — the unit the batched scan iterates, and the step the
+    streaming :class:`repro.serve.DecisionService` drives one compiled
+    call at a time (jitted with the carry donated).
 
-    ``kernel_masked`` selects the megakernel's masked-sampling program
-    (the avail plane streamed into the in-kernel prefilter).  It is a
-    static knob derived from the Dynamics *spec* — window pad widths are
-    always ≥ 1, so the operand shapes cannot reveal whether down windows
-    exist — and stays False on dynamics-free runs so they keep the
-    cheaper unmasked program.  With an all-true mask both programs draw
-    identically, so the flag never changes results.
-
-    ``cfg.retry`` (static presence) compiles the kill/rejection paths and
-    widens the per-task outputs with killed/rejected planes;
-    ``cache_faulted`` switches the store views per-scheduler;
-    ``carry0``/``return_carry`` serve the retry wave loop exactly as in
-    :func:`_simulate_jax`."""
+    The returned closure is exactly the scan body of
+    :func:`_simulate_batched_jax` — same operands, same arithmetic — so
+    driving it block-by-block over the same ``[nb, b, …]`` plane is
+    bit-exact with the offline scan: the offline engine is the
+    correctness oracle for the online one.  ``base_key`` is the
+    ``jax.random.PRNGKey(seed)`` each task's decision key folds into.
+    """
     dyn = _Dyn(*dyn_vec)
     fe_dyn = dyn_ints[1]                 # flush cadence is traced; b shapes
     S = cfg.num_schedulers               # the blocks and stays static
@@ -1180,10 +1169,6 @@ def _simulate_batched_jax(xs, C, node_type, mem_unit, cores_per, dyn_vec,
     retry = cfg.retry is not None
     orows = 9 if retry else 7
     trace = cfg.trace
-    base_key = jax.random.PRNGKey(seed)
-
-    if carry0 is None:
-        carry0 = _init_carry(cfg, n, cores_per, cache_faulted)
 
     def block_step(carry: _Carry, blk):
         if locality:
@@ -1558,6 +1543,43 @@ def _simulate_batched_jax(xs, C, node_type, mem_unit, cores_per, dyn_vec,
                 out = out + (z,) * 7
         return carry, out
 
+    return block_step
+
+
+@partial(jax.jit, static_argnames=("cfg", "n", "num_types", "use_kernel",
+                                   "kernel_masked", "cache_faulted",
+                                   "return_carry", "locality"))
+def _simulate_batched_jax(xs, C, node_type, mem_unit, cores_per, dyn_vec,
+                          dyn_ints, win, cfg: EngineConfig, n: int,
+                          num_types: int, seed: int, use_kernel: bool,
+                          kernel_masked: bool = False,
+                          cache_faulted: bool = False, carry0=None,
+                          return_carry: bool = False, locality: bool = False):
+    """The block scan. xs fields are [nb, b, ...]: global index, r_sub,
+    r_exec, d_est, d_act, submit, task_id, valid — plus (psrv [nb, b, P],
+    pbytes [nb, b, P]) when ``locality`` (DAG waves under a LocalityModel;
+    static, the extra leaves shape the scan).
+
+    ``kernel_masked`` selects the megakernel's masked-sampling program
+    (the avail plane streamed into the in-kernel prefilter).  It is a
+    static knob derived from the Dynamics *spec* — window pad widths are
+    always ≥ 1, so the operand shapes cannot reveal whether down windows
+    exist — and stays False on dynamics-free runs so they keep the
+    cheaper unmasked program.  With an all-true mask both programs draw
+    identically, so the flag never changes results.
+
+    ``cfg.retry`` (static presence) compiles the kill/rejection paths and
+    widens the per-task outputs with killed/rejected planes;
+    ``cache_faulted`` switches the store views per-scheduler;
+    ``carry0``/``return_carry`` serve the retry wave loop exactly as in
+    :func:`_simulate_jax`.  The scan body comes from
+    :func:`_make_block_step` — shared with the streaming service."""
+    if carry0 is None:
+        carry0 = _init_carry(cfg, n, cores_per, cache_faulted)
+    block_step = _make_block_step(
+        C, node_type, mem_unit, cores_per, dyn_vec, dyn_ints, win,
+        jax.random.PRNGKey(seed), cfg, n, use_kernel, kernel_masked,
+        cache_faulted, locality)
     carry, outs = jax.lax.scan(block_step, carry0, xs)
     if return_carry:
         return carry, outs

@@ -54,7 +54,7 @@ import numpy as np
 
 from .cluster import ClusterSpec
 from .decision_trace import finish_trace
-from .engine import (EngineConfig, SimResult, _blocked_inputs,
+from .engine import (CacheFaults, EngineConfig, SimResult, _blocked_inputs,
                      _cluster_arrays, _lower_dynamics, _make_dyn,
                      _make_dyn_ints, _simulate_batched_jax, _static_cfg,
                      _validate_config, resolve_use_kernel, simulate)
@@ -372,16 +372,22 @@ def run_study(base, cluster: ClusterSpec, study: Study, *,
     use_kernel = resolve_use_kernel(use_kernel, configs[0].interpret)
 
     # Cache-faultedness is program-shaping on the *scenario* axis (the
-    # cached-view planes grow a scheduler axis), so the grid requires the
-    # scenarios to agree — mirroring the config-axis knob rule.
+    # cached-view planes grow a scheduler axis), so the grid needs the
+    # scenarios to agree — mirroring the config-axis knob rule.  A mixed
+    # axis is auto-normalized: unfaulted scenarios are padded with an
+    # inert ``CacheFaults()`` (loss_rate=0.0 — pinned bit-identical to
+    # the unfaulted engine), so the all-faulted program serves every
+    # point with per-point results unchanged.  The shapes always align
+    # after padding; the genuinely-unalignable case on this axis is two
+    # *distinct* fault specs inside one merged Dynamics, which
+    # ``Dynamics.merge`` still rejects.
     faulted_axis = [sc.dynamics.cache_faults is not None for sc in scenarios]
     cache_faulted = any(faulted_axis)
     if cache_faulted and not all(faulted_axis):
-        raise ValueError(
-            "study scenarios must agree on cache-faultedness (the "
-            "CacheFaults spec switches the cached-view operand shapes — "
-            "program-shaping); split the study, or give every scenario a "
-            "CacheFaults (loss_rate=0.0 is inert).")
+        scenarios = tuple(
+            sc if f else sc._replace(
+                dynamics=sc.dynamics._replace(cache_faults=CacheFaults()))
+            for sc, f in zip(scenarios, faulted_axis))
     if cache_faulted:
         use_kernel = False     # the megakernel reads only the shared view
 

@@ -11,8 +11,8 @@ REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 def test_required_docs_exist():
     for f in ("README.md", "docs/ARCHITECTURE.md", "docs/STUDIES.md",
               "docs/SWEEPS.md", "docs/SCENARIOS.md", "docs/SCALING.md",
-              "docs/DAGS.md", "docs/OBSERVABILITY.md", "ROADMAP.md",
-              "CHANGES.md"):
+              "docs/DAGS.md", "docs/OBSERVABILITY.md", "docs/SERVING.md",
+              "ROADMAP.md", "CHANGES.md"):
         assert os.path.exists(os.path.join(REPO, f)), f
 
 
@@ -124,6 +124,31 @@ def test_observability_doc_api_matches_code():
     assert out.returncode == 0, out.stdout + out.stderr
 
 
+def test_serving_doc_api_matches_code():
+    """Every symbol SERVING.md leans on actually exists: the
+    ``repro.serve`` surface, the documented service methods, and the
+    autotune helper the kernel bench persists."""
+    import inspect
+
+    from repro import serve
+    text = open(os.path.join(REPO, "docs", "SERVING.md"),
+                encoding="utf-8").read()
+    for name in ("DecisionService", "ArrivalRing", "LatencyRecorder",
+                 "serve_workload"):
+        assert name in text, name
+        assert hasattr(serve, name), name
+    for meth in ("submit", "submit_workload", "step", "drain", "flush",
+                 "result", "snapshot", "latency_summary",
+                 "export_checkpoint", "from_checkpoint", "compiles"):
+        assert meth in text, meth
+        assert hasattr(serve.DecisionService, meth), meth
+    params = inspect.signature(serve.serve_workload).parameters
+    for kw in ("seed", "dynamics", "use_kernel", "chunk", "open_loop"):
+        assert kw in params, kw
+    from repro.kernels.dodoor_choice import autotune_block_t
+    assert "candidates" in inspect.signature(autotune_block_t).parameters
+
+
 def test_engine_docstring_matches_shipped_drivers():
     """Doc-drift guard: the engine module docstring describes the shipped
     batched drivers (speculative PoT, segment-scan Prequal, unified
@@ -143,7 +168,10 @@ def test_bench_schema_docs_match_written_files():
     arch = open(os.path.join(REPO, "docs", "ARCHITECTURE.md"),
                 encoding="utf-8").read()
     for fname, required in (
-            ("BENCH_engine.json", ("kernels_decisions_per_s", "engine")),
+            ("BENCH_engine.json", ("kernels_decisions_per_s",
+                                   "block_t_autotune", "engine")),
+            ("BENCH_serve.json", ("gate_point", "gate_repeats",
+                                  "serve_points", "latency_histograms")),
             ("BENCH_scale.json", ("sweep_vs_loop", "scale_points",
                                   "meanfield_points")),
             ("BENCH_faults.json", ("gate_point", "fault_points",

@@ -354,13 +354,18 @@ class TestStudyIntegration:
         assert (st.attempts[0, 0, 0] == 1).all()
         assert (st.attempts[0, 1, 0] > 1).any()
 
-    def test_study_rejects_mixed_cache_faultedness(self, small_testbed, fb_small):
-        with pytest.raises(ValueError, match="cache-faultedness"):
-            run_study(fb_small, small_testbed, Study(
-                seeds=(0,), configs=(EngineConfig(policy="dodoor", b=10),),
-                scenarios=(Scenario("a"),
-                           Scenario("b", dynamics=Dynamics(
-                               cache_faults=CacheFaults(loss_rate=0.5))))))
+    def test_study_normalizes_mixed_cache_faultedness(self, small_testbed,
+                                                      fb_small):
+        """Mixed faulted/unfaulted scenario grids no longer raise: the
+        planner pads unfaulted rows with an inert ``CacheFaults()`` and
+        serves every point (deep per-point parity pin lives in
+        tests/test_dags.py::TestMixedFaultednessContract)."""
+        st = run_study(fb_small, small_testbed, Study(
+            seeds=(0,), configs=(EngineConfig(policy="dodoor", b=10),),
+            scenarios=(Scenario("a"),
+                       Scenario("b", dynamics=Dynamics(
+                           cache_faults=CacheFaults(loss_rate=0.5))))))
+        assert st.server.shape == (1, 1, 2, fb_small.r_submit.shape[0])
 
     def test_study_retry_composes_with_server_shards(self, small_testbed,
                                                      fb_small):

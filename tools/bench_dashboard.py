@@ -59,6 +59,8 @@ td:first-child, th:first-child { text-align: left; }
 .fail { color: #c0182b; font-weight: 600; }
 svg.spark { vertical-align: middle; margin-left: .4em; }
 .note { color: #667; font-size: 12px; }
+.histrow { display: flex; gap: 2em; flex-wrap: wrap; }
+.hist { margin: .4em 0; }
 """
 
 
@@ -84,6 +86,39 @@ def _spark(values, w=90, h=16):
     return (f'<svg class="spark" width="{w}" height="{h}">'
             f'<polyline points="{pts}" fill="none" stroke="#5560c0" '
             f'stroke-width="1.5"/></svg>')
+
+
+def _is_histogram(v):
+    """A LatencyRecorder.histogram() payload: log-spaced ``edges_ms``
+    (n+1) + ``counts`` (n), as bench_serve persists per metric."""
+    return (isinstance(v, dict) and set(v) == {"edges_ms", "counts"}
+            and isinstance(v.get("counts"), list))
+
+
+def _histbars(name, hist, w=360, h=90):
+    """One latency histogram → an inline SVG bar panel (log-spaced
+    buckets; bucket edges labelled at both ends)."""
+    counts = [int(c) for c in hist.get("counts") or []]
+    edges = hist.get("edges_ms") or []
+    if not counts or not any(counts):
+        return ""
+    peak = max(counts)
+    n = len(counts)
+    bw = w / n
+    bars = "".join(
+        f'<rect x="{i * bw + 1:.1f}" '
+        f'y="{h - 14 - c / peak * (h - 22):.1f}" '
+        f'width="{max(bw - 2, 1):.1f}" '
+        f'height="{c / peak * (h - 22):.1f}" fill="#5560c0"/>'
+        for i, c in enumerate(counts))
+    lo, hi = edges[0], edges[-1]
+    return (f'<div class="hist"><div class="note">{html.escape(name)} '
+            f'(n={sum(counts)})</div>'
+            f'<svg width="{w}" height="{h}">{bars}'
+            f'<text x="0" y="{h - 2}" font-size="10" fill="#667">'
+            f'{lo:.3g} ms</text>'
+            f'<text x="{w}" y="{h - 2}" font-size="10" fill="#667" '
+            f'text-anchor="end">{hi:.3g} ms</text></svg></div>')
 
 
 def _table(rows, key_col=None):
@@ -115,8 +150,14 @@ def _render_section(name, doc):
     tables = []
     for k in sorted(doc):
         v = doc[k]
-        if isinstance(v, list) and v and all(isinstance(r, dict)
-                                             for r in v):
+        if (isinstance(v, dict) and v
+                and all(_is_histogram(h) for h in v.values())):
+            # bench_serve's latency_histograms: one bar panel per metric
+            panels = "".join(_histbars(mk, mh) for mk, mh in v.items())
+            tables.append(f"<h3>{html.escape(k)}</h3>"
+                          f'<div class="histrow">{panels}</div>')
+        elif isinstance(v, list) and v and all(isinstance(r, dict)
+                                               for r in v):
             tables.append(f"<h3>{html.escape(k)}</h3>" + _table(v))
         elif isinstance(v, dict) and v and all(isinstance(r, dict)
                                                for r in v.values()):
